@@ -1,0 +1,43 @@
+//! Bandwidth sweep (the paper's Fig. 4 scenario as an API example):
+//! how the three schedulers behave as the edge uplink degrades, including
+//! a constrained shared registry uplink.
+//!
+//! Run: `cargo run --release --example bandwidth_sweep`
+
+use lrsched::exp::common;
+
+fn main() {
+    let trace = common::paper_trace(7, 20);
+    println!("per-node bandwidth sweep (total download seconds, 20 pods, 4 nodes)\n");
+    println!("{:>10} {:>12} {:>12} {:>12}", "MB/s", "Default", "Layer", "LRScheduler");
+    for bw in [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0] {
+        let reports = common::run_all(4, &trace, |cfg| cfg.bandwidth_mbps = Some(bw));
+        println!(
+            "{:>10.1} {:>12.1} {:>12.1} {:>12.1}",
+            bw,
+            reports[0].total_download_secs(),
+            reports[1].total_download_secs(),
+            reports[2].total_download_secs()
+        );
+    }
+
+    println!("\nwith a shared 8 MB/s registry uplink (contention):\n");
+    println!("{:>10} {:>12} {:>12} {:>12}", "MB/s", "Default", "Layer", "LRScheduler");
+    for bw in [4.0, 16.0, 64.0] {
+        let reports = common::run_all(4, &trace, |cfg| {
+            cfg.bandwidth_mbps = Some(bw);
+            cfg.registry_uplink_mbps = Some(8.0);
+            cfg.inter_arrival_secs = Some(5.0); // overlapping pulls contend
+        });
+        println!(
+            "{:>10.1} {:>12.1} {:>12.1} {:>12.1}",
+            bw,
+            reports[0].total_download_secs(),
+            reports[1].total_download_secs(),
+            reports[2].total_download_secs()
+        );
+    }
+    let base = common::run_all(4, &trace, |cfg| cfg.bandwidth_mbps = Some(2.0));
+    let reduction = 1.0 - base[2].total_download_secs() / base[0].total_download_secs();
+    println!("\nLRScheduler reduction vs Default at 2 MB/s: {:.0}%", reduction * 100.0);
+}

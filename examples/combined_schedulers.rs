@@ -1,0 +1,87 @@
+//! Scalability of LRScheduler (paper §IV-B): the layer-sharing score
+//! composes with any plugin subset and any ω policy. This example sweeps
+//! both axes on the same trace.
+//!
+//! Run: `cargo run --release --example combined_schedulers`
+
+use lrsched::exp::common;
+use lrsched::registry::Registry;
+use lrsched::sched::{FrameworkConfig, WeightParams};
+use lrsched::sim::{SchedulerChoice, SimConfig, Simulation};
+
+fn run_with(
+    trace: &[lrsched::cluster::Pod],
+    label: &str,
+    framework: FrameworkConfig,
+    params: WeightParams,
+) {
+    let mut cfg = SimConfig::default();
+    cfg.scheduler = SchedulerChoice::LR;
+    cfg.framework = framework;
+    cfg.params = params;
+    let mut sim = Simulation::new(common::paper_nodes(4), Registry::with_corpus(), cfg);
+    let rep = sim.run_trace(trace.to_vec());
+    println!(
+        "{label:<44} dl {:>8.1} MB   STD {:.3}   w1/w2 {:>2}/{:<2}",
+        rep.total_download().as_mb(),
+        rep.final_std(),
+        rep.omega1_used,
+        rep.omega2_used
+    );
+}
+
+fn run_choice(trace: &[lrsched::cluster::Pod], label: &str, choice: SchedulerChoice, p2p: Option<f64>) {
+    let mut cfg = SimConfig::default();
+    cfg.scheduler = choice;
+    cfg.p2p_lan_mbps = p2p;
+    let mut sim = Simulation::new(common::paper_nodes(4), Registry::with_corpus(), cfg);
+    let rep = sim.run_trace(trace.to_vec());
+    let p2p_mb: f64 = rep.records.iter().map(|r| r.p2p.as_mb()).sum();
+    println!(
+        "{label:<44} dl {:>8.1} MB   STD {:.3}   p2p {:>7.1} MB",
+        rep.total_download().as_mb(),
+        rep.final_std(),
+        p2p_mb
+    );
+}
+
+fn main() {
+    let trace = common::paper_trace(42, 20);
+    let p = WeightParams::default();
+
+    println!("--- plugin-subset ablation (LR on top of each profile) ---");
+    run_with(&trace, "full default profile (8 plugins)", FrameworkConfig::default(), p);
+    run_with(&trace, "resources only (LeastAllocated+Balanced)", FrameworkConfig::resources_only(), p);
+    let mut no_img = FrameworkConfig::default();
+    no_img.image_locality = false;
+    run_with(&trace, "without ImageLocality", no_img, p);
+    let mut no_balance = FrameworkConfig::default();
+    no_balance.balanced_allocation = false;
+    run_with(&trace, "without BalancedAllocation", no_balance, p);
+
+    println!("\n--- omega parameter ablation (paper h/omega settings) ---");
+    run_with(&trace, "paper: w1=2 w2=0.5", FrameworkConfig::default(), p);
+    run_with(
+        &trace,
+        "aggressive: w1=4 w2=1",
+        FrameworkConfig::default(),
+        WeightParams { omega1: 4.0, omega2: 1.0, ..p },
+    );
+    run_with(
+        &trace,
+        "conservative: w1=1 w2=0.1",
+        FrameworkConfig::default(),
+        WeightParams { omega1: 1.0, omega2: 0.1, ..p },
+    );
+    run_with(
+        &trace,
+        "tight gate: h_cpu=0.3 h_std=0.08",
+        FrameworkConfig::default(),
+        WeightParams { h_cpu: 0.3, h_std: 0.08, ..p },
+    );
+
+    println!("\n--- paper SVII extensions ---");
+    run_choice(&trace, "RL scheduler (contextual bandit)", SchedulerChoice::Rl, None);
+    run_choice(&trace, "LRScheduler + P2P layer sharing (100 MB/s LAN)", SchedulerChoice::LR, Some(100.0));
+    run_choice(&trace, "Default + P2P layer sharing", SchedulerChoice::Default, Some(100.0));
+}

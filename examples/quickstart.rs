@@ -1,0 +1,56 @@
+//! Quickstart: schedule one pod with LRScheduler and inspect the decision.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use lrsched::cluster::{Node, NodeId, PodBuilder, Resources};
+use lrsched::registry::{MetadataCache, Registry, Watcher};
+use lrsched::sched::{default_framework, CycleContext, LrScheduler};
+use lrsched::util::units::{Bandwidth, Bytes};
+
+fn main() {
+    // 1. An edge cluster: three heterogeneous workers.
+    let mut state = lrsched::cluster::ClusterState::new();
+    for (i, (mem_gb, disk_gb)) in [(4.0, 30.0), (2.0, 30.0), (4.0, 20.0)].iter().enumerate() {
+        state.add_node(Node::new(
+            NodeId(i as u32),
+            &format!("worker{}", i + 1),
+            Resources::cores_gb(4.0, *mem_gb),
+            Bytes::from_gb(*disk_gb),
+            Bandwidth::from_mbps(10.0),
+        ));
+    }
+
+    // 2. A private registry with the image corpus; the watcher fills the
+    //    layer-metadata cache (the paper's cache.json).
+    let registry = Registry::with_corpus();
+    let mut cache = MetadataCache::new("/tmp/quickstart-cache.json");
+    Watcher::with_default_interval().poll(0.0, &registry, &mut cache);
+
+    // 3. Warm worker3 with php:8.2-apache — it shares the debian base,
+    //    apache, and the php runtime with wordpress.
+    let php = registry
+        .manifest(&lrsched::registry::ImageRef::new("php", "8.2-apache"))
+        .unwrap()
+        .clone();
+    let (_, php_layers) = state.intern_image(&php);
+    state
+        .install_image(NodeId(2), &php.image_ref(), &php_layers)
+        .unwrap();
+
+    // 4. A pod requesting wordpress:6.4 arrives.
+    let pod = PodBuilder::new().build("wordpress:6.4", Resources::cores_gb(0.5, 0.5));
+    let (meta, required, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+    let ctx = CycleContext::new(&state, &pod, meta, required, bytes);
+
+    // 5. LRScheduler picks the node (Algorithm 1).
+    let mut scheduler = LrScheduler::lr_scheduler(default_framework());
+    let decision = scheduler.schedule(&ctx).unwrap();
+    println!("pod image:        {}", pod.image);
+    println!("scheduled to:     {}", state.node(decision.node).name);
+    println!("layer score:      {:.1} / 100 (Eq. 3)", decision.layer_score);
+    println!("dynamic weight:   {} (Eq. 13 gate)", decision.omega);
+    println!("k8s score:        {:.1}", decision.k8s_score);
+    println!("final score:      {:.1} (Eq. 4)", decision.final_score);
+    println!("download cost:    {} (Eq. 1)", decision.download_cost);
+    assert_eq!(decision.node, NodeId(2), "layer sharing should win");
+}

@@ -1,0 +1,80 @@
+"""AOT bridge: lower the L2 scoring pipeline to HLO *text* per shape
+variant for the rust PJRT runtime.
+
+HLO text — not ``lowered.compile()`` output or a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out ../artifacts/scorer.hlo.txt
+Writes one artifact per variant next to the requested path, plus a
+manifest.json describing the shapes for the rust loader.
+
+Python runs only here, at build time (`make artifacts`); the rust binary
+is self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import VARIANTS, example_args, score_pipeline
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(n_nodes: int, n_layers: int) -> str:
+    lowered = jax.jit(score_pipeline).lower(*example_args(n_nodes, n_layers))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out",
+        default="../artifacts/scorer.hlo.txt",
+        help="base artifact path; per-variant files derive from it",
+    )
+    args = parser.parse_args()
+    base, ext = os.path.splitext(args.out)
+    if base.endswith(".hlo"):
+        base = base[: -len(".hlo")]
+        ext = ".hlo" + ext
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "outputs": ["final", "layer", "omega", "best"], "variants": []}
+    for name, n_nodes, n_layers in VARIANTS:
+        text = lower_variant(n_nodes, n_layers)
+        path = f"{base}_{name}{ext}"
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["variants"].append(
+            {
+                "name": name,
+                "n_nodes": n_nodes,
+                "n_layers": n_layers,
+                "file": os.path.basename(path),
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars, N={n_nodes}, L={n_layers})")
+
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the scoring pipeline — the correctness reference
+for both the Pallas kernel (L1) and the full model (L2), and the mirror
+of the rust NativeScorer (`rust/src/sched/scoring.rs`).
+
+Every formula cites the paper:
+  Eq. 2   shared bytes          D_c^n(t)
+  Eq. 3   layer sharing score   S_layer = D / total * 100
+  Eq. 11  balance score         S_STD = |cpu% - mem%| / 2
+  Eq. 12  cpu score             S_CPU = cpu%
+  Eq. 13  Iverson gate          S_weight
+  Eq. 4   combination           S = w * S_layer + S_K8s
+  Eq. 5   argmax
+"""
+
+import jax.numpy as jnp
+
+# Mask value for infeasible nodes; matches rust NEG_MASK.
+NEG_MASK = -1.0e30
+
+
+def shared_bytes_ref(present, req, sizes):
+    """Eq. 2: shared[n] = sum_l present[n,l] * req[l] * sizes[l]."""
+    return present.astype(jnp.float32) @ (req * sizes).astype(jnp.float32)
+
+
+def score_pipeline_ref(
+    present,
+    req,
+    sizes_mb,
+    cpu_used,
+    cpu_cap,
+    mem_used,
+    mem_cap,
+    k8s_score,
+    feasible,
+    params,
+):
+    """Full Algorithm-1 scoring. params = [w1, w2, h_size, h_cpu, h_std].
+
+    Returns (final_score[N], layer_score[N], omega[N], best[int32]).
+    """
+    w1 = params[0]
+    w2 = params[1]
+    h_size = params[2]
+    h_cpu = params[3]
+    h_std = params[4]
+
+    shared = shared_bytes_ref(present, req, sizes_mb)  # (N,) MB
+    total = jnp.sum(req * sizes_mb)  # scalar MB
+    layer = jnp.where(total > 0.0, shared / jnp.maximum(total, 1e-30) * 100.0, 0.0)
+
+    cpu_frac = cpu_used / jnp.maximum(cpu_cap, 1e-30)  # Eq. 12
+    mem_frac = mem_used / jnp.maximum(mem_cap, 1e-30)
+    s_std = jnp.abs(cpu_frac - mem_frac) / 2.0  # Eq. 11
+
+    gate = (shared > h_size) & (cpu_frac < h_cpu) & (s_std < h_std)  # Eq. 13
+    omega = jnp.where(gate, w1, w2)
+
+    s = omega * layer + k8s_score  # Eq. 4
+    final = jnp.where(feasible > 0.5, s, NEG_MASK)
+    best = jnp.argmax(final).astype(jnp.int32)  # Eq. 5
+    return final, layer, omega, best

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: per-node shared-layer bytes (paper Eq. 2).
+
+Computes ``shared[n] = sum_l present[n, l] * req[l] * sizes[l]`` — the
+O(N*L) reduction at the heart of the layer-sharing score — as a tiled
+masked mat-vec.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): ``present`` streams from
+HBM in (BN, BL) VMEM blocks; ``req * sizes`` is precomputed once into a
+(BL,) VMEM vector per grid column; partials accumulate into the (BN,)
+output block across the L grid axis. This is a VPU reduction (no MXU);
+the roofline is HBM bandwidth. VMEM per block ≈ BN*BL*4 + BL*4 bytes
+(≈ 9 KiB at BN=8, BL=256), far under budget, so BN can widen until
+HBM-bound.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO ops (see
+/opt/xla-example/README.md). Correctness vs. ``ref.py`` is enforced by
+pytest + hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shape: 8 node-rows x 256 layer-columns.
+DEFAULT_BLOCK_N = 8
+DEFAULT_BLOCK_L = 256
+
+
+def _shared_bytes_kernel(req_sizes_ref, present_ref, out_ref):
+    """One (BN, BL) tile: out[BN] += present[BN, BL] @ req_sizes[BL]."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(present_ref[...], req_sizes_ref[...])
+
+
+def shared_bytes(present, req, sizes, *, block_n=None, block_l=None):
+    """shared[n] = sum_l present[n,l] * req[l] * sizes[l] via pallas_call.
+
+    Shapes: present (N, L), req (L,), sizes (L,) -> (N,). N and L must be
+    multiples of the block shape; the AOT variants are sized accordingly
+    and the rust runtime pads.
+    """
+    n, l = present.shape
+    bn = min(block_n or DEFAULT_BLOCK_N, n)
+    bl = min(block_l or DEFAULT_BLOCK_L, l)
+    if n % bn != 0 or l % bl != 0:
+        raise ValueError(f"shape ({n},{l}) not divisible by block ({bn},{bl})")
+    req_sizes = (req * sizes).astype(jnp.float32)
+    grid = (n // bn, l // bl)
+    return pl.pallas_call(
+        _shared_bytes_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bl,), lambda i, j: (j,)),
+            pl.BlockSpec((bn, bl), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(req_sizes, present.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_l"))
+def shared_bytes_jit(present, req, sizes, block_n=None, block_l=None):
+    return shared_bytes(present, req, sizes, block_n=block_n, block_l=block_l)

@@ -1,0 +1,78 @@
+"""L2: the batched node-scoring pipeline (paper Algorithm 1) as a JAX
+graph calling the L1 Pallas kernel for the Eq.-2 reduction.
+
+This is the compute the rust coordinator offloads per scheduling cycle:
+given the node-layer presence matrix, the pod's requirement vector, layer
+sizes, per-node resource usage, the default-scheduler score vector and a
+feasibility mask, produce final scores, layer scores, the dynamic weights
+(Eq. 13), and the argmax (Eq. 5).
+
+Lowered once by aot.py to HLO text per shape variant; never imported at
+runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import NEG_MASK
+from .kernels.shared_bytes import shared_bytes
+
+# AOT shape variants: (name, n_nodes, n_layers). The rust runtime pads its
+# inputs to the smallest variant that fits (runtime/scorer.rs).
+VARIANTS = (
+    ("small", 16, 256),
+    ("large", 64, 1024),
+)
+
+
+def score_pipeline(
+    present,
+    req,
+    sizes_mb,
+    cpu_used,
+    cpu_cap,
+    mem_used,
+    mem_cap,
+    k8s_score,
+    feasible,
+    params,
+):
+    """Algorithm-1 scoring; same contract as ref.score_pipeline_ref but the
+    Eq.-2 reduction runs through the Pallas kernel."""
+    w1 = params[0]
+    w2 = params[1]
+    h_size = params[2]
+    h_cpu = params[3]
+    h_std = params[4]
+
+    shared = shared_bytes(present, req, sizes_mb)  # L1 kernel (Eq. 2)
+    total = jnp.sum(req * sizes_mb)
+    layer = jnp.where(total > 0.0, shared / jnp.maximum(total, 1e-30) * 100.0, 0.0)  # Eq. 3
+
+    cpu_frac = cpu_used / jnp.maximum(cpu_cap, 1e-30)  # Eq. 12
+    mem_frac = mem_used / jnp.maximum(mem_cap, 1e-30)
+    s_std = jnp.abs(cpu_frac - mem_frac) / 2.0  # Eq. 11
+
+    gate = (shared > h_size) & (cpu_frac < h_cpu) & (s_std < h_std)  # Eq. 13
+    omega = jnp.where(gate, w1, w2)
+
+    final = jnp.where(feasible > 0.5, omega * layer + k8s_score, NEG_MASK)  # Eq. 4
+    best = jnp.argmax(final).astype(jnp.int32)  # Eq. 5
+    return final, layer, omega, best
+
+
+def example_args(n_nodes, n_layers):
+    """ShapeDtypeStructs for AOT lowering of one variant."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n_nodes, n_layers), f32),  # present
+        jax.ShapeDtypeStruct((n_layers,), f32),  # req
+        jax.ShapeDtypeStruct((n_layers,), f32),  # sizes_mb
+        jax.ShapeDtypeStruct((n_nodes,), f32),  # cpu_used
+        jax.ShapeDtypeStruct((n_nodes,), f32),  # cpu_cap
+        jax.ShapeDtypeStruct((n_nodes,), f32),  # mem_used
+        jax.ShapeDtypeStruct((n_nodes,), f32),  # mem_cap
+        jax.ShapeDtypeStruct((n_nodes,), f32),  # k8s_score
+        jax.ShapeDtypeStruct((n_nodes,), f32),  # feasible
+        jax.ShapeDtypeStruct((5,), f32),  # params
+    )

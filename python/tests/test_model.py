@@ -1,0 +1,152 @@
+"""L2 correctness: the full scoring pipeline (model.score_pipeline, which
+routes Eq. 2 through the Pallas kernel) vs. the pure-jnp oracle, plus
+golden tests of the paper's formulas mirroring the rust unit tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import NEG_MASK, score_pipeline_ref
+from compile.model import VARIANTS, example_args, score_pipeline
+
+PAPER_PARAMS = np.array([2.0, 0.5, 10.0, 0.6, 0.16], dtype=np.float32)
+
+
+def random_inputs(seed, n, l, feasible_density=1.0):
+    r = np.random.default_rng(seed)
+    return dict(
+        present=(r.random((n, l)) < 0.3).astype(np.float32),
+        req=(r.random(l) < 0.2).astype(np.float32),
+        sizes_mb=(r.random(l) * 300).astype(np.float32),
+        cpu_used=(r.random(n) * 4000).astype(np.float32),
+        cpu_cap=np.full(n, 4000.0, dtype=np.float32),
+        mem_used=(r.random(n) * 4e9).astype(np.float32),
+        mem_cap=np.full(n, 4e9, dtype=np.float32),
+        k8s_score=(r.random(n) * 800).astype(np.float32),
+        feasible=(r.random(n) < feasible_density).astype(np.float32),
+        params=PAPER_PARAMS,
+    )
+
+
+def as_jnp(d):
+    return {k: jnp.asarray(v) for k, v in d.items()}
+
+
+def run_both(d):
+    args = [
+        d["present"], d["req"], d["sizes_mb"], d["cpu_used"], d["cpu_cap"],
+        d["mem_used"], d["mem_cap"], d["k8s_score"], d["feasible"], d["params"],
+    ]
+    return score_pipeline(*args), score_pipeline_ref(*args)
+
+
+@pytest.mark.parametrize("name,n,l", list(VARIANTS))
+def test_model_matches_ref_at_variant_shapes(name, n, l):
+    d = as_jnp(random_inputs(7, n, l))
+    (f1, l1, o1, b1), (f2, l2, o2, b2) = run_both(d)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-5, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    assert int(b1) == int(b2)
+
+
+def test_golden_two_nodes():
+    """Mirror of rust sched::scoring::tests::native_scorer_matches_hand_math."""
+    present = np.zeros((2, 4), dtype=np.float32)
+    present[0, 1] = 1.0
+    present[0, 2] = 1.0
+    d = dict(
+        present=present,
+        req=np.array([1, 1, 0, 1], dtype=np.float32),
+        sizes_mb=np.array([10, 20, 30, 40], dtype=np.float32),
+        cpu_used=np.array([1000, 1000], dtype=np.float32),
+        cpu_cap=np.array([4000, 4000], dtype=np.float32),
+        mem_used=np.array([1e9, 1e9], dtype=np.float32),
+        mem_cap=np.array([4e9, 4e9], dtype=np.float32),
+        k8s_score=np.array([50.0, 60.0], dtype=np.float32),
+        feasible=np.ones(2, dtype=np.float32),
+        params=PAPER_PARAMS,
+    )
+    final, layer, omega, best = score_pipeline(*[jnp.asarray(v) for v in (
+        d["present"], d["req"], d["sizes_mb"], d["cpu_used"], d["cpu_cap"],
+        d["mem_used"], d["mem_cap"], d["k8s_score"], d["feasible"], d["params"],
+    )])
+    expected_layer0 = 20.0 / 70.0 * 100.0
+    np.testing.assert_allclose(float(layer[0]), expected_layer0, rtol=1e-5)
+    assert float(omega[0]) == 2.0  # gate passes: 20MB > 10, cpu 25% < 60%, std 0
+    assert float(omega[1]) == 0.5  # no shared bytes
+    np.testing.assert_allclose(float(final[0]), 2.0 * expected_layer0 + 50.0, rtol=1e-5)
+    np.testing.assert_allclose(float(final[1]), 60.0, rtol=1e-5)
+    assert int(best) == 0
+
+
+def test_infeasible_nodes_masked():
+    d = as_jnp(random_inputs(3, 16, 256))
+    feasible = np.zeros(16, dtype=np.float32)
+    feasible[5] = 1.0
+    d["feasible"] = jnp.asarray(feasible)
+    (final, _, _, best), _ = run_both(d)
+    assert int(best) == 5
+    final = np.asarray(final)
+    assert np.all(final[np.arange(16) != 5] == NEG_MASK)
+
+
+def test_gate_thresholds_exact():
+    """Iverson bracket boundaries: strict inequalities per Eq. 13."""
+    n, l = 16, 256
+    d = random_inputs(0, n, l)
+    # Node 0: exactly at h_cpu (0.6*4000=2400) -> gate must FAIL (strict <).
+    d["present"][:] = 0.0
+    d["present"][0, :8] = 1.0
+    d["present"][1, :8] = 1.0
+    d["req"][:] = 0.0
+    d["req"][:8] = 1.0
+    d["sizes_mb"][:8] = 10.0  # shared = 80 MB > h_size
+    d["cpu_used"][:] = 0.0
+    d["mem_used"][:] = 0.0
+    d["cpu_used"][0] = 2400.0
+    d["mem_used"][0] = 2.4e9
+    d["cpu_used"][1] = 2399.0  # just under
+    d["mem_used"][1] = 2.399e9
+    d["feasible"][:] = 1.0
+    (_, _, omega, _), (_, _, omega_ref, _) = run_both(as_jnp(d))
+    omega = np.asarray(omega)
+    assert omega[0] == 0.5, "cpu_frac == h_cpu must fail the strict inequality"
+    assert omega[1] == 2.0
+    np.testing.assert_array_equal(omega, np.asarray(omega_ref))
+
+
+def test_zero_total_size_no_nan():
+    d = as_jnp(random_inputs(11, 16, 256))
+    d["req"] = jnp.zeros(256, dtype=jnp.float32)
+    (final, layer, _, _), _ = run_both(d)
+    assert not np.any(np.isnan(np.asarray(final)))
+    np.testing.assert_array_equal(np.asarray(layer), np.zeros(16))
+
+
+def test_argmax_first_tie():
+    d = random_inputs(0, 16, 256)
+    d["present"][:] = 0.0
+    d["req"][:] = 0.0
+    d["k8s_score"][:] = 42.0  # all tied
+    d["feasible"][:] = 1.0
+    (_, _, _, best), (_, _, _, best_ref) = run_both(as_jnp(d))
+    assert int(best) == 0 == int(best_ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), density=st.floats(0.05, 1.0))
+def test_hypothesis_model_vs_ref(seed, density):
+    d = as_jnp(random_inputs(seed, 16, 256, feasible_density=density))
+    (f1, l1, o1, b1), (f2, l2, o2, b2) = run_both(d)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-5, atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    assert int(b1) == int(b2)
+
+
+def test_example_args_shapes():
+    args = example_args(16, 256)
+    assert args[0].shape == (16, 256)
+    assert args[-1].shape == (5,)
+    assert all(a.dtype == jnp.float32 for a in args)

@@ -1,0 +1,17 @@
+//! Bench target regenerating paper Fig. 3 (a–f): performance with
+//! different numbers of nodes, plus wall-time for the full experiment.
+//! Run: `cargo bench --bench bench_fig3`
+
+use lrsched::exp::fig3;
+use lrsched::testing::bench::{bench, header};
+
+fn main() {
+    let fig = fig3::run(42, 20);
+    print!("{}", fig.print());
+
+    println!("\n{}", header());
+    let r = bench("fig3: 9 runs (3 scheds x 3 node counts) + 3d probes", 2_000, || {
+        std::hint::black_box(fig3::run(42, 20));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,16 @@
+//! Bench target regenerating paper Fig. 4: download time vs bandwidth.
+//! Run: `cargo bench --bench bench_fig4`
+
+use lrsched::exp::fig4;
+use lrsched::testing::bench::{bench, header};
+
+fn main() {
+    let fig = fig4::run(42, 20, 4);
+    print!("{}", fig.print());
+
+    println!("\n{}", header());
+    let r = bench("fig4: 15 runs (3 scheds x 5 bandwidths)", 2_000, || {
+        std::hint::black_box(fig4::run(42, 20, 4));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,16 @@
+//! Bench target regenerating paper Fig. 5: accumulated download size for
+//! 20 pods. Run: `cargo bench --bench bench_fig5`
+
+use lrsched::exp::fig5;
+use lrsched::testing::bench::{bench, header};
+
+fn main() {
+    let fig = fig5::run(42, 20, 4);
+    print!("{}", fig.print());
+
+    println!("\n{}", header());
+    let r = bench("fig5: 3 sequential 20-pod runs", 2_000, || {
+        std::hint::black_box(fig5::run(42, 20, 4));
+    });
+    println!("{}", r.report());
+}

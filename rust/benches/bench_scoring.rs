@@ -1,0 +1,121 @@
+//! Scoring-path benchmarks + design ablations:
+//! - native vs XLA backend at both artifact shapes (the L3 hot path)
+//! - full scheduling cycle (filter + 8 plugins + LR combination)
+//! - ω-policy ablation (TwoLevel / ThreeLevel / Linear / Static)
+//! - plugin-subset ablation (full default profile vs resources-only)
+//! Run: `cargo bench --bench bench_scoring`
+
+use lrsched::cluster::{PodBuilder, Resources};
+use lrsched::registry::{hub, Registry};
+use lrsched::runtime::XlaScorer;
+use lrsched::sched::dynamic_weight::{weight_for, WeightParams, WeightPolicy};
+use lrsched::sched::scoring::{NativeScorer, ScoreInputs, ScoringBackend};
+use lrsched::sched::{default_framework, CycleContext, FrameworkConfig, LrScheduler};
+use lrsched::testing::bench::{bench, header};
+use lrsched::testing::fixtures;
+use lrsched::util::rng::Pcg;
+
+fn random_inputs(rng: &mut Pcg, n: usize, l: usize) -> ScoreInputs {
+    let mut x = ScoreInputs::zeros(n, l, WeightParams::default());
+    for v in x.present.iter_mut() {
+        *v = if rng.chance(0.3) { 1.0 } else { 0.0 };
+    }
+    for j in 0..l {
+        x.req[j] = if rng.chance(0.2) { 1.0 } else { 0.0 };
+        x.sizes_mb[j] = rng.f64_range(0.1, 300.0) as f32;
+    }
+    for i in 0..n {
+        x.cpu_cap[i] = 4000.0;
+        x.mem_cap[i] = 4.0e9;
+        x.cpu_used[i] = rng.f64_range(0.0, 3000.0) as f32;
+        x.mem_used[i] = rng.f64_range(0.0, 3.0e9) as f32;
+        x.k8s_score[i] = rng.f64_range(0.0, 800.0) as f32;
+        x.feasible[i] = 1.0;
+    }
+    x
+}
+
+fn main() {
+    println!("{}", header());
+    let mut rng = Pcg::seeded(9);
+
+    // --- dense scorer backends -------------------------------------------
+    for (n, l) in [(16usize, 256usize), (64, 1024)] {
+        let x = random_inputs(&mut rng, n, l);
+        let mut native = NativeScorer;
+        let r = bench(&format!("native scorer {n}x{l}"), 300, || {
+            std::hint::black_box(native.score(&x));
+        });
+        println!("{}", r.report());
+    }
+    match XlaScorer::load_default() {
+        Ok(mut xla) => {
+            for (n, l) in [(16usize, 256usize), (64, 1024)] {
+                let x = random_inputs(&mut rng, n, l);
+                let r = bench(&format!("xla scorer {n}x{l} (PJRT execute)"), 300, || {
+                    std::hint::black_box(xla.score(&x));
+                });
+                println!("{}", r.report());
+            }
+        }
+        Err(e) => println!("xla scorer skipped: {e:#}"),
+    }
+
+    // --- full scheduling cycle --------------------------------------------
+    let mut state = fixtures::uniform_cluster(4);
+    let cache = fixtures::corpus_cache();
+    // Warm two nodes so layer scores are nontrivial.
+    for (node, name) in [(0u32, "wordpress"), (1, "ghost")] {
+        let m = hub::corpus().into_iter().find(|m| m.name == name).unwrap();
+        let (_, layers) = state.intern_image(&m);
+        state
+            .install_image(lrsched::cluster::NodeId(node), &m.image_ref(), &layers)
+            .unwrap();
+    }
+    let pod = PodBuilder::new().build("wordpress:6.4", Resources::cores_gb(0.5, 0.5));
+    let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+    let meta = meta.cloned();
+    {
+        let ctx = CycleContext::new(&state, &pod, meta.as_ref(), req.clone(), bytes);
+        let mut lr = LrScheduler::lr_scheduler(default_framework());
+        let r = bench("full cycle: filter+8 plugins+LR (4 nodes)", 300, || {
+            std::hint::black_box(lr.schedule(&ctx).unwrap());
+        });
+        println!("{}", r.report());
+
+        let mut min = LrScheduler::lr_scheduler(FrameworkConfig::resources_only().build("min"));
+        let r = bench("ablation: resources-only profile (4 nodes)", 300, || {
+            std::hint::black_box(min.schedule(&ctx).unwrap());
+        });
+        println!("{}", r.report());
+    }
+
+    // --- omega-policy ablation --------------------------------------------
+    let params = WeightParams::default();
+    let node = state.node(lrsched::cluster::NodeId(0));
+    let local = lrsched::util::units::Bytes::from_mb(120.0);
+    for policy in [
+        WeightPolicy::TwoLevel,
+        WeightPolicy::ThreeLevel,
+        WeightPolicy::Linear,
+        WeightPolicy::Static(4.0),
+    ] {
+        let r = bench(&format!("omega policy {policy:?}"), 50, || {
+            std::hint::black_box(weight_for(policy, &params, node, local));
+        });
+        println!("{}", r.report());
+    }
+
+    // --- end-to-end simulation throughput ----------------------------------
+    let r = bench("simulate 20 pods / 4 nodes (LR, native)", 1_000, || {
+        let reg = Registry::with_corpus();
+        let trace = lrsched::sim::WorkloadGen::new(&reg, Default::default()).trace(20);
+        let mut sim = lrsched::sim::Simulation::new(
+            lrsched::exp::common::paper_nodes(4),
+            reg,
+            Default::default(),
+        );
+        std::hint::black_box(sim.run_trace(trace));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,17 @@
+//! Bench target regenerating paper Table I: per-container download size,
+//! time, and STD for 20 containers under all three schedulers.
+//! Run: `cargo bench --bench bench_table1`
+
+use lrsched::exp::table1;
+use lrsched::testing::bench::{bench, header};
+
+fn main() {
+    let t = table1::run(42, 20, 4);
+    print!("{}", t.print());
+
+    println!("\n{}", header());
+    let r = bench("table1: 3 sequential 20-pod runs", 2_000, || {
+        std::hint::black_box(table1::run(42, 20, 4));
+    });
+    println!("{}", r.report());
+}

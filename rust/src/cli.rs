@@ -1,0 +1,182 @@
+//! Hand-rolled command-line parser (`clap` is not in the vendored
+//! dependency set). Supports subcommands, `--flag`, `--key value`,
+//! `--key=value`, and positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec for one subcommand.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None ⇒ boolean flag, Some(default) ⇒ takes a value.
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for a subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("invalid value for --{name}: {v:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        Ok(self.get_parsed::<usize>(name)?.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        Ok(self.get_parsed::<u64>(name)?.unwrap_or(default))
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        Ok(self.get_parsed::<f64>(name)?.unwrap_or(default))
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+}
+
+/// Parse `argv` (without the program name) against a spec. Unknown options
+/// are an error; `--` ends option parsing.
+pub fn parse(argv: &[String], spec: &[OptSpec]) -> Result<Args, String> {
+    let mut args = Args::default();
+    // Seed defaults.
+    for opt in spec {
+        if let Some(d) = opt.default {
+            if !d.is_empty() {
+                args.values.insert(opt.name.to_string(), d.to_string());
+            }
+        }
+    }
+    let mut i = 0;
+    let mut opts_done = false;
+    while i < argv.len() {
+        let a = &argv[i];
+        if opts_done || !a.starts_with("--") {
+            args.positional.push(a.clone());
+            i += 1;
+            continue;
+        }
+        if a == "--" {
+            opts_done = true;
+            i += 1;
+            continue;
+        }
+        let body = &a[2..];
+        let (name, inline_val) = match body.split_once('=') {
+            Some((n, v)) => (n, Some(v.to_string())),
+            None => (body, None),
+        };
+        let opt = spec
+            .iter()
+            .find(|o| o.name == name)
+            .ok_or_else(|| format!("unknown option --{name}"))?;
+        match (opt.default, inline_val) {
+            (None, None) => args.flags.push(name.to_string()),
+            (None, Some(_)) => return Err(format!("--{name} is a flag and takes no value")),
+            (Some(_), Some(v)) => {
+                args.values.insert(name.to_string(), v);
+            }
+            (Some(_), None) => {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .ok_or_else(|| format!("--{name} requires a value"))?;
+                args.values.insert(name.to_string(), v.clone());
+            }
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, spec: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nUsage: lrsched {cmd} [options]\n\nOptions:\n");
+    for opt in spec {
+        let head = match opt.default {
+            None => format!("  --{}", opt.name),
+            Some("") => format!("  --{} <value>", opt.name),
+            Some(d) => format!("  --{} <value> (default: {d})", opt.name),
+        };
+        s.push_str(&format!("{head:<46} {}\n", opt.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "nodes", help: "node count", default: Some("4") },
+            OptSpec { name: "seed", help: "rng seed", default: Some("42") },
+            OptSpec { name: "verbose", help: "chatty", default: None },
+            OptSpec { name: "out", help: "output path", default: Some("") },
+        ]
+    }
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], &spec()).unwrap();
+        assert_eq!(a.get("nodes"), Some("4"));
+        assert_eq!(a.get("out"), None); // empty default means optional
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&sv(&["--nodes", "5", "--seed=7"]), &spec()).unwrap();
+        assert_eq!(a.usize_or("nodes", 0).unwrap(), 5);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&sv(&["--verbose", "pos1", "--", "--not-an-opt"]), &spec()).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1", "--not-an-opt"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&sv(&["--bogus"]), &spec()).is_err());
+        assert!(parse(&sv(&["--nodes"]), &spec()).is_err());
+        assert!(parse(&sv(&["--verbose=1"]), &spec()).is_err());
+        let a = parse(&sv(&["--nodes", "abc"]), &spec()).unwrap();
+        assert!(a.usize_or("nodes", 0).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("simulate", "Run the simulator", &spec());
+        assert!(u.contains("--nodes"));
+        assert!(u.contains("default: 4"));
+    }
+}

@@ -1,0 +1,85 @@
+//! Cluster event records — the audit stream the API server emits as pods
+//! move through the scheduling → pull → run lifecycle. Experiments consume
+//! these to build per-step tables (paper Table I).
+
+use super::node::NodeId;
+use super::pod::PodId;
+use crate::util::units::Bytes;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Pod submitted to the API server.
+    Submitted,
+    /// Scheduler picked a node (with the winning score).
+    Scheduled { node: NodeId, score: f64 },
+    /// Scheduler found no feasible node.
+    Unschedulable { reason: String },
+    /// Layer pull started on the node.
+    PullStarted { node: NodeId, bytes: Bytes, layers: usize },
+    /// All layers present; container starting.
+    PullFinished { node: NodeId, secs: f64 },
+    /// Container running.
+    Started { node: NodeId },
+    /// Image layers evicted from a node under disk pressure.
+    Evicted { node: NodeId, bytes: Bytes },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Virtual time (seconds).
+    pub at: f64,
+    pub pod: PodId,
+    pub kind: EventKind,
+}
+
+/// Append-only event log.
+#[derive(Debug, Clone, Default)]
+pub struct EventLog {
+    events: Vec<Event>,
+}
+
+impl EventLog {
+    pub fn new() -> EventLog {
+        EventLog::default()
+    }
+
+    pub fn record(&mut self, at: f64, pod: PodId, kind: EventKind) {
+        self.events.push(Event { at, pod, kind });
+    }
+
+    pub fn all(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn for_pod(&self, pod: PodId) -> impl Iterator<Item = &Event> {
+        self.events.iter().filter(move |e| e.pod == pod)
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut log = EventLog::new();
+        log.record(0.0, PodId(1), EventKind::Submitted);
+        log.record(0.1, PodId(1), EventKind::Scheduled { node: NodeId(2), score: 88.0 });
+        log.record(0.2, PodId(2), EventKind::Submitted);
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.for_pod(PodId(1)).count(), 2);
+        assert_eq!(log.for_pod(PodId(9)).count(), 0);
+        assert!(matches!(
+            log.for_pod(PodId(1)).last().unwrap().kind,
+            EventKind::Scheduled { node: NodeId(2), .. }
+        ));
+    }
+}

@@ -1,0 +1,15 @@
+//! Edge-cluster substrate: nodes with capacities/taints/labels, single-
+//! container pods with placement constraints, the etcd-like state store,
+//! and the cluster event log.
+
+pub mod events;
+pub mod node;
+pub mod pod;
+pub mod resources;
+pub mod state;
+
+pub use events::{Event, EventKind, EventLog};
+pub use node::{Node, NodeId, Taint};
+pub use pod::{Pod, PodBuilder, PodId};
+pub use resources::Resources;
+pub use state::{ClusterState, StateError};

@@ -1,0 +1,178 @@
+//! Edge nodes: capacities (CPU, memory, disk, bandwidth), taints and labels,
+//! and the local image/layer inventory the layer-aware scheduler reads
+//! (paper §III-A "each node maintains running containers, local images, and
+//! local layers").
+
+use super::pod::PodId;
+use super::resources::Resources;
+use crate::registry::{ImageRef, LayerSet};
+use crate::util::units::{Bandwidth, Bytes};
+use std::collections::BTreeMap;
+
+/// Dense node identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// A node taint (key=value); pods need a matching toleration or the
+/// TaintToleration plugin deprioritizes/filters the node.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Taint {
+    pub key: String,
+    pub value: String,
+    /// Hard taints filter (NoSchedule); soft taints only lower the score
+    /// (PreferNoSchedule) — both exist in Kubernetes and the paper's plugin
+    /// list includes the scoring form.
+    pub hard: bool,
+}
+
+/// An edge node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    /// Allocatable resources (paper: CPU cores p_n, memory e_n).
+    pub capacity: Resources,
+    /// Disk capacity d_n for image layers.
+    pub disk: Bytes,
+    /// Downlink bandwidth b_n to the registry.
+    pub bandwidth: Bandwidth,
+    /// Max simultaneously running containers C_n.
+    pub max_containers: usize,
+    pub labels: BTreeMap<String, String>,
+    pub taints: Vec<Taint>,
+    /// Free disk the VolumeBinding plugin can bind against.
+    pub volume_capacity: Bytes,
+
+    // --- mutable inventory (the t-dependent sets of §III-A) --------------
+    /// Requested resources of all pods assigned here (p_n(t), e_n(t)).
+    pub used: Resources,
+    /// Pods currently assigned (C_n(t)).
+    pub pods: Vec<PodId>,
+    /// Local images M_n(t).
+    pub images: Vec<ImageRef>,
+    /// Local layers L_n(t) as an interned bitset.
+    pub layers: LayerSet,
+    /// Bytes of disk consumed by local layers.
+    pub disk_used: Bytes,
+}
+
+impl Node {
+    pub fn new(id: NodeId, name: &str, capacity: Resources, disk: Bytes, bandwidth: Bandwidth) -> Node {
+        Node {
+            id,
+            name: name.to_string(),
+            capacity,
+            disk,
+            bandwidth,
+            max_containers: 110, // kubelet default maxPods
+            labels: BTreeMap::new(),
+            taints: Vec::new(),
+            volume_capacity: disk,
+            used: Resources::ZERO,
+            pods: Vec::new(),
+            images: Vec::new(),
+            layers: LayerSet::new(),
+            disk_used: Bytes::ZERO,
+        }
+    }
+
+    pub fn with_label(mut self, key: &str, value: &str) -> Node {
+        self.labels.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    pub fn with_taint(mut self, key: &str, value: &str, hard: bool) -> Node {
+        self.taints.push(Taint { key: key.to_string(), value: value.to_string(), hard });
+        self
+    }
+
+    pub fn with_max_containers(mut self, n: usize) -> Node {
+        self.max_containers = n;
+        self
+    }
+
+    /// Resources still schedulable.
+    pub fn available(&self) -> Resources {
+        self.capacity.saturating_sub(&self.used)
+    }
+
+    /// CPU and memory utilisation fractions (p_n(t)/p_n, e_n(t)/e_n).
+    pub fn utilisation(&self) -> (f64, f64) {
+        self.used.fraction_of(&self.capacity)
+    }
+
+    /// Free disk for new layers.
+    pub fn disk_free(&self) -> Bytes {
+        self.disk.saturating_sub(self.disk_used)
+    }
+
+    /// Does this node already hold the image (ImageLocality's fast path)?
+    pub fn has_image(&self, image: &ImageRef) -> bool {
+        self.images.iter().any(|i| i == image)
+    }
+
+    /// Assign a pod: reserve resources and record membership.
+    pub fn assign(&mut self, pod: PodId, requests: Resources) {
+        self.used += requests;
+        self.pods.push(pod);
+    }
+
+    /// Release a pod's resources (scale-down / completion).
+    pub fn release(&mut self, pod: PodId, requests: Resources) {
+        self.used = self.used.saturating_sub(&requests);
+        self.pods.retain(|&p| p != pod);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node() -> Node {
+        Node::new(
+            NodeId(0),
+            "worker1",
+            Resources::cores_gb(4.0, 4.0),
+            Bytes::from_gb(30.0),
+            Bandwidth::from_mbps(10.0),
+        )
+    }
+
+    #[test]
+    fn available_and_utilisation() {
+        let mut n = node();
+        assert_eq!(n.available(), n.capacity);
+        n.assign(PodId(1), Resources::cores_gb(1.0, 2.0));
+        let (cpu, mem) = n.utilisation();
+        assert!((cpu - 0.25).abs() < 1e-12);
+        assert!((mem - 0.5).abs() < 1e-12);
+        assert_eq!(n.available(), Resources::cores_gb(3.0, 2.0));
+        assert_eq!(n.pods, vec![PodId(1)]);
+    }
+
+    #[test]
+    fn release_restores() {
+        let mut n = node();
+        let r = Resources::cores_gb(2.0, 1.0);
+        n.assign(PodId(7), r);
+        n.release(PodId(7), r);
+        assert_eq!(n.used, Resources::ZERO);
+        assert!(n.pods.is_empty());
+    }
+
+    #[test]
+    fn disk_accounting() {
+        let mut n = node();
+        assert_eq!(n.disk_free(), Bytes::from_gb(30.0));
+        n.disk_used = Bytes::from_gb(29.0);
+        assert_eq!(n.disk_free(), Bytes::from_gb(1.0));
+    }
+
+    #[test]
+    fn taints_and_labels() {
+        let n = node().with_label("zone", "a").with_taint("edge", "unstable", false);
+        assert_eq!(n.labels.get("zone").map(|s| s.as_str()), Some("a"));
+        assert_eq!(n.taints.len(), 1);
+        assert!(!n.taints[0].hard);
+    }
+}

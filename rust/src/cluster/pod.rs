@@ -1,0 +1,200 @@
+//! Pod specifications. The paper's tasks map 1:1 to single-container pods
+//! (§VI-B: "our Pods contain only one container"), with resource requests,
+//! an image reference, and the standard placement constraints consumed by
+//! the default plugins: node selectors, affinity, tolerations, topology
+//! spread, and volume claims.
+
+use super::resources::Resources;
+use crate::registry::ImageRef;
+use crate::util::units::Bytes;
+use std::collections::BTreeMap;
+
+/// Dense pod identity assigned by the API server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PodId(pub u64);
+
+/// Node-affinity term: a label that must (or should) match.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AffinityTerm {
+    pub key: String,
+    /// Matches when the node has `key` with a value in `values`.
+    pub values: Vec<String>,
+    /// Soft-affinity weight (1..=100); `required` terms filter instead.
+    pub weight: u32,
+}
+
+/// Node affinity: required terms filter nodes, preferred terms score them.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NodeAffinity {
+    pub required: Vec<AffinityTerm>,
+    pub preferred: Vec<AffinityTerm>,
+}
+
+/// Inter-pod affinity term: attract to (or repel from) nodes running pods
+/// with a given label, within a topology domain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PodAffinityTerm {
+    /// Pod label selector: key=value.
+    pub label_key: String,
+    pub label_value: String,
+    /// Topology key defining the co-location domain (e.g. `zone`,
+    /// `kubernetes.io/hostname`).
+    pub topology_key: String,
+    pub weight: u32,
+    /// true ⇒ anti-affinity (repel).
+    pub anti: bool,
+}
+
+/// Toleration of a node taint (exact key/value match, as the paper's
+/// TaintToleration plugin needs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Toleration {
+    pub key: String,
+    pub value: String,
+}
+
+/// Topology-spread constraint: spread pods matching our labels evenly
+/// across domains of `topology_key`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopologySpread {
+    pub topology_key: String,
+    pub max_skew: u32,
+}
+
+/// A persistent-volume claim (consumed by the VolumeBinding plugin).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VolumeClaim {
+    pub size: Bytes,
+}
+
+/// A pod: one container (image + requests) plus placement constraints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pod {
+    pub id: PodId,
+    pub name: String,
+    pub image: ImageRef,
+    pub requests: Resources,
+    pub labels: BTreeMap<String, String>,
+    pub node_selector: BTreeMap<String, String>,
+    pub affinity: NodeAffinity,
+    pub pod_affinity: Vec<PodAffinityTerm>,
+    pub tolerations: Vec<Toleration>,
+    pub topology_spread: Vec<TopologySpread>,
+    pub volume_claims: Vec<VolumeClaim>,
+    /// Which scheduler handles this pod (`schedulerName` in K8s).
+    pub scheduler_name: String,
+    /// Simulated run time after start; None = runs forever (a service).
+    /// Finite durations model batch/churn workloads: on completion the
+    /// pod's resources release and its image may become GC-eligible.
+    pub duration_secs: Option<f64>,
+}
+
+impl Pod {
+    pub fn new(id: PodId, name: &str, image: ImageRef, requests: Resources) -> Pod {
+        Pod {
+            id,
+            name: name.to_string(),
+            image,
+            requests,
+            labels: BTreeMap::new(),
+            node_selector: BTreeMap::new(),
+            affinity: NodeAffinity::default(),
+            pod_affinity: Vec::new(),
+            tolerations: Vec::new(),
+            topology_spread: Vec::new(),
+            volume_claims: Vec::new(),
+            scheduler_name: "lrscheduler".to_string(),
+            duration_secs: None,
+        }
+    }
+
+    pub fn with_duration(mut self, secs: f64) -> Pod {
+        self.duration_secs = Some(secs);
+        self
+    }
+
+    pub fn with_label(mut self, key: &str, value: &str) -> Pod {
+        self.labels.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    pub fn with_selector(mut self, key: &str, value: &str) -> Pod {
+        self.node_selector.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    pub fn with_toleration(mut self, key: &str, value: &str) -> Pod {
+        self.tolerations.push(Toleration { key: key.to_string(), value: value.to_string() });
+        self
+    }
+
+    pub fn with_volume(mut self, size: Bytes) -> Pod {
+        self.volume_claims.push(VolumeClaim { size });
+        self
+    }
+
+    pub fn tolerates(&self, taint_key: &str, taint_value: &str) -> bool {
+        self.tolerations
+            .iter()
+            .any(|t| t.key == taint_key && t.value == taint_value)
+    }
+}
+
+/// Builder used by tests and the workload generator.
+pub struct PodBuilder {
+    next_id: u64,
+}
+
+impl PodBuilder {
+    pub fn new() -> PodBuilder {
+        PodBuilder { next_id: 0 }
+    }
+
+    pub fn build(&mut self, image: &str, requests: Resources) -> Pod {
+        let id = PodId(self.next_id);
+        self.next_id += 1;
+        Pod::new(id, &format!("pod-{}", id.0), ImageRef::parse(image), requests)
+    }
+}
+
+impl Default for PodBuilder {
+    fn default() -> Self {
+        PodBuilder::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_assigns_unique_ids() {
+        let mut b = PodBuilder::new();
+        let p1 = b.build("redis:7.2", Resources::cores_gb(0.5, 0.5));
+        let p2 = b.build("nginx:1.25", Resources::cores_gb(0.1, 0.1));
+        assert_ne!(p1.id, p2.id);
+        assert_eq!(p1.image, ImageRef::new("redis", "7.2"));
+    }
+
+    #[test]
+    fn tolerations() {
+        let mut b = PodBuilder::new();
+        let p = b
+            .build("redis", Resources::ZERO)
+            .with_toleration("edge", "unstable");
+        assert!(p.tolerates("edge", "unstable"));
+        assert!(!p.tolerates("edge", "other"));
+        assert!(!p.tolerates("other", "unstable"));
+    }
+
+    #[test]
+    fn labels_and_selectors() {
+        let mut b = PodBuilder::new();
+        let p = b
+            .build("redis", Resources::ZERO)
+            .with_label("app", "cache")
+            .with_selector("disk", "ssd");
+        assert_eq!(p.labels.get("app").map(|s| s.as_str()), Some("cache"));
+        assert_eq!(p.node_selector.get("disk").map(|s| s.as_str()), Some("ssd"));
+    }
+}

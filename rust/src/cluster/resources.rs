@@ -1,0 +1,99 @@
+//! Resource vectors: requests/limits and allocatable capacity, following
+//! Kubernetes semantics (scheduling is by *requests* against *allocatable*).
+
+use crate::util::units::{Bytes, MilliCpu};
+
+/// A (cpu, memory) resource vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Resources {
+    pub cpu: MilliCpu,
+    pub memory: Bytes,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources { cpu: MilliCpu::ZERO, memory: Bytes::ZERO };
+
+    pub fn new(cpu: MilliCpu, memory: Bytes) -> Resources {
+        Resources { cpu, memory }
+    }
+
+    pub fn cores_gb(cores: f64, gb: f64) -> Resources {
+        Resources { cpu: MilliCpu::from_cores(cores), memory: Bytes::from_gb(gb) }
+    }
+
+    pub fn fits_within(&self, available: &Resources) -> bool {
+        self.cpu <= available.cpu && self.memory <= available.memory
+    }
+
+    pub fn checked_add(&self, rhs: &Resources) -> Resources {
+        Resources { cpu: self.cpu + rhs.cpu, memory: self.memory + rhs.memory }
+    }
+
+    pub fn saturating_sub(&self, rhs: &Resources) -> Resources {
+        Resources {
+            cpu: self.cpu.saturating_sub(rhs.cpu),
+            memory: self.memory.saturating_sub(rhs.memory),
+        }
+    }
+
+    /// Fraction of `capacity` this vector uses, per dimension.
+    /// Returns (cpu_frac, mem_frac); 0 for zero-capacity dimensions.
+    pub fn fraction_of(&self, capacity: &Resources) -> (f64, f64) {
+        let cf = if capacity.cpu.0 == 0 { 0.0 } else { self.cpu.0 as f64 / capacity.cpu.0 as f64 };
+        let mf = if capacity.memory.0 == 0 {
+            0.0
+        } else {
+            self.memory.0 as f64 / capacity.memory.0 as f64
+        };
+        (cf, mf)
+    }
+}
+
+impl std::ops::Add for Resources {
+    type Output = Resources;
+    fn add(self, rhs: Resources) -> Resources {
+        self.checked_add(&rhs)
+    }
+}
+
+impl std::ops::AddAssign for Resources {
+    fn add_assign(&mut self, rhs: Resources) {
+        *self = self.checked_add(&rhs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits() {
+        let cap = Resources::cores_gb(4.0, 8.0);
+        assert!(Resources::cores_gb(4.0, 8.0).fits_within(&cap));
+        assert!(!Resources::cores_gb(4.1, 1.0).fits_within(&cap));
+        assert!(!Resources::cores_gb(1.0, 8.1).fits_within(&cap));
+        assert!(Resources::ZERO.fits_within(&cap));
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Resources::cores_gb(1.0, 2.0);
+        let b = Resources::cores_gb(0.5, 1.0);
+        let sum = a + b;
+        assert_eq!(sum.cpu, MilliCpu::from_cores(1.5));
+        assert_eq!(sum.memory, Bytes::from_gb(3.0));
+        let diff = a.saturating_sub(&sum);
+        assert_eq!(diff, Resources::ZERO);
+    }
+
+    #[test]
+    fn fractions() {
+        let cap = Resources::cores_gb(4.0, 8.0);
+        let used = Resources::cores_gb(1.0, 4.0);
+        let (cf, mf) = used.fraction_of(&cap);
+        assert!((cf - 0.25).abs() < 1e-12);
+        assert!((mf - 0.5).abs() < 1e-12);
+        let (zc, zm) = used.fraction_of(&Resources::ZERO);
+        assert_eq!((zc, zm), (0.0, 0.0));
+    }
+}

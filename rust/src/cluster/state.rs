@@ -1,0 +1,392 @@
+//! Cluster state store — the etcd analog. Owns the node table, the pod
+//! table, pod→node bindings, and the shared [`LayerInterner`], and exposes
+//! the mutation API the API server / kubelets drive: bind, install image,
+//! evict, release.
+
+use super::node::{Node, NodeId};
+use super::pod::{Pod, PodId};
+use crate::registry::{ImageMetadata, ImageRef, LayerId, LayerInterner, LayerSet};
+use crate::util::units::Bytes;
+use std::collections::BTreeMap;
+
+/// Errors from state mutations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StateError {
+    UnknownNode(u32),
+    UnknownPod(u64),
+    AlreadyBound(u64),
+    DiskFull { node: u32, need: Bytes, free: Bytes },
+}
+
+impl std::fmt::Display for StateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StateError::UnknownNode(n) => write!(f, "unknown node {n}"),
+            StateError::UnknownPod(p) => write!(f, "unknown pod {p}"),
+            StateError::AlreadyBound(p) => write!(f, "pod {p} already bound"),
+            StateError::DiskFull { node, need, free } => {
+                write!(f, "node {node} disk full: need {need}, free {free}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StateError {}
+
+/// The cluster state.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterState {
+    nodes: Vec<Node>,
+    pods: BTreeMap<PodId, Pod>,
+    bindings: BTreeMap<PodId, NodeId>,
+    pub interner: LayerInterner,
+}
+
+impl ClusterState {
+    pub fn new() -> ClusterState {
+        ClusterState::default()
+    }
+
+    // --- nodes ------------------------------------------------------------
+
+    pub fn add_node(&mut self, node: Node) -> NodeId {
+        debug_assert_eq!(node.id.0 as usize, self.nodes.len(), "node ids must be dense");
+        let id = node.id;
+        self.nodes.push(node);
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id.0 as usize]
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    // --- pods ---------------------------------------------------------------
+
+    pub fn submit_pod(&mut self, pod: Pod) -> PodId {
+        let id = pod.id;
+        self.pods.insert(id, pod);
+        id
+    }
+
+    pub fn pod(&self, id: PodId) -> Option<&Pod> {
+        self.pods.get(&id)
+    }
+
+    pub fn pods(&self) -> impl Iterator<Item = &Pod> {
+        self.pods.values()
+    }
+
+    pub fn binding(&self, pod: PodId) -> Option<NodeId> {
+        self.bindings.get(&pod).copied()
+    }
+
+    pub fn bindings(&self) -> &BTreeMap<PodId, NodeId> {
+        &self.bindings
+    }
+
+    /// Pods bound to `node` (for inter-pod affinity / topology spread).
+    /// Reads the node's own pod list — O(pods on node), not O(bindings) —
+    /// because the scoring plugins call this per node per cycle (§Perf).
+    pub fn pods_on(&self, node: NodeId) -> impl Iterator<Item = &Pod> {
+        self.nodes[node.0 as usize]
+            .pods
+            .iter()
+            .filter_map(|p| self.pods.get(p))
+    }
+
+    /// Bind a pod to a node: reserves the pod's requested resources.
+    /// Enforces Eq. (8): a pod binds to exactly one node.
+    pub fn bind(&mut self, pod_id: PodId, node_id: NodeId) -> Result<(), StateError> {
+        if self.bindings.contains_key(&pod_id) {
+            return Err(StateError::AlreadyBound(pod_id.0));
+        }
+        let requests = self
+            .pods
+            .get(&pod_id)
+            .ok_or(StateError::UnknownPod(pod_id.0))?
+            .requests;
+        if node_id.0 as usize >= self.nodes.len() {
+            return Err(StateError::UnknownNode(node_id.0));
+        }
+        self.nodes[node_id.0 as usize].assign(pod_id, requests);
+        self.bindings.insert(pod_id, node_id);
+        Ok(())
+    }
+
+    /// Remove a pod: releases its resources (layers stay cached — image
+    /// retention is kubelet GC's job, as on real nodes).
+    pub fn unbind(&mut self, pod_id: PodId) -> Result<(), StateError> {
+        let node_id = self
+            .bindings
+            .remove(&pod_id)
+            .ok_or(StateError::UnknownPod(pod_id.0))?;
+        let requests = self.pods[&pod_id].requests;
+        self.nodes[node_id.0 as usize].release(pod_id, requests);
+        Ok(())
+    }
+
+    // --- image/layer inventory ---------------------------------------------
+
+    /// Intern an image's layers, returning (ids, layer set).
+    pub fn intern_image(&mut self, meta: &ImageMetadata) -> (Vec<LayerId>, LayerSet) {
+        let ids: Vec<LayerId> = meta
+            .layers
+            .iter()
+            .map(|l| self.interner.intern(&l.digest, l.size))
+            .collect();
+        let set = LayerSet::from_ids(&ids);
+        (ids, set)
+    }
+
+    /// Layers of `required` missing on `node`, i.e. L_c \ L_n(t).
+    pub fn missing_layers(&self, node: NodeId, required: &LayerSet) -> Vec<LayerId> {
+        required.difference_ids(&self.nodes[node.0 as usize].layers)
+    }
+
+    /// Bytes the node must download for `required` (Eq. 1).
+    pub fn download_cost(&self, node: NodeId, required: &LayerSet) -> Bytes {
+        required.difference_bytes(&self.nodes[node.0 as usize].layers, &self.interner)
+    }
+
+    /// Bytes of `required` already local (Eq. 2).
+    pub fn local_bytes(&self, node: NodeId, required: &LayerSet) -> Bytes {
+        required.intersection_bytes(&self.nodes[node.0 as usize].layers, &self.interner)
+    }
+
+    /// Install an image on a node: adds missing layers, charges disk
+    /// (Eq. 6 capacity check), records the image. Returns bytes added.
+    pub fn install_image(
+        &mut self,
+        node_id: NodeId,
+        image: &ImageRef,
+        layers: &LayerSet,
+    ) -> Result<Bytes, StateError> {
+        let added = {
+            let node = &self.nodes[node_id.0 as usize];
+            layers.difference_bytes(&node.layers, &self.interner)
+        };
+        let node = &mut self.nodes[node_id.0 as usize];
+        let free = node.disk.saturating_sub(node.disk_used);
+        if added > free {
+            return Err(StateError::DiskFull { node: node_id.0, need: added, free });
+        }
+        node.layers.union_with(layers);
+        node.disk_used += added;
+        if !node.has_image(image) {
+            node.images.push(image.clone());
+        }
+        Ok(added)
+    }
+
+    /// Evict specific layers from a node (disk-pressure GC).
+    /// Layers shared with still-present images should not be passed here;
+    /// the caller (kubelet GC) decides the victim set. Returns bytes freed.
+    pub fn evict_layers(&mut self, node_id: NodeId, layers: &[LayerId]) -> Bytes {
+        let mut freed = Bytes::ZERO;
+        let node = &mut self.nodes[node_id.0 as usize];
+        for &l in layers {
+            if node.layers.contains(l) {
+                node.layers.remove(l);
+                freed += self.interner.size(l);
+            }
+        }
+        node.disk_used = node.disk_used.saturating_sub(freed);
+        freed
+    }
+
+    /// Drop an image record from a node (its unique layers should be passed
+    /// to [`ClusterState::evict_layers`] separately).
+    pub fn remove_image(&mut self, node_id: NodeId, image: &ImageRef) {
+        self.nodes[node_id.0 as usize].images.retain(|i| i != image);
+    }
+
+    // --- invariants (exercised by property tests) ---------------------------
+
+    /// Check Eq. (6)/(7)/(8) style invariants; returns a violation message.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        // Each bound pod maps to a valid node and appears in that node's list.
+        for (&pod, &node) in &self.bindings {
+            if node.0 as usize >= self.nodes.len() {
+                return Err(format!("pod {} bound to unknown node {}", pod.0, node.0));
+            }
+            if !self.nodes[node.0 as usize].pods.contains(&pod) {
+                return Err(format!("pod {} missing from node {} pod list", pod.0, node.0));
+            }
+        }
+        for node in &self.nodes {
+            // Disk accounting matches the layer set.
+            let computed = node.layers.total_bytes(&self.interner);
+            if computed != node.disk_used {
+                return Err(format!(
+                    "node {}: disk_used {} != layer bytes {}",
+                    node.name, node.disk_used, computed
+                ));
+            }
+            if node.disk_used > node.disk {
+                return Err(format!("node {}: disk overcommitted", node.name));
+            }
+            // Used resources equal the sum of bound pod requests.
+            let mut sum = crate::cluster::resources::Resources::ZERO;
+            for &p in &node.pods {
+                sum += self.pods[&p].requests;
+            }
+            if sum != node.used {
+                return Err(format!("node {}: used mismatch", node.name));
+            }
+            // A pod appears on at most one node (Eq. 8).
+            for &p in &node.pods {
+                if self.bindings.get(&p) != Some(&node.id) {
+                    return Err(format!("pod {} on node {} without binding", p.0, node.name));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::pod::PodBuilder;
+    use crate::cluster::resources::Resources;
+    use crate::registry::hub;
+    use crate::util::units::Bandwidth;
+
+    fn cluster() -> ClusterState {
+        let mut s = ClusterState::new();
+        for i in 0..3 {
+            s.add_node(Node::new(
+                NodeId(i),
+                &format!("worker{}", i + 1),
+                Resources::cores_gb(4.0, 4.0),
+                Bytes::from_gb(20.0),
+                Bandwidth::from_mbps(10.0),
+            ));
+        }
+        s
+    }
+
+    #[test]
+    fn bind_reserves_resources() {
+        let mut s = cluster();
+        let mut b = PodBuilder::new();
+        let pod = b.build("redis:7.2", Resources::cores_gb(1.0, 1.0));
+        let pid = s.submit_pod(pod);
+        s.bind(pid, NodeId(1)).unwrap();
+        assert_eq!(s.binding(pid), Some(NodeId(1)));
+        assert_eq!(s.node(NodeId(1)).used, Resources::cores_gb(1.0, 1.0));
+        assert_eq!(s.pods_on(NodeId(1)).count(), 1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_bind_rejected() {
+        let mut s = cluster();
+        let mut b = PodBuilder::new();
+        let pid = s.submit_pod(b.build("redis:7.2", Resources::ZERO));
+        s.bind(pid, NodeId(0)).unwrap();
+        assert_eq!(s.bind(pid, NodeId(1)), Err(StateError::AlreadyBound(pid.0)));
+    }
+
+    #[test]
+    fn unbind_releases() {
+        let mut s = cluster();
+        let mut b = PodBuilder::new();
+        let pid = s.submit_pod(b.build("redis:7.2", Resources::cores_gb(2.0, 2.0)));
+        s.bind(pid, NodeId(0)).unwrap();
+        s.unbind(pid).unwrap();
+        assert_eq!(s.node(NodeId(0)).used, Resources::ZERO);
+        assert_eq!(s.binding(pid), None);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn install_image_charges_disk_once() {
+        let mut s = cluster();
+        let corpus = hub::corpus();
+        let wp = corpus.iter().find(|m| m.name == "wordpress" && m.tag == "6.4").unwrap();
+        let (_, layers) = s.intern_image(wp);
+        let added1 = s.install_image(NodeId(0), &wp.image_ref(), &layers).unwrap();
+        assert_eq!(added1, wp.total_size);
+        // Re-install: nothing new to download.
+        let added2 = s.install_image(NodeId(0), &wp.image_ref(), &layers).unwrap();
+        assert_eq!(added2, Bytes::ZERO);
+        assert_eq!(s.node(NodeId(0)).images.len(), 1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn layer_sharing_reduces_cost() {
+        let mut s = cluster();
+        let corpus = hub::corpus();
+        let wp = corpus.iter().find(|m| m.name == "wordpress" && m.tag == "6.4").unwrap();
+        let httpd = corpus.iter().find(|m| m.name == "httpd").unwrap();
+        let (_, wp_layers) = s.intern_image(wp);
+        let (_, httpd_layers) = s.intern_image(httpd);
+        s.install_image(NodeId(0), &wp.image_ref(), &wp_layers).unwrap();
+        // httpd shares debian+ca-certs+apache with wordpress.
+        let cost_warm = s.download_cost(NodeId(0), &httpd_layers);
+        let cost_cold = s.download_cost(NodeId(1), &httpd_layers);
+        assert!(cost_warm < cost_cold);
+        assert_eq!(cost_cold, httpd.total_size);
+        let local = s.local_bytes(NodeId(0), &httpd_layers);
+        assert_eq!(local + cost_warm, httpd.total_size);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn disk_full_rejected() {
+        let mut s = ClusterState::new();
+        s.add_node(Node::new(
+            NodeId(0),
+            "tiny",
+            Resources::cores_gb(1.0, 1.0),
+            Bytes::from_mb(100.0),
+            Bandwidth::from_mbps(10.0),
+        ));
+        let corpus = hub::corpus();
+        let gcc = corpus.iter().find(|m| m.name == "gcc").unwrap();
+        let (_, layers) = s.intern_image(gcc);
+        let err = s.install_image(NodeId(0), &gcc.image_ref(), &layers).unwrap_err();
+        assert!(matches!(err, StateError::DiskFull { .. }));
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evict_frees_disk() {
+        let mut s = cluster();
+        let corpus = hub::corpus();
+        let redis = corpus.iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
+        let (ids, layers) = s.intern_image(redis);
+        s.install_image(NodeId(0), &redis.image_ref(), &layers).unwrap();
+        let freed = s.evict_layers(NodeId(0), &ids);
+        assert_eq!(freed, redis.total_size);
+        assert_eq!(s.node(NodeId(0)).disk_used, Bytes::ZERO);
+        s.remove_image(NodeId(0), &redis.image_ref());
+        assert!(s.node(NodeId(0)).images.is_empty());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn missing_layers_listed() {
+        let mut s = cluster();
+        let corpus = hub::corpus();
+        let nginx = corpus.iter().find(|m| m.name == "nginx").unwrap();
+        let (ids, layers) = s.intern_image(nginx);
+        assert_eq!(s.missing_layers(NodeId(0), &layers).len(), ids.len());
+        s.install_image(NodeId(0), &nginx.image_ref(), &layers).unwrap();
+        assert!(s.missing_layers(NodeId(0), &layers).is_empty());
+    }
+}

@@ -1,0 +1,109 @@
+//! Shared experiment setup — the paper's §VI-A testbed, encoded.
+//!
+//! "All nodes have 4-core CPUs. … Worker node 1 has 4GB of memory and a
+//! 30GB hard drive. Worker node 2 has 2GB of memory and a 30GB hard drive.
+//! Worker nodes 3 and 4 each have 4GB of memory and a 20GB hard drive."
+//! Experiments run with 3, 4, and 5 workers; the 5th reuses the w3/w4 spec.
+
+use crate::cluster::{Node, NodeId, Pod, Resources};
+use crate::registry::Registry;
+use crate::sim::{SchedulerChoice, SimConfig, SimReport, Simulation, WorkloadConfig, WorkloadGen};
+use crate::util::units::{Bandwidth, Bytes};
+
+/// Default per-node downlink for experiments that don't sweep bandwidth.
+pub const DEFAULT_BANDWIDTH_MBPS: f64 = 10.0;
+
+/// Worker specs from §VI-A: (memory GB, disk GB), all 4-core.
+const WORKER_SPECS: [(f64, f64); 5] = [
+    (4.0, 30.0), // worker1
+    (2.0, 30.0), // worker2
+    (4.0, 20.0), // worker3
+    (4.0, 20.0), // worker4
+    (4.0, 20.0), // worker5 (5-node runs; spec follows w3/w4)
+];
+
+/// Build the paper's worker nodes (1-based names, as in the paper).
+pub fn paper_nodes(n: usize) -> Vec<Node> {
+    assert!((1..=WORKER_SPECS.len()).contains(&n), "supported node counts: 1..=5");
+    (0..n)
+        .map(|i| {
+            let (mem_gb, disk_gb) = WORKER_SPECS[i];
+            Node::new(
+                NodeId(i as u32),
+                &format!("worker{}", i + 1),
+                Resources::cores_gb(4.0, mem_gb),
+                Bytes::from_gb(disk_gb),
+                Bandwidth::from_mbps(DEFAULT_BANDWIDTH_MBPS),
+            )
+        })
+        .collect()
+}
+
+/// The paper's 20-pod random-image workload (same trace for every
+/// scheduler so comparisons are paired).
+pub fn paper_trace(seed: u64, n_pods: usize) -> Vec<Pod> {
+    let registry = Registry::with_corpus();
+    let cfg = WorkloadConfig { seed, ..WorkloadConfig::default() };
+    WorkloadGen::new(&registry, cfg).trace(n_pods)
+}
+
+/// Run one scheduler over a trace on a fresh paper cluster.
+pub fn run_one(
+    choice: SchedulerChoice,
+    n_nodes: usize,
+    trace: Vec<Pod>,
+    mutate_cfg: impl FnOnce(&mut SimConfig),
+) -> SimReport {
+    let mut cfg = SimConfig::default();
+    cfg.scheduler = choice;
+    mutate_cfg(&mut cfg);
+    let mut sim = Simulation::new(paper_nodes(n_nodes), Registry::with_corpus(), cfg);
+    sim.run_trace(trace)
+}
+
+/// Run all three schedulers on the same trace (paired comparison).
+pub fn run_all(
+    n_nodes: usize,
+    trace: &[Pod],
+    mutate_cfg: impl Fn(&mut SimConfig),
+) -> Vec<SimReport> {
+    SchedulerChoice::all()
+        .into_iter()
+        .map(|c| run_one(c, n_nodes, trace.to_vec(), &mutate_cfg))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_matches_section_6a() {
+        let nodes = paper_nodes(4);
+        assert_eq!(nodes.len(), 4);
+        assert_eq!(nodes[0].capacity, Resources::cores_gb(4.0, 4.0));
+        assert_eq!(nodes[1].capacity, Resources::cores_gb(4.0, 2.0));
+        assert_eq!(nodes[0].disk, Bytes::from_gb(30.0));
+        assert_eq!(nodes[2].disk, Bytes::from_gb(20.0));
+        assert_eq!(nodes[3].name, "worker4");
+    }
+
+    #[test]
+    fn trace_is_paired_across_runs() {
+        let t1 = paper_trace(1, 20);
+        let t2 = paper_trace(1, 20);
+        assert_eq!(t1.len(), 20);
+        for (a, b) in t1.iter().zip(&t2) {
+            assert_eq!(a.image, b.image);
+        }
+    }
+
+    #[test]
+    fn run_all_produces_three_reports() {
+        let trace = paper_trace(5, 5);
+        let reports = run_all(3, &trace, |_| {});
+        assert_eq!(reports.len(), 3);
+        assert_eq!(reports[0].scheduler, "Default");
+        assert_eq!(reports[2].scheduler, "LRScheduler");
+    }
+}

@@ -1,0 +1,151 @@
+//! Export experiment results as JSON/CSV for external plotting — the
+//! figures in the paper are plots; this module emits the exact series the
+//! drivers compute so they can be re-rendered with any toolchain.
+
+use super::{fig3::Fig3, fig4::Fig4, fig5::Fig5, table1::Table1};
+use crate::sim::SimReport;
+use crate::util::json::Json;
+
+/// A full simulation report as JSON (per-pod records + totals).
+pub fn report_to_json(rep: &SimReport) -> Json {
+    let mut o = Json::obj();
+    o.set("scheduler", Json::Str(rep.scheduler.to_string()))
+        .set("deployed", Json::Int(rep.deployed() as i64))
+        .set("unschedulable", Json::Int(rep.unschedulable as i64))
+        .set("failed_pulls", Json::Int(rep.failed_pulls as i64))
+        .set("total_download_mb", Json::Num(rep.total_download().as_mb()))
+        .set("total_download_secs", Json::Num(rep.total_download_secs()))
+        .set("final_std", Json::Num(rep.final_std()))
+        .set("omega1_used", Json::Int(rep.omega1_used as i64))
+        .set("omega2_used", Json::Int(rep.omega2_used as i64))
+        .set(
+            "records",
+            Json::Arr(
+                rep.records
+                    .iter()
+                    .map(|r| {
+                        let mut e = Json::obj();
+                        e.set("pod", Json::Int(r.pod.0 as i64))
+                            .set("image", Json::Str(r.image.clone()))
+                            .set("node", Json::Str(r.node.clone()))
+                            .set("download_mb", Json::Num(r.download.as_mb()))
+                            .set("p2p_mb", Json::Num(r.p2p.as_mb()))
+                            .set("download_secs", Json::Num(r.download_secs))
+                            .set("std_after", Json::Num(r.std_after))
+                            .set("omega", Json::Num(r.omega))
+                            .set("layer_score", Json::Num(r.layer_score));
+                        e
+                    })
+                    .collect(),
+            ),
+        );
+    o
+}
+
+pub fn fig3_to_json(fig: &Fig3) -> Json {
+    let mut o = Json::obj();
+    o.set("figure", Json::Str("fig3".into())).set(
+        "cells",
+        Json::Arr(
+            fig.cells
+                .iter()
+                .map(|c| {
+                    let mut e = Json::obj();
+                    e.set("nodes", Json::Int(c.n_nodes as i64))
+                        .set("scheduler", Json::Str(c.scheduler.to_string()))
+                        .set("cpu_util", Json::Num(c.cpu_util))
+                        .set("disk_mb", Json::Num(c.disk_mb))
+                        .set("mem_util", Json::Num(c.mem_util))
+                        .set("max_containers", Json::Int(c.max_containers as i64))
+                        .set("download_mb", Json::Num(c.download_mb))
+                        .set("omega1_used", Json::Int(c.omega1_used as i64))
+                        .set("omega2_used", Json::Int(c.omega2_used as i64));
+                    e
+                })
+                .collect(),
+        ),
+    );
+    o
+}
+
+pub fn fig4_to_json(fig: &Fig4) -> Json {
+    let mut o = Json::obj();
+    o.set("figure", Json::Str("fig4".into())).set(
+        "bandwidths_mbps",
+        Json::Arr(fig.bandwidths_mbps.iter().map(|&b| Json::Num(b)).collect()),
+    );
+    let mut series = Json::obj();
+    for (name, vals) in &fig.secs {
+        series.set(name, Json::Arr(vals.iter().map(|&v| Json::Num(v)).collect()));
+    }
+    o.set("download_secs", series);
+    o
+}
+
+pub fn fig5_to_json(fig: &Fig5) -> Json {
+    let mut o = Json::obj();
+    o.set("figure", Json::Str("fig5".into()));
+    let mut series = Json::obj();
+    for (name, vals) in &fig.cumulative_mb {
+        series.set(name, Json::Arr(vals.iter().map(|&v| Json::Num(v)).collect()));
+    }
+    o.set("cumulative_mb", series);
+    o
+}
+
+/// Table I as CSV (one row per container × scheduler).
+pub fn table1_to_csv(t: &Table1) -> String {
+    let mut out = String::from("container,scheduler,image,node,download_mb,secs,std\n");
+    for r in &t.rows {
+        out.push_str(&format!(
+            "{},{},{},{},{:.1},{:.1},{:.4}\n",
+            r.container,
+            r.scheduler,
+            r.image,
+            r.node,
+            r.download.as_mb(),
+            r.secs,
+            r.std
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::{common, fig4, fig5, table1};
+    use crate::util::json;
+
+    #[test]
+    fn report_json_roundtrips() {
+        let trace = common::paper_trace(5, 5);
+        let rep = common::run_all(3, &trace, |_| {}).remove(2);
+        let j = report_to_json(&rep);
+        let parsed = json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("scheduler").unwrap().as_str(), Some("LRScheduler"));
+        assert_eq!(parsed.get("records").unwrap().as_arr().unwrap().len(), 5);
+        assert!(parsed.get("total_download_mb").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn fig_exports_parse_back() {
+        let f4 = fig4::run(5, 5, 3);
+        let j = json::parse(&fig4_to_json(&f4).to_string()).unwrap();
+        assert_eq!(
+            j.get("bandwidths_mbps").unwrap().as_arr().unwrap().len(),
+            fig4::BANDWIDTHS_MBPS.len()
+        );
+        let f5 = fig5::run(5, 5, 3);
+        let j5 = json::parse(&fig5_to_json(&f5).to_string()).unwrap();
+        assert!(j5.get("cumulative_mb").unwrap().get("Default").is_some());
+    }
+
+    #[test]
+    fn table1_csv_has_all_rows() {
+        let t = table1::run(5, 4, 3);
+        let csv = table1_to_csv(&t);
+        assert_eq!(csv.lines().count(), 1 + 12); // header + 4 pods × 3 scheds
+        assert!(csv.starts_with("container,scheduler"));
+    }
+}

@@ -1,0 +1,210 @@
+//! Figure 3 — "Performance with different number of nodes": six panels
+//! over 3/4/5 worker nodes × {Default, Layer, LRScheduler}:
+//!   (a) CPU usage   (b) disk usage   (c) memory usage
+//!   (d) max containers without image eviction
+//!   (e) download cost   (f) dynamic-weight behaviour (ω₁/ω₂ usage)
+
+use super::common;
+use super::report;
+use crate::cluster::Resources;
+use crate::registry::Registry;
+use crate::sim::{SchedulerChoice, SimConfig, Simulation, WorkloadConfig, WorkloadGen};
+use crate::util::units::Bytes;
+
+/// One (node count, scheduler) cell of the figure.
+#[derive(Debug, Clone)]
+pub struct Fig3Cell {
+    pub n_nodes: usize,
+    pub scheduler: &'static str,
+    /// (a) mean CPU utilisation across nodes at the end of the run.
+    pub cpu_util: f64,
+    /// (b) total disk used by image layers, MB.
+    pub disk_mb: f64,
+    /// (c) mean memory utilisation.
+    pub mem_util: f64,
+    /// (d) containers deployed before the first disk-capacity rejection.
+    pub max_containers: usize,
+    /// (e) total download cost, MB.
+    pub download_mb: f64,
+    /// (f) ω usage counts (0/0 for Default).
+    pub omega1_used: u64,
+    pub omega2_used: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig3 {
+    pub cells: Vec<Fig3Cell>,
+}
+
+/// Deploy containers until disk capacity rejects one (Fig. 3d: "maximum
+/// number of containers that can be deployed … without image eviction").
+///
+/// Containers are modeled per §III-A: a container is its image *plus a
+/// unique writable layer* — so every deployment consumes disk even when
+/// the image layers are fully shared. The probe registers one derived
+/// image per container (base layers + a 64 MB writable layer) and deploys
+/// until Eq. 6 rejects; layer-aware scheduling dedups the base layers and
+/// therefore fits more containers.
+fn max_containers(choice: SchedulerChoice, n_nodes: usize, seed: u64) -> usize {
+    use crate::registry::{ImageMetadata, LayerMetadata};
+    const WRITABLE_MB: f64 = 64.0;
+    const CAP: usize = 4000;
+
+    let mut registry = Registry::with_corpus();
+    let bases: Vec<ImageMetadata> = registry.all_manifests().cloned().collect();
+    let mut rng = crate::util::rng::Pcg::new(seed, 3);
+    for i in 0..CAP {
+        let base = rng.pick(&bases);
+        let mut layers = base.layers.clone();
+        layers.push(LayerMetadata {
+            digest: format!("sha256:writable-{i:06}"),
+            size: Bytes::from_mb(WRITABLE_MB),
+        });
+        registry.push(ImageMetadata::new(
+            &format!("sha256:wl-{i:06}"),
+            &format!("container-{i:06}"),
+            "v1",
+            layers,
+        ));
+    }
+
+    let mut cfg = SimConfig::default();
+    cfg.scheduler = choice;
+    // One watcher poll at t=0 suffices (the 4k synthetic manifests are
+    // static); re-polling every 10 sim-seconds would dominate the probe.
+    cfg.watcher_interval_secs = f64::INFINITY;
+    // Lift CPU/memory/maxPods so disk (Eq. 6) is the binding constraint.
+    let nodes: Vec<_> = common::paper_nodes(n_nodes)
+        .into_iter()
+        .map(|mut n| {
+            n.capacity.memory = crate::util::units::Bytes::from_gb(100_000.0);
+            n.capacity.cpu = crate::util::units::MilliCpu::from_cores(100_000.0);
+            n.with_max_containers(usize::MAX)
+        })
+        .collect();
+    let mut sim = Simulation::new(nodes, registry, cfg);
+    let mut builder = crate::cluster::PodBuilder::new();
+    let mut deployed = 0;
+    for i in 0..CAP {
+        let pod = builder.build(
+            &format!("container-{i:06}:v1"),
+            Resources::new(crate::util::units::MilliCpu(10), Bytes(1_000_000)),
+        );
+        if !sim.deploy(pod) {
+            break;
+        }
+        deployed += 1;
+    }
+    deployed
+}
+
+pub fn run(seed: u64, n_pods: usize) -> Fig3 {
+    let mut cells = Vec::new();
+    for n_nodes in [3usize, 4, 5] {
+        let trace = common::paper_trace(seed, n_pods);
+        for report in common::run_all(n_nodes, &trace, |_| {}) {
+            let last = report.snapshots.last().expect("nonempty run");
+            let choice = match report.scheduler {
+                "Default" => SchedulerChoice::Default,
+                "Layer" => SchedulerChoice::Layer,
+                _ => SchedulerChoice::LR,
+            };
+            cells.push(Fig3Cell {
+                n_nodes,
+                scheduler: report.scheduler,
+                cpu_util: last.cpu_util,
+                disk_mb: last.disk_used.as_mb(),
+                mem_util: last.mem_util,
+                max_containers: max_containers(choice, n_nodes, seed),
+                download_mb: report.total_download().as_mb(),
+                omega1_used: report.omega1_used,
+                omega2_used: report.omega2_used,
+            });
+        }
+    }
+    Fig3 { cells }
+}
+
+impl Fig3 {
+    pub fn cell(&self, n_nodes: usize, scheduler: &str) -> &Fig3Cell {
+        self.cells
+            .iter()
+            .find(|c| c.n_nodes == n_nodes && c.scheduler == scheduler)
+            .expect("cell exists")
+    }
+
+    /// Disk-usage reduction vs. Default, averaged over node counts
+    /// (the paper reports Layer −44%, LRScheduler −23%).
+    pub fn disk_reduction_vs_default(&self, scheduler: &str) -> f64 {
+        let mut total = 0.0;
+        let mut k = 0;
+        for n in [3usize, 4, 5] {
+            let d = self.cell(n, "Default").disk_mb;
+            let s = self.cell(n, scheduler).disk_mb;
+            if d > 0.0 {
+                total += 1.0 - s / d;
+                k += 1;
+            }
+        }
+        total / k as f64
+    }
+
+    pub fn print(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .cells
+            .iter()
+            .map(|c| {
+                vec![
+                    c.n_nodes.to_string(),
+                    c.scheduler.to_string(),
+                    format!("{:.1}%", c.cpu_util * 100.0),
+                    report::f1(c.disk_mb),
+                    format!("{:.1}%", c.mem_util * 100.0),
+                    c.max_containers.to_string(),
+                    report::f1(c.download_mb),
+                    format!("{}/{}", c.omega1_used, c.omega2_used),
+                ]
+            })
+            .collect();
+        let mut out = String::from("Fig. 3 — performance with different number of nodes\n");
+        out.push_str(&report::table(
+            &["nodes", "scheduler", "cpu(a)", "disk MB(b)", "mem(c)", "max#(d)", "dl MB(e)", "w1/w2(f)"],
+            &rows,
+        ));
+        out.push_str(&format!(
+            "\ndisk reduction vs Default: Layer {:.0}%, LRScheduler {:.0}%  (paper: 44%, 23%)\n",
+            self.disk_reduction_vs_default("Layer") * 100.0,
+            self.disk_reduction_vs_default("LRScheduler") * 100.0,
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shape_holds() {
+        let fig = run(42, 20);
+        assert_eq!(fig.cells.len(), 9);
+        for n in [3usize, 4, 5] {
+            let def = fig.cell(n, "Default");
+            let layer = fig.cell(n, "Layer");
+            let lr = fig.cell(n, "LRScheduler");
+            // (b)/(e): layer-aware schedulers download and store less.
+            assert!(lr.download_mb < def.download_mb, "n={n}");
+            assert!(layer.disk_mb < def.disk_mb, "n={n}");
+            assert!(lr.disk_mb < def.disk_mb, "n={n}");
+            // (a)/(c): CPU and memory usage are within a few points of each
+            // other (same pods land somewhere).
+            assert!((lr.cpu_util - def.cpu_util).abs() < 0.25, "n={n}");
+            assert!((lr.mem_util - def.mem_util).abs() < 0.25, "n={n}");
+            // (d): layer sharing lets more containers fit before disk fills.
+            assert!(lr.max_containers >= def.max_containers, "n={n}");
+            // (f): LR actually exercises both weights over 20 pods.
+            assert_eq!(lr.omega1_used + lr.omega2_used, 20);
+            assert_eq!(def.omega1_used + def.omega2_used, 0);
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Figure 4 — "Download time at various bandwidths": total download time
+//! for the 20-pod trace as the per-node bandwidth sweeps from edge-poor to
+//! edge-rich. The paper reports LRScheduler reducing download time by ~39%
+//! on average vs. the default scheduler, with the gap widening at low
+//! bandwidth.
+
+use super::common;
+use super::report;
+use crate::sim::SchedulerChoice;
+
+pub const BANDWIDTHS_MBPS: [f64; 5] = [2.0, 4.0, 8.0, 16.0, 32.0];
+
+#[derive(Debug, Clone)]
+pub struct Fig4 {
+    pub bandwidths_mbps: Vec<f64>,
+    /// Per scheduler: total download seconds at each bandwidth.
+    pub secs: Vec<(&'static str, Vec<f64>)>,
+}
+
+pub fn run(seed: u64, n_pods: usize, n_nodes: usize) -> Fig4 {
+    let trace = common::paper_trace(seed, n_pods);
+    let mut secs: Vec<(&'static str, Vec<f64>)> = SchedulerChoice::all()
+        .iter()
+        .map(|c| (c.label(), Vec::new()))
+        .collect();
+    for &bw in &BANDWIDTHS_MBPS {
+        for (i, rep) in common::run_all(n_nodes, &trace, |cfg| {
+            cfg.bandwidth_mbps = Some(bw);
+        })
+        .into_iter()
+        .enumerate()
+        {
+            secs[i].1.push(rep.total_download_secs());
+        }
+    }
+    Fig4 { bandwidths_mbps: BANDWIDTHS_MBPS.to_vec(), secs }
+}
+
+impl Fig4 {
+    pub fn series_for(&self, scheduler: &str) -> &[f64] {
+        &self.secs.iter().find(|(s, _)| *s == scheduler).expect("series").1
+    }
+
+    /// Mean relative reduction of LRScheduler vs. Default across the sweep.
+    pub fn lr_reduction_vs_default(&self) -> f64 {
+        let def = self.series_for("Default");
+        let lr = self.series_for("LRScheduler");
+        def.iter()
+            .zip(lr)
+            .map(|(d, l)| if *d > 0.0 { 1.0 - l / d } else { 0.0 })
+            .sum::<f64>()
+            / def.len() as f64
+    }
+
+    pub fn print(&self) -> String {
+        let mut out = String::from("Fig. 4 — download time (s) vs bandwidth (MB/s)\n");
+        let lines: Vec<(String, Vec<f64>)> = std::iter::once((
+            "bandwidth".to_string(),
+            self.bandwidths_mbps.clone(),
+        ))
+        .chain(self.secs.iter().map(|(s, v)| (s.to_string(), v.clone())))
+        .collect();
+        out.push_str(&report::series("", &lines, 1));
+        out.push_str(&format!(
+            "LRScheduler download-time reduction vs Default: {:.0}%  (paper: 39%)\n",
+            self.lr_reduction_vs_default() * 100.0
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_shape_holds() {
+        let fig = run(42, 20, 4);
+        let def = fig.series_for("Default").to_vec();
+        let lr = fig.series_for("LRScheduler").to_vec();
+        // LR at-or-below Default at every bandwidth; strictly below overall.
+        for (d, l) in def.iter().zip(&lr) {
+            assert!(l <= &(d * 1.001), "lr {l} > default {d}");
+        }
+        assert!(fig.lr_reduction_vs_default() > 0.1);
+        // Both series shrink as bandwidth grows (T = C/b).
+        assert!(def.windows(2).all(|w| w[1] < w[0]));
+        assert!(lr.windows(2).all(|w| w[1] < w[0]));
+        // Absolute advantage is biggest at the lowest bandwidth.
+        let gap_low = def[0] - lr[0];
+        let gap_high = def[4] - lr[4];
+        assert!(gap_low > gap_high, "low-bw gap {gap_low} vs {gap_high}");
+    }
+}

@@ -1,0 +1,80 @@
+//! Figure 5 — "Accumulated download size for 20 pods": the running sum of
+//! download cost as the trace deploys, per scheduler. The layer-aware
+//! curves flatten as nodes warm up; the default curve keeps climbing.
+
+use super::common;
+use super::report;
+
+#[derive(Debug, Clone)]
+pub struct Fig5 {
+    /// Per scheduler: cumulative MB after each of the n pods.
+    pub cumulative_mb: Vec<(&'static str, Vec<f64>)>,
+}
+
+pub fn run(seed: u64, n_pods: usize, n_nodes: usize) -> Fig5 {
+    let trace = common::paper_trace(seed, n_pods);
+    let cumulative_mb = common::run_all(n_nodes, &trace, |_| {})
+        .into_iter()
+        .map(|rep| {
+            let mut acc = 0.0;
+            let series: Vec<f64> = rep
+                .records
+                .iter()
+                .map(|r| {
+                    acc += r.download.as_mb();
+                    acc
+                })
+                .collect();
+            (rep.scheduler, series)
+        })
+        .collect();
+    Fig5 { cumulative_mb }
+}
+
+impl Fig5 {
+    pub fn series_for(&self, scheduler: &str) -> &[f64] {
+        &self
+            .cumulative_mb
+            .iter()
+            .find(|(s, _)| *s == scheduler)
+            .expect("series")
+            .1
+    }
+
+    pub fn print(&self) -> String {
+        let mut out = String::from("Fig. 5 — accumulated download size (MB) per deployed pod\n");
+        let lines: Vec<(String, Vec<f64>)> = self
+            .cumulative_mb
+            .iter()
+            .map(|(s, v)| (s.to_string(), v.clone()))
+            .collect();
+        out.push_str(&report::series("", &lines, 0));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shape_holds() {
+        let fig = run(42, 20, 4);
+        let def = fig.series_for("Default");
+        let layer = fig.series_for("Layer");
+        let lr = fig.series_for("LRScheduler");
+        assert_eq!(def.len(), 20);
+        // Cumulative series are non-decreasing.
+        for s in [def, layer, lr] {
+            assert!(s.windows(2).all(|w| w[1] >= w[0] - 1e-9));
+        }
+        // Layer-aware schedulers end significantly below Default.
+        assert!(lr[19] < def[19] * 0.9, "lr {} vs def {}", lr[19], def[19]);
+        assert!(layer[19] < def[19] * 0.9);
+        // The gap grows with the number of deployed containers
+        // ("significantly smaller … as the number increases").
+        let gap_early = def[4] - lr[4];
+        let gap_late = def[19] - lr[19];
+        assert!(gap_late > gap_early);
+    }
+}

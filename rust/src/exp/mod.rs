@@ -1,0 +1,12 @@
+//! Experiment drivers — one module per figure/table of the paper's
+//! evaluation (§VI), plus the shared testbed preset. Each driver exposes
+//! `run(...) -> Struct` (consumed by benches and tests) and a `print()`
+//! that emits the same rows/series the paper reports.
+
+pub mod common;
+pub mod export;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod report;
+pub mod table1;

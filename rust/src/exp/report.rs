@@ -1,0 +1,90 @@
+//! Plain-text table and series printers for the experiment drivers —
+//! the output mirrors the rows/series of the paper's figures and tables.
+
+/// Render a table: header row + data rows, column-aligned.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let headers_owned: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&headers_owned, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a labelled numeric series, one `label: v1 v2 …` per line.
+pub fn series(title: &str, lines: &[(String, Vec<f64>)], precision: usize) -> String {
+    let mut out = format!("{title}\n");
+    let label_w = lines.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    for (label, values) in lines {
+        let vals = values
+            .iter()
+            .map(|v| format!("{v:.precision$}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        out.push_str(&format!("{label:>label_w$}: {vals}\n"));
+    }
+    out
+}
+
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns() {
+        let t = table(
+            &["name", "mb"],
+            &[
+                vec!["a".into(), "1.0".into()],
+                vec!["longer".into(), "12345.6".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[3].contains("12345.6"));
+        // Columns aligned: both data lines same length.
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn series_formats() {
+        let s = series(
+            "downloads",
+            &[("Default".to_string(), vec![1.0, 2.5]), ("LR".to_string(), vec![0.5, 0.25])],
+            2,
+        );
+        assert!(s.contains("downloads"));
+        assert!(s.contains("Default: 1.00 2.50"));
+        assert!(s.contains("     LR: 0.50 0.25"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Table I — "Performance analysis for 20 containers": per-container
+//! download size (MB), download time (s), and cluster STD for each of the
+//! three schedulers on the same 20-pod trace.
+
+use super::common;
+use super::report;
+use crate::util::units::Bytes;
+
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub container: usize,
+    pub scheduler: &'static str,
+    pub image: String,
+    pub node: String,
+    pub download: Bytes,
+    pub secs: f64,
+    pub std: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Table1 {
+    pub rows: Vec<Table1Row>,
+    pub n_pods: usize,
+}
+
+pub fn run(seed: u64, n_pods: usize, n_nodes: usize) -> Table1 {
+    let trace = common::paper_trace(seed, n_pods);
+    let mut rows = Vec::new();
+    for rep in common::run_all(n_nodes, &trace, |_| {}) {
+        for (i, r) in rep.records.iter().enumerate() {
+            rows.push(Table1Row {
+                container: i + 1,
+                scheduler: rep.scheduler,
+                image: r.image.clone(),
+                node: r.node.clone(),
+                download: r.download,
+                secs: r.download_secs,
+                std: r.std_after,
+            });
+        }
+    }
+    Table1 { rows, n_pods }
+}
+
+impl Table1 {
+    pub fn rows_for(&self, scheduler: &str) -> Vec<&Table1Row> {
+        self.rows.iter().filter(|r| r.scheduler == scheduler).collect()
+    }
+
+    pub fn total_download(&self, scheduler: &str) -> Bytes {
+        self.rows_for(scheduler).iter().map(|r| r.download).sum()
+    }
+
+    pub fn total_secs(&self, scheduler: &str) -> f64 {
+        self.rows_for(scheduler).iter().map(|r| r.secs).sum()
+    }
+
+    pub fn final_std(&self, scheduler: &str) -> f64 {
+        self.rows_for(scheduler).last().map(|r| r.std).unwrap_or(0.0)
+    }
+
+    pub fn print(&self) -> String {
+        let mut table_rows = Vec::new();
+        for i in 1..=self.n_pods {
+            for sched in ["Default", "Layer", "LRScheduler"] {
+                if let Some(r) = self
+                    .rows
+                    .iter()
+                    .find(|r| r.container == i && r.scheduler == sched)
+                {
+                    table_rows.push(vec![
+                        if sched == "Default" { i.to_string() } else { String::new() },
+                        sched.to_string(),
+                        r.image.clone(),
+                        r.node.clone(),
+                        report::f1(r.download.as_mb()),
+                        report::f1(r.secs),
+                        report::f3(r.std),
+                    ]);
+                }
+            }
+        }
+        let mut out = String::from("Table I — performance analysis per container\n");
+        out.push_str(&report::table(
+            &["#", "scheduler", "image", "node", "dl MB", "time s", "STD"],
+            &table_rows,
+        ));
+        out.push('\n');
+        for sched in ["Default", "Layer", "LRScheduler"] {
+            out.push_str(&format!(
+                "{sched:>12}: total {:.0} MB, {:.0} s, final STD {:.3}\n",
+                self.total_download(sched).as_mb(),
+                self.total_secs(sched),
+                self.final_std(sched)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shape_holds() {
+        let t = run(42, 20, 4);
+        assert_eq!(t.rows.len(), 60);
+        // Paired rows exist for every container and scheduler.
+        for i in 1..=20 {
+            for s in ["Default", "Layer", "LRScheduler"] {
+                assert!(t.rows.iter().any(|r| r.container == i && r.scheduler == s));
+            }
+        }
+        // Headline orderings: LR (and Layer) beat Default on totals; the
+        // layer-aware schedulers carry equal-or-higher final imbalance
+        // (they trade balance for locality — paper's STD column).
+        assert!(t.total_download("LRScheduler") < t.total_download("Default"));
+        assert!(t.total_download("Layer") < t.total_download("Default"));
+        assert!(t.total_secs("LRScheduler") < t.total_secs("Default"));
+        assert!(t.final_std("Default") <= t.final_std("Layer") + 0.05);
+        // STD is in [0, 0.5] by construction (Eq. 11).
+        for r in &t.rows {
+            assert!((0.0..=0.5).contains(&r.std));
+        }
+    }
+
+    #[test]
+    fn per_step_values_nonnegative() {
+        let t = run(7, 10, 4);
+        for r in &t.rows {
+            assert!(r.secs >= 0.0);
+        }
+    }
+}

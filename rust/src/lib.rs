@@ -1,0 +1,28 @@
+//! # lrsched — LRScheduler reproduction
+//!
+//! A layer-aware, resource-adaptive container scheduler for edge computing,
+//! reproducing Tang et al., *LRScheduler* (MSN 2024), as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)**: a Kubernetes-scheduling-framework analog with the
+//!   paper's LRScheduler plugin, a Docker-registry substrate, an edge-cluster
+//!   discrete-event simulator, and the experiment harnesses for every figure
+//!   and table in the paper's evaluation.
+//! - **L2/L1 (`python/compile/`)**: the batched node-scoring pipeline
+//!   (layer-sharing score, resource scores, Iverson-gated dynamic weights)
+//!   as a JAX graph wrapping a Pallas kernel, AOT-lowered to HLO text.
+//! - **Runtime (`runtime`)**: loads the AOT artifacts via PJRT (`xla` crate)
+//!   and serves them on the scheduling hot path; a pure-rust scorer provides
+//!   the always-available fallback and the differential-testing oracle.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod cli;
+pub mod cluster;
+pub mod exp;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod testing;
+pub mod registry;
+pub mod util;

@@ -1,0 +1,246 @@
+//! `lrsched` — CLI entrypoint. Subcommands drive the simulator and the
+//! experiment harnesses that regenerate every figure/table of the paper's
+//! evaluation, plus registry inspection and a one-shot scoring tool.
+
+use lrsched::cli::{self, OptSpec};
+use lrsched::exp::{common, fig3, fig4, fig5, table1};
+use lrsched::registry::Registry;
+use lrsched::runtime::XlaScorer;
+use lrsched::sim::{SchedulerChoice, SimConfig, Simulation, WorkloadConfig, WorkloadGen};
+use lrsched::util::logging;
+
+const ABOUT: &str = "lrsched — layer-aware, resource-adaptive container scheduler \
+(LRScheduler reproduction)
+
+Subcommands:
+  simulate   run a workload trace through a scheduler on the paper testbed
+  fig3       regenerate Fig. 3 (a-f): performance vs node count
+  fig4       regenerate Fig. 4: download time vs bandwidth
+  fig5       regenerate Fig. 5: accumulated download size
+  table1     regenerate Table I: per-container size/time/STD
+  export     write figure/table data as JSON/CSV for external plotting
+  registry   show the synthetic registry catalog and layer sharing
+  help       this text (or `help <subcommand>`)";
+
+fn common_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "seed", help: "workload RNG seed", default: Some("42") },
+        OptSpec { name: "pods", help: "number of pods in the trace", default: Some("20") },
+        OptSpec { name: "nodes", help: "worker node count (1-5)", default: Some("4") },
+        OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
+    ]
+}
+
+fn simulate_spec() -> Vec<OptSpec> {
+    let mut s = common_spec();
+    s.push(OptSpec {
+        name: "scheduler",
+        help: "default|layer|lr|rl",
+        default: Some("lr"),
+    });
+    s.push(OptSpec {
+        name: "backend",
+        help: "native|xla (xla loads artifacts/ via PJRT)",
+        default: Some("native"),
+    });
+    s.push(OptSpec {
+        name: "bandwidth",
+        help: "per-node bandwidth MB/s",
+        default: Some("10"),
+    });
+    s.push(OptSpec {
+        name: "arrival",
+        help: "seconds between arrivals (0 = sequential)",
+        default: Some("0"),
+    });
+    s.push(OptSpec { name: "gc", help: "enable kubelet image GC", default: None });
+    s.push(OptSpec {
+        name: "p2p-lan",
+        help: "peer layer-transfer LAN bandwidth MB/s (0 = off)",
+        default: Some("0"),
+    });
+    s
+}
+
+fn run() -> Result<(), String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    logging::init_from_env();
+    let (cmd, rest) = match argv.split_first() {
+        None => {
+            println!("{ABOUT}");
+            return Ok(());
+        }
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+    };
+
+    match cmd {
+        "help" | "--help" | "-h" => {
+            match rest.first().map(|s| s.as_str()) {
+                Some("simulate") => println!("{}", cli::usage("simulate", "Run the simulator", &simulate_spec())),
+                Some(c @ ("fig3" | "fig4" | "fig5" | "table1")) => {
+                    println!("{}", cli::usage(c, "Regenerate a paper experiment", &common_spec()))
+                }
+                _ => println!("{ABOUT}"),
+            }
+            Ok(())
+        }
+        "simulate" => {
+            let args = cli::parse(&rest, &simulate_spec())?;
+            apply_log_level(&args)?;
+            let seed = args.u64_or("seed", 42)?;
+            let pods = args.usize_or("pods", 20)?;
+            let nodes = args.usize_or("nodes", 4)?;
+            let bw = args.f64_or("bandwidth", 10.0)?;
+            let arrival = args.f64_or("arrival", 0.0)?;
+            let scheduler = match args.str_or("scheduler", "lr") {
+                "default" => SchedulerChoice::Default,
+                "layer" => SchedulerChoice::Layer,
+                "lr" => SchedulerChoice::LR,
+                "rl" => SchedulerChoice::Rl,
+                other => return Err(format!("unknown scheduler {other:?}")),
+            };
+            let mut cfg = SimConfig::default();
+            cfg.scheduler = scheduler;
+            cfg.bandwidth_mbps = Some(bw);
+            cfg.inter_arrival_secs = if arrival > 0.0 { Some(arrival) } else { None };
+            cfg.gc_enabled = args.flag("gc");
+            let p2p = args.f64_or("p2p-lan", 0.0)?;
+            if p2p > 0.0 {
+                cfg.p2p_lan_mbps = Some(p2p);
+            }
+
+            let registry = Registry::with_corpus();
+            let trace =
+                WorkloadGen::new(&registry, WorkloadConfig { seed, ..Default::default() }).trace(pods);
+            let mut sim = Simulation::new(common::paper_nodes(nodes), registry, cfg);
+            if args.str_or("backend", "native") == "xla" {
+                let scorer = XlaScorer::load_default().map_err(|e| format!("{e:#}"))?;
+                println!("xla backend: variants {:?}", scorer.variant_names());
+                sim = sim.with_backend(Box::new(scorer));
+            }
+            let report = sim.run_trace(trace);
+            println!(
+                "scheduler={} pods={} deployed={} unschedulable={} failed_pulls={}",
+                report.scheduler,
+                pods,
+                report.deployed(),
+                report.unschedulable,
+                report.failed_pulls
+            );
+            println!(
+                "total download: {:.1} MB in {:.1} s (virtual); final STD {:.3}; w1/w2 = {}/{}",
+                report.total_download().as_mb(),
+                report.total_download_secs(),
+                report.final_std(),
+                report.omega1_used,
+                report.omega2_used
+            );
+            for r in &report.records {
+                lrsched::log_debug!(
+                    "pod {:>3} {:<24} -> {:<8} dl {:>8.1} MB {:>7.1}s std {:.3}",
+                    r.pod.0,
+                    r.image,
+                    r.node,
+                    r.download.as_mb(),
+                    r.download_secs,
+                    r.std_after
+                );
+            }
+            Ok(())
+        }
+        "fig3" => {
+            let args = cli::parse(&rest, &common_spec())?;
+            apply_log_level(&args)?;
+            let f = fig3::run(args.u64_or("seed", 42)?, args.usize_or("pods", 20)?);
+            print!("{}", f.print());
+            Ok(())
+        }
+        "fig4" => {
+            let args = cli::parse(&rest, &common_spec())?;
+            apply_log_level(&args)?;
+            let f = fig4::run(
+                args.u64_or("seed", 42)?,
+                args.usize_or("pods", 20)?,
+                args.usize_or("nodes", 4)?,
+            );
+            print!("{}", f.print());
+            Ok(())
+        }
+        "fig5" => {
+            let args = cli::parse(&rest, &common_spec())?;
+            apply_log_level(&args)?;
+            let f = fig5::run(
+                args.u64_or("seed", 42)?,
+                args.usize_or("pods", 20)?,
+                args.usize_or("nodes", 4)?,
+            );
+            print!("{}", f.print());
+            Ok(())
+        }
+        "table1" => {
+            let args = cli::parse(&rest, &common_spec())?;
+            apply_log_level(&args)?;
+            let t = table1::run(
+                args.u64_or("seed", 42)?,
+                args.usize_or("pods", 20)?,
+                args.usize_or("nodes", 4)?,
+            );
+            print!("{}", t.print());
+            Ok(())
+        }
+        "export" => {
+            let mut spec = common_spec();
+            spec.push(OptSpec {
+                name: "out",
+                help: "output directory",
+                default: Some("results"),
+            });
+            let args = cli::parse(&rest, &spec)?;
+            apply_log_level(&args)?;
+            let seed = args.u64_or("seed", 42)?;
+            let pods = args.usize_or("pods", 20)?;
+            let nodes = args.usize_or("nodes", 4)?;
+            let dir = std::path::PathBuf::from(args.str_or("out", "results"));
+            std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+            let wr = |name: &str, text: String| -> Result<(), String> {
+                let p = dir.join(name);
+                std::fs::write(&p, text).map_err(|e| e.to_string())?;
+                println!("wrote {}", p.display());
+                Ok(())
+            };
+            use lrsched::exp::export;
+            wr("fig3.json", export::fig3_to_json(&fig3::run(seed, pods)).to_string_pretty())?;
+            wr("fig4.json", export::fig4_to_json(&fig4::run(seed, pods, nodes)).to_string_pretty())?;
+            wr("fig5.json", export::fig5_to_json(&fig5::run(seed, pods, nodes)).to_string_pretty())?;
+            wr("table1.csv", export::table1_to_csv(&table1::run(seed, pods, nodes)))?;
+            Ok(())
+        }
+        "registry" => {
+            let reg = Registry::with_corpus();
+            println!("{} images:", reg.image_count());
+            for m in reg.all_manifests() {
+                println!(
+                    "  {:<28} {:>9.1} MB  {} layers",
+                    format!("{}:{}", m.name, m.tag),
+                    m.total_size.as_mb(),
+                    m.layers.len()
+                );
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand {other:?}; try `lrsched help`")),
+    }
+}
+
+fn apply_log_level(args: &cli::Args) -> Result<(), String> {
+    let lvl = args.str_or("log-level", "info");
+    logging::set_level(logging::parse_level(lvl).ok_or_else(|| format!("bad log level {lvl:?}"))?);
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+}

@@ -1,0 +1,170 @@
+//! The layer-metadata cache — the paper's `cache.json` (§V-1, Listing 1
+//! `ImageMetadataLists`). The watcher fills it from the registry; the
+//! scheduler reads it on every scoring cycle instead of hitting the
+//! registry, which is the paper's answer to unstable edge bandwidth.
+
+use super::image::{ImageMetadata, ImageRef};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// `ImageMetadataLists` from the paper's Listing 1.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetadataCache {
+    /// Paper `CatchFile` (sic) — where the cache persists.
+    pub cache_file: String,
+    /// Keyed by `name:tag` (the paper keys "by image name and tag").
+    lists: BTreeMap<String, ImageMetadata>,
+}
+
+impl MetadataCache {
+    pub fn new(cache_file: &str) -> MetadataCache {
+        MetadataCache { cache_file: cache_file.to_string(), lists: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, meta: ImageMetadata) {
+        self.lists.insert(meta.image_ref().key(), meta);
+    }
+
+    /// Lookup by image reference — the scheduler's step 2 in §V-2.
+    pub fn lookup(&self, image: &ImageRef) -> Option<&ImageMetadata> {
+        self.lists.get(&image.key())
+    }
+
+    pub fn len(&self) -> usize {
+        self.lists.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lists.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ImageMetadata> {
+        self.lists.values()
+    }
+
+    pub fn clear(&mut self) {
+        self.lists.clear();
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut lists = Json::obj();
+        for (k, v) in &self.lists {
+            lists.set(k, v.to_json());
+        }
+        let mut o = Json::obj();
+        o.set("catch_file", Json::Str(self.cache_file.clone()))
+            .set("lists", lists);
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Option<MetadataCache> {
+        let mut cache = MetadataCache::new(v.get("catch_file")?.as_str()?);
+        for (k, entry) in v.get("lists")?.as_obj()? {
+            let meta = ImageMetadata::from_json(entry)?;
+            if meta.image_ref().key() != *k {
+                return None; // key/value mismatch ⇒ corrupt cache
+            }
+            cache.insert(meta);
+        }
+        Some(cache)
+    }
+
+    /// Persist to `self.cache_file` as pretty JSON.
+    pub fn save(&self) -> std::io::Result<()> {
+        std::fs::write(&self.cache_file, self.to_json().to_string_pretty())
+    }
+
+    /// Load from a path; a missing file yields an empty cache (first boot),
+    /// a corrupt file is an error.
+    pub fn load(path: &str) -> std::io::Result<MetadataCache> {
+        if !Path::new(path).exists() {
+            return Ok(MetadataCache::new(path));
+        }
+        let text = std::fs::read_to_string(path)?;
+        let v = json::parse(&text).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+        })?;
+        MetadataCache::from_json(&v).ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "corrupt cache.json")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::hub;
+    use crate::registry::layer::LayerMetadata;
+    use crate::util::units::Bytes;
+
+    fn sample_cache() -> MetadataCache {
+        let mut c = MetadataCache::new("/tmp/lrsched-test-cache.json");
+        for m in hub::corpus().into_iter().take(5) {
+            c.insert(m);
+        }
+        c
+    }
+
+    #[test]
+    fn insert_lookup() {
+        let c = sample_cache();
+        assert_eq!(c.len(), 5);
+        let hit = c.lookup(&ImageRef::new("wordpress", "6.4"));
+        assert!(hit.is_some());
+        assert!(c.lookup(&ImageRef::new("wordpress", "0.0")).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = sample_cache();
+        let j = c.to_json();
+        assert_eq!(MetadataCache::from_json(&j), Some(c));
+    }
+
+    #[test]
+    fn detects_key_mismatch() {
+        let c = sample_cache();
+        let mut j = c.to_json();
+        // Move an entry under the wrong key.
+        let entry = j.get("lists").unwrap().as_obj().unwrap().values().next().unwrap().clone();
+        if let Json::Obj(m) = j.get("lists").unwrap().clone() {
+            let mut m2 = m;
+            m2.insert("bogus:key".to_string(), entry);
+            j.set("lists", Json::Obj(m2));
+        }
+        assert_eq!(MetadataCache::from_json(&j), None);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let path = "/tmp/lrsched-test-cache-roundtrip.json";
+        let mut c = MetadataCache::new(path);
+        c.insert(ImageMetadata::new(
+            "sha256:x",
+            "app",
+            "v2",
+            vec![LayerMetadata { digest: "sha256:l".into(), size: Bytes::from_mb(3.0) }],
+        ));
+        c.save().unwrap();
+        let loaded = MetadataCache::load(path).unwrap();
+        assert_eq!(loaded, c);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_missing_file_is_empty() {
+        let c = MetadataCache::load("/tmp/does-not-exist-lrsched.json").unwrap();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn load_corrupt_file_errors() {
+        let path = "/tmp/lrsched-test-corrupt.json";
+        std::fs::write(path, "{not json").unwrap();
+        assert!(MetadataCache::load(path).is_err());
+        std::fs::write(path, r#"{"catch_file": "x", "lists": {"a:b": {"bad": 1}}}"#).unwrap();
+        assert!(MetadataCache::load(path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,147 @@
+//! In-process Docker registry — the substrate behind the paper's private
+//! registry (§V-1). Exposes the same logical endpoints the Go scheduler
+//! polls (`/v2/_catalog`, `/v2/<name>/tags/list`, manifests) as methods.
+
+use super::image::{ImageMetadata, ImageRef};
+use std::collections::BTreeMap;
+
+/// Registry error type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegistryError {
+    UnknownImage(String),
+    UnknownTag(String),
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::UnknownImage(n) => write!(f, "unknown image {n}"),
+            RegistryError::UnknownTag(t) => write!(f, "unknown tag {t}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// The registry: image metadata keyed `name` → `tag` → manifest.
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    images: BTreeMap<String, BTreeMap<String, ImageMetadata>>,
+    /// Simulated per-request latency in milliseconds (edge registries are
+    /// not colocated with the scheduler; used by the watcher timing model).
+    pub request_latency_ms: f64,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// A registry pre-populated with the synthetic Docker Hub corpus.
+    pub fn with_corpus() -> Registry {
+        let mut r = Registry::new();
+        for m in super::hub::corpus() {
+            r.push(m);
+        }
+        r
+    }
+
+    /// Upload (push) an image manifest.
+    pub fn push(&mut self, meta: ImageMetadata) {
+        self.images
+            .entry(meta.name.clone())
+            .or_default()
+            .insert(meta.tag.clone(), meta);
+    }
+
+    /// `/v2/_catalog` — repository names, sorted.
+    pub fn catalog(&self) -> Vec<String> {
+        self.images.keys().cloned().collect()
+    }
+
+    /// `/v2/<name>/tags/list`.
+    pub fn tags(&self, name: &str) -> Result<Vec<String>, RegistryError> {
+        self.images
+            .get(name)
+            .map(|tags| tags.keys().cloned().collect())
+            .ok_or_else(|| RegistryError::UnknownImage(name.to_string()))
+    }
+
+    /// `/v2/<name>/manifests/<tag>`.
+    pub fn manifest(&self, image: &ImageRef) -> Result<&ImageMetadata, RegistryError> {
+        let tags = self
+            .images
+            .get(&image.name)
+            .ok_or_else(|| RegistryError::UnknownImage(image.name.clone()))?;
+        tags.get(&image.tag)
+            .ok_or_else(|| RegistryError::UnknownTag(image.key()))
+    }
+
+    /// Walk every (name, tag) manifest — what the watcher does per poll.
+    pub fn all_manifests(&self) -> impl Iterator<Item = &ImageMetadata> {
+        self.images.values().flat_map(|tags| tags.values())
+    }
+
+    pub fn image_count(&self) -> usize {
+        self.images.values().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::layer::LayerMetadata;
+    use crate::util::units::Bytes;
+
+    fn tiny() -> ImageMetadata {
+        ImageMetadata::new(
+            "sha256:m",
+            "app",
+            "v1",
+            vec![LayerMetadata { digest: "sha256:l1".into(), size: Bytes::from_mb(1.0) }],
+        )
+    }
+
+    #[test]
+    fn push_and_lookup() {
+        let mut r = Registry::new();
+        r.push(tiny());
+        assert_eq!(r.catalog(), vec!["app"]);
+        assert_eq!(r.tags("app").unwrap(), vec!["v1"]);
+        assert_eq!(r.manifest(&ImageRef::new("app", "v1")).unwrap().id, "sha256:m");
+    }
+
+    #[test]
+    fn errors() {
+        let r = Registry::with_corpus();
+        assert!(matches!(r.tags("nope"), Err(RegistryError::UnknownImage(_))));
+        assert!(matches!(
+            r.manifest(&ImageRef::new("redis", "nope")),
+            Err(RegistryError::UnknownTag(_))
+        ));
+        assert!(matches!(
+            r.manifest(&ImageRef::new("nope", "1")),
+            Err(RegistryError::UnknownImage(_))
+        ));
+    }
+
+    #[test]
+    fn corpus_registry() {
+        let r = Registry::with_corpus();
+        assert_eq!(r.image_count(), 30);
+        assert!(r.catalog().contains(&"wordpress".to_string()));
+        assert_eq!(r.tags("redis").unwrap().len(), 2);
+        assert_eq!(r.all_manifests().count(), 30);
+    }
+
+    #[test]
+    fn push_overwrites_same_tag() {
+        let mut r = Registry::new();
+        r.push(tiny());
+        let mut v2 = tiny();
+        v2.id = "sha256:m2".into();
+        r.push(v2);
+        assert_eq!(r.image_count(), 1);
+        assert_eq!(r.manifest(&ImageRef::new("app", "v1")).unwrap().id, "sha256:m2");
+    }
+}

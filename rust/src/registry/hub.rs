@@ -1,0 +1,350 @@
+//! Synthetic Docker Hub corpus.
+//!
+//! The paper's workload pulls real images (WordPress, Ghost, GCC, Redis,
+//! Tomcat, MySQL, …) from a private registry. We have no network, so this
+//! module encodes a 30-image corpus whose *layer-sharing topology* and size
+//! distribution mirror the real images: official images share OS base
+//! layers (debian/alpine/ubuntu), language stacks (php/node/openjdk/python)
+//! share runtime layers, and each image adds unique app layers.
+//! Sizes are modeled on Docker Hub published compressed sizes (±, rounded).
+//!
+//! The sharing topology is what drives every result in the paper — two
+//! images that share a 49 MB debian base produce exactly the download-cost
+//! asymmetry Eq. (1) rewards — so this is the substitution that preserves
+//! behaviour (see DESIGN.md §1).
+
+use super::image::ImageMetadata;
+use super::layer::LayerMetadata;
+use crate::util::units::Bytes;
+
+/// A corpus entry: image name, tag, and its layer stack. Layers with equal
+/// names are the *same* content-addressed layer across images.
+struct Entry {
+    name: &'static str,
+    tag: &'static str,
+    /// (shared-layer-name, size in MB)
+    layers: &'static [(&'static str, f64)],
+}
+
+// --- shared layer building blocks -----------------------------------------
+// OS bases
+const DEBIAN12: (&str, f64) = ("os.debian12", 49.0);
+const DEBIAN11: (&str, f64) = ("os.debian11", 52.0);
+const ALPINE: (&str, f64) = ("os.alpine319", 3.4);
+const UBUNTU: (&str, f64) = ("os.ubuntu2204", 29.0);
+// common dependency bundles (buildpack-deps style)
+const CA_CERTS: (&str, f64) = ("dep.ca-certs", 3.0);
+const CURL_DEPS: (&str, f64) = ("dep.curl", 48.0);
+const SCM_DEPS: (&str, f64) = ("dep.scm", 57.0);
+const BUILD_DEPS: (&str, f64) = ("dep.buildpack-full", 310.0);
+// language runtimes
+const PHP_RUNTIME: (&str, f64) = ("rt.php82", 31.0);
+const PHP_EXTS: (&str, f64) = ("rt.php82-exts", 52.0);
+const APACHE: (&str, f64) = ("rt.apache24", 21.0);
+const NODE18: (&str, f64) = ("rt.node18", 48.0);
+const NODE_MODULES: (&str, f64) = ("rt.node18-yarn", 12.0);
+const JRE17: (&str, f64) = ("rt.jre17", 92.0);
+const JDK17: (&str, f64) = ("rt.jdk17", 188.0);
+const PY311: (&str, f64) = ("rt.python311", 19.0);
+const PY_PIP: (&str, f64) = ("rt.python-pip", 11.0);
+const GOLANG: (&str, f64) = ("rt.go121", 68.0);
+
+/// The corpus. 30 images across the families the paper names plus the
+/// surrounding official-image ecosystem.
+const CORPUS: &[Entry] = &[
+    // --- images the paper names explicitly -------------------------------
+    Entry {
+        name: "wordpress",
+        tag: "6.4",
+        layers: &[DEBIAN12, CA_CERTS, APACHE, PHP_RUNTIME, PHP_EXTS, ("app.wordpress", 87.0)],
+    },
+    Entry {
+        name: "ghost",
+        tag: "5",
+        layers: &[DEBIAN12, CA_CERTS, NODE18, NODE_MODULES, ("app.ghost", 171.0)],
+    },
+    Entry {
+        name: "gcc",
+        tag: "13",
+        layers: &[DEBIAN12, CURL_DEPS, SCM_DEPS, BUILD_DEPS, ("app.gcc13", 360.0)],
+    },
+    Entry {
+        name: "redis",
+        tag: "7.2",
+        layers: &[DEBIAN12, CA_CERTS, ("app.redis72", 12.0), ("cfg.redis", 0.4)],
+    },
+    Entry {
+        name: "tomcat",
+        tag: "10",
+        layers: &[UBUNTU, CA_CERTS, JRE17, ("app.tomcat10", 24.0)],
+    },
+    Entry {
+        name: "mysql",
+        tag: "8.2",
+        layers: &[("os.oraclelinux9", 38.0), ("app.mysql-server", 142.0), ("cfg.mysql", 2.0)],
+    },
+    // --- same-family variants (high sharing with the above) --------------
+    Entry {
+        name: "redis",
+        tag: "7.2-alpine",
+        layers: &[ALPINE, ("app.redis72-alpine", 10.5)],
+    },
+    Entry {
+        name: "wordpress",
+        tag: "6.4-php8.2",
+        layers: &[DEBIAN12, CA_CERTS, APACHE, PHP_RUNTIME, PHP_EXTS, ("app.wordpress-fpm", 84.0)],
+    },
+    Entry {
+        name: "tomcat",
+        tag: "10-jdk17",
+        layers: &[UBUNTU, CA_CERTS, JDK17, ("app.tomcat10", 24.0)],
+    },
+    Entry {
+        name: "mariadb",
+        tag: "11",
+        layers: &[UBUNTU, CA_CERTS, ("app.mariadb11", 106.0)],
+    },
+    // --- broader official-image ecosystem --------------------------------
+    Entry {
+        name: "nginx",
+        tag: "1.25",
+        layers: &[DEBIAN12, CA_CERTS, ("app.nginx125", 19.0), ("cfg.nginx", 0.6)],
+    },
+    Entry {
+        name: "httpd",
+        tag: "2.4",
+        layers: &[DEBIAN12, CA_CERTS, APACHE, ("app.httpd24", 9.0)],
+    },
+    Entry {
+        name: "postgres",
+        tag: "16",
+        layers: &[DEBIAN12, CA_CERTS, ("app.postgres16", 96.0), ("cfg.postgres", 1.5)],
+    },
+    Entry {
+        name: "python",
+        tag: "3.11",
+        layers: &[DEBIAN12, CURL_DEPS, PY311, PY_PIP],
+    },
+    Entry {
+        name: "python",
+        tag: "3.11-full",
+        layers: &[DEBIAN12, CURL_DEPS, SCM_DEPS, BUILD_DEPS, PY311, PY_PIP],
+    },
+    Entry {
+        name: "node",
+        tag: "18",
+        layers: &[DEBIAN12, CURL_DEPS, SCM_DEPS, BUILD_DEPS, NODE18, NODE_MODULES],
+    },
+    Entry {
+        name: "node",
+        tag: "18-slim",
+        layers: &[DEBIAN12, CA_CERTS, NODE18],
+    },
+    Entry {
+        name: "golang",
+        tag: "1.21",
+        layers: &[DEBIAN12, CURL_DEPS, SCM_DEPS, BUILD_DEPS, GOLANG],
+    },
+    Entry {
+        name: "php",
+        tag: "8.2-apache",
+        layers: &[DEBIAN12, CA_CERTS, APACHE, PHP_RUNTIME],
+    },
+    Entry {
+        name: "php",
+        tag: "8.2-fpm",
+        layers: &[DEBIAN12, CA_CERTS, PHP_RUNTIME, ("rt.php82-fpm", 6.0)],
+    },
+    Entry {
+        name: "memcached",
+        tag: "1.6",
+        layers: &[DEBIAN11, CA_CERTS, ("app.memcached16", 4.2)],
+    },
+    Entry {
+        name: "rabbitmq",
+        tag: "3.12",
+        layers: &[UBUNTU, CA_CERTS, ("rt.erlang26", 28.0), ("app.rabbitmq312", 32.0)],
+    },
+    Entry {
+        name: "mongo",
+        tag: "7",
+        layers: &[UBUNTU, CA_CERTS, ("app.mongod7", 197.0), ("cfg.mongo", 1.0)],
+    },
+    Entry {
+        name: "elasticsearch",
+        tag: "8.11",
+        layers: &[UBUNTU, CA_CERTS, JDK17, ("app.elastic811", 340.0)],
+    },
+    Entry {
+        name: "jenkins",
+        tag: "lts",
+        layers: &[DEBIAN11, CA_CERTS, JDK17, ("app.jenkins-lts", 95.0)],
+    },
+    Entry {
+        name: "registry",
+        tag: "2",
+        layers: &[ALPINE, ("app.registry2", 7.8)],
+    },
+    Entry {
+        name: "busybox",
+        tag: "1.36",
+        layers: &[("os.busybox136", 2.2)],
+    },
+    Entry {
+        name: "alpine",
+        tag: "3.19",
+        layers: &[ALPINE],
+    },
+    Entry {
+        name: "haproxy",
+        tag: "2.8",
+        layers: &[DEBIAN12, CA_CERTS, ("app.haproxy28", 10.0)],
+    },
+    Entry {
+        name: "grafana",
+        tag: "10",
+        layers: &[ALPINE, ("dep.alpine-libs", 6.0), ("app.grafana10", 111.0)],
+    },
+];
+
+/// Build the corpus as registry metadata. Layer digests are derived from
+/// the shared layer names, so equal names ⇒ equal digests ⇒ sharing.
+pub fn corpus() -> Vec<ImageMetadata> {
+    CORPUS
+        .iter()
+        .map(|e| {
+            let layers: Vec<LayerMetadata> = e
+                .layers
+                .iter()
+                .map(|(lname, mb)| LayerMetadata {
+                    digest: digest_for(lname),
+                    size: Bytes::from_mb(*mb),
+                })
+                .collect();
+            ImageMetadata::new(&digest_for(&format!("manifest.{}:{}", e.name, e.tag)), e.name, e.tag, layers)
+        })
+        .collect()
+}
+
+/// Deterministic pseudo-digest from a layer name (FNV-1a, hex-expanded).
+/// Real registries use sha256 of content; the scheduler only needs identity.
+pub fn digest_for(name: &str) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    // Second pass with a different seed to fill 128 bits.
+    let mut h2: u64 = 0x9e3779b97f4a7c15;
+    for b in name.bytes().rev() {
+        h2 ^= b as u64;
+        h2 = h2.wrapping_mul(0x100000001b3);
+    }
+    format!("sha256:{h:016x}{h2:016x}")
+}
+
+/// Names of the six images the paper's §VI-A lists explicitly.
+pub fn paper_images() -> Vec<&'static str> {
+    vec!["wordpress", "ghost", "gcc", "redis", "tomcat", "mysql"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::{HashMap, HashSet};
+
+    #[test]
+    fn corpus_has_30_images() {
+        assert_eq!(corpus().len(), 30);
+    }
+
+    #[test]
+    fn paper_images_present() {
+        let c = corpus();
+        for name in paper_images() {
+            assert!(c.iter().any(|m| m.name == name), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn digests_are_stable_and_distinct() {
+        assert_eq!(digest_for("os.debian12"), digest_for("os.debian12"));
+        let mut seen = HashSet::new();
+        for m in corpus() {
+            for l in &m.layers {
+                seen.insert(l.digest.clone());
+            }
+        }
+        // 30 images but far fewer distinct layers than total references.
+        let total_refs: usize = corpus().iter().map(|m| m.layers.len()).sum();
+        assert!(seen.len() < total_refs, "no sharing at all?");
+        assert!(seen.len() > 30, "suspiciously few distinct layers");
+    }
+
+    #[test]
+    fn shared_layers_have_identical_size_everywhere() {
+        let mut sizes: HashMap<String, Bytes> = HashMap::new();
+        for m in corpus() {
+            for l in &m.layers {
+                let prev = sizes.insert(l.digest.clone(), l.size);
+                if let Some(p) = prev {
+                    assert_eq!(p, l.size, "layer {} size mismatch", l.digest);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn debian_base_is_widely_shared() {
+        let base = digest_for("os.debian12");
+        let sharers = corpus()
+            .iter()
+            .filter(|m| m.layers.iter().any(|l| l.digest == base))
+            .count();
+        assert!(sharers >= 10, "debian base shared by only {sharers}");
+    }
+
+    #[test]
+    fn image_sizes_are_realistic() {
+        let c = corpus();
+        let gcc = c.iter().find(|m| m.name == "gcc").unwrap();
+        assert!(gcc.total_size > Bytes::from_mb(700.0), "gcc should be huge");
+        let alpine = c.iter().find(|m| m.name == "alpine").unwrap();
+        assert!(alpine.total_size < Bytes::from_mb(5.0));
+        // No image is zero-sized.
+        for m in &c {
+            assert!(m.total_size > Bytes::ZERO, "{} empty", m.name);
+        }
+    }
+
+    #[test]
+    fn name_tag_pairs_unique() {
+        let mut seen = HashSet::new();
+        for m in corpus() {
+            assert!(seen.insert(m.image_ref().key()), "duplicate {}", m.image_ref());
+        }
+    }
+
+    #[test]
+    fn redis_variants_share_little() {
+        // debian redis vs alpine redis share no layers — different bases.
+        let c = corpus();
+        let deb: HashSet<_> = c
+            .iter()
+            .find(|m| m.name == "redis" && m.tag == "7.2")
+            .unwrap()
+            .layers
+            .iter()
+            .map(|l| l.digest.clone())
+            .collect();
+        let alp: HashSet<_> = c
+            .iter()
+            .find(|m| m.tag == "7.2-alpine")
+            .unwrap()
+            .layers
+            .iter()
+            .map(|l| l.digest.clone())
+            .collect();
+        assert!(deb.is_disjoint(&alp));
+    }
+}

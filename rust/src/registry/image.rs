@@ -1,0 +1,203 @@
+//! Image metadata — the `ImageMetadata` structure from the paper's
+//! Listing 1, plus image references (`name:tag`).
+
+use super::layer::LayerMetadata;
+use crate::util::json::Json;
+use crate::util::units::Bytes;
+use std::fmt;
+
+/// An image reference `repo/name:tag` as written in a pod spec.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ImageRef {
+    pub name: String,
+    pub tag: String,
+}
+
+impl ImageRef {
+    pub fn new(name: &str, tag: &str) -> ImageRef {
+        ImageRef { name: name.to_string(), tag: tag.to_string() }
+    }
+
+    /// Parse `name[:tag]`; the tag defaults to `latest` as in Docker.
+    pub fn parse(s: &str) -> ImageRef {
+        // The digest form name@sha256:… is not used by the paper's workload.
+        match s.rsplit_once(':') {
+            // A ':' inside a registry host port (host:5000/img) is not a tag;
+            // only split when the suffix has no '/'.
+            Some((name, tag)) if !tag.contains('/') => ImageRef::new(name, tag),
+            _ => ImageRef::new(s, "latest"),
+        }
+    }
+
+    /// `name` without a leading repository prefix (paper's
+    /// `NameWithoutRepo`), e.g. `registry.local/library/redis` → `redis`.
+    pub fn name_without_repo(&self) -> &str {
+        self.name.rsplit('/').next().unwrap_or(&self.name)
+    }
+
+    pub fn key(&self) -> String {
+        format!("{}:{}", self.name, self.tag)
+    }
+}
+
+impl fmt::Display for ImageRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.name, self.tag)
+    }
+}
+
+/// Registry-side metadata for one image (paper Listing 1 `ImageMetadata`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageMetadata {
+    /// Manifest digest (paper `Id`).
+    pub id: String,
+    pub name: String,
+    pub tag: String,
+    pub total_size: Bytes,
+    pub layers: Vec<LayerMetadata>,
+}
+
+impl ImageMetadata {
+    pub fn new(id: &str, name: &str, tag: &str, layers: Vec<LayerMetadata>) -> ImageMetadata {
+        let total_size = layers.iter().map(|l| l.size).sum();
+        ImageMetadata {
+            id: id.to_string(),
+            name: name.to_string(),
+            tag: tag.to_string(),
+            total_size,
+            layers,
+        }
+    }
+
+    pub fn image_ref(&self) -> ImageRef {
+        ImageRef::new(&self.name, &self.tag)
+    }
+
+    pub fn name_without_repo(&self) -> &str {
+        self.image_ref();
+        self.name.rsplit('/').next().unwrap_or(&self.name)
+    }
+
+    /// Serialize in the shape of the paper's cache.json entries.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("id", Json::Str(self.id.clone()))
+            .set("name", Json::Str(self.name.clone()))
+            .set(
+                "name_without_repo",
+                Json::Str(self.name_without_repo().to_string()),
+            )
+            .set("tag", Json::Str(self.tag.clone()))
+            .set("total_size", Json::Int(self.total_size.0 as i64))
+            .set(
+                "l_meta",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            let mut lo = Json::obj();
+                            lo.set("size", Json::Int(l.size.0 as i64))
+                                .set("layer", Json::Str(l.digest.clone()));
+                            lo
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Option<ImageMetadata> {
+        let layers = v
+            .get("l_meta")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                Some(LayerMetadata {
+                    digest: l.get("layer")?.as_str()?.to_string(),
+                    size: Bytes(l.get("size")?.as_i64()? as u64),
+                })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        let meta = ImageMetadata::new(
+            v.get("id")?.as_str()?,
+            v.get("name")?.as_str()?,
+            v.get("tag")?.as_str()?,
+            layers,
+        );
+        // total_size is recomputed from layers; verify the recorded value
+        // if present (detects hand-edited cache files).
+        if let Some(ts) = v.get("total_size").and_then(|t| t.as_i64()) {
+            if ts as u64 != meta.total_size.0 {
+                return None;
+            }
+        }
+        Some(meta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ImageMetadata {
+        ImageMetadata::new(
+            "sha256:manifest0",
+            "registry.local/library/redis",
+            "7.2",
+            vec![
+                LayerMetadata { digest: "sha256:base".into(), size: Bytes::from_mb(29.0) },
+                LayerMetadata { digest: "sha256:app".into(), size: Bytes::from_mb(88.0) },
+            ],
+        )
+    }
+
+    #[test]
+    fn image_ref_parsing() {
+        assert_eq!(ImageRef::parse("redis:7.2"), ImageRef::new("redis", "7.2"));
+        assert_eq!(ImageRef::parse("redis"), ImageRef::new("redis", "latest"));
+        assert_eq!(
+            ImageRef::parse("registry.local:5000/redis"),
+            ImageRef::new("registry.local:5000/redis", "latest")
+        );
+        assert_eq!(
+            ImageRef::parse("registry.local:5000/redis:7"),
+            ImageRef::new("registry.local:5000/redis", "7")
+        );
+    }
+
+    #[test]
+    fn name_without_repo() {
+        assert_eq!(sample().name_without_repo(), "redis");
+        assert_eq!(ImageRef::parse("redis:7").name_without_repo(), "redis");
+    }
+
+    #[test]
+    fn total_size_is_layer_sum() {
+        assert_eq!(sample().total_size, Bytes::from_mb(117.0));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = sample();
+        let j = m.to_json();
+        assert_eq!(ImageMetadata::from_json(&j), Some(m));
+        // Paper field names present:
+        assert!(j.get("l_meta").is_some());
+        assert!(j.get("name_without_repo").is_some());
+        assert_eq!(j.get("tag").unwrap().as_str(), Some("7.2"));
+    }
+
+    #[test]
+    fn from_json_rejects_inconsistent_total() {
+        let mut j = sample().to_json();
+        j.set("total_size", Json::Int(1));
+        assert_eq!(ImageMetadata::from_json(&j), None);
+    }
+
+    #[test]
+    fn image_ref_key_display() {
+        let r = ImageRef::new("ghost", "5");
+        assert_eq!(r.key(), "ghost:5");
+        assert_eq!(r.to_string(), "ghost:5");
+    }
+}

@@ -1,0 +1,338 @@
+//! Image layers: identities, sizes, and the layer-set algebra used by the
+//! layer-sharing score (paper Eqs. 1–3).
+//!
+//! Layers are content-addressed (`sha256:` digests in real registries); the
+//! scheduler never looks inside a layer, only at (digest, size). For hot-path
+//! set operations the crate interns digests into dense `LayerId`s and stores
+//! per-node layer inventories as bitsets (`LayerSet`).
+
+use crate::util::units::Bytes;
+use std::collections::HashMap;
+
+/// Dense interned layer identity, valid within one [`LayerInterner`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LayerId(pub u32);
+
+/// Digest + size as stored in a registry manifest (paper Listing 1,
+/// `LayerMetadata { Size, Layer }`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerMetadata {
+    /// Content digest, e.g. `sha256:8f4e…`.
+    pub digest: String,
+    pub size: Bytes,
+}
+
+/// Interns layer digests to dense ids and remembers their sizes.
+///
+/// One interner is shared by the registry, the cluster state, and the
+/// scheduler so that `LayerId`s are comparable everywhere.
+#[derive(Debug, Default, Clone)]
+pub struct LayerInterner {
+    by_digest: HashMap<String, LayerId>,
+    digests: Vec<String>,
+    sizes: Vec<Bytes>,
+}
+
+impl LayerInterner {
+    pub fn new() -> LayerInterner {
+        LayerInterner::default()
+    }
+
+    /// Intern a digest, recording its size on first sight. Re-interning with
+    /// a different size is a registry inconsistency and panics in debug
+    /// builds (content-addressed layers cannot change size).
+    pub fn intern(&mut self, digest: &str, size: Bytes) -> LayerId {
+        if let Some(&id) = self.by_digest.get(digest) {
+            debug_assert_eq!(
+                self.sizes[id.0 as usize], size,
+                "layer {digest} re-interned with different size"
+            );
+            return id;
+        }
+        let id = LayerId(self.digests.len() as u32);
+        self.by_digest.insert(digest.to_string(), id);
+        self.digests.push(digest.to_string());
+        self.sizes.push(size);
+        id
+    }
+
+    pub fn lookup(&self, digest: &str) -> Option<LayerId> {
+        self.by_digest.get(digest).copied()
+    }
+
+    pub fn size(&self, id: LayerId) -> Bytes {
+        self.sizes[id.0 as usize]
+    }
+
+    pub fn digest(&self, id: LayerId) -> &str {
+        &self.digests[id.0 as usize]
+    }
+
+    /// Number of distinct layers seen.
+    pub fn len(&self) -> usize {
+        self.digests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.digests.is_empty()
+    }
+
+    /// Layer sizes as f32 MB, padded to `cap` — the dense vector handed to
+    /// the XLA scoring artifact.
+    pub fn sizes_mb_padded(&self, cap: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; cap.max(self.len())];
+        for (i, s) in self.sizes.iter().enumerate() {
+            v[i] = s.as_mb() as f32;
+        }
+        v.truncate(cap.max(self.len()));
+        v
+    }
+}
+
+/// A set of layers as a bitset over interned ids. Supports the three
+/// operations the scheduler needs: union (node gains layers), intersection
+/// size in bytes (Eq. 2), and difference size in bytes (Eq. 1).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LayerSet {
+    words: Vec<u64>,
+}
+
+impl LayerSet {
+    pub fn new() -> LayerSet {
+        LayerSet::default()
+    }
+
+    pub fn from_ids(ids: &[LayerId]) -> LayerSet {
+        let mut s = LayerSet::new();
+        for &id in ids {
+            s.insert(id);
+        }
+        s
+    }
+
+    fn ensure(&mut self, word: usize) {
+        if self.words.len() <= word {
+            self.words.resize(word + 1, 0);
+        }
+    }
+
+    pub fn insert(&mut self, id: LayerId) {
+        let (w, b) = (id.0 as usize / 64, id.0 as usize % 64);
+        self.ensure(w);
+        self.words[w] |= 1 << b;
+    }
+
+    pub fn remove(&mut self, id: LayerId) {
+        let (w, b) = (id.0 as usize / 64, id.0 as usize % 64);
+        if w < self.words.len() {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    pub fn contains(&self, id: LayerId) -> bool {
+        let (w, b) = (id.0 as usize / 64, id.0 as usize % 64);
+        w < self.words.len() && self.words[w] & (1 << b) != 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    pub fn union_with(&mut self, other: &LayerSet) {
+        self.ensure(other.words.len().saturating_sub(1));
+        for (i, &w) in other.words.iter().enumerate() {
+            self.words[i] |= w;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = LayerId> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut bits = w;
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    return None;
+                }
+                let b = bits.trailing_zeros();
+                bits &= bits - 1;
+                Some(LayerId((wi * 64) as u32 + b))
+            })
+        })
+    }
+
+    /// Total bytes of `self ∩ other` (Eq. 2: local hit size `D_c^n`).
+    pub fn intersection_bytes(&self, other: &LayerSet, interner: &LayerInterner) -> Bytes {
+        let mut total = Bytes::ZERO;
+        let n = self.words.len().min(other.words.len());
+        for wi in 0..n {
+            let mut bits = self.words[wi] & other.words[wi];
+            while bits != 0 {
+                let b = bits.trailing_zeros();
+                bits &= bits - 1;
+                total += interner.size(LayerId((wi * 64) as u32 + b));
+            }
+        }
+        total
+    }
+
+    /// Total bytes of `self \ other` (Eq. 1: download cost `C_c^n`).
+    pub fn difference_bytes(&self, other: &LayerSet, interner: &LayerInterner) -> Bytes {
+        let mut total = Bytes::ZERO;
+        for wi in 0..self.words.len() {
+            let o = other.words.get(wi).copied().unwrap_or(0);
+            let mut bits = self.words[wi] & !o;
+            while bits != 0 {
+                let b = bits.trailing_zeros();
+                bits &= bits - 1;
+                total += interner.size(LayerId((wi * 64) as u32 + b));
+            }
+        }
+        total
+    }
+
+    /// Layer ids in `self \ other` (the layers a node must pull).
+    pub fn difference_ids(&self, other: &LayerSet) -> Vec<LayerId> {
+        let mut ids = Vec::new();
+        for wi in 0..self.words.len() {
+            let o = other.words.get(wi).copied().unwrap_or(0);
+            let mut bits = self.words[wi] & !o;
+            while bits != 0 {
+                let b = bits.trailing_zeros();
+                bits &= bits - 1;
+                ids.push(LayerId((wi * 64) as u32 + b));
+            }
+        }
+        ids
+    }
+
+    /// Total bytes of all layers in the set.
+    pub fn total_bytes(&self, interner: &LayerInterner) -> Bytes {
+        self.iter().map(|id| interner.size(id)).sum()
+    }
+
+    /// Fill `out[layer_id] = 1.0` for members; `out` must be zeroed and at
+    /// least `interner.len()` long. Used to build the XLA presence matrix.
+    pub fn write_indicator(&self, out: &mut [f32]) {
+        for id in self.iter() {
+            if (id.0 as usize) < out.len() {
+                out[id.0 as usize] = 1.0;
+            }
+        }
+    }
+}
+
+impl FromIterator<LayerId> for LayerSet {
+    fn from_iter<T: IntoIterator<Item = LayerId>>(iter: T) -> LayerSet {
+        let mut s = LayerSet::new();
+        for id in iter {
+            s.insert(id);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn interner_with(sizes_mb: &[f64]) -> (LayerInterner, Vec<LayerId>) {
+        let mut interner = LayerInterner::new();
+        let ids = sizes_mb
+            .iter()
+            .enumerate()
+            .map(|(i, &mb)| interner.intern(&format!("sha256:{i:04x}"), Bytes::from_mb(mb)))
+            .collect();
+        (interner, ids)
+    }
+
+    #[test]
+    fn intern_dedups() {
+        let mut interner = LayerInterner::new();
+        let a = interner.intern("sha256:aa", Bytes::from_mb(5.0));
+        let b = interner.intern("sha256:aa", Bytes::from_mb(5.0));
+        assert_eq!(a, b);
+        assert_eq!(interner.len(), 1);
+        assert_eq!(interner.size(a), Bytes::from_mb(5.0));
+        assert_eq!(interner.digest(a), "sha256:aa");
+        assert_eq!(interner.lookup("sha256:aa"), Some(a));
+        assert_eq!(interner.lookup("sha256:bb"), None);
+    }
+
+    #[test]
+    fn set_basics() {
+        let (_, ids) = interner_with(&[1.0, 2.0, 3.0]);
+        let mut s = LayerSet::new();
+        assert!(s.is_empty());
+        s.insert(ids[0]);
+        s.insert(ids[2]);
+        assert!(s.contains(ids[0]));
+        assert!(!s.contains(ids[1]));
+        assert_eq!(s.len(), 2);
+        s.remove(ids[0]);
+        assert!(!s.contains(ids[0]));
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![ids[2]]);
+    }
+
+    #[test]
+    fn set_works_across_word_boundaries() {
+        let mut s = LayerSet::new();
+        for i in [0u32, 63, 64, 65, 127, 128, 1000] {
+            s.insert(LayerId(i));
+        }
+        assert_eq!(s.len(), 7);
+        assert!(s.contains(LayerId(1000)));
+        assert!(!s.contains(LayerId(999)));
+        let collected: Vec<u32> = s.iter().map(|l| l.0).collect();
+        assert_eq!(collected, vec![0, 63, 64, 65, 127, 128, 1000]);
+    }
+
+    #[test]
+    fn intersection_and_difference_bytes() {
+        let (interner, ids) = interner_with(&[10.0, 20.0, 30.0, 40.0]);
+        let req = LayerSet::from_ids(&[ids[0], ids[1], ids[3]]); // 10+20+40
+        let node = LayerSet::from_ids(&[ids[1], ids[2]]); // has 20, 30
+        assert_eq!(req.intersection_bytes(&node, &interner), Bytes::from_mb(20.0));
+        assert_eq!(req.difference_bytes(&node, &interner), Bytes::from_mb(50.0));
+        assert_eq!(req.difference_ids(&node), vec![ids[0], ids[3]]);
+        assert_eq!(req.total_bytes(&interner), Bytes::from_mb(70.0));
+    }
+
+    #[test]
+    fn union_grows() {
+        let (_, ids) = interner_with(&[1.0; 5]);
+        let mut a = LayerSet::from_ids(&[ids[0]]);
+        let b = LayerSet::from_ids(&[ids[3], ids[4]]);
+        a.union_with(&b);
+        assert_eq!(a.len(), 3);
+        assert!(a.contains(ids[4]));
+    }
+
+    #[test]
+    fn indicator_vector() {
+        let (_, ids) = interner_with(&[1.0, 1.0, 1.0]);
+        let s = LayerSet::from_ids(&[ids[0], ids[2]]);
+        let mut out = vec![0.0f32; 4];
+        s.write_indicator(&mut out);
+        assert_eq!(out, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_set_edge_cases() {
+        let (interner, ids) = interner_with(&[7.0]);
+        let empty = LayerSet::new();
+        let full = LayerSet::from_ids(&[ids[0]]);
+        assert_eq!(empty.intersection_bytes(&full, &interner), Bytes::ZERO);
+        assert_eq!(full.difference_bytes(&empty, &interner), Bytes::from_mb(7.0));
+        assert_eq!(empty.difference_bytes(&full, &interner), Bytes::ZERO);
+    }
+
+    #[test]
+    fn sizes_mb_padded() {
+        let (interner, _) = interner_with(&[1.5, 2.5]);
+        let v = interner.sizes_mb_padded(4);
+        assert_eq!(v, vec![1.5, 2.5, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,18 @@
+//! Docker-registry substrate: image/layer metadata (paper Listing 1), the
+//! in-process registry with `/v2`-shaped endpoints, the `cache.json`
+//! metadata cache, the periodic watcher (§V-1), and the synthetic
+//! Docker-Hub image corpus that substitutes for the paper's private
+//! registry content.
+
+pub mod cache;
+pub mod catalog;
+pub mod hub;
+pub mod image;
+pub mod layer;
+pub mod watcher;
+
+pub use cache::MetadataCache;
+pub use catalog::{Registry, RegistryError};
+pub use image::{ImageMetadata, ImageRef};
+pub use layer::{LayerId, LayerInterner, LayerMetadata, LayerSet};
+pub use watcher::Watcher;

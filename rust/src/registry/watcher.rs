@@ -1,0 +1,137 @@
+//! Registry watcher — the paper's `Registry.Watcher()` goroutine (§V-1):
+//! periodically fetch the catalog, walk tags and manifests, filter layer
+//! ids + sizes, and refresh the local metadata cache. Default poll interval
+//! is 10 seconds, matching the paper.
+//!
+//! The watcher is driven by the simulator's virtual clock (or real time in
+//! the CLI), and tolerates transient registry failures by keeping the last
+//! good cache — exactly the behaviour the paper motivates for unstable edge
+//! links.
+
+use super::cache::MetadataCache;
+use super::catalog::Registry;
+
+/// Poll interval from the paper: "waits for 10 seconds by default".
+pub const DEFAULT_POLL_SECS: f64 = 10.0;
+
+#[derive(Debug, Clone)]
+pub struct Watcher {
+    pub poll_interval_secs: f64,
+    next_poll_at: f64,
+    /// Statistics for observability/tests.
+    pub polls: u64,
+    pub images_seen: u64,
+    pub failures: u64,
+}
+
+impl Watcher {
+    pub fn new(poll_interval_secs: f64) -> Watcher {
+        Watcher {
+            poll_interval_secs,
+            next_poll_at: 0.0,
+            polls: 0,
+            images_seen: 0,
+            failures: 0,
+        }
+    }
+
+    pub fn with_default_interval() -> Watcher {
+        Watcher::new(DEFAULT_POLL_SECS)
+    }
+
+    /// Is a poll due at virtual time `now`?
+    pub fn due(&self, now: f64) -> bool {
+        now >= self.next_poll_at
+    }
+
+    /// Time of the next scheduled poll.
+    pub fn next_poll_at(&self) -> f64 {
+        self.next_poll_at
+    }
+
+    /// Run one poll: catalog → tags → manifests → cache refresh.
+    /// Returns the number of images refreshed.
+    pub fn poll(&mut self, now: f64, registry: &Registry, cache: &mut MetadataCache) -> usize {
+        self.polls += 1;
+        self.next_poll_at = now + self.poll_interval_secs;
+        let mut fresh = MetadataCache::new(&cache.cache_file);
+        for name in registry.catalog() {
+            let tags = match registry.tags(&name) {
+                Ok(t) => t,
+                Err(_) => {
+                    self.failures += 1;
+                    continue;
+                }
+            };
+            for tag in tags {
+                match registry.manifest(&super::image::ImageRef::new(&name, &tag)) {
+                    Ok(meta) => {
+                        fresh.insert(meta.clone());
+                        self.images_seen += 1;
+                    }
+                    Err(_) => self.failures += 1,
+                }
+            }
+        }
+        // Atomic swap: the scheduler never observes a half-filled cache.
+        let n = fresh.len();
+        *cache = fresh;
+        n
+    }
+
+    /// Drive the watcher from a clock: polls if due, otherwise no-op.
+    /// Returns true if a poll ran.
+    pub fn tick(&mut self, now: f64, registry: &Registry, cache: &mut MetadataCache) -> bool {
+        if self.due(now) {
+            self.poll(now, registry, cache);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::image::ImageRef;
+
+    #[test]
+    fn poll_fills_cache() {
+        let reg = Registry::with_corpus();
+        let mut cache = MetadataCache::new("/tmp/unused.json");
+        let mut w = Watcher::with_default_interval();
+        let n = w.poll(0.0, &reg, &mut cache);
+        assert_eq!(n, 30);
+        assert_eq!(cache.len(), 30);
+        assert!(cache.lookup(&ImageRef::new("mysql", "8.2")).is_some());
+        assert_eq!(w.polls, 1);
+        assert_eq!(w.failures, 0);
+    }
+
+    #[test]
+    fn respects_interval() {
+        let reg = Registry::with_corpus();
+        let mut cache = MetadataCache::new("/tmp/unused.json");
+        let mut w = Watcher::new(10.0);
+        assert!(w.tick(0.0, &reg, &mut cache)); // first poll immediate
+        assert!(!w.tick(5.0, &reg, &mut cache));
+        assert!(!w.tick(9.99, &reg, &mut cache));
+        assert!(w.tick(10.0, &reg, &mut cache));
+        assert_eq!(w.polls, 2);
+    }
+
+    #[test]
+    fn poll_replaces_stale_entries() {
+        let mut reg = Registry::new();
+        let mut cache = MetadataCache::new("/tmp/unused.json");
+        let mut w = Watcher::new(10.0);
+        // Image that later disappears from the registry.
+        reg.push(crate::registry::hub::corpus().remove(0));
+        w.poll(0.0, &reg, &mut cache);
+        assert_eq!(cache.len(), 1);
+        let reg2 = Registry::new(); // registry wiped
+        w.poll(10.0, &reg2, &mut cache);
+        assert_eq!(cache.len(), 0, "stale entries must not survive a poll");
+    }
+}

@@ -1,0 +1,9 @@
+//! The PJRT runtime: loads the AOT-compiled JAX/Pallas scoring artifacts
+//! (HLO text) and serves them on the scheduling hot path. Python never
+//! runs here — `make artifacts` is the only build-time Python step.
+
+pub mod pjrt;
+pub mod scorer;
+
+pub use pjrt::PjRt;
+pub use scorer::XlaScorer;

@@ -1,0 +1,55 @@
+//! PJRT wrapper — thin layer over the `xla` crate: one CPU client per
+//! process, HLO-text loading (the AOT interchange format, see
+//! `python/compile/aot.py`), compile-once semantics.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// The PJRT client. Compilation happens once at startup; `execute` is the
+/// only per-cycle call.
+pub struct PjRt {
+    client: xla::PjRtClient,
+}
+
+impl PjRt {
+    pub fn cpu() -> Result<PjRt> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjRt { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the (tuple) output literal.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(inputs).context("executing")?;
+        let literal = result[0][0].to_literal_sync().context("fetching result")?;
+        Ok(literal)
+    }
+}

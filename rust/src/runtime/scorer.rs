@@ -1,0 +1,206 @@
+//! XLA scoring backend — loads the AOT artifacts described by
+//! `artifacts/manifest.json`, compiles each shape variant once, and serves
+//! [`ScoringBackend::score`] on the scheduling hot path by padding inputs
+//! to the smallest variant that fits.
+//!
+//! Falls back to the native scorer for cycles larger than every variant
+//! (and records that in `stats`), so the scheduler never fails over shapes.
+
+use super::pjrt::{Executable, PjRt};
+use crate::sched::scoring::{NativeScorer, ScoreInputs, ScoreOutputs, ScoringBackend};
+use crate::util::json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled shape variant with persistent, reusable input literals —
+/// the hot path mutates them in place (`copy_raw_from`) instead of
+/// allocating ten fresh literals per scheduling cycle (§Perf).
+struct Variant {
+    name: String,
+    n_nodes: usize,
+    n_layers: usize,
+    exe: Executable,
+    /// The 10 input literals, argument order of model.py::example_args.
+    inputs: Vec<xla::Literal>,
+}
+
+fn f32_literal(len: usize, dims: &[i64]) -> xla::Literal {
+    let lit = xla::Literal::vec1(&vec![0.0f32; len]);
+    if dims.len() > 1 {
+        lit.reshape(dims).expect("reshape fresh literal")
+    } else {
+        lit
+    }
+}
+
+/// Execution statistics (observability + perf tests).
+#[derive(Debug, Clone, Default)]
+pub struct ScorerStats {
+    pub executions: u64,
+    pub native_fallbacks: u64,
+    /// Executions per variant, parallel to the variant list.
+    pub per_variant: Vec<u64>,
+}
+
+/// The XLA-backed scorer.
+pub struct XlaScorer {
+    variants: Vec<Variant>,
+    native: NativeScorer,
+    pub stats: ScorerStats,
+    // Reused staging buffers (hot path: avoid per-cycle allocation).
+    staging: Vec<f32>,
+}
+
+impl XlaScorer {
+    /// Load every variant listed in `<artifacts_dir>/manifest.json`.
+    pub fn load(artifacts_dir: &Path) -> Result<XlaScorer> {
+        let manifest_path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = json::parse(&text).context("parsing manifest.json")?;
+        if manifest.get("format").and_then(|f| f.as_str()) != Some("hlo-text") {
+            bail!("unsupported artifact format");
+        }
+        let pjrt = PjRt::cpu()?;
+        let mut variants = Vec::new();
+        for v in manifest
+            .get("variants")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing variants")?
+        {
+            let name = v.get("name").and_then(|x| x.as_str()).context("variant name")?;
+            let n_nodes = v.get("n_nodes").and_then(|x| x.as_i64()).context("n_nodes")? as usize;
+            let n_layers =
+                v.get("n_layers").and_then(|x| x.as_i64()).context("n_layers")? as usize;
+            let file = v.get("file").and_then(|x| x.as_str()).context("file")?;
+            let exe = pjrt.compile_hlo_file(&artifacts_dir.join(file))?;
+            let (vn, vl) = (n_nodes, n_layers);
+            let inputs = vec![
+                f32_literal(vn * vl, &[vn as i64, vl as i64]), // present
+                f32_literal(vl, &[vl as i64]),                 // req
+                f32_literal(vl, &[vl as i64]),                 // sizes_mb
+                f32_literal(vn, &[vn as i64]),                 // cpu_used
+                f32_literal(vn, &[vn as i64]),                 // cpu_cap
+                f32_literal(vn, &[vn as i64]),                 // mem_used
+                f32_literal(vn, &[vn as i64]),                 // mem_cap
+                f32_literal(vn, &[vn as i64]),                 // k8s_score
+                f32_literal(vn, &[vn as i64]),                 // feasible
+                f32_literal(5, &[5]),                          // params
+            ];
+            variants.push(Variant { name: name.to_string(), n_nodes, n_layers, exe, inputs });
+        }
+        if variants.is_empty() {
+            bail!("manifest lists no variants");
+        }
+        // Smallest-first so variant selection picks the cheapest fit.
+        variants.sort_by_key(|v| v.n_nodes * v.n_layers);
+        let per_variant = vec![0; variants.len()];
+        Ok(XlaScorer {
+            variants,
+            native: NativeScorer,
+            stats: ScorerStats { per_variant, ..Default::default() },
+            staging: Vec::new(),
+        })
+    }
+
+    /// Default artifact location relative to the repo root / CWD.
+    pub fn load_default() -> Result<XlaScorer> {
+        let candidates = [PathBuf::from("artifacts"), PathBuf::from("../artifacts")];
+        for c in &candidates {
+            if c.join("manifest.json").exists() {
+                return XlaScorer::load(c);
+            }
+        }
+        bail!("artifacts/manifest.json not found — run `make artifacts` first")
+    }
+
+    pub fn variant_names(&self) -> Vec<&str> {
+        self.variants.iter().map(|v| v.name.as_str()).collect()
+    }
+
+    fn pick_variant(&self, n_nodes: usize, n_layers: usize) -> Option<usize> {
+        self.variants
+            .iter()
+            .position(|v| v.n_nodes >= n_nodes && v.n_layers >= n_layers)
+    }
+
+    /// Pad `x` into the variant's persistent literals in place
+    /// (argument order matches `python/compile/model.py::example_args`).
+    fn fill_literals(staging: &mut Vec<f32>, variant: &mut Variant, x: &ScoreInputs) -> Result<()> {
+        let (n, l) = (x.n_nodes, x.n_layers);
+        let (vn, vl) = (variant.n_nodes, variant.n_layers);
+        // present: pad rows AND columns.
+        staging.clear();
+        staging.resize(vn * vl, 0.0);
+        for i in 0..n {
+            staging[i * vl..i * vl + l].copy_from_slice(&x.present[i * l..(i + 1) * l]);
+        }
+        variant.inputs[0].copy_raw_from(staging)?;
+
+        fn pad_into(
+            staging: &mut Vec<f32>,
+            dst: &mut xla::Literal,
+            src: &[f32],
+            cap: usize,
+            fill: f32,
+        ) -> Result<()> {
+            staging.clear();
+            staging.resize(cap, fill);
+            staging[..src.len()].copy_from_slice(src);
+            Ok(dst.copy_raw_from(staging)?)
+        }
+        pad_into(staging, &mut variant.inputs[1], &x.req, vl, 0.0)?;
+        pad_into(staging, &mut variant.inputs[2], &x.sizes_mb, vl, 0.0)?;
+        pad_into(staging, &mut variant.inputs[3], &x.cpu_used, vn, 0.0)?;
+        pad_into(staging, &mut variant.inputs[4], &x.cpu_cap, vn, 1.0)?; // avoid 0/0 on padding
+        pad_into(staging, &mut variant.inputs[5], &x.mem_used, vn, 0.0)?;
+        pad_into(staging, &mut variant.inputs[6], &x.mem_cap, vn, 1.0)?;
+        pad_into(staging, &mut variant.inputs[7], &x.k8s_score, vn, 0.0)?;
+        pad_into(staging, &mut variant.inputs[8], &x.feasible, vn, 0.0)?; // padding infeasible
+        variant.inputs[9].copy_raw_from(&x.params_vec())?;
+        Ok(())
+    }
+
+    fn score_xla(&mut self, x: &ScoreInputs) -> Result<ScoreOutputs> {
+        let vi = match self.pick_variant(x.n_nodes, x.n_layers) {
+            Some(vi) => vi,
+            None => {
+                self.stats.native_fallbacks += 1;
+                return Ok(self.native.score(x));
+            }
+        };
+        Self::fill_literals(&mut self.staging, &mut self.variants[vi], x)?;
+        let out = self.variants[vi].exe.execute(&self.variants[vi].inputs)?;
+        let (final_l, layer_l, omega_l, best_l) = out.to_tuple4()?;
+        let mut final_score = final_l.to_vec::<f32>()?;
+        let mut layer_score = layer_l.to_vec::<f32>()?;
+        let mut omega = omega_l.to_vec::<f32>()?;
+        let best = best_l.get_first_element::<i32>()? as usize;
+        final_score.truncate(x.n_nodes);
+        layer_score.truncate(x.n_nodes);
+        omega.truncate(x.n_nodes);
+        self.stats.executions += 1;
+        self.stats.per_variant[vi] += 1;
+        debug_assert!(best < x.n_nodes, "artifact picked a padding row");
+        Ok(ScoreOutputs { final_score, layer_score, omega, best })
+    }
+}
+
+impl ScoringBackend for XlaScorer {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn score(&mut self, inputs: &ScoreInputs) -> ScoreOutputs {
+        match self.score_xla(inputs) {
+            Ok(out) => out,
+            Err(e) => {
+                // An execute error is a bug (shapes are validated), but the
+                // scheduler must not wedge: log and fall back.
+                crate::log_error!("xla backend failed ({e:#}); falling back to native");
+                self.stats.native_fallbacks += 1;
+                self.native.score(inputs)
+            }
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Scheduling-cycle context — the snapshot handed to every extension point,
+//! mirroring `framework.CycleState` + `framework.NodeInfo` in Kubernetes
+//! (paper §V-2/§V-3: pod info from `v1.Pod`, node info from
+//! `framework.Handle`, layer info from `cache.json`).
+
+use crate::cluster::{ClusterState, Pod};
+use crate::registry::{ImageMetadata, LayerSet, MetadataCache};
+use crate::util::units::Bytes;
+
+/// One scheduling cycle for one pod.
+#[derive(Debug)]
+pub struct CycleContext<'a> {
+    pub state: &'a ClusterState,
+    pub pod: &'a Pod,
+    /// Layer metadata for the pod's image, from the registry cache
+    /// (None when the cache has never seen the image — the scheduler then
+    /// treats the image as all-remote with unknown size).
+    pub image_meta: Option<&'a ImageMetadata>,
+    /// The pod's required layers L_c, interned.
+    pub required_layers: LayerSet,
+    /// Total bytes of L_c (denominator of Eq. 3).
+    pub required_bytes: Bytes,
+}
+
+impl<'a> CycleContext<'a> {
+    /// Build a cycle context: resolve the pod's image in the metadata cache
+    /// and intern its layers. Interning may extend the interner, hence the
+    /// `&mut ClusterState` — callers pass the state back in immutably.
+    pub fn prepare(
+        state: &mut ClusterState,
+        cache: &'a MetadataCache,
+        pod: &Pod,
+    ) -> (Option<&'a ImageMetadata>, LayerSet, Bytes) {
+        match cache.lookup(&pod.image) {
+            Some(meta) => {
+                let (_, set) = state.intern_image(meta);
+                (Some(meta), set, meta.total_size)
+            }
+            None => (None, LayerSet::new(), Bytes::ZERO),
+        }
+    }
+
+    pub fn new(
+        state: &'a ClusterState,
+        pod: &'a Pod,
+        image_meta: Option<&'a ImageMetadata>,
+        required_layers: LayerSet,
+        required_bytes: Bytes,
+    ) -> CycleContext<'a> {
+        CycleContext { state, pod, image_meta, required_layers, required_bytes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Node, NodeId, PodBuilder, Resources};
+    use crate::registry::{Registry, Watcher};
+    use crate::util::units::{Bandwidth, Bytes as B};
+
+    #[test]
+    fn prepare_resolves_layers() {
+        let mut state = ClusterState::new();
+        state.add_node(Node::new(
+            NodeId(0),
+            "n0",
+            Resources::cores_gb(4.0, 4.0),
+            B::from_gb(20.0),
+            Bandwidth::from_mbps(10.0),
+        ));
+        let reg = Registry::with_corpus();
+        let mut cache = MetadataCache::new("/tmp/unused.json");
+        Watcher::with_default_interval().poll(0.0, &reg, &mut cache);
+
+        let mut b = PodBuilder::new();
+        let pod = b.build("redis:7.2", Resources::cores_gb(0.5, 0.5));
+        let (meta, layers, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+        assert!(meta.is_some());
+        assert_eq!(layers.len(), meta.unwrap().layers.len());
+        assert_eq!(bytes, meta.unwrap().total_size);
+
+        let unknown = b.build("no-such-image:1", Resources::ZERO);
+        let (meta2, layers2, bytes2) = CycleContext::prepare(&mut state, &cache, &unknown);
+        assert!(meta2.is_none());
+        assert!(layers2.is_empty());
+        assert_eq!(bytes2, B::ZERO);
+    }
+}

@@ -1,0 +1,183 @@
+//! The resource-adaptive dynamic weight — paper Eqs. (11)–(13) and the
+//! ω policies of §IV-B ("Values of dynamic weights").
+//!
+//!   S_STD(t)    = |p_n(t)/p_n − e_n(t)/e_n| / 2                  (Eq. 11)
+//!   S_CPU(t)    = p_n(t)/p_n                                     (Eq. 12)
+//!   S_Weight(t) = [D_c^n(t) > h_size]·[S_CPU < h_CPU]·[S_STD < h_STD]
+//!                                                                (Eq. 13)
+//! ω = ω₁ when the gate is 1 (node idle, balanced, already sharing layers);
+//! ω = ω₂ otherwise.
+
+use crate::cluster::Node;
+use crate::util::units::Bytes;
+
+/// Thresholds and weights from the paper's §VI-A settings.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WeightParams {
+    pub omega1: f64,
+    pub omega2: f64,
+    /// h_size in MB (the paper's D_c^n(t) > h_size with h_size = 10).
+    pub h_size_mb: f64,
+    pub h_cpu: f64,
+    pub h_std: f64,
+}
+
+impl Default for WeightParams {
+    /// §VI-A: ω₁=2, ω₂=0.5, h_size=10, h_CPU=0.6, h_STD=0.16.
+    fn default() -> WeightParams {
+        WeightParams { omega1: 2.0, omega2: 0.5, h_size_mb: 10.0, h_cpu: 0.6, h_std: 0.16 }
+    }
+}
+
+/// Eq. (11): node resource-balance score.
+pub fn std_score(node: &Node) -> f64 {
+    let (cpu, mem) = node.utilisation();
+    (cpu - mem).abs() / 2.0
+}
+
+/// Eq. (12): CPU consumption score.
+pub fn cpu_score(node: &Node) -> f64 {
+    node.utilisation().0
+}
+
+/// Eq. (13): the Iverson-bracket gate. `local_bytes` is D_c^n(t).
+pub fn weight_gate(params: &WeightParams, node: &Node, local_bytes: Bytes) -> bool {
+    local_bytes.as_mb() > params.h_size_mb
+        && cpu_score(node) < params.h_cpu
+        && std_score(node) < params.h_std
+}
+
+/// ω policies — the scalability axis of §IV-B ("we can set different values
+/// for ω₁ and ω₂ … add more conditions or piecewise functions … or set a
+/// function ω = f(S_weight)").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WeightPolicy {
+    /// The paper's Algorithm 1: ω₁ if the gate passes, else ω₂.
+    TwoLevel,
+    /// Three-level piecewise: full gate → ω₁; partial (layers present and
+    /// CPU low, balance ignored) → (ω₁+ω₂)/2; else ω₂.
+    ThreeLevel,
+    /// Continuous ω = ω₂ + (ω₁−ω₂)·g where g ∈ [0,1] blends how far each
+    /// condition is inside its threshold.
+    Linear,
+    /// Static ω (the "Layer scheduler" baseline uses Static with ω = 4).
+    Static(f64),
+}
+
+/// Compute ω for one node under a policy.
+pub fn weight_for(
+    policy: WeightPolicy,
+    params: &WeightParams,
+    node: &Node,
+    local_bytes: Bytes,
+) -> f64 {
+    match policy {
+        WeightPolicy::Static(w) => w,
+        WeightPolicy::TwoLevel => {
+            if weight_gate(params, node, local_bytes) {
+                params.omega1
+            } else {
+                params.omega2
+            }
+        }
+        WeightPolicy::ThreeLevel => {
+            if weight_gate(params, node, local_bytes) {
+                params.omega1
+            } else if local_bytes.as_mb() > params.h_size_mb && cpu_score(node) < params.h_cpu {
+                (params.omega1 + params.omega2) / 2.0
+            } else {
+                params.omega2
+            }
+        }
+        WeightPolicy::Linear => {
+            // Each condition contributes its headroom fraction in [0,1].
+            let g_size = if local_bytes.as_mb() > params.h_size_mb { 1.0 } else { 0.0 };
+            let g_cpu = ((params.h_cpu - cpu_score(node)) / params.h_cpu).clamp(0.0, 1.0);
+            let g_std = ((params.h_std - std_score(node)) / params.h_std).clamp(0.0, 1.0);
+            let g = g_size * g_cpu * g_std;
+            params.omega2 + (params.omega1 - params.omega2) * g
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Node, NodeId, PodId, Resources};
+    use crate::util::units::{Bandwidth, Bytes};
+
+    fn node_with_load(cpu_cores: f64, mem_gb: f64) -> Node {
+        let mut n = Node::new(
+            NodeId(0),
+            "n",
+            Resources::cores_gb(4.0, 4.0),
+            Bytes::from_gb(20.0),
+            Bandwidth::from_mbps(10.0),
+        );
+        n.assign(PodId(0), Resources::cores_gb(cpu_cores, mem_gb));
+        n
+    }
+
+    #[test]
+    fn eq11_eq12_formulas() {
+        let n = node_with_load(2.0, 1.0); // cpu 50%, mem 25%
+        assert!((std_score(&n) - 0.125).abs() < 1e-12);
+        assert!((cpu_score(&n) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gate_requires_all_three() {
+        let p = WeightParams::default();
+        let idle = node_with_load(1.0, 1.0); // cpu 25%, std 0
+        let big = Bytes::from_mb(50.0);
+        let small = Bytes::from_mb(5.0);
+        assert!(weight_gate(&p, &idle, big));
+        assert!(!weight_gate(&p, &idle, small)); // layers below h_size
+        let busy = node_with_load(3.0, 3.0); // cpu 75% ≥ h_cpu
+        assert!(!weight_gate(&p, &busy, big));
+        let skewed = node_with_load(2.0, 0.0); // std 0.25 ≥ h_std
+        assert!(!weight_gate(&p, &skewed, big));
+    }
+
+    #[test]
+    fn two_level_policy_matches_paper() {
+        let p = WeightParams::default();
+        let idle = node_with_load(1.0, 1.0);
+        let busy = node_with_load(3.0, 3.0);
+        let big = Bytes::from_mb(50.0);
+        assert_eq!(weight_for(WeightPolicy::TwoLevel, &p, &idle, big), 2.0);
+        assert_eq!(weight_for(WeightPolicy::TwoLevel, &p, &busy, big), 0.5);
+    }
+
+    #[test]
+    fn static_policy_ignores_state() {
+        let p = WeightParams::default();
+        let busy = node_with_load(4.0, 4.0);
+        assert_eq!(weight_for(WeightPolicy::Static(4.0), &p, &busy, Bytes::ZERO), 4.0);
+    }
+
+    #[test]
+    fn three_level_middle_case() {
+        let p = WeightParams::default();
+        let skewed = node_with_load(2.0, 0.0); // cpu ok, std bad
+        let big = Bytes::from_mb(50.0);
+        assert_eq!(weight_for(WeightPolicy::ThreeLevel, &p, &skewed, big), 1.25);
+        let busy = node_with_load(3.0, 3.0);
+        assert_eq!(weight_for(WeightPolicy::ThreeLevel, &p, &busy, big), 0.5);
+    }
+
+    #[test]
+    fn linear_policy_interpolates() {
+        let p = WeightParams::default();
+        let idle = node_with_load(0.0, 0.0);
+        let big = Bytes::from_mb(50.0);
+        // Fully idle: g = 1 → ω₁.
+        assert!((weight_for(WeightPolicy::Linear, &p, &idle, big) - 2.0).abs() < 1e-12);
+        // No local layers: g = 0 → ω₂.
+        assert!((weight_for(WeightPolicy::Linear, &p, &idle, Bytes::ZERO) - 0.5).abs() < 1e-12);
+        // Partial load lands strictly between.
+        let mid = node_with_load(1.2, 1.0);
+        let w = weight_for(WeightPolicy::Linear, &p, &mid, big);
+        assert!(w > 0.5 && w < 2.0, "got {w}");
+    }
+}

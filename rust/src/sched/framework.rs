@@ -1,0 +1,318 @@
+//! The scheduling framework — extension points, plugin traits, and the
+//! filter → score → normalize → weighted-sum pipeline, mirroring the
+//! Kubernetes scheduling framework the paper builds on (§I, [20]):
+//! "The filter extension point eliminates nodes that cannot run the
+//! container. The score plugin then ranks the remaining nodes. The
+//! scheduler calls each scoring extension point for every node."
+
+use super::context::CycleContext;
+use crate::cluster::{Node, NodeId};
+
+/// Maximum plugin score, as in Kubernetes (`framework.MaxNodeScore`).
+pub const MAX_NODE_SCORE: f64 = 100.0;
+
+/// Outcome of a filter plugin for one node.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FilterResult {
+    Pass,
+    /// Node rejected with a human-readable reason (surfaces in events).
+    Reject(String),
+}
+
+/// Filter extension point (also covers PreFilter checks — with single-pod
+/// cycles the distinction is only a caching optimization upstream).
+pub trait FilterPlugin {
+    fn name(&self) -> &'static str;
+    fn filter(&self, ctx: &CycleContext, node: &Node) -> FilterResult;
+}
+
+/// Score extension point. `score` returns a raw value per node; `normalize`
+/// then maps the raw vector to [0, MAX_NODE_SCORE] (identity by default,
+/// matching plugins that already emit 0–100).
+pub trait ScorePlugin {
+    fn name(&self) -> &'static str;
+    fn score(&self, ctx: &CycleContext, node: &Node) -> f64;
+    fn normalize(&self, _ctx: &CycleContext, _scores: &mut [f64]) {}
+}
+
+/// Rescale a raw score vector so its max maps to MAX_NODE_SCORE — the
+/// default NormalizeScore shape used by several upstream plugins.
+pub fn normalize_by_max(scores: &mut [f64]) {
+    let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if max > 0.0 {
+        for s in scores.iter_mut() {
+            *s = *s / max * MAX_NODE_SCORE;
+        }
+    }
+}
+
+/// Invert + rescale: lowest raw value gets MAX_NODE_SCORE (for plugins
+/// where raw = badness, e.g. intolerable taints, topology skew).
+pub fn normalize_inverse(scores: &mut [f64]) {
+    let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if max > 0.0 {
+        for s in scores.iter_mut() {
+            *s = (max - *s) / max * MAX_NODE_SCORE;
+        }
+    } else {
+        for s in scores.iter_mut() {
+            *s = MAX_NODE_SCORE;
+        }
+    }
+}
+
+/// Why a pod could not be scheduled.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Unschedulable {
+    /// (node name, rejecting plugin, reason) per filtered node.
+    pub rejections: Vec<(String, &'static str, String)>,
+}
+
+impl std::fmt::Display for Unschedulable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "0/{} nodes available", self.rejections.len())?;
+        for (node, plugin, reason) in &self.rejections {
+            write!(f, "; {node}: {plugin}: {reason}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A scheduler framework profile: ordered filters plus weighted scorers.
+pub struct Framework {
+    pub profile_name: String,
+    filters: Vec<Box<dyn FilterPlugin>>,
+    scorers: Vec<(Box<dyn ScorePlugin>, f64)>,
+}
+
+/// Per-node score detail for observability and the experiment reports.
+#[derive(Debug, Clone)]
+pub struct NodeScore {
+    pub node: NodeId,
+    /// Weighted sum over all score plugins after normalization.
+    pub total: f64,
+    /// (plugin name, normalized score) breakdown.
+    pub breakdown: Vec<(&'static str, f64)>,
+}
+
+impl Framework {
+    pub fn new(profile_name: &str) -> Framework {
+        Framework { profile_name: profile_name.to_string(), filters: Vec::new(), scorers: Vec::new() }
+    }
+
+    pub fn add_filter(mut self, plugin: Box<dyn FilterPlugin>) -> Framework {
+        self.filters.push(plugin);
+        self
+    }
+
+    pub fn add_scorer(mut self, plugin: Box<dyn ScorePlugin>, weight: f64) -> Framework {
+        self.scorers.push((plugin, weight));
+        self
+    }
+
+    pub fn scorer_names(&self) -> Vec<&'static str> {
+        self.scorers.iter().map(|(p, _)| p.name()).collect()
+    }
+
+    /// Run the filter extension points. Returns feasible node ids, or the
+    /// full rejection list when none pass.
+    pub fn feasible(&self, ctx: &CycleContext) -> Result<Vec<NodeId>, Unschedulable> {
+        let mut feasible = Vec::new();
+        let mut rejections = Vec::new();
+        'nodes: for node in ctx.state.nodes() {
+            for f in &self.filters {
+                if let FilterResult::Reject(reason) = f.filter(ctx, node) {
+                    rejections.push((node.name.clone(), f.name(), reason));
+                    continue 'nodes;
+                }
+            }
+            feasible.push(node.id);
+        }
+        if feasible.is_empty() {
+            Err(Unschedulable { rejections })
+        } else {
+            Ok(feasible)
+        }
+    }
+
+    /// Run score + normalize + weighted sum over `feasible`. This is the
+    /// default-scheduler score S_K8s of Eq. (4).
+    pub fn score(&self, ctx: &CycleContext, feasible: &[NodeId]) -> Vec<NodeScore> {
+        let mut totals: Vec<NodeScore> = feasible
+            .iter()
+            .map(|&n| NodeScore { node: n, total: 0.0, breakdown: Vec::new() })
+            .collect();
+        let mut raw = vec![0.0f64; feasible.len()];
+        for (plugin, weight) in &self.scorers {
+            for (i, &nid) in feasible.iter().enumerate() {
+                raw[i] = plugin.score(ctx, ctx.state.node(nid));
+            }
+            plugin.normalize(ctx, &mut raw);
+            for (i, ns) in totals.iter_mut().enumerate() {
+                debug_assert!(
+                    (-1e-9..=MAX_NODE_SCORE + 1e-9).contains(&raw[i]),
+                    "{} emitted out-of-range score {}",
+                    plugin.name(),
+                    raw[i]
+                );
+                ns.total += weight * raw[i];
+                ns.breakdown.push((plugin.name(), raw[i]));
+            }
+        }
+        totals
+    }
+
+    /// Filter + score in one call.
+    pub fn run(&self, ctx: &CycleContext) -> Result<Vec<NodeScore>, Unschedulable> {
+        let feasible = self.feasible(ctx)?;
+        Ok(self.score(ctx, &feasible))
+    }
+}
+
+/// Pick the argmax by total score; ties break by node id for determinism
+/// (upstream uses reservoir sampling — determinism matters more here for
+/// reproducible experiments).
+pub fn select_best(scores: &[NodeScore]) -> Option<&NodeScore> {
+    scores
+        .iter()
+        .max_by(|a, b| match a.total.partial_cmp(&b.total).unwrap() {
+            std::cmp::Ordering::Equal => b.node.0.cmp(&a.node.0),
+            o => o,
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterState, Node, NodeId, Pod, PodBuilder, Resources};
+    use crate::registry::LayerSet;
+    use crate::util::units::{Bandwidth, Bytes};
+
+    struct RejectOdd;
+    impl FilterPlugin for RejectOdd {
+        fn name(&self) -> &'static str {
+            "RejectOdd"
+        }
+        fn filter(&self, _ctx: &CycleContext, node: &Node) -> FilterResult {
+            if node.id.0 % 2 == 1 {
+                FilterResult::Reject("odd".into())
+            } else {
+                FilterResult::Pass
+            }
+        }
+    }
+
+    struct IdScore;
+    impl ScorePlugin for IdScore {
+        fn name(&self) -> &'static str {
+            "IdScore"
+        }
+        fn score(&self, _ctx: &CycleContext, node: &Node) -> f64 {
+            node.id.0 as f64
+        }
+        fn normalize(&self, _ctx: &CycleContext, scores: &mut [f64]) {
+            normalize_by_max(scores);
+        }
+    }
+
+    fn setup(n: u32) -> (ClusterState, Pod) {
+        let mut state = ClusterState::new();
+        for i in 0..n {
+            state.add_node(Node::new(
+                NodeId(i),
+                &format!("n{i}"),
+                Resources::cores_gb(4.0, 4.0),
+                Bytes::from_gb(20.0),
+                Bandwidth::from_mbps(10.0),
+            ));
+        }
+        let pod = PodBuilder::new().build("redis:7.2", Resources::cores_gb(0.5, 0.5));
+        (state, pod)
+    }
+
+    fn ctx<'a>(state: &'a ClusterState, pod: &'a Pod) -> CycleContext<'a> {
+        CycleContext::new(state, pod, None, LayerSet::new(), Bytes::ZERO)
+    }
+
+    #[test]
+    fn filter_then_score() {
+        let (state, pod) = setup(4);
+        let c = ctx(&state, &pod);
+        let fw = Framework::new("test")
+            .add_filter(Box::new(RejectOdd))
+            .add_scorer(Box::new(IdScore), 1.0);
+        let scores = fw.run(&c).unwrap();
+        let ids: Vec<u32> = scores.iter().map(|s| s.node.0).collect();
+        assert_eq!(ids, vec![0, 2]);
+        // normalize_by_max: node2 -> 100, node0 -> 0.
+        assert_eq!(scores[1].total, 100.0);
+        assert_eq!(scores[0].total, 0.0);
+        assert_eq!(select_best(scores.as_slice()).unwrap().node, NodeId(2));
+    }
+
+    #[test]
+    fn all_filtered_is_unschedulable() {
+        let (mut state, pod) = setup(0);
+        state.add_node(Node::new(
+            NodeId(0),
+            "only-odd-like",
+            Resources::cores_gb(1.0, 1.0),
+            Bytes::from_gb(1.0),
+            Bandwidth::from_mbps(1.0),
+        ));
+        struct RejectAll;
+        impl FilterPlugin for RejectAll {
+            fn name(&self) -> &'static str {
+                "RejectAll"
+            }
+            fn filter(&self, _: &CycleContext, _: &Node) -> FilterResult {
+                FilterResult::Reject("no".into())
+            }
+        }
+        let c = ctx(&state, &pod);
+        let fw = Framework::new("test").add_filter(Box::new(RejectAll));
+        let err = fw.run(&c).unwrap_err();
+        assert_eq!(err.rejections.len(), 1);
+        assert!(err.to_string().contains("RejectAll"));
+    }
+
+    #[test]
+    fn weights_scale_scores() {
+        let (state, pod) = setup(2);
+        let c = ctx(&state, &pod);
+        let fw = Framework::new("test").add_scorer(Box::new(IdScore), 2.0);
+        let scores = fw.run(&c).unwrap();
+        assert_eq!(scores[1].total, 200.0);
+    }
+
+    #[test]
+    fn tie_break_prefers_lower_node_id() {
+        struct Flat;
+        impl ScorePlugin for Flat {
+            fn name(&self) -> &'static str {
+                "Flat"
+            }
+            fn score(&self, _: &CycleContext, _: &Node) -> f64 {
+                50.0
+            }
+        }
+        let (state, pod) = setup(3);
+        let c = ctx(&state, &pod);
+        let fw = Framework::new("test").add_scorer(Box::new(Flat), 1.0);
+        let scores = fw.run(&c).unwrap();
+        assert_eq!(select_best(&scores).unwrap().node, NodeId(0));
+    }
+
+    #[test]
+    fn normalize_helpers() {
+        let mut v = vec![1.0, 2.0, 4.0];
+        normalize_by_max(&mut v);
+        assert_eq!(v, vec![25.0, 50.0, 100.0]);
+        let mut w = vec![0.0, 3.0, 6.0];
+        normalize_inverse(&mut w);
+        assert_eq!(w, vec![100.0, 50.0, 0.0]);
+        let mut z = vec![0.0, 0.0];
+        normalize_inverse(&mut z);
+        assert_eq!(z, vec![100.0, 100.0]);
+    }
+}

@@ -1,0 +1,154 @@
+//! The layer-sharing score — paper Eqs. (1)–(3) and contribution 1.
+//!
+//! For task k requesting container c on node n at time t:
+//!   C_c^n(t)  = Σ_{l ∈ L_c \ L_n(t)} d_l          (download cost, Eq. 1)
+//!   D_c^n(t)  = Σ_{l ∈ L_c ∩ L_n(t)} d_l          (local bytes,   Eq. 2)
+//!   S_layer   = D_c^n(t) / Σ_{l ∈ L_c} d_l × 100  (score,         Eq. 3)
+
+use crate::cluster::Node;
+use crate::registry::LayerInterner;
+use crate::sched::context::CycleContext;
+use crate::sched::framework::{ScorePlugin, MAX_NODE_SCORE};
+use crate::util::units::Bytes;
+
+/// Eq. (1): bytes node `n` must download for the required layer set.
+pub fn download_cost(ctx: &CycleContext, node: &Node) -> Bytes {
+    ctx.required_layers
+        .difference_bytes(&node.layers, &ctx.state.interner)
+}
+
+/// Eq. (2): bytes of the required layer set already local on `n`.
+pub fn local_bytes(ctx: &CycleContext, node: &Node) -> Bytes {
+    ctx.required_layers
+        .intersection_bytes(&node.layers, &ctx.state.interner)
+}
+
+/// Eq. (3) as a pure function of the byte quantities.
+pub fn layer_sharing_score(local: Bytes, total: Bytes) -> f64 {
+    if total == Bytes::ZERO {
+        // Unknown image (not yet in cache.json) or empty layer set: no
+        // sharing signal. 0 matches the paper's behaviour on first sight.
+        return 0.0;
+    }
+    local.0 as f64 / total.0 as f64 * MAX_NODE_SCORE
+}
+
+/// The layer-sharing score plugin (the paper's score extension point).
+pub struct LayerScore;
+
+impl ScorePlugin for LayerScore {
+    fn name(&self) -> &'static str {
+        "LayerScore"
+    }
+
+    fn score(&self, ctx: &CycleContext, node: &Node) -> f64 {
+        layer_sharing_score(local_bytes(ctx, node), ctx.required_bytes)
+    }
+}
+
+/// Download time T^{k,n} = C_c^n(t) / b_n (§III-B).
+pub fn download_time_secs(ctx: &CycleContext, node: &Node) -> f64 {
+    node.bandwidth.transfer_secs(download_cost(ctx, node))
+}
+
+/// Standalone form used by the simulator (no cycle context).
+pub fn score_for_sets(
+    required: &crate::registry::LayerSet,
+    node_layers: &crate::registry::LayerSet,
+    interner: &LayerInterner,
+) -> f64 {
+    let local = required.intersection_bytes(node_layers, interner);
+    let total = required.total_bytes(interner);
+    layer_sharing_score(local, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterState, Node, NodeId, PodBuilder, Resources};
+    use crate::registry::hub;
+    use crate::util::units::Bandwidth;
+
+    fn setup() -> (ClusterState, crate::registry::ImageMetadata, crate::registry::LayerSet) {
+        let mut state = ClusterState::new();
+        for i in 0..2 {
+            state.add_node(Node::new(
+                NodeId(i),
+                &format!("n{i}"),
+                Resources::cores_gb(4.0, 4.0),
+                Bytes::from_gb(30.0),
+                Bandwidth::from_mbps(10.0),
+            ));
+        }
+        let corpus = hub::corpus();
+        let wp = corpus
+            .iter()
+            .find(|m| m.name == "wordpress" && m.tag == "6.4")
+            .unwrap()
+            .clone();
+        let (_, layers) = state.intern_image(&wp);
+        (state, wp, layers)
+    }
+
+    #[test]
+    fn cold_node_scores_zero() {
+        let (state, wp, layers) = setup();
+        let pod = PodBuilder::new().build("wordpress:6.4", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, Some(&wp), layers, wp.total_size);
+        assert_eq!(LayerScore.score(&ctx, state.node(NodeId(0))), 0.0);
+        assert_eq!(download_cost(&ctx, state.node(NodeId(0))), wp.total_size);
+    }
+
+    #[test]
+    fn warm_node_scores_100() {
+        let (mut state, wp, layers) = setup();
+        state.install_image(NodeId(0), &wp.image_ref(), &layers).unwrap();
+        let pod = PodBuilder::new().build("wordpress:6.4", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, Some(&wp), layers, wp.total_size);
+        assert!((LayerScore.score(&ctx, state.node(NodeId(0))) - 100.0).abs() < 1e-9);
+        assert_eq!(download_cost(&ctx, state.node(NodeId(0))), Bytes::ZERO);
+    }
+
+    #[test]
+    fn partial_sharing_is_proportional() {
+        let (mut state, wp, wp_layers) = setup();
+        // Install php:8.2-apache — shares debian + ca-certs + apache + php
+        // runtime with wordpress (104 MB of wordpress's 243 MB).
+        let corpus = hub::corpus();
+        let php = corpus.iter().find(|m| m.name == "php" && m.tag == "8.2-apache").unwrap();
+        let (_, php_layers) = state.intern_image(php);
+        state.install_image(NodeId(0), &php.image_ref(), &php_layers).unwrap();
+
+        let pod = PodBuilder::new().build("wordpress:6.4", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, Some(&wp), wp_layers, wp.total_size);
+        let s = LayerScore.score(&ctx, state.node(NodeId(0)));
+        let local = local_bytes(&ctx, state.node(NodeId(0)));
+        assert!(local > Bytes::ZERO);
+        let expected = local.0 as f64 / wp.total_size.0 as f64 * 100.0;
+        assert!((s - expected).abs() < 1e-9);
+        assert!(s > 30.0 && s < 70.0, "php stack ≈ 43% of wordpress, got {s}");
+        // Eq. 1 + Eq. 2 partition the total.
+        assert_eq!(
+            local + download_cost(&ctx, state.node(NodeId(0))),
+            wp.total_size
+        );
+    }
+
+    #[test]
+    fn unknown_image_scores_zero() {
+        let (state, _, _) = setup();
+        let pod = PodBuilder::new().build("mystery:1", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, None, Default::default(), Bytes::ZERO);
+        assert_eq!(LayerScore.score(&ctx, state.node(NodeId(0))), 0.0);
+    }
+
+    #[test]
+    fn download_time_uses_bandwidth() {
+        let (state, wp, layers) = setup();
+        let pod = PodBuilder::new().build("wordpress:6.4", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, Some(&wp), layers, wp.total_size);
+        let t = download_time_secs(&ctx, state.node(NodeId(0)));
+        let expected = wp.total_size.as_mb() / 10.0;
+        assert!((t - expected).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,367 @@
+//! LRScheduler — Algorithm 1. Combines the layer-sharing score (Eq. 3)
+//! with the default-scheduler score S_K8s under the resource-adaptive
+//! dynamic weight (Eqs. 11–13):
+//!
+//! ```text
+//! for each node n:                            (lines 3–16)
+//!   S_layer ← Eq. (3)
+//!   S_weight ← Eq. (13);  ω ← ω₁ if S_weight = 1 else ω₂
+//!   S_K8s ← default framework score
+//!   S ← ω·S_layer + S_K8s                     (Eq. 4)
+//! return argmax_n S                           (Eq. 5, line 17)
+//! ```
+//!
+//! Three paper configurations are all instances of this type:
+//! Default (no layer term), Layer (static ω = 4), LRScheduler (dynamic ω).
+
+use super::context::CycleContext;
+use super::dynamic_weight::{weight_for, WeightParams, WeightPolicy};
+use super::framework::{select_best, Framework, NodeScore, Unschedulable};
+use super::layer_score;
+use super::scoring::{ScoreInputs, ScoreOutputs, ScoringBackend, NEG_MASK};
+use crate::cluster::NodeId;
+use crate::util::units::Bytes;
+
+/// The outcome of one scheduling cycle.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub node: NodeId,
+    /// Final S^{k,n}(t) of the winning node.
+    pub final_score: f64,
+    /// Its S_layer (Eq. 3).
+    pub layer_score: f64,
+    /// Its S_K8s.
+    pub k8s_score: f64,
+    /// The ω used for the winning node.
+    pub omega: f64,
+    /// Bytes the node must download (Eq. 1) — the paper's headline metric.
+    pub download_cost: Bytes,
+}
+
+/// Running ω-usage statistics (regenerates Fig. 3f).
+#[derive(Debug, Clone, Default)]
+pub struct WeightStats {
+    pub omega1_used: u64,
+    pub omega2_used: u64,
+    /// ω of the *winning* node per decision, in order.
+    pub omega_trace: Vec<f64>,
+}
+
+/// The scheduler. `policy = None` reproduces the Default baseline
+/// (S = S_K8s); `Some(Static(4.0))` is the Layer baseline; the paper's
+/// LRScheduler is `Some(TwoLevel)`.
+pub struct LrScheduler {
+    pub name: String,
+    framework: Framework,
+    pub params: WeightParams,
+    pub policy: Option<WeightPolicy>,
+    /// Dense scoring backend (XLA artifact). None ⇒ native per-node math.
+    backend: Option<Box<dyn ScoringBackend>>,
+    pub stats: WeightStats,
+}
+
+impl LrScheduler {
+    pub fn new(name: &str, framework: Framework, policy: Option<WeightPolicy>) -> LrScheduler {
+        LrScheduler {
+            name: name.to_string(),
+            framework,
+            params: WeightParams::default(),
+            policy,
+            backend: None,
+            stats: WeightStats::default(),
+        }
+    }
+
+    /// The paper's three experimental configurations (§VI-A).
+    pub fn default_scheduler(framework: Framework) -> LrScheduler {
+        LrScheduler::new("default", framework, None)
+    }
+
+    pub fn layer_scheduler(framework: Framework) -> LrScheduler {
+        LrScheduler::new("layer", framework, Some(WeightPolicy::Static(4.0)))
+    }
+
+    pub fn lr_scheduler(framework: Framework) -> LrScheduler {
+        LrScheduler::new("lrscheduler", framework, Some(WeightPolicy::TwoLevel))
+    }
+
+    /// Install a dense scoring backend (the XLA runtime).
+    pub fn with_backend(mut self, backend: Box<dyn ScoringBackend>) -> LrScheduler {
+        self.backend = Some(backend);
+        self
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.as_ref().map(|b| b.name()).unwrap_or("native")
+    }
+
+    /// Run one scheduling cycle (Algorithm 1).
+    pub fn schedule(&mut self, ctx: &CycleContext) -> Result<Decision, Unschedulable> {
+        let feasible = self.framework.feasible(ctx)?;
+        let k8s_scores = self.framework.score(ctx, &feasible);
+        let decision = match self.policy {
+            None => {
+                // Default baseline: S = S_K8s.
+                let best = select_best(&k8s_scores).expect("nonempty feasible set");
+                self.decision_for(ctx, best.node, best.total, 0.0, best.total, 0.0)
+            }
+            Some(policy) => match &mut self.backend {
+                None => self.schedule_native(ctx, policy, &k8s_scores),
+                Some(_) => self.schedule_dense(ctx, policy, &k8s_scores),
+            },
+        };
+        if let Some(policy) = self.policy {
+            if !matches!(policy, WeightPolicy::Static(_)) {
+                if (decision.omega - self.params.omega1).abs() < 1e-9 {
+                    self.stats.omega1_used += 1;
+                } else {
+                    self.stats.omega2_used += 1;
+                }
+            }
+            self.stats.omega_trace.push(decision.omega);
+        }
+        Ok(decision)
+    }
+
+    fn decision_for(
+        &self,
+        ctx: &CycleContext,
+        node: NodeId,
+        final_score: f64,
+        layer: f64,
+        k8s: f64,
+        omega: f64,
+    ) -> Decision {
+        Decision {
+            node,
+            final_score,
+            layer_score: layer,
+            k8s_score: k8s,
+            omega,
+            download_cost: layer_score::download_cost(ctx, ctx.state.node(node)),
+        }
+    }
+
+    /// Native path: per-feasible-node math straight from the layer sets.
+    fn schedule_native(
+        &mut self,
+        ctx: &CycleContext,
+        policy: WeightPolicy,
+        k8s_scores: &[NodeScore],
+    ) -> Decision {
+        let mut best: Option<Decision> = None;
+        for ns in k8s_scores {
+            let node = ctx.state.node(ns.node);
+            let local = layer_score::local_bytes(ctx, node);
+            let s_layer = layer_score::layer_sharing_score(local, ctx.required_bytes);
+            let omega = weight_for(policy, &self.params, node, local);
+            let s = omega * s_layer + ns.total;
+            let better = match &best {
+                None => true,
+                Some(b) => s > b.final_score,
+            };
+            if better {
+                best = Some(self.decision_for(ctx, ns.node, s, s_layer, ns.total, omega));
+            }
+        }
+        best.expect("nonempty feasible set")
+    }
+
+    /// Dense path: build padded ScoreInputs and run the installed backend.
+    /// Only the TwoLevel policy is expressible in the AOT artifact (the
+    /// paper's Algorithm 1); other policies fall back to native.
+    fn schedule_dense(
+        &mut self,
+        ctx: &CycleContext,
+        policy: WeightPolicy,
+        k8s_scores: &[NodeScore],
+    ) -> Decision {
+        if !matches!(policy, WeightPolicy::TwoLevel) {
+            return self.schedule_native(ctx, policy, k8s_scores);
+        }
+        let inputs = build_inputs(ctx, k8s_scores, &self.params);
+        let out: ScoreOutputs = self.backend.as_mut().unwrap().score(&inputs);
+        debug_assert!(out.final_score[out.best] > NEG_MASK / 2.0, "backend chose masked node");
+        let node = NodeId(out.best as u32);
+        let k8s = k8s_scores
+            .iter()
+            .find(|ns| ns.node == node)
+            .map(|ns| ns.total)
+            .unwrap_or(0.0);
+        self.decision_for(
+            ctx,
+            node,
+            out.final_score[out.best] as f64,
+            out.layer_score[out.best] as f64,
+            k8s,
+            out.omega[out.best] as f64,
+        )
+    }
+}
+
+/// Build dense inputs for the backend from a cycle. Public so the runtime
+/// integration tests and benches can drive both backends identically.
+pub fn build_inputs(
+    ctx: &CycleContext,
+    k8s_scores: &[NodeScore],
+    params: &WeightParams,
+) -> ScoreInputs {
+    let n = ctx.state.node_count();
+    let l = ctx.state.interner.len();
+    let mut x = ScoreInputs::zeros(n, l, *params);
+    x.sizes_mb = ctx.state.interner.sizes_mb_padded(l);
+    ctx.required_layers.write_indicator(&mut x.req);
+    for (i, node) in ctx.state.nodes().iter().enumerate() {
+        node.layers.write_indicator(&mut x.present[i * l..(i + 1) * l]);
+        x.cpu_used[i] = node.used.cpu.0 as f32;
+        x.cpu_cap[i] = node.capacity.cpu.0.max(1) as f32;
+        x.mem_used[i] = node.used.memory.0 as f32;
+        x.mem_cap[i] = node.capacity.memory.0.max(1) as f32;
+    }
+    for ns in k8s_scores {
+        x.k8s_score[ns.node.0 as usize] = ns.total as f32;
+        x.feasible[ns.node.0 as usize] = 1.0;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterState, Node, PodBuilder, Resources};
+    use crate::registry::{hub, MetadataCache, Registry, Watcher};
+    use crate::sched::profiles::default_framework;
+    use crate::sched::scoring::NativeScorer;
+    use crate::util::units::{Bandwidth, Bytes as B};
+
+    fn cluster(n: u32) -> ClusterState {
+        let mut s = ClusterState::new();
+        for i in 0..n {
+            s.add_node(Node::new(
+                NodeId(i),
+                &format!("worker{}", i + 1),
+                Resources::cores_gb(4.0, 4.0),
+                B::from_gb(30.0),
+                Bandwidth::from_mbps(10.0),
+            ));
+        }
+        s
+    }
+
+    fn cache() -> MetadataCache {
+        let reg = Registry::with_corpus();
+        let mut c = MetadataCache::new("/tmp/unused.json");
+        Watcher::with_default_interval().poll(0.0, &reg, &mut c);
+        c
+    }
+
+    #[test]
+    fn lr_prefers_node_with_layers() {
+        let mut state = cluster(3);
+        let cache = cache();
+        let corpus = hub::corpus();
+        let wp = corpus.iter().find(|m| m.name == "wordpress" && m.tag == "6.4").unwrap();
+        let (_, layers) = state.intern_image(wp);
+        state.install_image(NodeId(2), &wp.image_ref(), &layers).unwrap();
+
+        let mut b = PodBuilder::new();
+        let pod = b.build("wordpress:6.4", Resources::cores_gb(0.5, 0.5));
+        let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+        let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+
+        let mut lr = LrScheduler::lr_scheduler(default_framework());
+        let d = lr.schedule(&ctx).unwrap();
+        assert_eq!(d.node, NodeId(2));
+        assert!((d.layer_score - 100.0).abs() < 1e-9);
+        assert_eq!(d.omega, 2.0, "idle node with layers gets ω₁");
+        assert_eq!(d.download_cost, B::ZERO);
+        assert_eq!(lr.stats.omega1_used, 1);
+    }
+
+    #[test]
+    fn default_ignores_layers() {
+        let mut state = cluster(3);
+        let cache = cache();
+        let corpus = hub::corpus();
+        let wp = corpus.iter().find(|m| m.name == "wordpress" && m.tag == "6.4").unwrap();
+        let (_, layers) = state.intern_image(wp);
+        state.install_image(NodeId(2), &wp.image_ref(), &layers).unwrap();
+        // Make node 2 busy so LeastAllocated prefers 0/1. Note ImageLocality
+        // still gives node 2 some credit — use a huge request to dominate.
+        let mut b = PodBuilder::new();
+        let filler = b.build("busybox:1.36", Resources::cores_gb(3.0, 3.0));
+        let fid = state.submit_pod(filler);
+        state.bind(fid, NodeId(2)).unwrap();
+
+        let pod = b.build("wordpress:6.4", Resources::cores_gb(0.5, 0.5));
+        let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+        let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+        let mut def = LrScheduler::default_scheduler(default_framework());
+        let d = def.schedule(&ctx).unwrap();
+        assert_ne!(d.node, NodeId(2), "default scheduler avoids the busy node");
+        assert_eq!(d.omega, 0.0);
+    }
+
+    #[test]
+    fn static_layer_weight_dominates() {
+        let mut state = cluster(3);
+        let cache = cache();
+        let corpus = hub::corpus();
+        let wp = corpus.iter().find(|m| m.name == "wordpress" && m.tag == "6.4").unwrap();
+        let (_, layers) = state.intern_image(wp);
+        state.install_image(NodeId(2), &wp.image_ref(), &layers).unwrap();
+        // Busy node 2: static ω=4 should still pick it (4×100 = 400 ≫ ΔS_K8s)
+        let mut b = PodBuilder::new();
+        let filler = b.build("busybox:1.36", Resources::cores_gb(3.0, 3.0));
+        let fid = state.submit_pod(filler);
+        state.bind(fid, NodeId(2)).unwrap();
+
+        let pod = b.build("wordpress:6.4", Resources::cores_gb(0.5, 0.5));
+        let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+        let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+        let mut layer = LrScheduler::layer_scheduler(default_framework());
+        let d = layer.schedule(&ctx).unwrap();
+        assert_eq!(d.node, NodeId(2));
+        assert_eq!(d.omega, 4.0);
+    }
+
+    #[test]
+    fn dense_backend_agrees_with_native() {
+        let mut state = cluster(4);
+        let cache = cache();
+        let corpus = hub::corpus();
+        // Warm different nodes with different images.
+        for (i, name) in [(0u32, "redis"), (1, "ghost"), (3, "nginx")] {
+            let m = corpus.iter().find(|m| m.name == name).unwrap();
+            let (_, layers) = state.intern_image(m);
+            state.install_image(NodeId(i), &m.image_ref(), &layers).unwrap();
+        }
+        let mut b = PodBuilder::new();
+        for image in ["ghost:5", "redis:7.2", "nginx:1.25", "wordpress:6.4"] {
+            let pod = b.build(image, Resources::cores_gb(0.5, 0.5));
+            let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+            let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+            let mut native = LrScheduler::lr_scheduler(default_framework());
+            let mut dense = LrScheduler::lr_scheduler(default_framework())
+                .with_backend(Box::new(NativeScorer));
+            let dn = native.schedule(&ctx).unwrap();
+            let dd = dense.schedule(&ctx).unwrap();
+            assert_eq!(dn.node, dd.node, "backends disagree for {image}");
+            assert!((dn.final_score - dd.final_score).abs() < 1e-3);
+            assert_eq!(dn.omega, dd.omega);
+        }
+    }
+
+    #[test]
+    fn unschedulable_when_no_node_fits() {
+        let mut state = cluster(2);
+        let cache = cache();
+        let mut b = PodBuilder::new();
+        let pod = b.build("redis:7.2", Resources::cores_gb(8.0, 8.0)); // too big
+        let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+        let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+        let mut lr = LrScheduler::lr_scheduler(default_framework());
+        let err = lr.schedule(&ctx).unwrap_err();
+        assert_eq!(err.rejections.len(), 2);
+    }
+}

@@ -1,0 +1,22 @@
+//! The scheduler: Kubernetes-scheduling-framework analog (extension
+//! points, default plugins, profiles) plus the paper's contribution —
+//! the layer-sharing score (Eqs. 1–3), the resource-adaptive dynamic
+//! weight (Eqs. 11–13), and the combined LRScheduler (Algorithm 1).
+
+pub mod context;
+pub mod dynamic_weight;
+pub mod framework;
+pub mod layer_score;
+pub mod lrscheduler;
+pub mod plugins;
+pub mod profiles;
+pub mod queue;
+pub mod rl;
+pub mod scoring;
+
+pub use context::CycleContext;
+pub use dynamic_weight::{WeightParams, WeightPolicy};
+pub use framework::{Framework, NodeScore, Unschedulable};
+pub use lrscheduler::{Decision, LrScheduler};
+pub use profiles::{default_framework, FrameworkConfig};
+pub use scoring::{NativeScorer, ScoreInputs, ScoreOutputs, ScoringBackend};

@@ -1,0 +1,76 @@
+//! NodeResourcesBalancedAllocation — the default plugin the paper combines
+//! with (§I, [23]): prefer nodes whose CPU and memory utilisation would be
+//! most *balanced* after placing the pod.
+//!
+//! Upstream formula: with fractions f_i = (used_i + req_i) / cap_i,
+//! score = (1 − std(f)) × 100 where std is the population standard
+//! deviation over the resource dimensions.
+
+use crate::cluster::Node;
+use crate::sched::context::CycleContext;
+use crate::sched::framework::{ScorePlugin, MAX_NODE_SCORE};
+
+pub struct BalancedAllocation;
+
+impl ScorePlugin for BalancedAllocation {
+    fn name(&self) -> &'static str {
+        "NodeResourcesBalancedAllocation"
+    }
+
+    fn score(&self, ctx: &CycleContext, node: &Node) -> f64 {
+        let after = node.used.checked_add(&ctx.pod.requests);
+        let (cpu, mem) = after.fraction_of(&node.capacity);
+        let (cpu, mem) = (cpu.min(1.0), mem.min(1.0));
+        let mean = (cpu + mem) / 2.0;
+        let variance = ((cpu - mean).powi(2) + (mem - mean).powi(2)) / 2.0;
+        (1.0 - variance.sqrt()) * MAX_NODE_SCORE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterState, Node, NodeId, PodBuilder, Resources};
+    use crate::registry::LayerSet;
+    use crate::util::units::{Bandwidth, Bytes};
+
+    fn node() -> Node {
+        Node::new(
+            NodeId(0),
+            "n",
+            Resources::cores_gb(4.0, 4.0),
+            Bytes::from_gb(20.0),
+            Bandwidth::from_mbps(10.0),
+        )
+    }
+
+    #[test]
+    fn perfectly_balanced_scores_100() {
+        let state = ClusterState::new();
+        let pod = PodBuilder::new().build("redis", Resources::cores_gb(1.0, 1.0));
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        // 25% cpu, 25% mem after placement → zero deviation.
+        assert!((BalancedAllocation.score(&ctx, &node()) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn imbalance_lowers_score() {
+        let state = ClusterState::new();
+        let pod = PodBuilder::new().build("redis", Resources::cores_gb(2.0, 0.0));
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        // 50% cpu, 0% mem → std = 0.25 → score 75.
+        let s = BalancedAllocation.score(&ctx, &node());
+        assert!((s - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn balanced_beats_lopsided() {
+        let state = ClusterState::new();
+        let pod = PodBuilder::new().build("redis", Resources::cores_gb(0.5, 0.5));
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        let even = node();
+        let mut lopsided = node();
+        lopsided.used = Resources::cores_gb(3.0, 0.0);
+        assert!(BalancedAllocation.score(&ctx, &even) > BalancedAllocation.score(&ctx, &lopsided));
+    }
+}

@@ -1,0 +1,135 @@
+//! Capacity constraints from the paper's problem formulation, enforced
+//! "during the Prefilter and Filter plugins" (§III-C):
+//!
+//! - Eq. (6): storage — missing-layer bytes must fit the node's free disk.
+//! - Eq. (7): the running-container limit `|C_n(t)| ≤ C_n`.
+
+use crate::cluster::Node;
+use crate::sched::context::CycleContext;
+use crate::sched::framework::{FilterPlugin, FilterResult};
+
+pub struct NodeCapacity;
+
+impl FilterPlugin for NodeCapacity {
+    fn name(&self) -> &'static str {
+        "NodeCapacity"
+    }
+
+    fn filter(&self, ctx: &CycleContext, node: &Node) -> FilterResult {
+        // Eq. (7): container count limit.
+        if node.pods.len() >= node.max_containers {
+            return FilterResult::Reject(format!(
+                "container limit reached ({}/{})",
+                node.pods.len(),
+                node.max_containers
+            ));
+        }
+        // Eq. (6): C_c^n(t) + Σ_{l∈L_n} d_l ≤ d_n.
+        let need = ctx
+            .required_layers
+            .difference_bytes(&node.layers, &ctx.state.interner);
+        if need > node.disk_free() {
+            return FilterResult::Reject(format!(
+                "insufficient disk: need {}, free {}",
+                need,
+                node.disk_free()
+            ));
+        }
+        FilterResult::Pass
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterState, Node, NodeId, PodBuilder, PodId, Resources};
+    use crate::registry::hub;
+    use crate::util::units::{Bandwidth, Bytes};
+
+    #[test]
+    fn container_limit_enforced() {
+        let mut state = ClusterState::new();
+        state.add_node(
+            Node::new(
+                NodeId(0),
+                "n",
+                Resources::cores_gb(4.0, 4.0),
+                Bytes::from_gb(20.0),
+                Bandwidth::from_mbps(10.0),
+            )
+            .with_max_containers(2),
+        );
+        let mut b = PodBuilder::new();
+        for i in 0..2 {
+            let pid = state.submit_pod(b.build("redis:7.2", Resources::ZERO));
+            assert_eq!(pid, PodId(i));
+            state.bind(pid, NodeId(0)).unwrap();
+        }
+        let pod = b.build("redis:7.2", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, None, Default::default(), Bytes::ZERO);
+        assert!(matches!(
+            NodeCapacity.filter(&ctx, state.node(NodeId(0))),
+            FilterResult::Reject(r) if r.contains("container limit")
+        ));
+    }
+
+    #[test]
+    fn disk_constraint_counts_only_missing_layers() {
+        let mut state = ClusterState::new();
+        state.add_node(Node::new(
+            NodeId(0),
+            "n",
+            Resources::cores_gb(4.0, 4.0),
+            Bytes::from_mb(300.0), // wordpress (~243 MB) fits, gcc does not
+            Bandwidth::from_mbps(10.0),
+        ));
+        let corpus = hub::corpus();
+        let wp = corpus.iter().find(|m| m.name == "wordpress" && m.tag == "6.4").unwrap();
+        let gcc = corpus.iter().find(|m| m.name == "gcc").unwrap();
+        let (_, wp_layers) = state.intern_image(wp);
+        let (_, gcc_layers) = state.intern_image(gcc);
+
+        let pod = PodBuilder::new().build("gcc:13", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, Some(gcc), gcc_layers.clone(), gcc.total_size);
+        assert!(matches!(
+            NodeCapacity.filter(&ctx, state.node(NodeId(0))),
+            FilterResult::Reject(r) if r.contains("disk")
+        ));
+
+        // wordpress (243 MB) fits in the 300 MB disk and shares the debian
+        // base with gcc — missing bytes shrink but gcc still doesn't fit.
+        state.install_image(NodeId(0), &wp.image_ref(), &wp_layers).unwrap();
+        let missing_after = gcc_layers.difference_bytes(
+            &state.node(NodeId(0)).layers,
+            &state.interner,
+        );
+        assert!(missing_after < gcc.total_size);
+        let ctx2 = CycleContext::new(&state, &pod, Some(gcc), gcc_layers, gcc.total_size);
+        assert!(matches!(
+            NodeCapacity.filter(&ctx2, state.node(NodeId(0))),
+            FilterResult::Reject(_)
+        ));
+    }
+
+    #[test]
+    fn pass_when_layers_cached() {
+        let mut state = ClusterState::new();
+        state.add_node(Node::new(
+            NodeId(0),
+            "n",
+            Resources::cores_gb(4.0, 4.0),
+            Bytes::from_gb(2.0),
+            Bandwidth::from_mbps(10.0),
+        ));
+        let corpus = hub::corpus();
+        let redis = corpus.iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
+        let (_, layers) = state.intern_image(redis);
+        state.install_image(NodeId(0), &redis.image_ref(), &layers).unwrap();
+        // Fill the disk to the brim with the image already present.
+        state.node_mut(NodeId(0)).disk_used = state.node(NodeId(0)).disk;
+        let pod = PodBuilder::new().build("redis:7.2", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, Some(redis), layers, redis.total_size);
+        // All layers cached ⇒ zero missing bytes ⇒ passes despite full disk.
+        assert_eq!(NodeCapacity.filter(&ctx, state.node(NodeId(0))), FilterResult::Pass);
+    }
+}

@@ -1,0 +1,123 @@
+//! ImageLocality — "prefers nodes with the container images already
+//! present" (paper §IV-B). Scores follow the upstream formula: the image's
+//! size is scaled by the fraction of nodes that already hold it (to avoid
+//! node heating), then mapped through fixed thresholds to 0–100.
+//!
+//! Note the contrast that motivates the paper: ImageLocality is *whole-
+//! image* locality — a node holding 5 of 6 layers scores zero. The
+//! layer-aware score (Eq. 3) is the refinement.
+
+use crate::cluster::Node;
+use crate::sched::context::CycleContext;
+use crate::sched::framework::{ScorePlugin, MAX_NODE_SCORE};
+use crate::util::units::Bytes;
+
+/// Upstream thresholds (`pkg/scheduler/framework/plugins/imagelocality`).
+const MIN_THRESHOLD: f64 = 23.0 * 1024.0 * 1024.0; // 23 MiB
+const MAX_THRESHOLD: f64 = 1000.0 * 1024.0 * 1024.0; // 1000 MiB
+
+pub struct ImageLocality;
+
+impl ImageLocality {
+    /// Upstream `scaledImageScore`: image size × spread fraction.
+    fn scaled_image_score(size: Bytes, nodes_with_image: usize, total_nodes: usize) -> f64 {
+        if total_nodes == 0 {
+            return 0.0;
+        }
+        size.0 as f64 * (nodes_with_image as f64 / total_nodes as f64)
+    }
+}
+
+impl ScorePlugin for ImageLocality {
+    fn name(&self) -> &'static str {
+        "ImageLocality"
+    }
+
+    fn score(&self, ctx: &CycleContext, node: &Node) -> f64 {
+        if !node.has_image(&ctx.pod.image) {
+            return 0.0;
+        }
+        let total_nodes = ctx.state.node_count();
+        let nodes_with = ctx
+            .state
+            .nodes()
+            .iter()
+            .filter(|n| n.has_image(&ctx.pod.image))
+            .count();
+        let sum_scores = Self::scaled_image_score(ctx.required_bytes, nodes_with, total_nodes);
+        if sum_scores < MIN_THRESHOLD {
+            0.0
+        } else if sum_scores > MAX_THRESHOLD {
+            MAX_NODE_SCORE
+        } else {
+            MAX_NODE_SCORE * (sum_scores - MIN_THRESHOLD) / (MAX_THRESHOLD - MIN_THRESHOLD)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterState, Node, NodeId, PodBuilder, Resources};
+    use crate::registry::hub;
+    use crate::util::units::Bandwidth;
+
+    fn setup() -> ClusterState {
+        let mut s = ClusterState::new();
+        for i in 0..4 {
+            s.add_node(Node::new(
+                NodeId(i),
+                &format!("n{i}"),
+                Resources::cores_gb(4.0, 4.0),
+                Bytes::from_gb(30.0),
+                Bandwidth::from_mbps(10.0),
+            ));
+        }
+        s
+    }
+
+    #[test]
+    fn node_without_image_scores_zero() {
+        let mut state = setup();
+        let corpus = hub::corpus();
+        let ghost = corpus.iter().find(|m| m.name == "ghost").unwrap();
+        let (_, layers) = state.intern_image(ghost);
+        state.install_image(NodeId(0), &ghost.image_ref(), &layers).unwrap();
+
+        let pod = PodBuilder::new().build("ghost:5", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, Some(ghost), layers, ghost.total_size);
+        let s_with = ImageLocality.score(&ctx, state.node(NodeId(0)));
+        let s_without = ImageLocality.score(&ctx, state.node(NodeId(1)));
+        assert!(s_with > 0.0);
+        assert_eq!(s_without, 0.0);
+    }
+
+    #[test]
+    fn small_image_below_threshold_scores_zero() {
+        let mut state = setup();
+        let corpus = hub::corpus();
+        let alpine = corpus.iter().find(|m| m.name == "alpine").unwrap(); // 3.4 MB
+        let (_, layers) = state.intern_image(alpine);
+        state.install_image(NodeId(0), &alpine.image_ref(), &layers).unwrap();
+        let pod = PodBuilder::new().build("alpine:3.19", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, Some(alpine), layers, alpine.total_size);
+        assert_eq!(ImageLocality.score(&ctx, state.node(NodeId(0))), 0.0);
+    }
+
+    #[test]
+    fn wider_spread_raises_score() {
+        let mut state = setup();
+        let corpus = hub::corpus();
+        let gcc = corpus.iter().find(|m| m.name == "gcc").unwrap(); // ~824 MB
+        let (_, layers) = state.intern_image(gcc);
+        state.install_image(NodeId(0), &gcc.image_ref(), &layers).unwrap();
+        let pod = PodBuilder::new().build("gcc:13", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, Some(gcc), layers.clone(), gcc.total_size);
+        let one_holder = ImageLocality.score(&ctx, state.node(NodeId(0)));
+
+        state.install_image(NodeId(1), &gcc.image_ref(), &layers).unwrap();
+        let ctx2 = CycleContext::new(&state, &pod, Some(gcc), layers, gcc.total_size);
+        let two_holders = ImageLocality.score(&ctx2, state.node(NodeId(0)));
+        assert!(two_holders > one_holder, "{two_holders} <= {one_holder}");
+    }
+}

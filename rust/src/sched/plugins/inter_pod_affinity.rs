@@ -1,0 +1,145 @@
+//! InterPodAffinity — "implements inter-Pod affinity and anti-affinity
+//! similar to NodeAffinity" (paper §IV-B).
+//!
+//! For each of the pod's affinity terms, award the term weight for every
+//! matching pod in the node's topology domain (negative for anti-affinity
+//! terms), then shift+scale to 0–100 across feasible nodes.
+
+use crate::cluster::Node;
+use crate::sched::context::CycleContext;
+use crate::sched::framework::{ScorePlugin, MAX_NODE_SCORE};
+
+pub struct InterPodAffinity;
+
+impl ScorePlugin for InterPodAffinity {
+    fn name(&self) -> &'static str {
+        "InterPodAffinity"
+    }
+
+    fn score(&self, ctx: &CycleContext, node: &Node) -> f64 {
+        let mut total = 0.0;
+        for term in &ctx.pod.pod_affinity {
+            let domain = node.labels.get(&term.topology_key);
+            for other in ctx.state.nodes() {
+                let same_domain = match (&domain, other.labels.get(&term.topology_key)) {
+                    // hostname topology: same node only
+                    (None, _) | (_, None) => other.id == node.id,
+                    (Some(d), Some(od)) => *d == od,
+                };
+                if !same_domain {
+                    continue;
+                }
+                let matches = ctx
+                    .state
+                    .pods_on(other.id)
+                    .filter(|p| p.labels.get(&term.label_key) == Some(&term.label_value))
+                    .count() as f64;
+                total += matches * term.weight as f64 * if term.anti { -1.0 } else { 1.0 };
+            }
+        }
+        total
+    }
+
+    /// Upstream shifts by the min then scales by the max so anti-affinity
+    /// (negative raw) still lands in [0, 100].
+    fn normalize(&self, _ctx: &CycleContext, scores: &mut [f64]) {
+        let min = scores.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        if (max - min).abs() < f64::EPSILON {
+            for s in scores.iter_mut() {
+                *s = MAX_NODE_SCORE;
+            }
+        } else {
+            for s in scores.iter_mut() {
+                *s = (*s - min) / (max - min) * MAX_NODE_SCORE;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::pod::PodAffinityTerm;
+    use crate::cluster::{ClusterState, Node, NodeId, PodBuilder, Resources};
+    use crate::registry::LayerSet;
+    use crate::util::units::{Bandwidth, Bytes};
+
+    fn setup() -> (ClusterState, PodBuilder) {
+        let mut s = ClusterState::new();
+        for (i, zone) in ["a", "b"].iter().enumerate() {
+            s.add_node(
+                Node::new(
+                    NodeId(i as u32),
+                    &format!("n{i}"),
+                    Resources::cores_gb(4.0, 4.0),
+                    Bytes::from_gb(20.0),
+                    Bandwidth::from_mbps(10.0),
+                )
+                .with_label("zone", zone),
+            );
+        }
+        (s, PodBuilder::new())
+    }
+
+    fn term(anti: bool) -> PodAffinityTerm {
+        PodAffinityTerm {
+            label_key: "app".into(),
+            label_value: "db".into(),
+            topology_key: "zone".into(),
+            weight: 10,
+            anti,
+        }
+    }
+
+    #[test]
+    fn affinity_attracts_to_cohosted_domain() {
+        let (mut state, mut b) = setup();
+        let db = b.build("mysql:8.2", Resources::ZERO).with_label("app", "db");
+        let pid = state.submit_pod(db);
+        state.bind(pid, NodeId(0)).unwrap();
+
+        let mut pod = b.build("wordpress:6.4", Resources::ZERO);
+        pod.pod_affinity.push(term(false));
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        let mut scores = vec![
+            InterPodAffinity.score(&ctx, state.node(NodeId(0))),
+            InterPodAffinity.score(&ctx, state.node(NodeId(1))),
+        ];
+        assert_eq!(scores, vec![10.0, 0.0]);
+        InterPodAffinity.normalize(&ctx, &mut scores);
+        assert_eq!(scores, vec![100.0, 0.0]);
+    }
+
+    #[test]
+    fn anti_affinity_repels() {
+        let (mut state, mut b) = setup();
+        let db = b.build("mysql:8.2", Resources::ZERO).with_label("app", "db");
+        let pid = state.submit_pod(db);
+        state.bind(pid, NodeId(0)).unwrap();
+
+        let mut pod = b.build("mysql:8.2", Resources::ZERO);
+        pod.pod_affinity.push(term(true));
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        let mut scores = vec![
+            InterPodAffinity.score(&ctx, state.node(NodeId(0))),
+            InterPodAffinity.score(&ctx, state.node(NodeId(1))),
+        ];
+        assert_eq!(scores, vec![-10.0, 0.0]);
+        InterPodAffinity.normalize(&ctx, &mut scores);
+        assert_eq!(scores, vec![0.0, 100.0]);
+    }
+
+    #[test]
+    fn no_terms_is_neutral() {
+        let (state, mut b) = setup();
+        let pod = b.build("redis:7.2", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        let mut scores = vec![
+            InterPodAffinity.score(&ctx, state.node(NodeId(0))),
+            InterPodAffinity.score(&ctx, state.node(NodeId(1))),
+        ];
+        InterPodAffinity.normalize(&ctx, &mut scores);
+        assert_eq!(scores, vec![100.0, 100.0]);
+    }
+}

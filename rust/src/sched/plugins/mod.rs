@@ -1,0 +1,22 @@
+//! The default Kubernetes scheduler plugins the paper enables (§IV-B) plus
+//! the paper's PreFilter/Filter capacity constraints (§III-C).
+
+pub mod balanced_allocation;
+pub mod capacity;
+pub mod image_locality;
+pub mod inter_pod_affinity;
+pub mod node_affinity;
+pub mod node_resources_fit;
+pub mod pod_topology_spread;
+pub mod taint_toleration;
+pub mod volume_binding;
+
+pub use balanced_allocation::BalancedAllocation;
+pub use capacity::NodeCapacity;
+pub use image_locality::ImageLocality;
+pub use inter_pod_affinity::InterPodAffinity;
+pub use node_affinity::{NodeAffinityFilter, NodeAffinityScore};
+pub use node_resources_fit::{LeastAllocated, NodeResourcesFit};
+pub use pod_topology_spread::PodTopologySpread;
+pub use taint_toleration::{TaintTolerationFilter, TaintTolerationScore};
+pub use volume_binding::{VolumeBindingFilter, VolumeBindingScore};

@@ -1,0 +1,151 @@
+//! NodeAffinity — "implements node selectors and affinity, scoring nodes
+//! higher that meet more affinity conditions" (paper §IV-B).
+//!
+//! Filter: `nodeSelector` labels and `required` affinity terms must match.
+//! Score: sum of matched `preferred` term weights, normalized by max.
+
+use crate::cluster::Node;
+use crate::sched::context::CycleContext;
+use crate::sched::framework::{normalize_by_max, FilterPlugin, FilterResult, ScorePlugin};
+
+fn term_matches(node: &Node, key: &str, values: &[String]) -> bool {
+    node.labels
+        .get(key)
+        .map(|v| values.iter().any(|want| want == v))
+        .unwrap_or(false)
+}
+
+pub struct NodeAffinityFilter;
+
+impl FilterPlugin for NodeAffinityFilter {
+    fn name(&self) -> &'static str {
+        "NodeAffinity"
+    }
+
+    fn filter(&self, ctx: &CycleContext, node: &Node) -> FilterResult {
+        for (k, v) in &ctx.pod.node_selector {
+            if node.labels.get(k) != Some(v) {
+                return FilterResult::Reject(format!("node selector {k}={v} unmatched"));
+            }
+        }
+        for term in &ctx.pod.affinity.required {
+            if !term_matches(node, &term.key, &term.values) {
+                return FilterResult::Reject(format!(
+                    "required affinity {} in {:?} unmatched",
+                    term.key, term.values
+                ));
+            }
+        }
+        FilterResult::Pass
+    }
+}
+
+pub struct NodeAffinityScore;
+
+impl ScorePlugin for NodeAffinityScore {
+    fn name(&self) -> &'static str {
+        "NodeAffinity"
+    }
+
+    fn score(&self, ctx: &CycleContext, node: &Node) -> f64 {
+        ctx.pod
+            .affinity
+            .preferred
+            .iter()
+            .filter(|t| term_matches(node, &t.key, &t.values))
+            .map(|t| t.weight as f64)
+            .sum()
+    }
+
+    fn normalize(&self, _ctx: &CycleContext, scores: &mut [f64]) {
+        normalize_by_max(scores);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::pod::AffinityTerm;
+    use crate::cluster::{ClusterState, Node, NodeId, PodBuilder, Resources};
+    use crate::registry::LayerSet;
+    use crate::util::units::{Bandwidth, Bytes};
+
+    fn node(id: u32) -> Node {
+        Node::new(
+            NodeId(id),
+            &format!("n{id}"),
+            Resources::cores_gb(4.0, 4.0),
+            Bytes::from_gb(20.0),
+            Bandwidth::from_mbps(10.0),
+        )
+    }
+
+    #[test]
+    fn selector_filters() {
+        let state = ClusterState::new();
+        let pod = PodBuilder::new()
+            .build("redis", Resources::ZERO)
+            .with_selector("disk", "ssd");
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        assert!(matches!(
+            NodeAffinityFilter.filter(&ctx, &node(0)),
+            FilterResult::Reject(_)
+        ));
+        assert_eq!(
+            NodeAffinityFilter.filter(&ctx, &node(1).with_label("disk", "ssd")),
+            FilterResult::Pass
+        );
+        assert!(matches!(
+            NodeAffinityFilter.filter(&ctx, &node(2).with_label("disk", "hdd")),
+            FilterResult::Reject(_)
+        ));
+    }
+
+    #[test]
+    fn required_terms_filter() {
+        let state = ClusterState::new();
+        let mut pod = PodBuilder::new().build("redis", Resources::ZERO);
+        pod.affinity.required.push(AffinityTerm {
+            key: "zone".into(),
+            values: vec!["a".into(), "b".into()],
+            weight: 0,
+        });
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        assert_eq!(
+            NodeAffinityFilter.filter(&ctx, &node(0).with_label("zone", "b")),
+            FilterResult::Pass
+        );
+        assert!(matches!(
+            NodeAffinityFilter.filter(&ctx, &node(1).with_label("zone", "c")),
+            FilterResult::Reject(_)
+        ));
+    }
+
+    #[test]
+    fn preferred_terms_score_by_weight() {
+        let state = ClusterState::new();
+        let mut pod = PodBuilder::new().build("redis", Resources::ZERO);
+        pod.affinity.preferred.push(AffinityTerm {
+            key: "zone".into(),
+            values: vec!["a".into()],
+            weight: 80,
+        });
+        pod.affinity.preferred.push(AffinityTerm {
+            key: "disk".into(),
+            values: vec!["ssd".into()],
+            weight: 20,
+        });
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        let both = node(0).with_label("zone", "a").with_label("disk", "ssd");
+        let one = node(1).with_label("zone", "a");
+        let none = node(2);
+        let mut scores = vec![
+            NodeAffinityScore.score(&ctx, &both),
+            NodeAffinityScore.score(&ctx, &one),
+            NodeAffinityScore.score(&ctx, &none),
+        ];
+        assert_eq!(scores, vec![100.0, 80.0, 0.0]);
+        NodeAffinityScore.normalize(&ctx, &mut scores);
+        assert_eq!(scores, vec![100.0, 80.0, 0.0]);
+    }
+}

@@ -1,0 +1,126 @@
+//! PodTopologySpread — "implements container topology spread by selecting
+//! the node with the highest score for each topology pair" (paper §IV-B).
+//!
+//! For each of the pod's spread constraints, count pods with matching
+//! labels in each node's topology domain; raw score = total matching count
+//! (skew badness), normalized inversely so the emptiest domain scores 100.
+
+use crate::cluster::Node;
+use crate::sched::context::CycleContext;
+use crate::sched::framework::{normalize_inverse, ScorePlugin};
+
+pub struct PodTopologySpread;
+
+impl ScorePlugin for PodTopologySpread {
+    fn name(&self) -> &'static str {
+        "PodTopologySpread"
+    }
+
+    fn score(&self, ctx: &CycleContext, node: &Node) -> f64 {
+        if ctx.pod.topology_spread.is_empty() {
+            return 0.0; // neutral; normalize_inverse maps all-0 to all-100
+        }
+        let mut count = 0usize;
+        for constraint in &ctx.pod.topology_spread {
+            let domain = match node.labels.get(&constraint.topology_key) {
+                Some(d) => d,
+                None => continue,
+            };
+            // Count already-bound pods with labels matching ours, on any
+            // node in the same domain.
+            for other in ctx.state.nodes() {
+                if other.labels.get(&constraint.topology_key) != Some(domain) {
+                    continue;
+                }
+                count += ctx
+                    .state
+                    .pods_on(other.id)
+                    .filter(|p| {
+                        ctx.pod
+                            .labels
+                            .iter()
+                            .any(|(k, v)| p.labels.get(k) == Some(v))
+                    })
+                    .count();
+            }
+        }
+        count as f64
+    }
+
+    fn normalize(&self, _ctx: &CycleContext, scores: &mut [f64]) {
+        normalize_inverse(scores);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::pod::TopologySpread;
+    use crate::cluster::{ClusterState, Node, NodeId, PodBuilder, Resources};
+    use crate::registry::LayerSet;
+    use crate::util::units::{Bandwidth, Bytes};
+
+    fn setup() -> (ClusterState, PodBuilder) {
+        let mut s = ClusterState::new();
+        for (i, zone) in ["a", "a", "b"].iter().enumerate() {
+            s.add_node(
+                Node::new(
+                    NodeId(i as u32),
+                    &format!("n{i}"),
+                    Resources::cores_gb(4.0, 4.0),
+                    Bytes::from_gb(20.0),
+                    Bandwidth::from_mbps(10.0),
+                )
+                .with_label("zone", zone),
+            );
+        }
+        (s, PodBuilder::new())
+    }
+
+    #[test]
+    fn prefers_empty_domain() {
+        let (mut state, mut b) = setup();
+        // Two "app=web" pods already in zone a.
+        for _ in 0..2 {
+            let p = b.build("nginx:1.25", Resources::ZERO).with_label("app", "web");
+            let pid = state.submit_pod(p);
+            state.bind(pid, NodeId(0)).unwrap();
+        }
+        let mut pod = b.build("nginx:1.25", Resources::ZERO).with_label("app", "web");
+        pod.topology_spread.push(TopologySpread { topology_key: "zone".into(), max_skew: 1 });
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+
+        // Both zone-a nodes see the 2 pods in their domain; zone b sees 0.
+        let raw: Vec<f64> = (0..3)
+            .map(|i| PodTopologySpread.score(&ctx, state.node(NodeId(i))))
+            .collect();
+        assert_eq!(raw, vec![2.0, 2.0, 0.0]);
+        let mut scores = raw;
+        PodTopologySpread.normalize(&ctx, &mut scores);
+        assert_eq!(scores, vec![0.0, 0.0, 100.0]);
+    }
+
+    #[test]
+    fn no_constraint_is_neutral() {
+        let (state, mut b) = setup();
+        let pod = b.build("nginx:1.25", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        let mut scores: Vec<f64> = (0..3)
+            .map(|i| PodTopologySpread.score(&ctx, state.node(NodeId(i))))
+            .collect();
+        PodTopologySpread.normalize(&ctx, &mut scores);
+        assert_eq!(scores, vec![100.0, 100.0, 100.0]);
+    }
+
+    #[test]
+    fn unlabeled_pods_do_not_count() {
+        let (mut state, mut b) = setup();
+        let other = b.build("redis:7.2", Resources::ZERO); // no labels
+        let pid = state.submit_pod(other);
+        state.bind(pid, NodeId(0)).unwrap();
+        let mut pod = b.build("nginx:1.25", Resources::ZERO).with_label("app", "web");
+        pod.topology_spread.push(TopologySpread { topology_key: "zone".into(), max_skew: 1 });
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        assert_eq!(PodTopologySpread.score(&ctx, state.node(NodeId(0))), 0.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! TaintToleration — "implements taints and tolerations, reducing
+//! deployment priority for tainted nodes" (paper §IV-B).
+//!
+//! Hard (NoSchedule) taints filter; soft (PreferNoSchedule) taints count
+//! against the node in scoring, normalized so the node with the most
+//! intolerable soft taints scores 0 (upstream behaviour).
+
+use crate::cluster::Node;
+use crate::sched::context::CycleContext;
+use crate::sched::framework::{
+    normalize_inverse, FilterPlugin, FilterResult, ScorePlugin,
+};
+
+pub struct TaintTolerationFilter;
+
+impl FilterPlugin for TaintTolerationFilter {
+    fn name(&self) -> &'static str {
+        "TaintToleration"
+    }
+
+    fn filter(&self, ctx: &CycleContext, node: &Node) -> FilterResult {
+        for taint in node.taints.iter().filter(|t| t.hard) {
+            if !ctx.pod.tolerates(&taint.key, &taint.value) {
+                return FilterResult::Reject(format!(
+                    "untolerated taint {}={}",
+                    taint.key, taint.value
+                ));
+            }
+        }
+        FilterResult::Pass
+    }
+}
+
+pub struct TaintTolerationScore;
+
+impl ScorePlugin for TaintTolerationScore {
+    fn name(&self) -> &'static str {
+        "TaintToleration"
+    }
+
+    /// Raw score = count of intolerable soft taints (badness).
+    fn score(&self, ctx: &CycleContext, node: &Node) -> f64 {
+        node.taints
+            .iter()
+            .filter(|t| !t.hard && !ctx.pod.tolerates(&t.key, &t.value))
+            .count() as f64
+    }
+
+    fn normalize(&self, _ctx: &CycleContext, scores: &mut [f64]) {
+        normalize_inverse(scores);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterState, Node, NodeId, PodBuilder, Resources};
+    use crate::registry::LayerSet;
+    use crate::util::units::{Bandwidth, Bytes};
+
+    fn node(id: u32) -> Node {
+        Node::new(
+            NodeId(id),
+            &format!("n{id}"),
+            Resources::cores_gb(4.0, 4.0),
+            Bytes::from_gb(20.0),
+            Bandwidth::from_mbps(10.0),
+        )
+    }
+
+    #[test]
+    fn hard_taint_filters_unless_tolerated() {
+        let state = ClusterState::new();
+        let mut b = PodBuilder::new();
+        let plain = b.build("redis", Resources::ZERO);
+        let tolerant = b.build("redis", Resources::ZERO).with_toleration("gpu", "only");
+        let tainted = node(0).with_taint("gpu", "only", true);
+
+        let ctx = CycleContext::new(&state, &plain, None, LayerSet::new(), Bytes::ZERO);
+        assert!(matches!(
+            TaintTolerationFilter.filter(&ctx, &tainted),
+            FilterResult::Reject(_)
+        ));
+        let ctx2 = CycleContext::new(&state, &tolerant, None, LayerSet::new(), Bytes::ZERO);
+        assert_eq!(TaintTolerationFilter.filter(&ctx2, &tainted), FilterResult::Pass);
+    }
+
+    #[test]
+    fn soft_taints_lower_score() {
+        let state = ClusterState::new();
+        let pod = PodBuilder::new().build("redis", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        let clean = node(0);
+        let soft = node(1).with_taint("edge", "flaky", false);
+        let mut scores = vec![
+            TaintTolerationScore.score(&ctx, &clean),
+            TaintTolerationScore.score(&ctx, &soft),
+        ];
+        TaintTolerationScore.normalize(&ctx, &mut scores);
+        assert_eq!(scores, vec![100.0, 0.0]);
+    }
+
+    #[test]
+    fn soft_taint_does_not_filter() {
+        let state = ClusterState::new();
+        let pod = PodBuilder::new().build("redis", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        let soft = node(0).with_taint("edge", "flaky", false);
+        assert_eq!(TaintTolerationFilter.filter(&ctx, &soft), FilterResult::Pass);
+    }
+}

@@ -1,0 +1,117 @@
+//! VolumeBinding — "verifies if the node can bind the requested volumes,
+//! prioritizing the smallest volume that meets the required size"
+//! (paper §IV-B).
+//!
+//! Filter: the sum of the pod's claims must fit the node's remaining volume
+//! capacity. Score: tighter fit scores higher (bin-packing preference for
+//! the smallest satisfying volume), neutral 100 when the pod has no claims.
+
+use crate::cluster::Node;
+use crate::sched::context::CycleContext;
+use crate::sched::framework::{FilterPlugin, FilterResult, ScorePlugin, MAX_NODE_SCORE};
+use crate::util::units::Bytes;
+
+fn claimed(ctx: &CycleContext) -> Bytes {
+    ctx.pod.volume_claims.iter().map(|c| c.size).sum()
+}
+
+pub struct VolumeBindingFilter;
+
+impl FilterPlugin for VolumeBindingFilter {
+    fn name(&self) -> &'static str {
+        "VolumeBinding"
+    }
+
+    fn filter(&self, ctx: &CycleContext, node: &Node) -> FilterResult {
+        let need = claimed(ctx);
+        if need > node.volume_capacity {
+            return FilterResult::Reject(format!(
+                "volume claims {} exceed capacity {}",
+                need, node.volume_capacity
+            ));
+        }
+        FilterResult::Pass
+    }
+}
+
+pub struct VolumeBindingScore;
+
+impl ScorePlugin for VolumeBindingScore {
+    fn name(&self) -> &'static str {
+        "VolumeBinding"
+    }
+
+    fn score(&self, ctx: &CycleContext, node: &Node) -> f64 {
+        let need = claimed(ctx);
+        if need == Bytes::ZERO {
+            return MAX_NODE_SCORE; // no claims: every node is equally fine
+        }
+        if node.volume_capacity == Bytes::ZERO || need > node.volume_capacity {
+            return 0.0;
+        }
+        // Fit ratio: claims / capacity — 1.0 is a perfect (smallest) fit.
+        MAX_NODE_SCORE * (need.0 as f64 / node.volume_capacity.0 as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterState, Node, NodeId, PodBuilder, Resources};
+    use crate::registry::LayerSet;
+    use crate::util::units::Bandwidth;
+
+    fn node_with_volume(id: u32, gb: f64) -> Node {
+        let mut n = Node::new(
+            NodeId(id),
+            &format!("n{id}"),
+            Resources::cores_gb(4.0, 4.0),
+            Bytes::from_gb(20.0),
+            Bandwidth::from_mbps(10.0),
+        );
+        n.volume_capacity = Bytes::from_gb(gb);
+        n
+    }
+
+    #[test]
+    fn filter_rejects_oversize_claims() {
+        let state = ClusterState::new();
+        let pod = PodBuilder::new()
+            .build("mysql:8.2", Resources::ZERO)
+            .with_volume(Bytes::from_gb(10.0));
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        assert!(matches!(
+            VolumeBindingFilter.filter(&ctx, &node_with_volume(0, 5.0)),
+            FilterResult::Reject(_)
+        ));
+        assert_eq!(
+            VolumeBindingFilter.filter(&ctx, &node_with_volume(1, 20.0)),
+            FilterResult::Pass
+        );
+    }
+
+    #[test]
+    fn tighter_fit_scores_higher() {
+        let state = ClusterState::new();
+        let pod = PodBuilder::new()
+            .build("mysql:8.2", Resources::ZERO)
+            .with_volume(Bytes::from_gb(10.0));
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        let tight = VolumeBindingScore.score(&ctx, &node_with_volume(0, 12.0));
+        let loose = VolumeBindingScore.score(&ctx, &node_with_volume(1, 100.0));
+        assert!(tight > loose);
+        assert!(tight <= 100.0);
+    }
+
+    #[test]
+    fn no_claims_is_neutral() {
+        let state = ClusterState::new();
+        let pod = PodBuilder::new().build("redis:7.2", Resources::ZERO);
+        let ctx = CycleContext::new(&state, &pod, None, LayerSet::new(), Bytes::ZERO);
+        assert_eq!(VolumeBindingScore.score(&ctx, &node_with_volume(0, 1.0)), 100.0);
+        assert_eq!(
+            VolumeBindingFilter.filter(&ctx, &node_with_volume(0, 0.0)),
+            FilterResult::Pass
+        );
+    }
+}

@@ -1,0 +1,127 @@
+//! Scheduler profiles — plugin-set configurations. The default profile
+//! enables the plugins the paper lists in §IV-B with upstream default
+//! weights; `FrameworkConfig` lets experiments toggle plugins individually
+//! ("the plugins mentioned above can be enabled or disabled individually").
+
+use super::framework::Framework;
+use super::plugins::*;
+
+/// Which score plugins to enable (filters are always on — they implement
+/// hard constraints).
+#[derive(Debug, Clone)]
+pub struct FrameworkConfig {
+    pub image_locality: bool,
+    pub taint_toleration: bool,
+    pub node_affinity: bool,
+    pub pod_topology_spread: bool,
+    pub least_allocated: bool,
+    pub volume_binding: bool,
+    pub inter_pod_affinity: bool,
+    pub balanced_allocation: bool,
+}
+
+impl Default for FrameworkConfig {
+    /// The §IV-B list with NodeResourcesBalancedAllocation (§I/[23]) on.
+    fn default() -> FrameworkConfig {
+        FrameworkConfig {
+            image_locality: true,
+            taint_toleration: true,
+            node_affinity: true,
+            pod_topology_spread: true,
+            least_allocated: true,
+            volume_binding: true,
+            inter_pod_affinity: true,
+            balanced_allocation: true,
+        }
+    }
+}
+
+impl FrameworkConfig {
+    /// Only resource plugins — a minimal profile for ablations.
+    pub fn resources_only() -> FrameworkConfig {
+        FrameworkConfig {
+            image_locality: false,
+            taint_toleration: false,
+            node_affinity: false,
+            pod_topology_spread: false,
+            least_allocated: true,
+            volume_binding: false,
+            inter_pod_affinity: false,
+            balanced_allocation: true,
+        }
+    }
+
+    /// Build the framework. Weights mirror upstream defaults (all 1 except
+    /// TaintToleration=3 and NodeAffinity=2 in kube-scheduler v1.23).
+    pub fn build(&self, profile_name: &str) -> Framework {
+        let mut fw = Framework::new(profile_name)
+            // Filters: hard constraints always enforced (paper §III-C).
+            .add_filter(Box::new(NodeResourcesFit))
+            .add_filter(Box::new(NodeCapacity))
+            .add_filter(Box::new(TaintTolerationFilter))
+            .add_filter(Box::new(NodeAffinityFilter))
+            .add_filter(Box::new(VolumeBindingFilter));
+        if self.image_locality {
+            fw = fw.add_scorer(Box::new(ImageLocality), 1.0);
+        }
+        if self.taint_toleration {
+            fw = fw.add_scorer(Box::new(TaintTolerationScore), 3.0);
+        }
+        if self.node_affinity {
+            fw = fw.add_scorer(Box::new(NodeAffinityScore), 2.0);
+        }
+        if self.pod_topology_spread {
+            fw = fw.add_scorer(Box::new(PodTopologySpread), 2.0);
+        }
+        if self.least_allocated {
+            fw = fw.add_scorer(Box::new(LeastAllocated), 1.0);
+        }
+        if self.volume_binding {
+            fw = fw.add_scorer(Box::new(VolumeBindingScore), 1.0);
+        }
+        if self.inter_pod_affinity {
+            fw = fw.add_scorer(Box::new(InterPodAffinity), 1.0);
+        }
+        if self.balanced_allocation {
+            fw = fw.add_scorer(Box::new(BalancedAllocation), 1.0);
+        }
+        fw
+    }
+}
+
+/// The default-scheduler framework (baseline "Default" in the paper's
+/// experiments).
+pub fn default_framework() -> Framework {
+    FrameworkConfig::default().build("default-scheduler")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_profile_has_all_eight_scorers() {
+        let fw = default_framework();
+        let names = fw.scorer_names();
+        assert_eq!(names.len(), 8);
+        assert!(names.contains(&"ImageLocality"));
+        assert!(names.contains(&"NodeResourcesBalancedAllocation"));
+    }
+
+    #[test]
+    fn toggles_remove_scorers() {
+        let mut cfg = FrameworkConfig::default();
+        cfg.image_locality = false;
+        cfg.inter_pod_affinity = false;
+        let fw = cfg.build("test");
+        let names = fw.scorer_names();
+        assert_eq!(names.len(), 6);
+        assert!(!names.contains(&"ImageLocality"));
+    }
+
+    #[test]
+    fn resources_only_profile() {
+        let fw = FrameworkConfig::resources_only().build("min");
+        assert_eq!(fw.scorer_names().len(), 2);
+    }
+}

@@ -1,0 +1,105 @@
+//! Scheduling queue — FIFO of pending pods with a back-off parking lot for
+//! unschedulable ones, a small analog of kube-scheduler's active/backoff
+//! queues so the simulator can retry pods that failed filtering.
+
+use crate::cluster::PodId;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone, Default)]
+pub struct SchedulingQueue {
+    active: VecDeque<PodId>,
+    /// (pod, retry-at time).
+    backoff: Vec<(PodId, f64)>,
+    pub backoff_secs: f64,
+}
+
+impl SchedulingQueue {
+    pub fn new() -> SchedulingQueue {
+        SchedulingQueue { active: VecDeque::new(), backoff: Vec::new(), backoff_secs: 5.0 }
+    }
+
+    pub fn push(&mut self, pod: PodId) {
+        self.active.push_back(pod);
+    }
+
+    /// Next pod to schedule, if any.
+    pub fn pop(&mut self) -> Option<PodId> {
+        self.active.pop_front()
+    }
+
+    /// Park an unschedulable pod until `now + backoff_secs`.
+    pub fn park(&mut self, pod: PodId, now: f64) {
+        self.backoff.push((pod, now + self.backoff_secs));
+    }
+
+    /// Move pods whose back-off expired back to the active queue.
+    pub fn release_due(&mut self, now: f64) -> usize {
+        let mut released = 0;
+        let mut i = 0;
+        while i < self.backoff.len() {
+            if self.backoff[i].1 <= now {
+                let (pod, _) = self.backoff.swap_remove(i);
+                self.active.push_back(pod);
+                released += 1;
+            } else {
+                i += 1;
+            }
+        }
+        released
+    }
+
+    /// Earliest back-off expiry (for event-driven simulation).
+    pub fn next_release_at(&self) -> Option<f64> {
+        self.backoff.iter().map(|(_, t)| *t).min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active.is_empty() && self.backoff.is_empty()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn parked_len(&self) -> usize {
+        self.backoff.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut q = SchedulingQueue::new();
+        q.push(PodId(1));
+        q.push(PodId(2));
+        assert_eq!(q.pop(), Some(PodId(1)));
+        assert_eq!(q.pop(), Some(PodId(2)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn backoff_and_release() {
+        let mut q = SchedulingQueue::new();
+        q.park(PodId(1), 0.0);
+        assert!(q.pop().is_none());
+        assert_eq!(q.parked_len(), 1);
+        assert_eq!(q.next_release_at(), Some(5.0));
+        assert_eq!(q.release_due(4.9), 0);
+        assert_eq!(q.release_due(5.0), 1);
+        assert_eq!(q.pop(), Some(PodId(1)));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn multiple_backoffs_release_independently() {
+        let mut q = SchedulingQueue::new();
+        q.park(PodId(1), 0.0);
+        q.park(PodId(2), 3.0);
+        assert_eq!(q.release_due(5.0), 1);
+        assert_eq!(q.parked_len(), 1);
+        assert_eq!(q.release_due(8.0), 1);
+    }
+}

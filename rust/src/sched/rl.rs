@@ -1,0 +1,248 @@
+//! Learning-based scheduler — the paper's §VII future work: "we will
+//! design scheduling algorithms using reinforcement learning and other
+//! long-term optimization strategies."
+//!
+//! A contextual ε-greedy bandit with a linear value model: each candidate
+//! node is described by a feature vector (layer-sharing score, CPU and
+//! memory utilisation, balance STD, normalized S_K8s, feasible-disk
+//! headroom); the agent predicts the placement's long-term value, picks
+//! argmax with ε-exploration, and updates online from the realized reward
+//!   r = −(download MB)/scale − λ·STD_after,
+//! i.e. exactly the paper's two objectives (download cost, load balance)
+//! folded into one scalar. SGD on squared error keeps it dependency-free
+//! and deterministic.
+
+use super::context::CycleContext;
+use super::framework::{Framework, NodeScore, Unschedulable};
+use super::layer_score;
+use crate::cluster::NodeId;
+use crate::util::rng::Pcg;
+
+/// Feature count for the linear model (+1 bias).
+pub const N_FEATURES: usize = 7;
+
+/// Hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct RlParams {
+    pub epsilon: f64,
+    /// ε decay per decision (exploration annealing).
+    pub epsilon_decay: f64,
+    pub learning_rate: f64,
+    /// Weight of the balance term in the reward.
+    pub lambda_std: f64,
+    /// Download normalization scale (MB) so rewards are O(1).
+    pub download_scale_mb: f64,
+}
+
+impl Default for RlParams {
+    fn default() -> RlParams {
+        RlParams {
+            epsilon: 0.3,
+            epsilon_decay: 0.98,
+            learning_rate: 0.05,
+            lambda_std: 2.0,
+            download_scale_mb: 500.0,
+        }
+    }
+}
+
+/// The bandit scheduler. Shares the framework's filter stage with
+/// LRScheduler, so hard constraints (Eqs. 6–8) always hold.
+pub struct RlScheduler {
+    framework: Framework,
+    pub params: RlParams,
+    weights: [f64; N_FEATURES + 1],
+    epsilon: f64,
+    rng: Pcg,
+    /// Features of the last decision, kept for the online update.
+    last_features: Option<[f64; N_FEATURES + 1]>,
+    pub decisions: u64,
+    pub explorations: u64,
+}
+
+impl RlScheduler {
+    pub fn new(framework: Framework, params: RlParams, seed: u64) -> RlScheduler {
+        RlScheduler {
+            framework,
+            params,
+            weights: [0.0; N_FEATURES + 1],
+            epsilon: params.epsilon,
+            rng: Pcg::new(seed, 17),
+            last_features: None,
+            decisions: 0,
+            explorations: 0,
+        }
+    }
+
+    fn features(&self, ctx: &CycleContext, ns: &NodeScore) -> [f64; N_FEATURES + 1] {
+        let node = ctx.state.node(ns.node);
+        let local = layer_score::local_bytes(ctx, node);
+        let s_layer = layer_score::layer_sharing_score(local, ctx.required_bytes) / 100.0;
+        let (cpu, mem) = node.utilisation();
+        let std = (cpu - mem).abs() / 2.0;
+        let disk_headroom = if node.disk.0 == 0 {
+            0.0
+        } else {
+            node.disk_free().0 as f64 / node.disk.0 as f64
+        };
+        // S_K8s normalized by the 8-plugin × weight≈12 ceiling.
+        let k8s = ns.total / 1200.0;
+        [
+            s_layer,
+            cpu,
+            mem,
+            std,
+            k8s,
+            disk_headroom,
+            s_layer * (1.0 - cpu), // interaction: sharing on an idle node
+            1.0,                   // bias
+        ]
+    }
+
+    fn predict(&self, f: &[f64; N_FEATURES + 1]) -> f64 {
+        self.weights.iter().zip(f).map(|(w, x)| w * x).sum()
+    }
+
+    /// One scheduling cycle: filter, featurize, ε-greedy argmax.
+    pub fn schedule(&mut self, ctx: &CycleContext) -> Result<NodeId, Unschedulable> {
+        let feasible = self.framework.feasible(ctx)?;
+        let k8s_scores = self.framework.score(ctx, &feasible);
+        self.decisions += 1;
+        let explore = self.rng.chance(self.epsilon);
+        self.epsilon *= self.params.epsilon_decay;
+        let pick = if explore {
+            self.explorations += 1;
+            self.rng.range(0, k8s_scores.len())
+        } else {
+            let mut best = 0;
+            let mut best_v = f64::NEG_INFINITY;
+            for (i, ns) in k8s_scores.iter().enumerate() {
+                let v = self.predict(&self.features(ctx, ns));
+                if v > best_v {
+                    best_v = v;
+                    best = i;
+                }
+            }
+            best
+        };
+        self.last_features = Some(self.features(ctx, &k8s_scores[pick]));
+        Ok(k8s_scores[pick].node)
+    }
+
+    /// Online update with the realized reward of the last decision.
+    pub fn learn(&mut self, download_mb: f64, std_after: f64) {
+        let f = match self.last_features.take() {
+            Some(f) => f,
+            None => return,
+        };
+        let reward =
+            -download_mb / self.params.download_scale_mb - self.params.lambda_std * std_after;
+        let err = reward - self.predict(&f);
+        for (w, x) in self.weights.iter_mut().zip(&f) {
+            *w += self.params.learning_rate * err * x;
+        }
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{NodeId, PodBuilder, Resources};
+    use crate::registry::hub;
+    use crate::sched::profiles::default_framework;
+    use crate::testing::fixtures;
+
+    #[test]
+    fn learns_to_prefer_layer_sharing() {
+        // Two nodes: node 1 always has the requested image cached, node 0
+        // never does. After training, exploitation must pick node 1.
+        let mut state = fixtures::uniform_cluster(2);
+        let cache = fixtures::corpus_cache();
+        let wp = hub::corpus().into_iter().find(|m| m.name == "wordpress" && m.tag == "6.4").unwrap();
+        let (_, layers) = state.intern_image(&wp);
+        state.install_image(NodeId(1), &wp.image_ref(), &layers).unwrap();
+
+        let mut rl = RlScheduler::new(default_framework(), RlParams::default(), 7);
+        let mut b = PodBuilder::new();
+        for _ in 0..120 {
+            let pod = b.build("wordpress:6.4", Resources::ZERO);
+            let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+            let node = {
+                let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+                rl.schedule(&ctx).unwrap()
+            };
+            let download_mb = if node == NodeId(1) { 0.0 } else { wp.total_size.as_mb() };
+            rl.learn(download_mb, 0.0);
+        }
+        // Exploitation phase: force ε to 0 and check the greedy pick.
+        rl.epsilon = 0.0;
+        let pod = b.build("wordpress:6.4", Resources::ZERO);
+        let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+        let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+        assert_eq!(rl.schedule(&ctx).unwrap(), NodeId(1));
+        assert!(rl.explorations > 0, "ε-greedy must have explored");
+        // The layer-sharing feature carries positive weight after training.
+        assert!(rl.weights()[0] > 0.0, "weights: {:?}", rl.weights());
+    }
+
+    #[test]
+    fn respects_filters() {
+        let mut state = fixtures::uniform_cluster(2);
+        let cache = fixtures::corpus_cache();
+        // Node 0 full: only node 1 is feasible; RL must always pick it.
+        let mut b = PodBuilder::new();
+        let filler = b.build("busybox:1.36", Resources::cores_gb(4.0, 4.0));
+        let fid = state.submit_pod(filler);
+        state.bind(fid, NodeId(0)).unwrap();
+
+        let mut rl = RlScheduler::new(default_framework(), RlParams::default(), 3);
+        for _ in 0..20 {
+            let pod = b.build("redis:7.2", Resources::cores_gb(0.1, 0.1));
+            let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+            let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+            assert_eq!(rl.schedule(&ctx).unwrap(), NodeId(1));
+        }
+    }
+
+    #[test]
+    fn unschedulable_propagates() {
+        let mut state = fixtures::uniform_cluster(1);
+        let cache = fixtures::corpus_cache();
+        let mut b = PodBuilder::new();
+        let pod = b.build("redis:7.2", Resources::cores_gb(64.0, 64.0));
+        let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+        let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+        let mut rl = RlScheduler::new(default_framework(), RlParams::default(), 1);
+        assert!(rl.schedule(&ctx).is_err());
+        // learn() without a pending decision is a no-op.
+        rl.learn(0.0, 0.0);
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let run = || {
+            let mut state = fixtures::uniform_cluster(3);
+            let cache = fixtures::corpus_cache();
+            let mut rl = RlScheduler::new(default_framework(), RlParams::default(), 99);
+            let mut b = PodBuilder::new();
+            let mut picks = Vec::new();
+            for i in 0..30 {
+                let img = if i % 2 == 0 { "redis:7.2" } else { "nginx:1.25" };
+                let pod = b.build(img, Resources::cores_gb(0.05, 0.05));
+                let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+                let node = {
+                    let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+                    rl.schedule(&ctx).unwrap()
+                };
+                rl.learn(10.0, 0.1);
+                picks.push(node);
+            }
+            picks
+        };
+        assert_eq!(run(), run());
+    }
+}

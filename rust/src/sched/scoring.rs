@@ -1,0 +1,259 @@
+//! Dense batched scoring — the numeric hot path of Algorithm 1 expressed
+//! over padded vectors. This module defines the input/output layout shared
+//! by the two backends:
+//!
+//! - [`NativeScorer`] (here): pure-rust reference implementation, always
+//!   available, used by default and as the differential-test oracle.
+//! - `runtime::XlaScorer`: executes the AOT-compiled JAX/Pallas artifact
+//!   (`python/compile/model.py` lowers the *same math* to HLO).
+//!
+//! Layout: `present` is row-major `[n_nodes_cap × n_layers_cap]` with 0/1
+//! entries; every per-node vector has length `n_nodes_cap`; `req`/`sizes_mb`
+//! have length `n_layers_cap`. Capacities are the artifact's fixed shapes —
+//! the native scorer accepts any size.
+
+use super::dynamic_weight::WeightParams;
+
+/// Scores below this are "minus infinity" for masked (infeasible) nodes.
+pub const NEG_MASK: f32 = -1.0e30;
+
+/// Dense inputs for one scheduling cycle.
+#[derive(Debug, Clone)]
+pub struct ScoreInputs {
+    pub n_nodes: usize,
+    pub n_layers: usize,
+    /// Row-major node×layer presence (1.0 where the node holds the layer).
+    pub present: Vec<f32>,
+    /// 1.0 where the pod's image requires the layer.
+    pub req: Vec<f32>,
+    /// Layer sizes in MB.
+    pub sizes_mb: Vec<f32>,
+    pub cpu_used: Vec<f32>,
+    pub cpu_cap: Vec<f32>,
+    pub mem_used: Vec<f32>,
+    pub mem_cap: Vec<f32>,
+    /// S_K8s per node (already weighted/normalized by the framework).
+    pub k8s_score: Vec<f32>,
+    /// 1.0 for feasible nodes, 0.0 for filtered ones.
+    pub feasible: Vec<f32>,
+    pub params: WeightParams,
+}
+
+impl ScoreInputs {
+    /// Zeroed inputs at the given capacity.
+    pub fn zeros(n_nodes: usize, n_layers: usize, params: WeightParams) -> ScoreInputs {
+        ScoreInputs {
+            n_nodes,
+            n_layers,
+            present: vec![0.0; n_nodes * n_layers],
+            req: vec![0.0; n_layers],
+            sizes_mb: vec![0.0; n_layers],
+            cpu_used: vec![0.0; n_nodes],
+            cpu_cap: vec![1.0; n_nodes], // avoid 0/0 in padding rows
+            mem_used: vec![0.0; n_nodes],
+            mem_cap: vec![1.0; n_nodes],
+            k8s_score: vec![0.0; n_nodes],
+            feasible: vec![0.0; n_nodes],
+            params,
+        }
+    }
+
+    /// Flat parameter vector handed to the XLA artifact:
+    /// `[ω₁, ω₂, h_size, h_cpu, h_std]`.
+    pub fn params_vec(&self) -> [f32; 5] {
+        [
+            self.params.omega1 as f32,
+            self.params.omega2 as f32,
+            self.params.h_size_mb as f32,
+            self.params.h_cpu as f32,
+            self.params.h_std as f32,
+        ]
+    }
+}
+
+/// Per-node outputs of the scoring pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoreOutputs {
+    /// Final S = ω·S_layer + S_K8s, masked to NEG_MASK where infeasible.
+    pub final_score: Vec<f32>,
+    /// S_layer (Eq. 3).
+    pub layer_score: Vec<f32>,
+    /// The ω each node was scored with (Eq. 13 gate applied).
+    pub omega: Vec<f32>,
+    /// Argmax over final_score (Eq. 5).
+    pub best: usize,
+}
+
+/// Backend interface implemented natively and by the XLA runtime.
+pub trait ScoringBackend {
+    fn name(&self) -> &'static str;
+    fn score(&mut self, inputs: &ScoreInputs) -> ScoreOutputs;
+}
+
+/// Pure-rust implementation of the L2 scoring pipeline.
+#[derive(Debug, Default, Clone)]
+pub struct NativeScorer;
+
+impl ScoringBackend for NativeScorer {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn score(&mut self, x: &ScoreInputs) -> ScoreOutputs {
+        let (n, l) = (x.n_nodes, x.n_layers);
+        debug_assert_eq!(x.present.len(), n * l);
+        // Required layers are sparse (a pod needs a handful of the
+        // interner's layers): gather (index, weight) pairs once and reduce
+        // only over them — ~5× fewer flops than the dense row product at
+        // the 20%-density the workloads produce (§Perf in EXPERIMENTS.md).
+        let mut req_idx: Vec<(u32, f32)> = Vec::with_capacity(l / 4);
+        let mut total_mb = 0.0f32;
+        for j in 0..l {
+            let w = x.req[j] * x.sizes_mb[j];
+            if w != 0.0 {
+                req_idx.push((j as u32, w));
+                total_mb += w;
+            }
+        }
+        let p = &x.params;
+        let mut final_score = vec![0.0f32; n];
+        let mut layer_score = vec![0.0f32; n];
+        let mut omega = vec![0.0f32; n];
+        for i in 0..n {
+            // shared[i] = Σ_j present[i,j]·req[j]·size[j]  (Eq. 2, in MB)
+            let row = &x.present[i * l..(i + 1) * l];
+            let mut shared = 0.0f32;
+            for &(j, w) in &req_idx {
+                shared += row[j as usize] * w;
+            }
+            // Eq. 3.
+            let s_layer = if total_mb > 0.0 { shared / total_mb * 100.0 } else { 0.0 };
+            // Eqs. 11–12.
+            let cpu_frac = if x.cpu_cap[i] > 0.0 { x.cpu_used[i] / x.cpu_cap[i] } else { 0.0 };
+            let mem_frac = if x.mem_cap[i] > 0.0 { x.mem_used[i] / x.mem_cap[i] } else { 0.0 };
+            let s_std = (cpu_frac - mem_frac).abs() / 2.0;
+            // Eq. 13 gate → ω.
+            let gate = shared > p.h_size_mb as f32
+                && cpu_frac < p.h_cpu as f32
+                && s_std < p.h_std as f32;
+            let w = if gate { p.omega1 as f32 } else { p.omega2 as f32 };
+            // Eq. 4 + feasibility mask.
+            let s = w * s_layer + x.k8s_score[i];
+            final_score[i] = if x.feasible[i] > 0.5 { s } else { NEG_MASK };
+            layer_score[i] = s_layer;
+            omega[i] = w;
+        }
+        // Eq. 5: argmax (first max wins, matching jnp.argmax).
+        let best = argmax(&final_score);
+        ScoreOutputs { final_score, layer_score, omega, best }
+    }
+}
+
+/// First-index argmax, matching `jnp.argmax` semantics for ties.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs_2x4() -> ScoreInputs {
+        let mut x = ScoreInputs::zeros(2, 4, WeightParams::default());
+        // Layers: sizes 10, 20, 30, 40 MB; pod requires layers 0,1,3 (70 MB).
+        x.sizes_mb = vec![10.0, 20.0, 30.0, 40.0];
+        x.req = vec![1.0, 1.0, 0.0, 1.0];
+        // Node 0 holds layers 1,2 → shared 20 MB; node 1 holds nothing.
+        x.present[0 * 4 + 1] = 1.0;
+        x.present[0 * 4 + 2] = 1.0;
+        x.cpu_used = vec![1.0, 1.0];
+        x.cpu_cap = vec![4.0, 4.0];
+        x.mem_used = vec![1.0, 1.0];
+        x.mem_cap = vec![4.0, 4.0];
+        x.k8s_score = vec![50.0, 60.0];
+        x.feasible = vec![1.0, 1.0];
+        x
+    }
+
+    #[test]
+    fn native_scorer_matches_hand_math() {
+        let x = inputs_2x4();
+        let out = NativeScorer.score(&x);
+        // Node 0: shared 20/70 → layer 28.571…; idle & balanced & >10MB → ω=2.
+        let expected_layer0 = 20.0 / 70.0 * 100.0;
+        assert!((out.layer_score[0] - expected_layer0).abs() < 1e-4);
+        assert_eq!(out.omega[0], 2.0);
+        assert!((out.final_score[0] - (2.0 * expected_layer0 + 50.0)).abs() < 1e-4);
+        // Node 1: shared 0 → gate fails (h_size) → ω=0.5, final = 60.
+        assert_eq!(out.omega[1], 0.5);
+        assert!((out.final_score[1] - 60.0).abs() < 1e-4);
+        // Node 0 wins: 107.1 > 60.
+        assert_eq!(out.best, 0);
+    }
+
+    #[test]
+    fn infeasible_nodes_masked() {
+        let mut x = inputs_2x4();
+        x.feasible = vec![0.0, 1.0];
+        let out = NativeScorer.score(&x);
+        assert_eq!(out.final_score[0], NEG_MASK);
+        assert_eq!(out.best, 1);
+    }
+
+    #[test]
+    fn gate_respects_cpu_threshold() {
+        let mut x = inputs_2x4();
+        x.cpu_used = vec![3.0, 1.0]; // node 0 at 75% ≥ h_cpu=0.6
+        x.mem_used = vec![3.0, 1.0];
+        let out = NativeScorer.score(&x);
+        assert_eq!(out.omega[0], 0.5);
+    }
+
+    #[test]
+    fn gate_respects_std_threshold() {
+        let mut x = inputs_2x4();
+        x.cpu_used = vec![2.0, 1.0]; // cpu 50%, mem 25% → std 0.125 < 0.16 passes
+        x.mem_used = vec![1.0, 1.0];
+        assert_eq!(NativeScorer.score(&x).omega[0], 2.0);
+        x.mem_used = vec![0.0, 1.0]; // cpu 50%, mem 0% → std 0.25 ≥ 0.16 fails
+        assert_eq!(NativeScorer.score(&x).omega[0], 0.5);
+    }
+
+    #[test]
+    fn zero_required_bytes_zero_layer_score() {
+        let mut x = inputs_2x4();
+        x.req = vec![0.0; 4];
+        let out = NativeScorer.score(&x);
+        assert_eq!(out.layer_score, vec![0.0, 0.0]);
+        assert_eq!(out.best, 1); // falls back to k8s score
+    }
+
+    #[test]
+    fn argmax_first_tie_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn padding_rows_never_win() {
+        // Capacity 8 nodes, only 2 real: padding has feasible=0.
+        let mut x = ScoreInputs::zeros(8, 4, WeightParams::default());
+        x.feasible[0] = 1.0;
+        x.feasible[1] = 1.0;
+        x.k8s_score[0] = 10.0;
+        x.k8s_score[1] = 20.0;
+        let out = NativeScorer.score(&x);
+        assert_eq!(out.best, 1);
+        for i in 2..8 {
+            assert_eq!(out.final_score[i], NEG_MASK);
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Link model between the registry and each edge node.
+//!
+//! The paper's model is T = C_c^n(t) / b_n (§III-B): each node has its own
+//! downlink; pulls on one node serialize (Docker pulls a layer stream), and
+//! pulls on different nodes proceed independently. An optional registry
+//! uplink cap models a constrained private registry shared by all nodes —
+//! an ablation the paper's future work hints at.
+
+use crate::util::units::{Bandwidth, Bytes};
+
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    /// Per-node downlink.
+    node_bw: Vec<Bandwidth>,
+    /// Time each node's link becomes free.
+    node_free_at: Vec<f64>,
+    /// Optional shared registry uplink (None = unconstrained).
+    pub registry_uplink: Option<Bandwidth>,
+    registry_free_at: f64,
+}
+
+impl LinkModel {
+    pub fn new(node_bw: Vec<Bandwidth>) -> LinkModel {
+        let n = node_bw.len();
+        LinkModel { node_bw, node_free_at: vec![0.0; n], registry_uplink: None, registry_free_at: 0.0 }
+    }
+
+    pub fn bandwidth(&self, node: usize) -> Bandwidth {
+        self.node_bw[node]
+    }
+
+    pub fn set_bandwidth(&mut self, node: usize, bw: Bandwidth) {
+        self.node_bw[node] = bw;
+    }
+
+    /// Schedule a transfer of `bytes` to `node` starting no earlier than
+    /// `now`; returns (start, finish) and books the link.
+    pub fn schedule_transfer(&mut self, node: usize, bytes: Bytes, now: f64) -> (f64, f64) {
+        let mut start = now.max(self.node_free_at[node]);
+        if self.registry_uplink.is_some() {
+            start = start.max(self.registry_free_at);
+        }
+        let mut secs = self.node_bw[node].transfer_secs(bytes);
+        if let Some(up) = self.registry_uplink {
+            secs = secs.max(up.transfer_secs(bytes));
+        }
+        let finish = start + secs;
+        self.node_free_at[node] = finish;
+        if self.registry_uplink.is_some() {
+            self.registry_free_at = finish;
+        }
+        (start, finish)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_node_links_are_independent() {
+        let mut lm = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 2]);
+        let (s0, f0) = lm.schedule_transfer(0, Bytes::from_mb(100.0), 0.0);
+        let (s1, f1) = lm.schedule_transfer(1, Bytes::from_mb(50.0), 0.0);
+        assert_eq!((s0, f0), (0.0, 10.0));
+        assert_eq!((s1, f1), (0.0, 5.0));
+    }
+
+    #[test]
+    fn same_node_transfers_serialize() {
+        let mut lm = LinkModel::new(vec![Bandwidth::from_mbps(10.0)]);
+        let (_, f0) = lm.schedule_transfer(0, Bytes::from_mb(100.0), 0.0);
+        let (s1, f1) = lm.schedule_transfer(0, Bytes::from_mb(10.0), 2.0);
+        assert_eq!(f0, 10.0);
+        assert_eq!(s1, 10.0); // waits for the first pull
+        assert_eq!(f1, 11.0);
+    }
+
+    #[test]
+    fn registry_uplink_serializes_across_nodes() {
+        let mut lm = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 2]);
+        lm.registry_uplink = Some(Bandwidth::from_mbps(10.0));
+        let (_, f0) = lm.schedule_transfer(0, Bytes::from_mb(100.0), 0.0);
+        let (s1, _) = lm.schedule_transfer(1, Bytes::from_mb(10.0), 0.0);
+        assert_eq!(s1, f0, "second node waits on the registry uplink");
+    }
+
+    #[test]
+    fn slow_uplink_dominates() {
+        let mut lm = LinkModel::new(vec![Bandwidth::from_mbps(100.0)]);
+        lm.registry_uplink = Some(Bandwidth::from_mbps(10.0));
+        let (_, f) = lm.schedule_transfer(0, Bytes::from_mb(100.0), 0.0);
+        assert_eq!(f, 10.0, "uplink is the bottleneck");
+    }
+}

@@ -1,0 +1,54 @@
+//! Virtual clock for the discrete-event simulator.
+
+/// Monotonic virtual time in seconds.
+#[derive(Debug, Clone, Default)]
+pub struct Clock {
+    now: f64,
+}
+
+impl Clock {
+    pub fn new() -> Clock {
+        Clock { now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance to an absolute time; never moves backwards.
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(t >= self.now - 1e-9, "clock moved backwards: {} -> {}", self.now, t);
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
+    pub fn advance_by(&mut self, dt: f64) {
+        assert!(dt >= 0.0, "negative advance {dt}");
+        self.now += dt;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances() {
+        let mut c = Clock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_by(2.5);
+        c.advance_to(4.0);
+        assert_eq!(c.now(), 4.0);
+        c.advance_to(4.0); // idempotent
+        assert_eq!(c.now(), 4.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn backwards_panics() {
+        let mut c = Clock::new();
+        c.advance_to(5.0);
+        c.advance_to(1.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Layer-pull planning: dedup of in-flight pulls per node and transfer
+//! booking on the link model. Two pods landing on the same node that need
+//! the same missing layer must not download it twice — the second waits on
+//! the first pull's completion (content-addressed layer store semantics).
+
+use super::bandwidth::LinkModel;
+use crate::registry::{LayerId, LayerInterner};
+use crate::util::units::Bytes;
+use std::collections::HashMap;
+
+/// A planned pull for one pod on one node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PullPlan {
+    /// Bytes this pull actually transfers (new layers only).
+    pub bytes: Bytes,
+    /// Transfer start/finish for the new layers (equal when bytes = 0).
+    pub start: f64,
+    pub finish: f64,
+    /// When *all* required layers are present (waits on other pods'
+    /// in-flight pulls too) — the container can start at `ready_at`.
+    pub ready_at: f64,
+    /// The layers this plan transfers.
+    pub new_layers: Vec<LayerId>,
+}
+
+/// Tracks in-flight layer pulls per node.
+#[derive(Debug, Clone, Default)]
+pub struct PullManager {
+    in_flight: Vec<HashMap<LayerId, f64>>,
+}
+
+impl PullManager {
+    pub fn new(n_nodes: usize) -> PullManager {
+        PullManager { in_flight: vec![HashMap::new(); n_nodes] }
+    }
+
+    /// Plan a pull of `missing` layers to `node` starting at `now`.
+    pub fn plan(
+        &mut self,
+        node: usize,
+        missing: &[LayerId],
+        interner: &LayerInterner,
+        links: &mut LinkModel,
+        now: f64,
+    ) -> PullPlan {
+        let mut wait_on_inflight: f64 = now;
+        let mut new_layers = Vec::new();
+        let mut bytes = Bytes::ZERO;
+        for &l in missing {
+            if let Some(&finish) = self.in_flight[node].get(&l) {
+                wait_on_inflight = wait_on_inflight.max(finish);
+            } else {
+                new_layers.push(l);
+                bytes += interner.size(l);
+            }
+        }
+        let (start, finish) = if bytes > Bytes::ZERO {
+            links.schedule_transfer(node, bytes, now)
+        } else {
+            (now, now)
+        };
+        for &l in &new_layers {
+            self.in_flight[node].insert(l, finish);
+        }
+        PullPlan { bytes, start, finish, ready_at: finish.max(wait_on_inflight), new_layers }
+    }
+
+    /// Drop bookkeeping for pulls completed by `now`.
+    pub fn gc(&mut self, now: f64) {
+        for m in &mut self.in_flight {
+            m.retain(|_, &mut finish| finish > now);
+        }
+    }
+
+    pub fn in_flight_count(&self, node: usize) -> usize {
+        self.in_flight[node].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::Bandwidth;
+
+    fn setup() -> (LayerInterner, LinkModel, PullManager) {
+        let mut interner = LayerInterner::new();
+        for i in 0..4 {
+            interner.intern(&format!("sha256:{i}"), Bytes::from_mb(10.0 * (i + 1) as f64));
+        }
+        let links = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 2]);
+        let pulls = PullManager::new(2);
+        (interner, links, pulls)
+    }
+
+    #[test]
+    fn plan_transfers_missing_bytes() {
+        let (interner, mut links, mut pulls) = setup();
+        let plan = pulls.plan(0, &[LayerId(0), LayerId(1)], &interner, &mut links, 0.0);
+        assert_eq!(plan.bytes, Bytes::from_mb(30.0));
+        assert_eq!(plan.start, 0.0);
+        assert_eq!(plan.finish, 3.0);
+        assert_eq!(plan.ready_at, 3.0);
+        assert_eq!(plan.new_layers.len(), 2);
+    }
+
+    #[test]
+    fn in_flight_layers_not_redownloaded() {
+        let (interner, mut links, mut pulls) = setup();
+        let p1 = pulls.plan(0, &[LayerId(0)], &interner, &mut links, 0.0); // 10MB → 1s
+        let p2 = pulls.plan(0, &[LayerId(0), LayerId(1)], &interner, &mut links, 0.5);
+        assert_eq!(p1.finish, 1.0);
+        // p2 transfers only layer 1 (20 MB) but serializes after p1 on the
+        // node link: start 1.0 → finish 3.0; waits on layer 0 via p1 (1.0).
+        assert_eq!(p2.bytes, Bytes::from_mb(20.0));
+        assert_eq!(p2.start, 1.0);
+        assert_eq!(p2.finish, 3.0);
+        assert_eq!(p2.ready_at, 3.0);
+        assert_eq!(p2.new_layers, vec![LayerId(1)]);
+    }
+
+    #[test]
+    fn zero_missing_is_instant() {
+        let (interner, mut links, mut pulls) = setup();
+        let plan = pulls.plan(0, &[], &interner, &mut links, 7.0);
+        assert_eq!(plan.bytes, Bytes::ZERO);
+        assert_eq!(plan.ready_at, 7.0);
+    }
+
+    #[test]
+    fn waits_on_inflight_even_with_nothing_new() {
+        let (interner, mut links, mut pulls) = setup();
+        pulls.plan(0, &[LayerId(2)], &interner, &mut links, 0.0); // 30MB → 3s
+        let p = pulls.plan(0, &[LayerId(2)], &interner, &mut links, 1.0);
+        assert_eq!(p.bytes, Bytes::ZERO);
+        assert_eq!(p.ready_at, 3.0, "waits for the other pod's pull");
+    }
+
+    #[test]
+    fn nodes_are_independent() {
+        let (interner, mut links, mut pulls) = setup();
+        pulls.plan(0, &[LayerId(3)], &interner, &mut links, 0.0);
+        let p = pulls.plan(1, &[LayerId(3)], &interner, &mut links, 0.0);
+        assert_eq!(p.bytes, Bytes::from_mb(40.0), "different node re-downloads");
+    }
+
+    #[test]
+    fn gc_drops_completed() {
+        let (interner, mut links, mut pulls) = setup();
+        pulls.plan(0, &[LayerId(0)], &interner, &mut links, 0.0); // finish 1.0
+        assert_eq!(pulls.in_flight_count(0), 1);
+        pulls.gc(0.5);
+        assert_eq!(pulls.in_flight_count(0), 1);
+        pulls.gc(1.0);
+        assert_eq!(pulls.in_flight_count(0), 0);
+    }
+}

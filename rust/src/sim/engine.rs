@@ -1,0 +1,595 @@
+//! The discrete-event simulation engine — also the API-server facade: it
+//! receives pod requests, drives the watcher, invokes the scheduler, binds
+//! pods, and runs the kubelet pull/start lifecycle against the link model.
+//!
+//! Two arrival modes reproduce the paper's protocols:
+//! - **Sequential** (`inter_arrival_secs = None`): deploy, wait until the
+//!   container is ready, then submit the next pod — §VI-B's measurement
+//!   protocol for Table I / Fig. 5.
+//! - **Timed arrivals** (`Some(dt)`): pods arrive every `dt` seconds and
+//!   pulls overlap — the load-test mode used by the concurrency tests.
+
+use super::bandwidth::LinkModel;
+use super::clock::Clock;
+use super::download::PullManager;
+use super::kubelet::{self, PendingStart};
+use super::metrics::{self, ClusterSnapshot, PodRecord};
+use crate::cluster::{ClusterState, EventKind, EventLog, Node, Pod};
+use crate::registry::{MetadataCache, Registry, Watcher};
+use crate::sched::rl::{RlParams, RlScheduler};
+use crate::sched::{CycleContext, FrameworkConfig, LrScheduler, WeightParams};
+use crate::sched::scoring::ScoringBackend;
+use crate::util::units::{Bandwidth, Bytes};
+
+/// Which of the paper's three schedulers to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerChoice {
+    /// Kubernetes default plugins only.
+    Default,
+    /// Layer scheduler with static ω = 4.
+    Layer,
+    /// The paper's LRScheduler (dynamic ω).
+    LR,
+    /// Contextual-bandit scheduler — the paper's §VII future-work
+    /// direction (long-term optimization via reinforcement learning).
+    Rl,
+}
+
+impl SchedulerChoice {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerChoice::Default => "Default",
+            SchedulerChoice::Layer => "Layer",
+            SchedulerChoice::LR => "LRScheduler",
+            SchedulerChoice::Rl => "RLScheduler",
+        }
+    }
+
+    pub fn all() -> [SchedulerChoice; 3] {
+        [SchedulerChoice::Default, SchedulerChoice::Layer, SchedulerChoice::LR]
+    }
+}
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub scheduler: SchedulerChoice,
+    pub params: WeightParams,
+    pub framework: FrameworkConfig,
+    /// Override every node's bandwidth (Fig. 4 sweeps this).
+    pub bandwidth_mbps: Option<f64>,
+    /// Optional shared registry uplink cap.
+    pub registry_uplink_mbps: Option<f64>,
+    /// None ⇒ sequential protocol; Some(dt) ⇒ timed arrivals.
+    pub inter_arrival_secs: Option<f64>,
+    /// Enable kubelet image GC under disk pressure.
+    pub gc_enabled: bool,
+    /// GC sweep trigger: disk usage fraction (kubelet
+    /// ImageGCHighThresholdPercent analog).
+    pub gc_high_pct: f64,
+    /// GC sweep target: evict unused images until usage ≤ this fraction
+    /// (ImageGCLowThresholdPercent analog).
+    pub gc_low_pct: f64,
+    /// Cloud-edge collaborative layer sharing (paper §VII): when set,
+    /// layers cached on peer edge nodes transfer at this LAN bandwidth
+    /// instead of being re-downloaded from the registry.
+    pub p2p_lan_mbps: Option<f64>,
+    /// Registry watcher poll interval (paper §V-1 default: 10 s).
+    pub watcher_interval_secs: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig {
+            scheduler: SchedulerChoice::LR,
+            params: WeightParams::default(),
+            framework: FrameworkConfig::default(),
+            bandwidth_mbps: None,
+            registry_uplink_mbps: None,
+            inter_arrival_secs: None,
+            gc_enabled: false,
+            gc_high_pct: 0.85,
+            gc_low_pct: 0.70,
+            p2p_lan_mbps: None,
+            watcher_interval_secs: crate::registry::watcher::DEFAULT_POLL_SECS,
+        }
+    }
+}
+
+/// Aggregated outcome of a simulation run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub scheduler: &'static str,
+    pub records: Vec<PodRecord>,
+    pub snapshots: Vec<ClusterSnapshot>,
+    pub unschedulable: usize,
+    pub failed_pulls: usize,
+    pub omega1_used: u64,
+    pub omega2_used: u64,
+    pub omega_trace: Vec<f64>,
+}
+
+impl SimReport {
+    pub fn total_download(&self) -> Bytes {
+        self.records.iter().map(|r| r.download).sum()
+    }
+
+    pub fn total_download_secs(&self) -> f64 {
+        self.records.iter().map(|r| r.download_secs).sum()
+    }
+
+    pub fn final_std(&self) -> f64 {
+        self.snapshots.last().map(|s| s.std_score).unwrap_or(0.0)
+    }
+
+    pub fn deployed(&self) -> usize {
+        self.records.len()
+    }
+}
+
+/// The scheduler driving a simulation: the paper's Algorithm-1 family or
+/// the §VII learning-based extension.
+enum SchedImpl {
+    Lr(LrScheduler),
+    Rl(RlScheduler),
+}
+
+impl SchedImpl {
+    fn build(cfg: &SimConfig) -> SchedImpl {
+        let framework = cfg.framework.build("sim");
+        match cfg.scheduler {
+            SchedulerChoice::Default => SchedImpl::Lr(LrScheduler::default_scheduler(framework)),
+            SchedulerChoice::Layer => SchedImpl::Lr(LrScheduler::layer_scheduler(framework)),
+            SchedulerChoice::LR => {
+                let mut s = LrScheduler::lr_scheduler(framework);
+                s.params = cfg.params;
+                SchedImpl::Lr(s)
+            }
+            SchedulerChoice::Rl => {
+                SchedImpl::Rl(RlScheduler::new(framework, RlParams::default(), 2024))
+            }
+        }
+    }
+}
+
+/// The simulator.
+pub struct Simulation {
+    pub state: ClusterState,
+    pub registry: Registry,
+    pub cache: MetadataCache,
+    watcher: Watcher,
+    pub clock: Clock,
+    links: LinkModel,
+    pulls: PullManager,
+    scheduler: SchedImpl,
+    pending: Vec<PendingStart>,
+    /// (termination time, pod) for finite-duration pods.
+    terminations: Vec<(f64, crate::cluster::PodId)>,
+    pub events: EventLog,
+    pub records: Vec<PodRecord>,
+    pub snapshots: Vec<ClusterSnapshot>,
+    pub unschedulable: usize,
+    pub failed_pulls: usize,
+    cfg: SimConfig,
+}
+
+impl Simulation {
+    pub fn new(nodes: Vec<Node>, registry: Registry, cfg: SimConfig) -> Simulation {
+        let mut state = ClusterState::new();
+        let mut bws = Vec::new();
+        for mut n in nodes {
+            if let Some(mbps) = cfg.bandwidth_mbps {
+                n.bandwidth = Bandwidth::from_mbps(mbps);
+            }
+            bws.push(n.bandwidth);
+            state.add_node(n);
+        }
+        let mut links = LinkModel::new(bws);
+        if let Some(up) = cfg.registry_uplink_mbps {
+            links.registry_uplink = Some(Bandwidth::from_mbps(up));
+        }
+        let scheduler = SchedImpl::build(&cfg);
+        let n_nodes = state.node_count();
+        Simulation {
+            state,
+            registry,
+            cache: MetadataCache::new("/tmp/lrsched-sim-cache.json"),
+            watcher: Watcher::new(cfg.watcher_interval_secs),
+            clock: Clock::new(),
+            links,
+            pulls: PullManager::new(n_nodes),
+            scheduler,
+            pending: Vec::new(),
+            terminations: Vec::new(),
+            events: EventLog::new(),
+            records: Vec::new(),
+            snapshots: Vec::new(),
+            unschedulable: 0,
+            failed_pulls: 0,
+            cfg,
+        }
+    }
+
+    /// Install the XLA scoring backend (otherwise native math runs).
+    /// The RL scheduler has no dense-scoring path; it keeps native math.
+    pub fn with_backend(mut self, backend: Box<dyn ScoringBackend>) -> Simulation {
+        self.scheduler = match SchedImpl::build(&self.cfg) {
+            SchedImpl::Lr(s) => SchedImpl::Lr(s.with_backend(backend)),
+            rl @ SchedImpl::Rl(_) => rl,
+        };
+        self
+    }
+
+    /// Complete every pending pull with `ready_at <= now`, then release
+    /// finite-duration pods whose run ended by `now`.
+    fn complete_due_pulls(&mut self, now: f64) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].plan.ready_at <= now {
+                let p = self.pending.swap_remove(i);
+                self.finish_pull(p);
+            } else {
+                i += 1;
+            }
+        }
+        self.pulls.gc(now);
+        let mut j = 0;
+        while j < self.terminations.len() {
+            if self.terminations[j].0 <= now {
+                let (_, pod) = self.terminations.swap_remove(j);
+                // Resources release; layers stay cached until GC needs them.
+                let _ = self.state.unbind(pod);
+            } else {
+                j += 1;
+            }
+        }
+    }
+
+    /// Kubelet image GC: when a node crosses the high disk-usage threshold
+    /// (kubelet's ImageGCHighThresholdPercent analog, 85%), evict unused
+    /// images down to the low threshold (70%).
+    fn gc_pressure_sweep(&mut self) {
+        if !self.cfg.gc_enabled {
+            return;
+        }
+        let now = self.clock.now();
+        for i in 0..self.state.node_count() {
+            let node = crate::cluster::NodeId(i as u32);
+            let n = self.state.node(node);
+            let (disk, used) = (n.disk.0 as f64, n.disk_used.0 as f64);
+            if disk > 0.0 && used / disk > self.cfg.gc_high_pct {
+                // Free down to the low-threshold usage.
+                let target = Bytes((disk * (1.0 - self.cfg.gc_low_pct)) as u64);
+                let freed = kubelet::gc_images(&mut self.state, node, target);
+                if freed > Bytes::ZERO {
+                    self.events.record(
+                        now,
+                        crate::cluster::PodId(u64::MAX), // node-level event
+                        EventKind::Evicted { node, bytes: freed },
+                    );
+                }
+            }
+        }
+    }
+
+    fn finish_pull(&mut self, p: PendingStart) {
+        if self.cfg.gc_enabled {
+            let need = p.layers.difference_bytes(
+                &self.state.node(p.node).layers,
+                &self.state.interner,
+            );
+            if need > self.state.node(p.node).disk_free() {
+                let freed = kubelet::gc_images(&mut self.state, p.node, need);
+                if freed > Bytes::ZERO {
+                    self.events.record(
+                        p.plan.ready_at,
+                        p.pod,
+                        EventKind::Evicted { node: p.node, bytes: freed },
+                    );
+                }
+            }
+        }
+        match kubelet::complete_pull(&mut self.state, &p) {
+            Ok(_) => {
+                kubelet::remember_image_layers(&p.image, &p.layers);
+                self.events.record(
+                    p.plan.ready_at,
+                    p.pod,
+                    EventKind::PullFinished { node: p.node, secs: p.plan.ready_at - p.plan.start },
+                );
+                self.events
+                    .record(p.plan.ready_at, p.pod, EventKind::Started { node: p.node });
+            }
+            Err(e) => {
+                // Disk overcommitted by concurrent binds: the pod wedges
+                // (ImagePullBackOff analog). Counted, surfaced in events.
+                self.failed_pulls += 1;
+                self.events.record(
+                    p.plan.ready_at,
+                    p.pod,
+                    EventKind::Unschedulable { reason: format!("pull failed: {e}") },
+                );
+            }
+        }
+    }
+
+    /// Deploy one pod at the current virtual time. Returns false if the
+    /// scheduler found no feasible node.
+    pub fn deploy(&mut self, pod: Pod) -> bool {
+        let now = self.clock.now();
+        self.watcher.tick(now, &self.registry, &mut self.cache);
+        self.complete_due_pulls(now);
+        self.gc_pressure_sweep();
+
+        let pid = self.state.submit_pod(pod.clone());
+        self.events.record(now, pid, EventKind::Submitted);
+
+        let (meta, required, bytes) = CycleContext::prepare(&mut self.state, &self.cache, &pod);
+        let ctx = CycleContext::new(&self.state, &pod, meta, required.clone(), bytes);
+        let decision = match &mut self.scheduler {
+            SchedImpl::Lr(s) => s.schedule(&ctx),
+            SchedImpl::Rl(s) => s.schedule(&ctx).map(|node| {
+                // Build an equivalent decision record for the RL pick.
+                let n = ctx.state.node(node);
+                let local = crate::sched::layer_score::local_bytes(&ctx, n);
+                crate::sched::Decision {
+                    node,
+                    final_score: 0.0,
+                    layer_score: crate::sched::layer_score::layer_sharing_score(
+                        local,
+                        ctx.required_bytes,
+                    ),
+                    k8s_score: 0.0,
+                    omega: 0.0,
+                    download_cost: crate::sched::layer_score::download_cost(&ctx, n),
+                }
+            }),
+        };
+        let decision = match decision {
+            Ok(d) => d,
+            Err(u) => {
+                drop(ctx);
+                self.unschedulable += 1;
+                self.events
+                    .record(now, pid, EventKind::Unschedulable { reason: u.to_string() });
+                return false;
+            }
+        };
+        drop(ctx);
+
+        self.events.record(
+            now,
+            pid,
+            EventKind::Scheduled { node: decision.node, score: decision.final_score },
+        );
+        self.state.bind(pid, decision.node).expect("bind after schedule");
+
+        let pending = kubelet::begin_pull(
+            &self.state,
+            &mut self.pulls,
+            &mut self.links,
+            now,
+            pid,
+            decision.node,
+            &pod.image,
+            &required,
+            self.cfg.p2p_lan_mbps.map(Bandwidth::from_mbps),
+        );
+        self.events.record(
+            now,
+            pid,
+            EventKind::PullStarted {
+                node: decision.node,
+                bytes: pending.plan.bytes,
+                layers: pending.plan.new_layers.len(),
+            },
+        );
+        let (wan_bytes, p2p_bytes) = (pending.wan_bytes, pending.p2p_bytes);
+        let ready_at = pending.plan.ready_at;
+        let download_secs = ready_at - now;
+        self.pending.push(pending);
+        if let Some(d) = pod.duration_secs {
+            self.terminations.push((ready_at + d, pid));
+        }
+
+        if self.cfg.inter_arrival_secs.is_none() {
+            // Sequential protocol: wait for the container to be ready.
+            self.clock.advance_to(ready_at);
+            self.complete_due_pulls(ready_at);
+        }
+
+        let std_after = metrics::cluster_std(&self.state);
+        if let SchedImpl::Rl(s) = &mut self.scheduler {
+            // Online reward: the paper's two objectives as one scalar.
+            s.learn(wan_bytes.as_mb(), std_after);
+        }
+        self.records.push(PodRecord {
+            pod: pid,
+            image: pod.image.key(),
+            node: self.state.node(decision.node).name.clone(),
+            download: wan_bytes,
+            p2p: p2p_bytes,
+            download_secs,
+            std_after,
+            omega: decision.omega,
+            layer_score: decision.layer_score,
+            final_score: decision.final_score,
+            at: now,
+        });
+        self.snapshots.push(metrics::snapshot(&self.state, self.clock.now()));
+        true
+    }
+
+    /// Run a whole trace; timed mode advances the clock between arrivals.
+    pub fn run_trace(&mut self, pods: Vec<Pod>) -> SimReport {
+        for pod in pods {
+            self.deploy(pod);
+            if let Some(dt) = self.cfg.inter_arrival_secs {
+                let t = self.clock.now() + dt;
+                self.clock.advance_to(t);
+            }
+        }
+        // Drain outstanding pulls.
+        let drain_at = self
+            .pending
+            .iter()
+            .map(|p| p.plan.ready_at)
+            .fold(self.clock.now(), f64::max);
+        self.clock.advance_to(drain_at);
+        self.complete_due_pulls(drain_at);
+        self.report()
+    }
+
+    pub fn report(&self) -> SimReport {
+        let (w1, w2, trace) = match &self.scheduler {
+            SchedImpl::Lr(s) => (
+                s.stats.omega1_used,
+                s.stats.omega2_used,
+                s.stats.omega_trace.clone(),
+            ),
+            SchedImpl::Rl(_) => (0, 0, Vec::new()),
+        };
+        SimReport {
+            scheduler: self.cfg.scheduler.label(),
+            records: self.records.clone(),
+            snapshots: self.snapshots.clone(),
+            unschedulable: self.unschedulable,
+            failed_pulls: self.failed_pulls,
+            omega1_used: w1,
+            omega2_used: w2,
+            omega_trace: trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeId;
+    use crate::cluster::Resources;
+    use crate::sim::workload::{WorkloadConfig, WorkloadGen};
+
+    fn nodes(n: u32) -> Vec<Node> {
+        (0..n)
+            .map(|i| {
+                Node::new(
+                    NodeId(i),
+                    &format!("worker{}", i + 1),
+                    Resources::cores_gb(4.0, 4.0),
+                    Bytes::from_gb(30.0),
+                    Bandwidth::from_mbps(10.0),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sequential_run_deploys_everything() {
+        let reg = Registry::with_corpus();
+        let trace = WorkloadGen::new(&reg, WorkloadConfig::default()).trace(10);
+        let mut sim = Simulation::new(nodes(4), reg, SimConfig::default());
+        let report = sim.run_trace(trace);
+        assert_eq!(report.deployed(), 10);
+        assert_eq!(report.unschedulable, 0);
+        assert_eq!(report.failed_pulls, 0);
+        assert!(report.total_download() > Bytes::ZERO);
+        sim.state.check_invariants().unwrap();
+        // Clock advanced by the total download time.
+        assert!(sim.clock.now() > 0.0);
+    }
+
+    #[test]
+    fn repeat_images_download_less() {
+        let reg = Registry::with_corpus();
+        let mut gen = WorkloadGen::new(&reg, WorkloadConfig::default());
+        let first = gen.next_pod();
+        // Same image five times.
+        let mut pods = vec![first.clone()];
+        for _ in 0..4 {
+            let mut p = gen.next_pod();
+            p.image = first.image.clone();
+            pods.push(p);
+        }
+        let mut sim = Simulation::new(nodes(3), reg, SimConfig::default());
+        let report = sim.run_trace(pods);
+        // After the first few placements every node can hold the image, so
+        // at least one later deployment is a zero-byte pull.
+        assert!(report.records.iter().skip(1).any(|r| r.download == Bytes::ZERO));
+    }
+
+    #[test]
+    fn lr_downloads_less_than_default() {
+        let reg = Registry::with_corpus();
+        let trace = WorkloadGen::new(&reg, WorkloadConfig::default()).trace(20);
+        let mut total = std::collections::HashMap::new();
+        for choice in SchedulerChoice::all() {
+            let mut cfg = SimConfig::default();
+            cfg.scheduler = choice;
+            let mut sim = Simulation::new(nodes(4), Registry::with_corpus(), cfg);
+            let report = sim.run_trace(trace.clone());
+            assert_eq!(report.deployed(), 20, "{choice:?}");
+            total.insert(choice.label(), report.total_download());
+        }
+        assert!(
+            total["LRScheduler"] < total["Default"],
+            "LR {} !< Default {}",
+            total["LRScheduler"],
+            total["Default"]
+        );
+        // Layer (static ω=4) also beats Default; its ordering vs. LR varies
+        // per trace (the paper's Table I shows the same per-step flips).
+        assert!(
+            total["Layer"] < total["Default"],
+            "Layer {} !< Default {}",
+            total["Layer"],
+            total["Default"]
+        );
+        let _ = reg;
+    }
+
+    #[test]
+    fn timed_arrivals_overlap_pulls() {
+        let reg = Registry::with_corpus();
+        let trace = WorkloadGen::new(&reg, WorkloadConfig::default()).trace(8);
+        let mut cfg = SimConfig::default();
+        cfg.inter_arrival_secs = Some(1.0);
+        let mut sim = Simulation::new(nodes(4), reg, cfg);
+        let report = sim.run_trace(trace);
+        assert_eq!(report.deployed(), 8);
+        // Arrivals every 1s while pulls take tens of seconds ⇒ the clock
+        // at the last arrival is ~8s but the drain runs far past it.
+        assert!(sim.clock.now() > 8.0);
+        sim.state.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn omega_stats_recorded_for_lr_only() {
+        let reg = Registry::with_corpus();
+        let trace = WorkloadGen::new(&reg, WorkloadConfig::default()).trace(12);
+        let mut cfg = SimConfig::default();
+        cfg.scheduler = SchedulerChoice::LR;
+        let mut sim = Simulation::new(nodes(4), Registry::with_corpus(), cfg);
+        let report = sim.run_trace(trace.clone());
+        assert_eq!(report.omega1_used + report.omega2_used, 12);
+        assert_eq!(report.omega_trace.len(), 12);
+
+        let mut cfg = SimConfig::default();
+        cfg.scheduler = SchedulerChoice::Default;
+        let mut sim = Simulation::new(nodes(4), Registry::with_corpus(), cfg);
+        let report = sim.run_trace(trace);
+        assert_eq!(report.omega1_used + report.omega2_used, 0);
+    }
+
+    #[test]
+    fn unschedulable_pods_counted_not_fatal() {
+        let reg = Registry::with_corpus();
+        let mut gen = WorkloadGen::new(&reg, WorkloadConfig::default());
+        let mut big = gen.next_pod();
+        big.requests = Resources::cores_gb(64.0, 64.0);
+        let ok = gen.next_pod();
+        let mut sim = Simulation::new(nodes(2), reg, SimConfig::default());
+        let report = sim.run_trace(vec![big, ok]);
+        assert_eq!(report.unschedulable, 1);
+        assert_eq!(report.deployed(), 1);
+    }
+}

@@ -1,0 +1,118 @@
+//! Metrics collection — the quantities the paper's evaluation reports:
+//! per-step download size/time and cluster STD (Table I), per-node CPU /
+//! memory / disk usage (Fig. 3a–c), download cost (Fig. 3e), and the ω
+//! trace (Fig. 3f).
+
+use crate::cluster::{ClusterState, PodId};
+use crate::sched::dynamic_weight;
+use crate::util::units::Bytes;
+
+/// One per-pod deployment record — a row of Table I.
+#[derive(Debug, Clone)]
+pub struct PodRecord {
+    pub pod: PodId,
+    pub image: String,
+    pub node: String,
+    /// Bytes pulled from the registry over the WAN for this pod (Eq. 1;
+    /// with P2P sharing enabled, peer-served layers are excluded).
+    pub download: Bytes,
+    /// Bytes fetched from peer edge nodes over the LAN (0 without P2P).
+    pub p2p: Bytes,
+    /// Seconds from bind to all-layers-ready.
+    pub download_secs: f64,
+    /// Cluster resource-balance STD after placement (mean of Eq. 11).
+    pub std_after: f64,
+    /// ω used for the winning node (0 for the Default baseline).
+    pub omega: f64,
+    /// S_layer of the winning node.
+    pub layer_score: f64,
+    /// Final S of the winning node.
+    pub final_score: f64,
+    /// Virtual time of the bind.
+    pub at: f64,
+}
+
+/// Cluster-wide usage snapshot — a point of Fig. 3a–c.
+#[derive(Debug, Clone)]
+pub struct ClusterSnapshot {
+    pub at: f64,
+    /// Mean CPU utilisation across nodes (fraction).
+    pub cpu_util: f64,
+    /// Mean memory utilisation across nodes (fraction).
+    pub mem_util: f64,
+    /// Total disk used by image layers.
+    pub disk_used: Bytes,
+    /// Per-node (cpu%, mem%, disk bytes).
+    pub per_node: Vec<(f64, f64, Bytes)>,
+    /// Mean of Eq. 11 across nodes.
+    pub std_score: f64,
+}
+
+/// Mean of Eq. 11 over all nodes — the paper's cluster "STD" column.
+pub fn cluster_std(state: &ClusterState) -> f64 {
+    let nodes = state.nodes();
+    if nodes.is_empty() {
+        return 0.0;
+    }
+    nodes.iter().map(dynamic_weight::std_score).sum::<f64>() / nodes.len() as f64
+}
+
+pub fn snapshot(state: &ClusterState, at: f64) -> ClusterSnapshot {
+    let mut cpu_sum = 0.0;
+    let mut mem_sum = 0.0;
+    let mut disk = Bytes::ZERO;
+    let mut per_node = Vec::with_capacity(state.node_count());
+    for n in state.nodes() {
+        let (c, m) = n.utilisation();
+        cpu_sum += c;
+        mem_sum += m;
+        disk += n.disk_used;
+        per_node.push((c, m, n.disk_used));
+    }
+    let k = state.node_count().max(1) as f64;
+    ClusterSnapshot {
+        at,
+        cpu_util: cpu_sum / k,
+        mem_util: mem_sum / k,
+        disk_used: disk,
+        per_node,
+        std_score: cluster_std(state),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Node, NodeId, PodBuilder, Resources};
+    use crate::util::units::Bandwidth;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let mut state = ClusterState::new();
+        for i in 0..2 {
+            state.add_node(Node::new(
+                NodeId(i),
+                &format!("n{i}"),
+                Resources::cores_gb(4.0, 4.0),
+                Bytes::from_gb(20.0),
+                Bandwidth::from_mbps(10.0),
+            ));
+        }
+        let mut b = PodBuilder::new();
+        let pid = state.submit_pod(b.build("redis:7.2", Resources::cores_gb(2.0, 1.0)));
+        state.bind(pid, NodeId(0)).unwrap();
+        let s = snapshot(&state, 3.0);
+        assert_eq!(s.at, 3.0);
+        assert!((s.cpu_util - 0.25).abs() < 1e-9); // (0.5 + 0) / 2
+        assert!((s.mem_util - 0.125).abs() < 1e-9);
+        // Node 0: |0.5-0.25|/2 = 0.125; node 1: 0 → mean 0.0625.
+        assert!((s.std_score - 0.0625).abs() < 1e-9);
+        assert_eq!(s.per_node.len(), 2);
+    }
+
+    #[test]
+    fn empty_cluster_std_is_zero() {
+        let state = ClusterState::new();
+        assert_eq!(cluster_std(&state), 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Discrete-event edge-cluster simulator: virtual clock, per-node link
+//! model, layer-pull dedup, kubelet lifecycle (pull → install → start,
+//! optional image GC), workload generation, and metrics collection.
+//! `engine::Simulation` is the API-server facade that glues the scheduler
+//! to all of it.
+
+pub mod bandwidth;
+pub mod clock;
+pub mod download;
+pub mod engine;
+pub mod kubelet;
+pub mod metrics;
+pub mod p2p;
+pub mod workload;
+
+pub use bandwidth::LinkModel;
+pub use clock::Clock;
+pub use download::PullManager;
+pub use engine::{SchedulerChoice, SimConfig, SimReport, Simulation};
+pub use metrics::{ClusterSnapshot, PodRecord};
+pub use workload::{Popularity, WorkloadConfig, WorkloadGen};

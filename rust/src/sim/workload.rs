@@ -1,0 +1,168 @@
+//! Workload generation — the paper's §VI-A protocol: "we randomly request
+//! these images, setting random CPU and memory limits for each request."
+//!
+//! Pods draw an image uniformly (or Zipf-weighted, the realistic variant)
+//! from the corpus, CPU requests uniform in [100m, 1000m], memory uniform
+//! in [100 MB, 1 GB]. Traces are reproducible from the seed.
+
+use crate::cluster::{Pod, PodBuilder, Resources};
+use crate::registry::Registry;
+use crate::util::rng::Pcg;
+use crate::util::units::{Bytes, MilliCpu};
+
+/// Image-popularity model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Popularity {
+    /// Uniform over the catalog (the paper's protocol).
+    Uniform,
+    /// Zipf(s) over the catalog — container registries see heavy-tailed
+    /// pull distributions; used by the ablation benches.
+    Zipf(f64),
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub seed: u64,
+    pub popularity: Popularity,
+    /// CPU request range in millicores.
+    pub cpu_range: (u64, u64),
+    /// Memory request range in bytes.
+    pub mem_range: (u64, u64),
+    /// Restrict to the images the paper names (None = whole corpus).
+    pub image_allowlist: Option<Vec<String>>,
+    /// Pod lifetime range in seconds; None = services that run forever
+    /// (the paper's protocol). Finite lifetimes model churn workloads.
+    pub duration_range: Option<(f64, f64)>,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> WorkloadConfig {
+        // Ranges sized like the paper's testbed: 20 pods must fit the
+        // 3-worker cluster (12 cores, 10 GB) with headroom to spare.
+        WorkloadConfig {
+            seed: 42,
+            popularity: Popularity::Uniform,
+            cpu_range: (100, 800),
+            mem_range: (50_000_000, 500_000_000),
+            image_allowlist: None,
+            duration_range: None,
+        }
+    }
+}
+
+/// Generates pods from a registry catalog.
+pub struct WorkloadGen {
+    rng: Pcg,
+    builder: PodBuilder,
+    /// (name, tag) choices with popularity weights.
+    choices: Vec<(String, String)>,
+    weights: Vec<f64>,
+    cfg: WorkloadConfig,
+}
+
+impl WorkloadGen {
+    pub fn new(registry: &Registry, cfg: WorkloadConfig) -> WorkloadGen {
+        let mut choices: Vec<(String, String)> = registry
+            .all_manifests()
+            .filter(|m| match &cfg.image_allowlist {
+                Some(allow) => allow.iter().any(|a| *a == m.name),
+                None => true,
+            })
+            .map(|m| (m.name.clone(), m.tag.clone()))
+            .collect();
+        choices.sort(); // deterministic order independent of map iteration
+        assert!(!choices.is_empty(), "workload: empty image catalog");
+        let weights = match cfg.popularity {
+            Popularity::Uniform => vec![1.0; choices.len()],
+            Popularity::Zipf(s) => (1..=choices.len())
+                .map(|r| 1.0 / (r as f64).powf(s))
+                .collect(),
+        };
+        WorkloadGen { rng: Pcg::new(cfg.seed, 7), builder: PodBuilder::new(), choices, weights, cfg }
+    }
+
+    /// Generate the next pod.
+    pub fn next_pod(&mut self) -> Pod {
+        let idx = self.rng.weighted(&self.weights);
+        let (name, tag) = &self.choices[idx];
+        let cpu = self.rng.range(self.cfg.cpu_range.0 as usize, self.cfg.cpu_range.1 as usize + 1);
+        let mem = self.rng.range(self.cfg.mem_range.0 as usize, self.cfg.mem_range.1 as usize + 1);
+        let mut pod = self.builder.build(
+            &format!("{name}:{tag}"),
+            Resources::new(MilliCpu(cpu as u64), Bytes(mem as u64)),
+        );
+        if let Some((lo, hi)) = self.cfg.duration_range {
+            pod = pod.with_duration(self.rng.f64_range(lo, hi));
+        }
+        pod
+    }
+
+    /// Generate a trace of `n` pods.
+    pub fn trace(&mut self, n: usize) -> Vec<Pod> {
+        (0..n).map(|_| self.next_pod()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let reg = Registry::with_corpus();
+        let t1 = WorkloadGen::new(&reg, WorkloadConfig::default()).trace(10);
+        let t2 = WorkloadGen::new(&reg, WorkloadConfig::default()).trace(10);
+        for (a, b) in t1.iter().zip(&t2) {
+            assert_eq!(a.image, b.image);
+            assert_eq!(a.requests, b.requests);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let reg = Registry::with_corpus();
+        let t1 = WorkloadGen::new(&reg, WorkloadConfig::default()).trace(10);
+        let mut cfg = WorkloadConfig::default();
+        cfg.seed = 43;
+        let t2 = WorkloadGen::new(&reg, cfg).trace(10);
+        assert!(t1.iter().zip(&t2).any(|(a, b)| a.image != b.image));
+    }
+
+    #[test]
+    fn requests_within_ranges() {
+        let reg = Registry::with_corpus();
+        let trace = WorkloadGen::new(&reg, WorkloadConfig::default()).trace(200);
+        for p in &trace {
+            assert!((100..=800).contains(&p.requests.cpu.0), "{:?}", p.requests.cpu);
+            assert!((50_000_000..=500_000_000).contains(&p.requests.memory.0));
+        }
+    }
+
+    #[test]
+    fn allowlist_restricts_images() {
+        let reg = Registry::with_corpus();
+        let mut cfg = WorkloadConfig::default();
+        cfg.image_allowlist = Some(
+            crate::registry::hub::paper_images().iter().map(|s| s.to_string()).collect(),
+        );
+        let trace = WorkloadGen::new(&reg, cfg).trace(100);
+        let allowed = crate::registry::hub::paper_images();
+        for p in &trace {
+            assert!(allowed.contains(&p.image.name.as_str()), "{}", p.image);
+        }
+    }
+
+    #[test]
+    fn zipf_skews_popularity() {
+        let reg = Registry::with_corpus();
+        let mut cfg = WorkloadConfig::default();
+        cfg.popularity = Popularity::Zipf(1.5);
+        let trace = WorkloadGen::new(&reg, cfg).trace(500);
+        let mut counts = std::collections::HashMap::new();
+        for p in &trace {
+            *counts.entry(p.image.key()).or_insert(0usize) += 1;
+        }
+        let max = *counts.values().max().unwrap();
+        assert!(max > 500 / 30 * 3, "head image should dominate: max={max}");
+    }
+}

@@ -1,0 +1,106 @@
+//! Micro-benchmark harness (criterion is not in the vendored set).
+//! Runs warmup + measured iterations, reports min/mean/p50/p95 wall time.
+//! Used by the `rust/benches/*.rs` targets (harness = false).
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}   ({} iters)",
+            self.name,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "min", "p50", "mean", "p95"
+    )
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2}µs", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Time `f` with automatic iteration count targeting ~`budget_ms` of
+/// measurement after 3 warmup runs.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    for _ in 0..3 {
+        f();
+    }
+    let per_iter = t0.elapsed().as_nanos() as f64 / 3.0;
+    let iters = ((budget_ms as f64 * 1e6 / per_iter.max(1.0)).ceil() as usize).clamp(5, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        min_ns: samples[0],
+        p50_ns: samples[samples.len() / 2],
+        p95_ns: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 5, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.min_ns > 0.0);
+        assert!(r.mean_ns >= r.min_ns);
+        assert!(r.p95_ns >= r.p50_ns);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

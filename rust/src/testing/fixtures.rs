@@ -1,0 +1,60 @@
+//! Canned clusters, caches, and pods shared by integration and property
+//! tests.
+
+use crate::cluster::{ClusterState, Node, NodeId, Resources};
+use crate::registry::{MetadataCache, Registry, Watcher};
+use crate::util::rng::Pcg;
+use crate::util::units::{Bandwidth, Bytes};
+
+/// A uniform n-node cluster (4 cores / 4 GB / 30 GB / 10 MB/s each).
+pub fn uniform_cluster(n: u32) -> ClusterState {
+    let mut s = ClusterState::new();
+    for i in 0..n {
+        s.add_node(Node::new(
+            NodeId(i),
+            &format!("node{i}"),
+            Resources::cores_gb(4.0, 4.0),
+            Bytes::from_gb(30.0),
+            Bandwidth::from_mbps(10.0),
+        ));
+    }
+    s
+}
+
+/// A heterogeneous cluster drawn from an RNG: capacities, disks, and
+/// bandwidths vary (property tests).
+pub fn random_cluster(rng: &mut Pcg, n: u32) -> ClusterState {
+    let mut s = ClusterState::new();
+    for i in 0..n {
+        s.add_node(Node::new(
+            NodeId(i),
+            &format!("node{i}"),
+            Resources::cores_gb(rng.range(2, 9) as f64, rng.range(2, 9) as f64),
+            Bytes::from_gb(rng.range(10, 61) as f64),
+            Bandwidth::from_mbps(rng.range(2, 51) as f64),
+        ));
+    }
+    s
+}
+
+/// A metadata cache filled from the corpus registry.
+pub fn corpus_cache() -> MetadataCache {
+    let reg = Registry::with_corpus();
+    let mut cache = MetadataCache::new("/tmp/lrsched-fixture-cache.json");
+    Watcher::with_default_interval().poll(0.0, &reg, &mut cache);
+    cache
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixtures_build() {
+        assert_eq!(uniform_cluster(4).node_count(), 4);
+        let mut rng = Pcg::seeded(1);
+        let c = random_cluster(&mut rng, 6);
+        assert_eq!(c.node_count(), 6);
+        assert_eq!(corpus_cache().len(), 30);
+    }
+}

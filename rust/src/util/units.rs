@@ -1,0 +1,202 @@
+//! Resource unit newtypes. The paper mixes MB (layer sizes), cores (CPU),
+//! GB (memory/disk) and MB/s (bandwidth); explicit types keep the unit
+//! algebra honest across the scheduler, simulator, and experiment reports.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Sub, SubAssign};
+
+/// Bytes of storage (layer sizes, disk capacity). Internally u64 bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Bytes(pub u64);
+
+impl Bytes {
+    pub const ZERO: Bytes = Bytes(0);
+
+    pub fn from_mb(mb: f64) -> Bytes {
+        Bytes((mb * 1_000_000.0).round() as u64)
+    }
+
+    pub fn from_gb(gb: f64) -> Bytes {
+        Bytes((gb * 1_000_000_000.0).round() as u64)
+    }
+
+    pub fn as_mb(self) -> f64 {
+        self.0 as f64 / 1_000_000.0
+    }
+
+    pub fn as_gb(self) -> f64 {
+        self.0 as f64 / 1_000_000_000.0
+    }
+
+    pub fn saturating_sub(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Add for Bytes {
+    type Output = Bytes;
+    fn add(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Bytes {
+    fn add_assign(&mut self, rhs: Bytes) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Bytes {
+    type Output = Bytes;
+    fn sub(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0 - rhs.0)
+    }
+}
+
+impl SubAssign for Bytes {
+    fn sub_assign(&mut self, rhs: Bytes) {
+        self.0 -= rhs.0;
+    }
+}
+
+impl Sum for Bytes {
+    fn sum<I: Iterator<Item = Bytes>>(iter: I) -> Bytes {
+        Bytes(iter.map(|b| b.0).sum())
+    }
+}
+
+impl fmt::Display for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1_000_000_000 {
+            write!(f, "{:.2} GB", self.as_gb())
+        } else if self.0 >= 1_000_000 {
+            write!(f, "{:.1} MB", self.as_mb())
+        } else if self.0 >= 1_000 {
+            write!(f, "{:.1} kB", self.0 as f64 / 1e3)
+        } else {
+            write!(f, "{} B", self.0)
+        }
+    }
+}
+
+/// CPU in millicores, matching Kubernetes resource semantics
+/// (1000m = 1 core).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct MilliCpu(pub u64);
+
+impl MilliCpu {
+    pub const ZERO: MilliCpu = MilliCpu(0);
+
+    pub fn from_cores(cores: f64) -> MilliCpu {
+        MilliCpu((cores * 1000.0).round() as u64)
+    }
+
+    pub fn as_cores(self) -> f64 {
+        self.0 as f64 / 1000.0
+    }
+
+    pub fn saturating_sub(self, rhs: MilliCpu) -> MilliCpu {
+        MilliCpu(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Add for MilliCpu {
+    type Output = MilliCpu;
+    fn add(self, rhs: MilliCpu) -> MilliCpu {
+        MilliCpu(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for MilliCpu {
+    fn add_assign(&mut self, rhs: MilliCpu) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for MilliCpu {
+    type Output = MilliCpu;
+    fn sub(self, rhs: MilliCpu) -> MilliCpu {
+        MilliCpu(self.0 - rhs.0)
+    }
+}
+
+impl Sum for MilliCpu {
+    fn sum<I: Iterator<Item = MilliCpu>>(iter: I) -> MilliCpu {
+        MilliCpu(iter.map(|b| b.0).sum())
+    }
+}
+
+impl fmt::Display for MilliCpu {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}m", self.0)
+    }
+}
+
+/// Link bandwidth in bytes/second.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct Bandwidth(pub f64);
+
+impl Bandwidth {
+    pub fn from_mbps(mb_per_s: f64) -> Bandwidth {
+        Bandwidth(mb_per_s * 1_000_000.0)
+    }
+
+    pub fn as_mbps(self) -> f64 {
+        self.0 / 1_000_000.0
+    }
+
+    /// Seconds to transfer `bytes` at this bandwidth.
+    pub fn transfer_secs(self, bytes: Bytes) -> f64 {
+        if self.0 <= 0.0 {
+            return f64::INFINITY;
+        }
+        bytes.0 as f64 / self.0
+    }
+}
+
+impl fmt::Display for Bandwidth {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.1} MB/s", self.as_mbps())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_conversions() {
+        assert_eq!(Bytes::from_mb(1.0).0, 1_000_000);
+        assert_eq!(Bytes::from_gb(2.0).as_mb(), 2000.0);
+        assert_eq!(Bytes(5_000_000) + Bytes(5_000_000), Bytes::from_mb(10.0));
+        assert_eq!(Bytes(3).saturating_sub(Bytes(5)), Bytes::ZERO);
+    }
+
+    #[test]
+    fn bytes_display() {
+        assert_eq!(Bytes::from_gb(1.5).to_string(), "1.50 GB");
+        assert_eq!(Bytes::from_mb(34.0).to_string(), "34.0 MB");
+        assert_eq!(Bytes(512).to_string(), "512 B");
+    }
+
+    #[test]
+    fn cpu_conversions() {
+        assert_eq!(MilliCpu::from_cores(4.0).0, 4000);
+        assert_eq!(MilliCpu(2500).as_cores(), 2.5);
+        assert_eq!(MilliCpu(100).to_string(), "100m");
+    }
+
+    #[test]
+    fn bandwidth_transfer_time() {
+        let bw = Bandwidth::from_mbps(10.0);
+        assert!((bw.transfer_secs(Bytes::from_mb(100.0)) - 10.0).abs() < 1e-9);
+        assert!(Bandwidth(0.0).transfer_secs(Bytes(1)).is_infinite());
+    }
+
+    #[test]
+    fn bytes_sum() {
+        let total: Bytes = vec![Bytes(1), Bytes(2), Bytes(3)].into_iter().sum();
+        assert_eq!(total, Bytes(6));
+    }
+}

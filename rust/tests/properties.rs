@@ -1,0 +1,268 @@
+//! Property-based tests over the paper's invariants, using the in-repo
+//! harness (`testing::prop`). Case count scales with LRSCHED_PROP_CASES.
+
+use lrsched::cluster::{NodeId, PodBuilder, Resources};
+use lrsched::registry::{hub, LayerId, LayerInterner, LayerSet};
+use lrsched::sched::dynamic_weight::WeightParams;
+use lrsched::sched::scoring::{NativeScorer, ScoreInputs, ScoringBackend, NEG_MASK};
+use lrsched::sched::{default_framework, CycleContext, LrScheduler};
+use lrsched::sim::{SchedulerChoice, SimConfig, Simulation, WorkloadConfig, WorkloadGen};
+use lrsched::registry::Registry;
+use lrsched::testing::fixtures;
+use lrsched::testing::prop::{check, PropConfig};
+use lrsched::util::json::{self, Json};
+use lrsched::util::rng::Pcg;
+use lrsched::util::units::Bytes;
+use lrsched::{prop_assert, prop_assert_eq};
+use std::collections::HashSet;
+
+#[test]
+fn layerset_matches_hashset_model() {
+    check(PropConfig::default(), |rng, _| {
+        let mut interner = LayerInterner::new();
+        let universe = 200;
+        for i in 0..universe {
+            interner.intern(&format!("sha256:{i}"), Bytes::from_mb(rng.f64_range(0.1, 100.0)));
+        }
+        let mut set = LayerSet::new();
+        let mut model: HashSet<u32> = HashSet::new();
+        for _ in 0..rng.range(1, 200) {
+            let id = rng.range(0, universe) as u32;
+            match rng.range(0, 3) {
+                0 => {
+                    set.insert(LayerId(id));
+                    model.insert(id);
+                }
+                1 => {
+                    set.remove(LayerId(id));
+                    model.remove(&id);
+                }
+                _ => {
+                    prop_assert_eq!(set.contains(LayerId(id)), model.contains(&id));
+                }
+            }
+        }
+        prop_assert_eq!(set.len(), model.len());
+        let collected: HashSet<u32> = set.iter().map(|l| l.0).collect();
+        prop_assert_eq!(collected, model);
+        Ok(())
+    });
+}
+
+#[test]
+fn eq1_eq2_partition_the_required_bytes() {
+    // D_c^n + C_c^n = Σ_{l∈L_c} d_l for random layer sets (Eqs. 1+2).
+    check(PropConfig::default(), |rng, _| {
+        let mut interner = LayerInterner::new();
+        for i in 0..100 {
+            interner.intern(&format!("sha256:{i}"), Bytes(rng.below(200_000_000)));
+        }
+        let rand_set = |rng: &mut Pcg| -> LayerSet {
+            (0..100)
+                .filter(|_| rng.chance(0.3))
+                .map(|i| LayerId(i as u32))
+                .collect()
+        };
+        let req = rand_set(rng);
+        let node = rand_set(rng);
+        let local = req.intersection_bytes(&node, &interner);
+        let missing = req.difference_bytes(&node, &interner);
+        prop_assert_eq!(local + missing, req.total_bytes(&interner));
+        Ok(())
+    });
+}
+
+#[test]
+fn scorer_outputs_always_bounded() {
+    check(PropConfig::default(), |rng, _| {
+        let n = rng.range(1, 40);
+        let l = rng.range(1, 300);
+        let mut x = ScoreInputs::zeros(n, l, WeightParams::default());
+        for v in x.present.iter_mut() {
+            *v = if rng.chance(0.5) { 1.0 } else { 0.0 };
+        }
+        for j in 0..l {
+            x.req[j] = if rng.chance(0.5) { 1.0 } else { 0.0 };
+            x.sizes_mb[j] = rng.f64_range(0.0, 1000.0) as f32;
+        }
+        for i in 0..n {
+            x.cpu_cap[i] = rng.f64_range(1.0, 8000.0) as f32;
+            x.mem_cap[i] = rng.f64_range(1.0, 8e9) as f32;
+            x.cpu_used[i] = rng.f64_range(0.0, x.cpu_cap[i] as f64) as f32;
+            x.mem_used[i] = rng.f64_range(0.0, x.mem_cap[i] as f64) as f32;
+            x.k8s_score[i] = rng.f64_range(0.0, 1100.0) as f32;
+            x.feasible[i] = if rng.chance(0.7) { 1.0 } else { 0.0 };
+        }
+        x.feasible[rng.range(0, n)] = 1.0;
+        let out = NativeScorer.score(&x);
+        for i in 0..n {
+            prop_assert!(
+                (0.0..=100.0 + 1e-3).contains(&out.layer_score[i]),
+                "layer score out of range: {}",
+                out.layer_score[i]
+            );
+            let w = out.omega[i];
+            prop_assert!(w == 0.5 || w == 2.0, "omega {w}");
+            if x.feasible[i] < 0.5 {
+                prop_assert_eq!(out.final_score[i], NEG_MASK);
+            } else {
+                prop_assert!(out.final_score[i].is_finite(), "non-finite score");
+            }
+        }
+        prop_assert!(x.feasible[out.best] > 0.5, "argmax picked infeasible node");
+        Ok(())
+    });
+}
+
+#[test]
+fn scheduler_respects_feasibility_and_argmax() {
+    // On random clusters: the LR decision is feasible, and no other
+    // feasible node has a strictly higher combined score.
+    check(PropConfig { cases: 24, ..Default::default() }, |rng, _| {
+        let n_nodes = rng.range(2, 6) as u32;
+        let mut state = fixtures::random_cluster(rng, n_nodes);
+        let cache = fixtures::corpus_cache();
+        // Warm random nodes with random images.
+        let corpus = hub::corpus();
+        for _ in 0..rng.range(0, 6) {
+            let m = &corpus[rng.range(0, corpus.len())];
+            let node = NodeId(rng.range(0, state.node_count()) as u32);
+            let (_, layers) = state.intern_image(m);
+            let _ = state.install_image(node, &m.image_ref(), &layers);
+        }
+        let m = &corpus[rng.range(0, corpus.len())];
+        let pod = PodBuilder::new().build(
+            &format!("{}:{}", m.name, m.tag),
+            Resources::cores_gb(rng.f64_range(0.1, 1.0), rng.f64_range(0.1, 1.0)),
+        );
+        let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+        let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+        let mut lr = LrScheduler::lr_scheduler(default_framework());
+        match lr.schedule(&ctx) {
+            Err(_) => Ok(()), // everything filtered is legal
+            Ok(d) => {
+                let node = state.node(d.node);
+                prop_assert!(
+                    pod.requests.fits_within(&node.available()),
+                    "scheduled onto a node that cannot fit the pod"
+                );
+                prop_assert!(d.layer_score >= -1e9 && d.layer_score <= 100.0 + 1e-6, "layer score");
+                Ok(())
+            }
+        }
+    });
+}
+
+#[test]
+fn simulation_preserves_cluster_invariants() {
+    // Eq. 6/7/8 and the accounting invariants hold after arbitrary runs.
+    check(PropConfig { cases: 16, ..Default::default() }, |rng, case| {
+        let registry = Registry::with_corpus();
+        let wl = WorkloadConfig { seed: case as u64, ..Default::default() };
+        let trace = WorkloadGen::new(&registry, wl).trace(rng.range(1, 30));
+        let mut cfg = SimConfig::default();
+        cfg.scheduler = [SchedulerChoice::Default, SchedulerChoice::Layer, SchedulerChoice::LR]
+            [rng.range(0, 3)];
+        cfg.gc_enabled = rng.chance(0.5);
+        if rng.chance(0.5) {
+            cfg.inter_arrival_secs = Some(rng.f64_range(0.5, 10.0));
+        }
+        let mut sim = Simulation::new(
+            lrsched::exp::common::paper_nodes(rng.range(2, 6)),
+            registry,
+            cfg,
+        );
+        let report = sim.run_trace(trace);
+        sim.state.check_invariants().map_err(|e| e)?;
+        for node in sim.state.nodes() {
+            prop_assert!(node.disk_used <= node.disk, "Eq. 6 violated");
+            prop_assert!(node.pods.len() <= node.max_containers, "Eq. 7 violated");
+        }
+        // Eq. 8: deployed + unschedulable + failed accounts for every pod.
+        prop_assert!(report.deployed() + report.unschedulable <= 30, "pod accounting");
+        Ok(())
+    });
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    check(PropConfig { cases: 8, ..Default::default() }, |rng, case| {
+        let seed = rng.next_u64();
+        let run = || {
+            let registry = Registry::with_corpus();
+            let wl = WorkloadConfig { seed, ..Default::default() };
+            let trace = WorkloadGen::new(&registry, wl).trace(15);
+            let mut cfg = SimConfig::default();
+            cfg.scheduler = SchedulerChoice::LR;
+            let mut sim =
+                Simulation::new(lrsched::exp::common::paper_nodes(4), registry, cfg);
+            sim.run_trace(trace)
+        };
+        let a = run();
+        let b = run();
+        prop_assert_eq!(a.deployed(), b.deployed());
+        prop_assert_eq!(a.total_download().0, b.total_download().0);
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            prop_assert_eq!(&ra.node, &rb.node);
+            prop_assert_eq!(ra.download.0, rb.download.0);
+        }
+        let _ = case;
+        Ok(())
+    });
+}
+
+#[test]
+fn json_roundtrips_random_documents() {
+    fn gen_json(rng: &mut Pcg, depth: usize) -> Json {
+        match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Int(rng.next_u64() as i64 / 2),
+            3 => Json::Str(format!("s{}-\"esc\\{}\n", rng.next_u32(), rng.next_u32())),
+            4 => Json::Arr((0..rng.range(0, 5)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.range(0, 5) {
+                    o.set(&format!("k{i}"), gen_json(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    check(PropConfig::default(), |rng, _| {
+        let doc = gen_json(rng, 3);
+        let compact = json::parse(&doc.to_string()).map_err(|e| e.to_string())?;
+        let pretty = json::parse(&doc.to_string_pretty()).map_err(|e| e.to_string())?;
+        prop_assert_eq!(&compact, &doc);
+        prop_assert_eq!(&pretty, &doc);
+        Ok(())
+    });
+}
+
+#[test]
+fn bind_unbind_sequences_keep_state_consistent() {
+    check(PropConfig { cases: 24, ..Default::default() }, |rng, _| {
+        let mut state = fixtures::uniform_cluster(rng.range(1, 5) as u32);
+        let mut builder = PodBuilder::new();
+        let mut bound: Vec<lrsched::cluster::PodId> = Vec::new();
+        for _ in 0..rng.range(1, 60) {
+            if bound.is_empty() || rng.chance(0.6) {
+                let pod = builder.build(
+                    "busybox:1.36",
+                    Resources::cores_gb(rng.f64_range(0.0, 0.3), rng.f64_range(0.0, 0.3)),
+                );
+                let pid = state.submit_pod(pod);
+                let node = NodeId(rng.range(0, state.node_count()) as u32);
+                if state.bind(pid, node).is_ok() {
+                    bound.push(pid);
+                }
+            } else {
+                let idx = rng.range(0, bound.len());
+                let pid = bound.swap_remove(idx);
+                state.unbind(pid).map_err(|e| e.to_string())?;
+            }
+            state.check_invariants()?;
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,256 @@
+//! Integration tests across registry → cache → framework → LRScheduler:
+//! the full §V pipeline (watch, match, score, dynamic weights) plus the
+//! placement-constraint plugins acting together.
+
+use lrsched::cluster::pod::{AffinityTerm, TopologySpread};
+use lrsched::cluster::{ClusterState, Node, NodeId, PodBuilder, Resources};
+use lrsched::registry::{hub, ImageMetadata, ImageRef, LayerMetadata, MetadataCache, Registry, Watcher};
+use lrsched::sched::queue::SchedulingQueue;
+use lrsched::sched::{default_framework, CycleContext, LrScheduler};
+use lrsched::util::units::{Bandwidth, Bytes};
+
+fn paper_cluster() -> ClusterState {
+    let mut s = ClusterState::new();
+    let specs = [(4.0, 30.0), (2.0, 30.0), (4.0, 20.0), (4.0, 20.0)];
+    for (i, (mem, disk)) in specs.iter().enumerate() {
+        s.add_node(Node::new(
+            NodeId(i as u32),
+            &format!("worker{}", i + 1),
+            Resources::cores_gb(4.0, *mem),
+            Bytes::from_gb(*disk),
+            Bandwidth::from_mbps(10.0),
+        ));
+    }
+    s
+}
+
+fn filled_cache() -> (Registry, MetadataCache) {
+    let registry = Registry::with_corpus();
+    let mut cache = MetadataCache::new("/tmp/lrsched-int-cache.json");
+    Watcher::with_default_interval().poll(0.0, &registry, &mut cache);
+    (registry, cache)
+}
+
+#[test]
+fn watcher_discovers_new_images_over_time() {
+    // An image pushed after boot becomes layer-schedulable after the next
+    // poll — the paper's automation contribution (§V-1).
+    let (mut registry, mut cache) = filled_cache();
+    let mut watcher = Watcher::new(10.0);
+    watcher.poll(0.0, &registry, &mut cache);
+
+    let custom = ImageMetadata::new(
+        "sha256:custom",
+        "acme-app",
+        "1.0",
+        vec![
+            LayerMetadata { digest: hub::digest_for("os.debian12"), size: Bytes::from_mb(49.0) },
+            LayerMetadata { digest: "sha256:acme".into(), size: Bytes::from_mb(30.0) },
+        ],
+    );
+    registry.push(custom.clone());
+    assert!(cache.lookup(&ImageRef::new("acme-app", "1.0")).is_none());
+
+    // Before the interval: no refresh. After: visible.
+    let mut state = paper_cluster();
+    assert!(!watcher.tick(5.0, &registry, &mut cache));
+    assert!(watcher.tick(10.0, &registry, &mut cache));
+    let meta = cache.lookup(&ImageRef::new("acme-app", "1.0")).unwrap();
+    assert_eq!(meta.total_size, Bytes::from_mb(79.0));
+
+    // The new image scores through layer sharing with the debian base.
+    let wp = hub::corpus().into_iter().find(|m| m.name == "wordpress" && m.tag == "6.4").unwrap();
+    let (_, wp_layers) = state.intern_image(&wp);
+    state.install_image(NodeId(3), &wp.image_ref(), &wp_layers).unwrap();
+
+    let pod = PodBuilder::new().build("acme-app:1.0", Resources::cores_gb(0.5, 0.5));
+    let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+    let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+    let mut lr = LrScheduler::lr_scheduler(default_framework());
+    let d = lr.schedule(&ctx).unwrap();
+    assert_eq!(d.node, NodeId(3), "shares the debian base with wordpress");
+    assert!(d.layer_score > 50.0, "49/79 MB shared: {}", d.layer_score);
+}
+
+#[test]
+fn selectors_taints_and_volumes_compose() {
+    let (_, cache) = filled_cache();
+    let mut state = ClusterState::new();
+    state.add_node(
+        Node::new(NodeId(0), "gpu-node", Resources::cores_gb(4.0, 4.0), Bytes::from_gb(30.0), Bandwidth::from_mbps(10.0))
+            .with_label("accel", "gpu")
+            .with_taint("dedicated", "ml", true),
+    );
+    state.add_node(
+        Node::new(NodeId(1), "storage-node", Resources::cores_gb(4.0, 4.0), Bytes::from_gb(30.0), Bandwidth::from_mbps(10.0))
+            .with_label("disk", "ssd"),
+    );
+    state.add_node(Node::new(
+        NodeId(2), "plain", Resources::cores_gb(4.0, 4.0), Bytes::from_gb(30.0), Bandwidth::from_mbps(10.0),
+    ));
+
+    let mut b = PodBuilder::new();
+    let mut lr = LrScheduler::lr_scheduler(default_framework());
+
+    // Selector forces the ssd node.
+    let pod = b.build("redis:7.2", Resources::cores_gb(0.2, 0.2)).with_selector("disk", "ssd");
+    let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+    let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+    assert_eq!(lr.schedule(&ctx).unwrap().node, NodeId(1));
+
+    // The hard taint excludes gpu-node unless tolerated.
+    let pod = b.build("redis:7.2", Resources::cores_gb(0.2, 0.2)).with_selector("accel", "gpu");
+    let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+    let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+    assert!(lr.schedule(&ctx).is_err(), "selector matches only the tainted node");
+
+    let pod = b
+        .build("redis:7.2", Resources::cores_gb(0.2, 0.2))
+        .with_selector("accel", "gpu")
+        .with_toleration("dedicated", "ml");
+    let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+    let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+    assert_eq!(lr.schedule(&ctx).unwrap().node, NodeId(0));
+
+    // Volume claims filter nodes without capacity.
+    let mut small = paper_cluster();
+    small.node_mut(NodeId(0)).volume_capacity = Bytes::from_gb(1.0);
+    small.node_mut(NodeId(1)).volume_capacity = Bytes::from_gb(1.0);
+    small.node_mut(NodeId(2)).volume_capacity = Bytes::from_gb(1.0);
+    small.node_mut(NodeId(3)).volume_capacity = Bytes::from_gb(50.0);
+    let pod = b.build("mysql:8.2", Resources::cores_gb(0.2, 0.2)).with_volume(Bytes::from_gb(10.0));
+    let (meta, req, bytes) = CycleContext::prepare(&mut small, &cache, &pod);
+    let ctx = CycleContext::new(&small, &pod, meta, req, bytes);
+    assert_eq!(lr.schedule(&ctx).unwrap().node, NodeId(3));
+}
+
+#[test]
+fn affinity_and_topology_spread_shape_scores() {
+    let (_, cache) = filled_cache();
+    let mut state = ClusterState::new();
+    for (i, zone) in ["a", "a", "b"].iter().enumerate() {
+        state.add_node(
+            Node::new(
+                NodeId(i as u32),
+                &format!("n{i}"),
+                Resources::cores_gb(4.0, 4.0),
+                Bytes::from_gb(30.0),
+                Bandwidth::from_mbps(10.0),
+            )
+            .with_label("zone", zone),
+        );
+    }
+    let mut b = PodBuilder::new();
+    // Two web pods in zone a.
+    for node in [0u32, 1] {
+        let p = b.build("nginx:1.25", Resources::cores_gb(0.2, 0.2)).with_label("app", "web");
+        let pid = state.submit_pod(p);
+        state.bind(pid, NodeId(node)).unwrap();
+    }
+    // Spread constraint pushes the third replica to zone b.
+    let mut pod = b.build("nginx:1.25", Resources::cores_gb(0.2, 0.2)).with_label("app", "web");
+    pod.topology_spread.push(TopologySpread { topology_key: "zone".into(), max_skew: 1 });
+    let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+    let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+    let mut lr = LrScheduler::default_scheduler(default_framework());
+    assert_eq!(lr.schedule(&ctx).unwrap().node, NodeId(2));
+
+    // Preferred node affinity pulls toward zone a despite spread pressure
+    // when weighted heavily (NodeAffinity weight 2 in the profile).
+    let mut pod = b.build("nginx:1.25", Resources::cores_gb(0.2, 0.2));
+    pod.affinity.preferred.push(AffinityTerm { key: "zone".into(), values: vec!["a".into()], weight: 100 });
+    let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+    let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+    let d = lr.schedule(&ctx).unwrap();
+    assert!(d.node == NodeId(0) || d.node == NodeId(1), "affinity wins: {:?}", d.node);
+}
+
+#[test]
+fn dynamic_weight_flips_under_load() {
+    // The same pod+cluster flips from ω₁ to ω₂ when the candidate node
+    // crosses the CPU threshold — the paper's load-adaptivity claim.
+    let (_, cache) = filled_cache();
+    let mut state = paper_cluster();
+    let redis = hub::corpus().into_iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
+    let (_, layers) = state.intern_image(&redis);
+    state.install_image(NodeId(0), &redis.image_ref(), &layers).unwrap();
+
+    let mut b = PodBuilder::new();
+    let pod = b.build("redis:7.2", Resources::cores_gb(0.2, 0.2));
+    let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+    {
+        let ctx = CycleContext::new(&state, &pod, meta, req.clone(), bytes);
+        let mut lr = LrScheduler::lr_scheduler(default_framework());
+        let d = lr.schedule(&ctx).unwrap();
+        assert_eq!((d.node, d.omega), (NodeId(0), 2.0), "idle: gate passes");
+    }
+    // Load worker1 beyond h_cpu = 0.6.
+    let filler = b.build("busybox:1.36", Resources::cores_gb(2.8, 2.8));
+    let fid = state.submit_pod(filler);
+    state.bind(fid, NodeId(0)).unwrap();
+    let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+    let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+    let mut lr = LrScheduler::lr_scheduler(default_framework());
+    let d = lr.schedule(&ctx).unwrap();
+    if d.node == NodeId(0) {
+        assert_eq!(d.omega, 0.5, "busy node must be scored with ω₂");
+    } else {
+        // The 100-point layer score at ω₂ no longer outweighs the idle
+        // nodes' k8s advantage — also correct adaptive behaviour.
+        assert_eq!(d.layer_score, 0.0);
+    }
+}
+
+#[test]
+fn queue_retries_unschedulable_pods() {
+    let (_, cache) = filled_cache();
+    let mut state = paper_cluster();
+    let mut b = PodBuilder::new();
+    // Fill the cluster CPU.
+    for i in 0..4 {
+        let filler = b.build("busybox:1.36", Resources::cores_gb(3.9, 0.1));
+        let fid = state.submit_pod(filler);
+        state.bind(fid, NodeId(i)).unwrap();
+    }
+    let pod = b.build("redis:7.2", Resources::cores_gb(1.0, 0.5));
+    let pid = state.submit_pod(pod.clone());
+
+    let mut queue = SchedulingQueue::new();
+    queue.push(pid);
+    let mut lr = LrScheduler::lr_scheduler(default_framework());
+
+    // First attempt fails; pod parks.
+    let got = queue.pop().unwrap();
+    let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+    {
+        let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+        assert!(lr.schedule(&ctx).is_err());
+    }
+    queue.park(got, 0.0);
+    assert_eq!(queue.release_due(5.0), 1);
+
+    // A filler finishes; retry succeeds.
+    state.unbind(lrsched::cluster::PodId(0)).unwrap();
+    let got = queue.pop().unwrap();
+    assert_eq!(got, pid);
+    let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+    let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+    let d = lr.schedule(&ctx).unwrap();
+    assert_eq!(d.node, NodeId(0));
+}
+
+#[test]
+fn unknown_image_still_schedules_on_k8s_score() {
+    // cache.json has never seen the image: LRScheduler degrades to the
+    // default scheduler's behaviour instead of failing (§V-2 fallback).
+    let (_, cache) = filled_cache();
+    let mut state = paper_cluster();
+    let pod = PodBuilder::new().build("private-app:9.9", Resources::cores_gb(0.5, 0.5));
+    let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+    assert!(meta.is_none());
+    let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+    let mut lr = LrScheduler::lr_scheduler(default_framework());
+    let d = lr.schedule(&ctx).unwrap();
+    assert_eq!(d.layer_score, 0.0);
+    assert_eq!(d.download_cost, Bytes::ZERO, "unknown size treated as zero");
+}

@@ -1,0 +1,132 @@
+//! Integration: the XLA scoring backend (AOT JAX/Pallas artifact via PJRT)
+//! must agree with the pure-rust NativeScorer on the full Algorithm-1
+//! pipeline — the cross-language differential test that pins L1+L2 to L3.
+//!
+//! Requires `make artifacts`; tests panic with a clear message otherwise
+//! (artifacts are a build input, like generated code).
+
+use lrsched::sched::dynamic_weight::WeightParams;
+use lrsched::sched::scoring::{NativeScorer, ScoreInputs, ScoringBackend, NEG_MASK};
+use lrsched::runtime::XlaScorer;
+use lrsched::util::rng::Pcg;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    // cargo test runs from the workspace root.
+    let p = std::path::PathBuf::from("artifacts");
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifacts/manifest.json missing — run `make artifacts` first"
+    );
+    p
+}
+
+fn random_inputs(rng: &mut Pcg, n: usize, l: usize, density: f64) -> ScoreInputs {
+    let mut x = ScoreInputs::zeros(n, l, WeightParams::default());
+    for v in x.present.iter_mut() {
+        *v = if rng.chance(density) { 1.0 } else { 0.0 };
+    }
+    for j in 0..l {
+        x.req[j] = if rng.chance(0.2) { 1.0 } else { 0.0 };
+        x.sizes_mb[j] = rng.f64_range(0.1, 300.0) as f32;
+    }
+    for i in 0..n {
+        x.cpu_cap[i] = 4000.0;
+        x.mem_cap[i] = 4.0e9;
+        x.cpu_used[i] = rng.f64_range(0.0, 4000.0) as f32;
+        x.mem_used[i] = rng.f64_range(0.0, 4.0e9) as f32;
+        x.k8s_score[i] = rng.f64_range(0.0, 800.0) as f32;
+        x.feasible[i] = if rng.chance(0.9) { 1.0 } else { 0.0 };
+    }
+    // Guarantee at least one feasible node.
+    x.feasible[0] = 1.0;
+    x
+}
+
+fn assert_outputs_match(x: &ScoreInputs, tag: &str, xla: &mut XlaScorer) {
+    let native = NativeScorer.score(x);
+    let xla_out = xla.score(x);
+    for i in 0..x.n_nodes {
+        let (a, b) = (native.final_score[i], xla_out.final_score[i]);
+        if a <= NEG_MASK / 2.0 || b <= NEG_MASK / 2.0 {
+            assert_eq!(a <= NEG_MASK / 2.0, b <= NEG_MASK / 2.0, "{tag}: mask mismatch at {i}");
+            continue;
+        }
+        let tol = 1e-2_f32.max(a.abs() * 1e-4);
+        assert!((a - b).abs() < tol, "{tag}: final[{i}] native={a} xla={b}");
+        assert_eq!(native.omega[i], xla_out.omega[i], "{tag}: omega[{i}]");
+        assert!(
+            (native.layer_score[i] - xla_out.layer_score[i]).abs() < 1e-2,
+            "{tag}: layer[{i}]"
+        );
+    }
+    // Argmax may legitimately differ only under fp ties; require the scores
+    // of the two winners to be equal within tolerance.
+    let (nb, xb) = (native.best, xla_out.best);
+    let tol = 1e-2_f32.max(native.final_score[nb].abs() * 1e-4);
+    assert!(
+        (native.final_score[nb] - xla_out.final_score[xb]).abs() < tol,
+        "{tag}: winner scores diverge: native[{nb}]={} xla[{xb}]={}",
+        native.final_score[nb],
+        xla_out.final_score[xb]
+    );
+}
+
+#[test]
+fn xla_loads_both_variants() {
+    let scorer = XlaScorer::load(&artifacts_dir()).expect("load artifacts");
+    let names = scorer.variant_names();
+    assert!(names.contains(&"small") && names.contains(&"large"), "{names:?}");
+}
+
+#[test]
+fn xla_matches_native_exact_variant_shapes() {
+    let mut xla = XlaScorer::load(&artifacts_dir()).unwrap();
+    let mut rng = Pcg::seeded(1);
+    for (n, l) in [(16, 256), (64, 1024)] {
+        for round in 0..5 {
+            let x = random_inputs(&mut rng, n, l, 0.3);
+            assert_outputs_match(&x, &format!("{n}x{l} round {round}"), &mut xla);
+        }
+    }
+    assert_eq!(xla.stats.executions, 10);
+    assert_eq!(xla.stats.native_fallbacks, 0);
+}
+
+#[test]
+fn xla_pads_smaller_problems() {
+    let mut xla = XlaScorer::load(&artifacts_dir()).unwrap();
+    let mut rng = Pcg::seeded(2);
+    for (n, l) in [(1, 1), (3, 40), (5, 200), (16, 100), (17, 257), (40, 700)] {
+        let x = random_inputs(&mut rng, n, l, 0.5);
+        assert_outputs_match(&x, &format!("padded {n}x{l}"), &mut xla);
+    }
+    // 5 fit in small (n<=16 && l<=256), 1 needs large... verify bookkeeping.
+    assert_eq!(xla.stats.executions, 6);
+    assert_eq!(xla.stats.native_fallbacks, 0);
+}
+
+#[test]
+fn xla_falls_back_beyond_largest_variant() {
+    let mut xla = XlaScorer::load(&artifacts_dir()).unwrap();
+    let mut rng = Pcg::seeded(3);
+    let x = random_inputs(&mut rng, 65, 1024, 0.3);
+    let out = xla.score(&x);
+    assert_eq!(xla.stats.native_fallbacks, 1);
+    assert_eq!(out, NativeScorer.score(&x));
+}
+
+#[test]
+fn xla_handles_degenerate_inputs() {
+    let mut xla = XlaScorer::load(&artifacts_dir()).unwrap();
+    // All-zero req (unknown image): no NaNs, argmax falls to k8s score.
+    let mut x = ScoreInputs::zeros(4, 8, WeightParams::default());
+    x.feasible = vec![1.0; 4];
+    x.k8s_score = vec![10.0, 40.0, 20.0, 30.0];
+    let out = xla.score(&x);
+    assert_eq!(out.best, 1);
+    assert!(out.final_score.iter().all(|s| s.is_finite()));
+    // Single feasible node always wins regardless of score.
+    let mut x2 = ScoreInputs::zeros(4, 8, WeightParams::default());
+    x2.feasible[2] = 1.0;
+    assert_eq!(xla.score(&x2).best, 2);
+}
