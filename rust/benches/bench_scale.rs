@@ -1,0 +1,139 @@
+//! Scale benchmarks for the event-driven engine and the scoring arena:
+//! - reused-arena `ScoreArena::fill` vs per-cycle `ScoreInputs::zeros`
+//!   rebuilding (`build_inputs`) on a 64-node × full-corpus cluster — the
+//!   arena must win, since steady-state cycles touch only dirty rows;
+//! - event-engine throughput on a timed trace with finite-duration pods,
+//!   GC, and scheduling-queue retries (default 20k pods; set
+//!   LRSCHED_BENCH_FULL=1 for the 100k-pod acceptance run).
+//!
+//! Run: `cargo bench --bench bench_scale`
+
+use lrsched::cluster::{ClusterState, NodeId, PodBuilder, Resources};
+use lrsched::exp::common;
+use lrsched::registry::{hub, Registry};
+use lrsched::sched::lrscheduler::build_inputs;
+use lrsched::sched::scoring::ScoreArena;
+use lrsched::sched::{default_framework, CycleContext, NativeScorer, ScoringBackend, WeightParams};
+use lrsched::sim::{Popularity, SchedulerChoice, SimConfig, Simulation, WorkloadConfig, WorkloadGen};
+use lrsched::testing::bench::{bench, header};
+use lrsched::testing::fixtures;
+use std::time::Instant;
+
+/// 64 warm nodes over the whole corpus: the dense-scoring shape the
+/// acceptance criterion names.
+fn warm_cluster() -> ClusterState {
+    let mut state = ClusterState::new();
+    for node in common::scale_nodes(64) {
+        state.add_node(node);
+    }
+    // Intern the full corpus and warm every node with a few images so the
+    // presence matrix is realistic (and every layer id is live).
+    let corpus = hub::corpus();
+    for (i, m) in corpus.iter().enumerate() {
+        let (_, layers) = state.intern_image(m);
+        for k in 0..3u32 {
+            let node = NodeId(((i as u32).wrapping_mul(7).wrapping_add(k * 11)) % 64);
+            let _ = state.install_image(node, &m.image_ref(), &layers);
+        }
+    }
+    state
+}
+
+fn main() {
+    println!("{}", header());
+
+    // --- arena vs zeros rebuild ------------------------------------------
+    let mut state = warm_cluster();
+    let cache = fixtures::corpus_cache();
+    let pod = PodBuilder::new().build("wordpress:6.4", Resources::cores_gb(0.25, 0.25));
+    let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+    let meta = meta.cloned();
+    let ctx = CycleContext::new(&state, &pod, meta.as_ref(), req, bytes);
+    let fw = default_framework();
+    let feasible = fw.feasible(&ctx).expect("feasible");
+    let scores = fw.score(&ctx, &feasible);
+    let params = WeightParams::default();
+    let (n, l) = (state.node_count(), state.interner.len());
+
+    let r_zeros = bench(&format!("build_inputs zeros rebuild {n}x{l}"), 300, || {
+        std::hint::black_box(build_inputs(&ctx, &scores, &params));
+    });
+    println!("{}", r_zeros.report());
+
+    let mut arena = ScoreArena::new();
+    std::hint::black_box(arena.fill(&ctx, &scores, &params)); // cold fill
+    let r_arena = bench(&format!("ScoreArena reused fill {n}x{l}"), 300, || {
+        std::hint::black_box(arena.fill(&ctx, &scores, &params));
+    });
+    println!("{}", r_arena.report());
+    let speedup = r_zeros.mean_ns / r_arena.mean_ns.max(1.0);
+    println!(
+        "arena speedup vs zeros rebuild: {speedup:.1}x (rows refilled {}, full rebuilds {})",
+        arena.rows_refilled, arena.full_rebuilds
+    );
+    assert!(
+        r_arena.mean_ns < r_zeros.mean_ns,
+        "reused arena must beat per-cycle zeros rebuild: {} vs {} ns",
+        r_arena.mean_ns,
+        r_zeros.mean_ns
+    );
+
+    // Full dense cycle through each input path for context.
+    let mut scorer = NativeScorer;
+    let r = bench("dense score via arena inputs", 200, || {
+        let inputs = arena.fill(&ctx, &scores, &params);
+        std::hint::black_box(scorer.score(inputs));
+    });
+    println!("{}", r.report());
+
+    // --- event-engine scale run ------------------------------------------
+    let full = std::env::var("LRSCHED_BENCH_FULL").is_ok();
+    let pods = if full { 100_000 } else { 20_000 };
+    let registry = Registry::with_corpus();
+    let trace = WorkloadGen::new(
+        &registry,
+        WorkloadConfig {
+            seed: 42,
+            popularity: Popularity::Zipf(1.1),
+            duration_range: Some((30.0, 300.0)),
+            ..Default::default()
+        },
+    )
+    .trace(pods);
+    let mut cfg = SimConfig::default();
+    cfg.scheduler = SchedulerChoice::LR;
+    cfg.inter_arrival_secs = Some(0.3);
+    cfg.gc_enabled = true;
+    cfg.retry_limit = 10;
+    cfg.snapshot_every = 1000;
+    let mut sim = Simulation::new(common::scale_nodes(64), registry, cfg)
+        .with_backend(Box::new(NativeScorer));
+    let t0 = Instant::now();
+    let report = sim.run_trace(trace);
+    let wall = t0.elapsed().as_secs_f64();
+    sim.state.check_invariants().expect("invariants");
+    println!(
+        "event engine: {pods} pods / 64 nodes in {wall:.2}s wall ({:.0} pods/s), \
+         virtual {:.0}s, events {}",
+        pods as f64 / wall.max(1e-9),
+        sim.clock.now(),
+        sim.events_queued()
+    );
+    println!(
+        "  completed={} failed={} unschedulable={} retries={} download={:.1} GB",
+        report.completed(),
+        report.failed_pulls,
+        report.unschedulable,
+        report.retries,
+        report.total_download().as_gb()
+    );
+    assert!(
+        report.accounting_balanced(),
+        "dropped events: completed {} + failed {} + unschedulable {} != submitted {}",
+        report.completed(),
+        report.failed_pulls,
+        report.unschedulable,
+        report.submitted
+    );
+    println!("  accounting balanced: no dropped events");
+}

@@ -52,6 +52,10 @@ pub struct Node {
     pub images: Vec<ImageRef>,
     /// Local layers L_n(t) as an interned bitset.
     pub layers: LayerSet,
+    /// Bumped whenever `layers` changes (install/evict). Dense-scoring
+    /// arenas use it to skip refilling unchanged presence rows; mutate
+    /// `layers` through [`crate::cluster::ClusterState`] so it stays true.
+    pub layers_version: u64,
     /// Bytes of disk consumed by local layers.
     pub disk_used: Bytes,
 }
@@ -72,6 +76,7 @@ impl Node {
             pods: Vec::new(),
             images: Vec::new(),
             layers: LayerSet::new(),
+            layers_version: 0,
             disk_used: Bytes::ZERO,
         }
     }

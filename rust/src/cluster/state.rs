@@ -182,7 +182,13 @@ impl ClusterState {
         if added > free {
             return Err(StateError::DiskFull { node: node_id.0, need: added, free });
         }
+        // Bump on any membership change (layer sizes can be zero, so the
+        // byte delta alone must not gate the version).
+        let members_before = node.layers.len();
         node.layers.union_with(layers);
+        if node.layers.len() != members_before {
+            node.layers_version += 1;
+        }
         node.disk_used += added;
         if !node.has_image(image) {
             node.images.push(image.clone());
@@ -195,12 +201,17 @@ impl ClusterState {
     /// the caller (kubelet GC) decides the victim set. Returns bytes freed.
     pub fn evict_layers(&mut self, node_id: NodeId, layers: &[LayerId]) -> Bytes {
         let mut freed = Bytes::ZERO;
+        let mut removed_any = false;
         let node = &mut self.nodes[node_id.0 as usize];
         for &l in layers {
             if node.layers.contains(l) {
                 node.layers.remove(l);
+                removed_any = true;
                 freed += self.interner.size(l);
             }
+        }
+        if removed_any {
+            node.layers_version += 1;
         }
         node.disk_used = node.disk_used.saturating_sub(freed);
         freed

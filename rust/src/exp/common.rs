@@ -39,6 +39,23 @@ pub fn paper_nodes(n: usize) -> Vec<Node> {
         .collect()
 }
 
+/// A uniform edge cluster for scale harnesses beyond the paper's 5-worker
+/// testbed (the `scale` CLI subcommand and `bench_scale`): 4-core / 8 GB
+/// workers with 64 GB disks and fast downlinks.
+pub fn scale_nodes(n: usize) -> Vec<Node> {
+    (0..n)
+        .map(|i| {
+            Node::new(
+                NodeId(i as u32),
+                &format!("edge{:03}", i + 1),
+                Resources::cores_gb(4.0, 8.0),
+                Bytes::from_gb(64.0),
+                Bandwidth::from_mbps(100.0),
+            )
+        })
+        .collect()
+}
+
 /// The paper's 20-pod random-image workload (same trace for every
 /// scheduler so comparisons are paired).
 pub fn paper_trace(seed: u64, n_pods: usize) -> Vec<Pod> {

@@ -10,14 +10,18 @@ use crate::util::json::Json;
 pub fn report_to_json(rep: &SimReport) -> Json {
     let mut o = Json::obj();
     o.set("scheduler", Json::Str(rep.scheduler.to_string()))
+        .set("submitted", Json::Int(rep.submitted as i64))
         .set("deployed", Json::Int(rep.deployed() as i64))
+        .set("completed", Json::Int(rep.completed() as i64))
         .set("unschedulable", Json::Int(rep.unschedulable as i64))
         .set("failed_pulls", Json::Int(rep.failed_pulls as i64))
+        .set("retries", Json::Int(rep.retries as i64))
         .set("total_download_mb", Json::Num(rep.total_download().as_mb()))
         .set("total_download_secs", Json::Num(rep.total_download_secs()))
         .set("final_std", Json::Num(rep.final_std()))
         .set("omega1_used", Json::Int(rep.omega1_used as i64))
         .set("omega2_used", Json::Int(rep.omega2_used as i64))
+        .set("omega_mid_used", Json::Int(rep.omega_mid_used as i64))
         .set(
             "records",
             Json::Arr(

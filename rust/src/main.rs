@@ -14,6 +14,7 @@ const ABOUT: &str = "lrsched — layer-aware, resource-adaptive container schedu
 
 Subcommands:
   simulate   run a workload trace through a scheduler on the paper testbed
+  scale      drive a 100k-pod timed trace with churn through the event engine
   fig3       regenerate Fig. 3 (a-f): performance vs node count
   fig4       regenerate Fig. 4: download time vs bandwidth
   fig5       regenerate Fig. 5: accumulated download size
@@ -62,6 +63,124 @@ fn simulate_spec() -> Vec<OptSpec> {
     s
 }
 
+fn scale_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "seed", help: "workload RNG seed", default: Some("42") },
+        OptSpec { name: "pods", help: "number of pods in the trace", default: Some("100000") },
+        OptSpec { name: "nodes", help: "edge node count", default: Some("64") },
+        OptSpec { name: "scheduler", help: "default|layer|lr|rl", default: Some("lr") },
+        OptSpec {
+            name: "backend",
+            help: "native|dense (dense drives the reused-arena scoring path)",
+            default: Some("native"),
+        },
+        OptSpec { name: "arrival", help: "seconds between arrivals", default: Some("0.3") },
+        OptSpec { name: "duration-min", help: "min pod lifetime (s)", default: Some("30") },
+        OptSpec { name: "duration-max", help: "max pod lifetime (s)", default: Some("300") },
+        OptSpec { name: "zipf", help: "image-popularity Zipf exponent (0 = uniform)", default: Some("1.1") },
+        OptSpec { name: "retry-limit", help: "retries before a pod is unschedulable", default: Some("10") },
+        OptSpec { name: "backoff", help: "scheduling-queue back-off (s)", default: Some("5") },
+        OptSpec { name: "snapshot-every", help: "snapshot cadence (placements)", default: Some("1000") },
+        OptSpec { name: "no-gc", help: "disable kubelet image GC", default: None },
+        OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
+    ]
+}
+
+fn run_scale(rest: &[String]) -> Result<(), String> {
+    use lrsched::sched::NativeScorer;
+    use lrsched::sim::Popularity;
+
+    let args = cli::parse(rest, &scale_spec())?;
+    apply_log_level(&args)?;
+    let seed = args.u64_or("seed", 42)?;
+    let pods = args.usize_or("pods", 100_000)?;
+    let nodes = args.usize_or("nodes", 64)?;
+    let arrival = args.f64_or("arrival", 0.3)?;
+    let dmin = args.f64_or("duration-min", 30.0)?;
+    let dmax = args.f64_or("duration-max", 300.0)?;
+    let zipf = args.f64_or("zipf", 1.1)?;
+    let scheduler = match args.str_or("scheduler", "lr") {
+        "default" => SchedulerChoice::Default,
+        "layer" => SchedulerChoice::Layer,
+        "lr" => SchedulerChoice::LR,
+        "rl" => SchedulerChoice::Rl,
+        other => return Err(format!("unknown scheduler {other:?}")),
+    };
+
+    let mut cfg = SimConfig::default();
+    cfg.scheduler = scheduler;
+    cfg.inter_arrival_secs = Some(arrival.max(1e-6));
+    cfg.gc_enabled = !args.flag("no-gc");
+    cfg.retry_limit = args.get_parsed::<u32>("retry-limit")?.unwrap_or(10);
+    cfg.retry_backoff_secs = args.f64_or("backoff", 5.0)?;
+    cfg.snapshot_every = args.usize_or("snapshot-every", 1000)?.max(1);
+
+    let registry = Registry::with_corpus();
+    let wl = lrsched::sim::WorkloadConfig {
+        seed,
+        popularity: if zipf > 0.0 { Popularity::Zipf(zipf) } else { Popularity::Uniform },
+        duration_range: if dmax > 0.0 { Some((dmin, dmax.max(dmin))) } else { None },
+        ..Default::default()
+    };
+    let trace = WorkloadGen::new(&registry, wl).trace(pods);
+
+    let mut sim = Simulation::new(common::scale_nodes(nodes), registry, cfg);
+    let backend = args.str_or("backend", "native");
+    match backend {
+        "native" => {}
+        "dense" => {
+            // The dense path exercises the persistent ScoreArena hot path.
+            sim = sim.with_backend(Box::new(NativeScorer));
+        }
+        other => return Err(format!("unknown backend {other:?} (expected native|dense)")),
+    }
+    let wall = std::time::Instant::now();
+    let report = sim.run_trace(trace);
+    let wall = wall.elapsed().as_secs_f64();
+    sim.state.check_invariants().map_err(|e| format!("invariant violated: {e}"))?;
+
+    println!(
+        "scale: {} pods / {} nodes / {:.2}s arrivals / scheduler={} backend={}",
+        pods,
+        nodes,
+        arrival,
+        report.scheduler,
+        backend,
+    );
+    println!(
+        "submitted={} completed={} failed_pulls={} unschedulable={} retries={}",
+        report.submitted,
+        report.completed(),
+        report.failed_pulls,
+        report.unschedulable,
+        report.retries
+    );
+    println!(
+        "events queued={} virtual time={:.1}s wall={:.2}s throughput={:.0} pods/s",
+        sim.events_queued(),
+        sim.clock.now(),
+        wall,
+        pods as f64 / wall.max(1e-9)
+    );
+    println!(
+        "download total={:.1} GB final_std={:.4} snapshots={}",
+        report.total_download().as_gb(),
+        report.final_std(),
+        report.snapshots.len()
+    );
+    if !report.accounting_balanced() {
+        return Err(format!(
+            "dropped events: completed {} + failed {} + unschedulable {} != submitted {}",
+            report.completed(),
+            report.failed_pulls,
+            report.unschedulable,
+            report.submitted
+        ));
+    }
+    println!("accounting balanced: no dropped events");
+    Ok(())
+}
+
 fn run() -> Result<(), String> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     logging::init_from_env();
@@ -77,6 +196,10 @@ fn run() -> Result<(), String> {
         "help" | "--help" | "-h" => {
             match rest.first().map(|s| s.as_str()) {
                 Some("simulate") => println!("{}", cli::usage("simulate", "Run the simulator", &simulate_spec())),
+                Some("scale") => println!(
+                    "{}",
+                    cli::usage("scale", "Drive a large timed trace through the event engine", &scale_spec())
+                ),
                 Some(c @ ("fig3" | "fig4" | "fig5" | "table1")) => {
                     println!("{}", cli::usage(c, "Regenerate a paper experiment", &common_spec()))
                 }
@@ -84,6 +207,7 @@ fn run() -> Result<(), String> {
             }
             Ok(())
         }
+        "scale" => run_scale(&rest),
         "simulate" => {
             let args = cli::parse(&rest, &simulate_spec())?;
             apply_log_level(&args)?;

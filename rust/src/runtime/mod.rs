@@ -1,9 +1,24 @@
 //! The PJRT runtime: loads the AOT-compiled JAX/Pallas scoring artifacts
 //! (HLO text) and serves them on the scheduling hot path. Python never
 //! runs here — `make artifacts` is the only build-time Python step.
+//!
+//! The real runtime needs the external `xla` + `anyhow` crates and is
+//! compiled only with `--features xla`. The default build ships a stub
+//! [`XlaScorer`] with the same surface whose loaders report the backend as
+//! unavailable, so every caller (CLI `--backend xla`, benches, e2e tests)
+//! degrades to the native scorer instead of failing to compile.
 
+#[cfg(feature = "xla")]
 pub mod pjrt;
+#[cfg(feature = "xla")]
 pub mod scorer;
 
+#[cfg(feature = "xla")]
 pub use pjrt::PjRt;
+#[cfg(feature = "xla")]
 pub use scorer::XlaScorer;
+
+#[cfg(not(feature = "xla"))]
+pub mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaScorer;

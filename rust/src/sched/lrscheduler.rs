@@ -18,7 +18,7 @@ use super::context::CycleContext;
 use super::dynamic_weight::{weight_for, WeightParams, WeightPolicy};
 use super::framework::{select_best, Framework, NodeScore, Unschedulable};
 use super::layer_score;
-use super::scoring::{ScoreInputs, ScoreOutputs, ScoringBackend, NEG_MASK};
+use super::scoring::{ScoreArena, ScoreInputs, ScoreOutputs, ScoringBackend, NEG_MASK};
 use crate::cluster::NodeId;
 use crate::util::units::Bytes;
 
@@ -39,10 +39,18 @@ pub struct Decision {
 }
 
 /// Running ω-usage statistics (regenerates Fig. 3f).
+///
+/// Decisions are bucketed by comparing the winning ω against the policy's
+/// parameters: ω₁, ω₂, or — for the `ThreeLevel`/`Linear` policies whose
+/// weights land strictly between them — a separate mid bucket. (The seed
+/// counted *any* ω ≠ ω₁ as ω₂, so e.g. a ThreeLevel 1.25 decision
+/// corrupted the Fig. 3f ω₂ column.)
 #[derive(Debug, Clone, Default)]
 pub struct WeightStats {
     pub omega1_used: u64,
     pub omega2_used: u64,
+    /// Decisions whose ω matched neither ω₁ nor ω₂ (mid-range weights).
+    pub omega_mid_used: u64,
     /// ω of the *winning* node per decision, in order.
     pub omega_trace: Vec<f64>,
 }
@@ -57,6 +65,9 @@ pub struct LrScheduler {
     pub policy: Option<WeightPolicy>,
     /// Dense scoring backend (XLA artifact). None ⇒ native per-node math.
     backend: Option<Box<dyn ScoringBackend>>,
+    /// Persistent dense-input arena for the backend path — reused across
+    /// cycles instead of rebuilding O(N·L) buffers from zeros each time.
+    arena: ScoreArena,
     pub stats: WeightStats,
 }
 
@@ -68,6 +79,7 @@ impl LrScheduler {
             params: WeightParams::default(),
             policy,
             backend: None,
+            arena: ScoreArena::new(),
             stats: WeightStats::default(),
         }
     }
@@ -112,10 +124,14 @@ impl LrScheduler {
         };
         if let Some(policy) = self.policy {
             if !matches!(policy, WeightPolicy::Static(_)) {
+                // Bucket by the actual parameter values: ThreeLevel/Linear
+                // produce mid-range weights that are neither ω₁ nor ω₂.
                 if (decision.omega - self.params.omega1).abs() < 1e-9 {
                     self.stats.omega1_used += 1;
-                } else {
+                } else if (decision.omega - self.params.omega2).abs() < 1e-9 {
                     self.stats.omega2_used += 1;
+                } else {
+                    self.stats.omega_mid_used += 1;
                 }
             }
             self.stats.omega_trace.push(decision.omega);
@@ -167,7 +183,7 @@ impl LrScheduler {
         best.expect("nonempty feasible set")
     }
 
-    /// Dense path: build padded ScoreInputs and run the installed backend.
+    /// Dense path: fill the persistent arena and run the installed backend.
     /// Only the TwoLevel policy is expressible in the AOT artifact (the
     /// paper's Algorithm 1); other policies fall back to native.
     fn schedule_dense(
@@ -179,9 +195,17 @@ impl LrScheduler {
         if !matches!(policy, WeightPolicy::TwoLevel) {
             return self.schedule_native(ctx, policy, k8s_scores);
         }
-        let inputs = build_inputs(ctx, k8s_scores, &self.params);
-        let out: ScoreOutputs = self.backend.as_mut().unwrap().score(&inputs);
-        debug_assert!(out.final_score[out.best] > NEG_MASK / 2.0, "backend chose masked node");
+        let inputs = self.arena.fill(ctx, k8s_scores, &self.params);
+        let out: ScoreOutputs = self.backend.as_mut().unwrap().score(inputs);
+        // A masked/padding winner means the backend or its inputs are
+        // corrupt — binding that node would corrupt cluster state, so this
+        // must hold in release builds too, not just under debug_assert.
+        assert!(
+            out.final_score[out.best] > NEG_MASK / 2.0,
+            "scoring backend chose a masked node (best={}, score={})",
+            out.best,
+            out.final_score[out.best]
+        );
         let node = NodeId(out.best as u32);
         let k8s = k8s_scores
             .iter()
@@ -323,6 +347,46 @@ mod tests {
         let d = layer.schedule(&ctx).unwrap();
         assert_eq!(d.node, NodeId(2));
         assert_eq!(d.omega, 4.0);
+    }
+
+    #[test]
+    fn three_level_mid_weight_counts_in_its_own_bucket() {
+        use crate::sched::dynamic_weight::WeightPolicy;
+        let mut state = cluster(3);
+        let cache = cache();
+        let corpus = hub::corpus();
+        let wp = corpus.iter().find(|m| m.name == "wordpress" && m.tag == "6.4").unwrap();
+        let (_, layers) = state.intern_image(wp);
+        state.install_image(NodeId(2), &wp.image_ref(), &layers).unwrap();
+
+        let mut b = PodBuilder::new();
+        // Nodes 0/1: nearly full → infeasible for a 0.5-core pod.
+        for i in 0..2 {
+            let filler = b.build("busybox:1.36", Resources::cores_gb(3.8, 3.8));
+            let fid = state.submit_pod(filler);
+            state.bind(fid, NodeId(i)).unwrap();
+        }
+        // Node 2: cpu 50%, mem 0% → S_CPU passes, S_STD (0.25) fails the
+        // gate, layers local → ThreeLevel lands on the (ω₁+ω₂)/2 = 1.25
+        // mid weight.
+        let skew = b.build("busybox:1.36", Resources::cores_gb(2.0, 0.0));
+        let sid = state.submit_pod(skew);
+        state.bind(sid, NodeId(2)).unwrap();
+
+        let pod = b.build("wordpress:6.4", Resources::cores_gb(0.5, 0.5));
+        let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+        let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+        let mut three =
+            LrScheduler::new("three-level", default_framework(), Some(WeightPolicy::ThreeLevel));
+        let d = three.schedule(&ctx).unwrap();
+        assert_eq!(d.node, NodeId(2), "only feasible node");
+        assert!((d.omega - 1.25).abs() < 1e-9, "mid weight expected, got {}", d.omega);
+        // The seed miscounted any ω ≠ ω₁ as ω₂; mid decisions now have
+        // their own bucket and leave the ω₂ column clean.
+        assert_eq!(three.stats.omega1_used, 0);
+        assert_eq!(three.stats.omega2_used, 0);
+        assert_eq!(three.stats.omega_mid_used, 1);
+        assert_eq!(three.stats.omega_trace, vec![1.25]);
     }
 
     #[test]

@@ -27,9 +27,12 @@ impl SchedulingQueue {
         self.active.pop_front()
     }
 
-    /// Park an unschedulable pod until `now + backoff_secs`.
-    pub fn park(&mut self, pod: PodId, now: f64) {
-        self.backoff.push((pod, now + self.backoff_secs));
+    /// Park an unschedulable pod until `now + backoff_secs`; returns the
+    /// release time so event-driven callers can schedule the release.
+    pub fn park(&mut self, pod: PodId, now: f64) -> f64 {
+        let release_at = now + self.backoff_secs;
+        self.backoff.push((pod, release_at));
+        release_at
     }
 
     /// Move pods whose back-off expired back to the active queue.
@@ -83,7 +86,7 @@ mod tests {
     #[test]
     fn backoff_and_release() {
         let mut q = SchedulingQueue::new();
-        q.park(PodId(1), 0.0);
+        assert_eq!(q.park(PodId(1), 0.0), 5.0);
         assert!(q.pop().is_none());
         assert_eq!(q.parked_len(), 1);
         assert_eq!(q.next_release_at(), Some(5.0));

@@ -149,6 +149,134 @@ impl ScoringBackend for NativeScorer {
     }
 }
 
+/// Persistent dense-input arena for the scoring hot path.
+///
+/// [`ScoreInputs::zeros`] rebuilds every O(N·L) buffer from scratch each
+/// scheduling cycle. Between consecutive cycles almost nothing changes:
+/// node presence rows only change when a node installs or evicts layers,
+/// the interner only appends, and the sparse `req`/`feasible` indicators
+/// touch a handful of entries. The arena keeps one `ScoreInputs` alive and
+/// applies those deltas — undo lists for the sparse vectors, a per-node
+/// `layers_version` check for the dense presence rows — so steady-state
+/// cycles are allocation-free and O(dirty) instead of O(N·L).
+///
+/// Layer capacity is padded to a power of two so interner growth triggers
+/// only O(log L) full reallocations. Padding columns keep `req = 0` and
+/// padding rows keep `feasible = 0`, which both backends already mask.
+///
+/// An arena must be reused against a single evolving [`ClusterState`]
+/// (`layers_version` comparisons are meaningless across states); the
+/// engine guarantees this by owning one scheduler per simulation.
+///
+/// [`ClusterState`]: crate::cluster::ClusterState
+pub struct ScoreArena {
+    inputs: ScoreInputs,
+    /// `layers_version` seen per node row (u64::MAX = never filled).
+    node_versions: Vec<u64>,
+    /// Indices set in `req` by the previous fill (sparse undo list).
+    req_set: Vec<u32>,
+    /// Node indices with `k8s_score`/`feasible` set by the previous fill.
+    feas_set: Vec<u32>,
+    /// Prefix of `sizes_mb` already written (the interner only appends).
+    sizes_filled: usize,
+    /// Observability: full arena reallocations (capacity growth).
+    pub full_rebuilds: u64,
+    /// Observability: presence rows rewritten because a node's layer set
+    /// changed (or was never filled).
+    pub rows_refilled: u64,
+}
+
+impl Default for ScoreArena {
+    fn default() -> ScoreArena {
+        ScoreArena::new()
+    }
+}
+
+impl ScoreArena {
+    pub fn new() -> ScoreArena {
+        ScoreArena {
+            inputs: ScoreInputs::zeros(0, 0, WeightParams::default()),
+            node_versions: Vec::new(),
+            req_set: Vec::new(),
+            feas_set: Vec::new(),
+            sizes_filled: 0,
+            full_rebuilds: 0,
+            rows_refilled: 0,
+        }
+    }
+
+    /// Bring the arena up to date for one cycle and return the inputs.
+    /// Equivalent to `lrscheduler::build_inputs` (the padded entries are
+    /// masked), but incremental.
+    pub fn fill(
+        &mut self,
+        ctx: &crate::sched::context::CycleContext,
+        k8s_scores: &[crate::sched::framework::NodeScore],
+        params: &WeightParams,
+    ) -> &ScoreInputs {
+        let n = ctx.state.node_count();
+        let l = ctx.state.interner.len();
+        if n > self.inputs.n_nodes || l > self.inputs.n_layers {
+            let n_cap = n.max(self.inputs.n_nodes);
+            let l_cap = l.next_power_of_two().max(64).max(self.inputs.n_layers);
+            self.inputs = ScoreInputs::zeros(n_cap, l_cap, *params);
+            self.node_versions = vec![u64::MAX; n_cap];
+            self.req_set.clear();
+            self.feas_set.clear();
+            self.sizes_filled = 0;
+            self.full_rebuilds += 1;
+        }
+        let x = &mut self.inputs;
+        x.params = *params;
+        let lcap = x.n_layers;
+
+        // Layer sizes: the interner is append-only, so extend the prefix.
+        for i in self.sizes_filled..l {
+            x.sizes_mb[i] =
+                ctx.state.interner.size(crate::registry::LayerId(i as u32)).as_mb() as f32;
+        }
+        self.sizes_filled = self.sizes_filled.max(l);
+
+        // Required-layer indicator: undo the previous cycle, set this one.
+        for &j in &self.req_set {
+            x.req[j as usize] = 0.0;
+        }
+        self.req_set.clear();
+        for id in ctx.required_layers.iter() {
+            x.req[id.0 as usize] = 1.0;
+            self.req_set.push(id.0);
+        }
+
+        // Presence rows: rewrite only nodes whose layer set changed.
+        for (i, node) in ctx.state.nodes().iter().enumerate() {
+            if self.node_versions[i] != node.layers_version {
+                let row = &mut x.present[i * lcap..(i + 1) * lcap];
+                row.fill(0.0);
+                node.layers.write_indicator(row);
+                self.node_versions[i] = node.layers_version;
+                self.rows_refilled += 1;
+            }
+            x.cpu_used[i] = node.used.cpu.0 as f32;
+            x.cpu_cap[i] = node.capacity.cpu.0.max(1) as f32;
+            x.mem_used[i] = node.used.memory.0 as f32;
+            x.mem_cap[i] = node.capacity.memory.0.max(1) as f32;
+        }
+
+        // Feasibility + S_K8s: undo the previous cycle, set this one.
+        for &i in &self.feas_set {
+            x.k8s_score[i as usize] = 0.0;
+            x.feasible[i as usize] = 0.0;
+        }
+        self.feas_set.clear();
+        for ns in k8s_scores {
+            x.k8s_score[ns.node.0 as usize] = ns.total as f32;
+            x.feasible[ns.node.0 as usize] = 1.0;
+            self.feas_set.push(ns.node.0);
+        }
+        &self.inputs
+    }
+}
+
 /// First-index argmax, matching `jnp.argmax` semantics for ties.
 pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
@@ -240,6 +368,100 @@ mod tests {
     fn argmax_first_tie_wins() {
         assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
         assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    mod arena {
+        use super::super::*;
+        use crate::cluster::{NodeId, PodBuilder, Resources};
+        use crate::registry::hub;
+        use crate::sched::context::CycleContext;
+        use crate::sched::lrscheduler::build_inputs;
+        use crate::sched::profiles::default_framework;
+        use crate::testing::fixtures;
+
+        /// Outputs of a fresh zeros-rebuild and the arena must agree on
+        /// every real node and on the winner. `state` is the single
+        /// evolving cluster the arena tracks (its interner only appends).
+        fn assert_agree(
+            state: &mut crate::cluster::ClusterState,
+            cache: &crate::registry::MetadataCache,
+            arena: &mut ScoreArena,
+            image: &str,
+            tag: &str,
+        ) {
+            let pod = PodBuilder::new().build(
+                &format!("{image}:{tag}"),
+                Resources::cores_gb(0.25, 0.25),
+            );
+            let (meta, req, bytes) = CycleContext::prepare(state, cache, &pod);
+            let ctx = CycleContext::new(state, &pod, meta, req, bytes);
+            let fw = default_framework();
+            let feasible = fw.feasible(&ctx).expect("feasible nodes");
+            let scores = fw.score(&ctx, &feasible);
+            let params = WeightParams::default();
+
+            let fresh = build_inputs(&ctx, &scores, &params);
+            let out_fresh = NativeScorer.score(&fresh);
+            let reused = arena.fill(&ctx, &scores, &params);
+            let out_arena = NativeScorer.score(reused);
+
+            let n = ctx.state.node_count();
+            for i in 0..n {
+                assert_eq!(out_fresh.omega[i], out_arena.omega[i], "omega[{i}]");
+                assert!(
+                    (out_fresh.layer_score[i] - out_arena.layer_score[i]).abs() < 1e-4,
+                    "layer[{i}]: {} vs {}",
+                    out_fresh.layer_score[i],
+                    out_arena.layer_score[i]
+                );
+                assert!(
+                    (out_fresh.final_score[i] - out_arena.final_score[i]).abs() < 1e-3,
+                    "final[{i}]"
+                );
+            }
+            assert_eq!(out_fresh.best, out_arena.best, "winner differs");
+        }
+
+        #[test]
+        fn arena_matches_zeros_rebuild_across_mutations() {
+            let mut state = fixtures::uniform_cluster(4);
+            let cache = fixtures::corpus_cache();
+            let mut arena = ScoreArena::new();
+            // Cold cluster.
+            assert_agree(&mut state, &cache, &mut arena, "redis", "7.2");
+            assert_eq!(arena.full_rebuilds, 1);
+
+            // Install an image → its node's presence row goes dirty.
+            let corpus = hub::corpus();
+            let wp = corpus.iter().find(|m| m.name == "wordpress" && m.tag == "6.4").unwrap();
+            let (_, layers) = state.intern_image(wp);
+            state.install_image(NodeId(1), &wp.image_ref(), &layers).unwrap();
+            assert_agree(&mut state, &cache, &mut arena, "wordpress", "6.4");
+
+            // Evict part of the image → dirty again, bits must clear.
+            let ids: Vec<_> = layers.iter().collect();
+            state.evict_layers(NodeId(1), &ids);
+            state.remove_image(NodeId(1), &wp.image_ref());
+            assert_agree(&mut state, &cache, &mut arena, "wordpress", "6.4");
+
+            // A different pod image only flips the sparse req indicator.
+            assert_agree(&mut state, &cache, &mut arena, "nginx", "1.25");
+        }
+
+        #[test]
+        fn arena_skips_clean_rows() {
+            let mut state = fixtures::uniform_cluster(3);
+            let cache = fixtures::corpus_cache();
+            let mut arena = ScoreArena::new();
+            assert_agree(&mut state, &cache, &mut arena, "redis", "7.2");
+            let rows_after_first = arena.rows_refilled;
+            assert_eq!(rows_after_first, 3, "all rows filled once");
+            // Same cluster state: no presence row should be rewritten.
+            assert_agree(&mut state, &cache, &mut arena, "nginx", "1.25");
+            assert_agree(&mut state, &cache, &mut arena, "redis", "7.2");
+            assert_eq!(arena.rows_refilled, rows_after_first);
+            assert_eq!(arena.full_rebuilds, 1);
+        }
     }
 
     #[test]

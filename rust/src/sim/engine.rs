@@ -2,24 +2,36 @@
 //! receives pod requests, drives the watcher, invokes the scheduler, binds
 //! pods, and runs the kubelet pull/start lifecycle against the link model.
 //!
+//! The engine is a true event-driven core: arrivals, pull completions,
+//! terminations, watcher ticks, GC sweeps, and scheduling-queue back-off
+//! releases are timestamped events popped in order from one
+//! [`EventQueue`] (`sim::events`). Unschedulable pods are not dropped:
+//! they park in a [`SchedulingQueue`] with back-off and retry until they
+//! bind or exhaust `SimConfig::retry_limit`.
+//!
 //! Two arrival modes reproduce the paper's protocols:
 //! - **Sequential** (`inter_arrival_secs = None`): deploy, wait until the
-//!   container is ready, then submit the next pod — §VI-B's measurement
-//!   protocol for Table I / Fig. 5.
+//!   container is ready (or the pod gives up), then submit the next pod —
+//!   §VI-B's measurement protocol for Table I / Fig. 5.
 //! - **Timed arrivals** (`Some(dt)`): pods arrive every `dt` seconds and
-//!   pulls overlap — the load-test mode used by the concurrency tests.
+//!   pulls overlap — the load-test mode used by the concurrency tests and
+//!   the 100k-pod `scale` harness.
 
 use super::bandwidth::LinkModel;
 use super::clock::Clock;
 use super::download::PullManager;
-use super::kubelet::{self, PendingStart};
+use super::events::{EventPayload, EventQueue};
+use super::kubelet::{self, ImageLayerStore, PendingStart};
 use super::metrics::{self, ClusterSnapshot, PodRecord};
-use crate::cluster::{ClusterState, EventKind, EventLog, Node, Pod};
+use crate::cluster::{ClusterState, EventKind, EventLog, Node, Pod, PodId};
 use crate::registry::{MetadataCache, Registry, Watcher};
+use crate::sched::queue::SchedulingQueue;
 use crate::sched::rl::{RlParams, RlScheduler};
-use crate::sched::{CycleContext, FrameworkConfig, LrScheduler, WeightParams};
 use crate::sched::scoring::ScoringBackend;
+use crate::sched::{CycleContext, FrameworkConfig, LrScheduler, WeightParams};
 use crate::util::units::{Bandwidth, Bytes};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Which of the paper's three schedulers to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -76,6 +88,16 @@ pub struct SimConfig {
     pub p2p_lan_mbps: Option<f64>,
     /// Registry watcher poll interval (paper §V-1 default: 10 s).
     pub watcher_interval_secs: f64,
+    /// Retries granted to an unschedulable pod after its first failed
+    /// cycle before it is counted unschedulable (kube-scheduler's backoff
+    /// queue retries indefinitely; a cap keeps simulations terminating).
+    pub retry_limit: u32,
+    /// Back-off before an unschedulable pod re-enters the active queue.
+    pub retry_backoff_secs: f64,
+    /// Record a cluster snapshot every N successful placements (1 = every
+    /// placement, the paper-experiment default; the 100k-pod scale harness
+    /// raises this to bound memory). A final snapshot is always taken.
+    pub snapshot_every: usize,
 }
 
 impl Default for SimConfig {
@@ -92,6 +114,9 @@ impl Default for SimConfig {
             gc_low_pct: 0.70,
             p2p_lan_mbps: None,
             watcher_interval_secs: crate::registry::watcher::DEFAULT_POLL_SECS,
+            retry_limit: 3,
+            retry_backoff_secs: 5.0,
+            snapshot_every: 1,
         }
     }
 }
@@ -102,10 +127,18 @@ pub struct SimReport {
     pub scheduler: &'static str,
     pub records: Vec<PodRecord>,
     pub snapshots: Vec<ClusterSnapshot>,
+    /// Pods submitted to the API server.
+    pub submitted: usize,
+    /// Pods that exhausted their retries without binding.
     pub unschedulable: usize,
+    /// Bound pods whose image install wedged (ImagePullBackOff analog).
     pub failed_pulls: usize,
+    /// Scheduling-cycle failures that parked a pod for retry.
+    pub retries: u64,
     pub omega1_used: u64,
     pub omega2_used: u64,
+    /// Decisions taken at a mid-range ω (ThreeLevel / Linear policies).
+    pub omega_mid_used: u64,
     pub omega_trace: Vec<f64>,
 }
 
@@ -122,8 +155,20 @@ impl SimReport {
         self.snapshots.last().map(|s| s.std_score).unwrap_or(0.0)
     }
 
+    /// Pods the scheduler bound (includes pulls that later wedged).
     pub fn deployed(&self) -> usize {
         self.records.len()
+    }
+
+    /// Pods that bound *and* started (deployed minus wedged pulls).
+    pub fn completed(&self) -> usize {
+        self.records.len() - self.failed_pulls
+    }
+
+    /// No dropped events: every submitted pod is accounted for as
+    /// completed, wedged, or unschedulable-after-retries.
+    pub fn accounting_balanced(&self) -> bool {
+        self.completed() + self.failed_pulls + self.unschedulable == self.submitted
     }
 }
 
@@ -152,6 +197,22 @@ impl SchedImpl {
     }
 }
 
+/// Monotonic suffix so every `Simulation` gets its own metadata-cache path
+/// (the seed hard-coded one `/tmp` path, leaking state between runs that
+/// chose to persist the cache).
+static CACHE_PATH_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn unique_cache_path() -> String {
+    std::env::temp_dir()
+        .join(format!(
+            "lrsched-sim-cache-{}-{}.json",
+            std::process::id(),
+            CACHE_PATH_SEQ.fetch_add(1, Ordering::Relaxed)
+        ))
+        .to_string_lossy()
+        .into_owned()
+}
+
 /// The simulator.
 pub struct Simulation {
     pub state: ClusterState,
@@ -162,14 +223,28 @@ pub struct Simulation {
     links: LinkModel,
     pulls: PullManager,
     scheduler: SchedImpl,
-    pending: Vec<PendingStart>,
-    /// (termination time, pod) for finite-duration pods.
-    terminations: Vec<(f64, crate::cluster::PodId)>,
+    /// In-flight pulls keyed by pod (completion fires as an event).
+    pending: HashMap<PodId, PendingStart>,
+    /// containerd-image-store analog, scoped to this simulation.
+    images: ImageLayerStore,
+    /// The unified discrete-event queue.
+    queue: EventQueue,
+    /// Active/back-off queues for pods awaiting (re)scheduling.
+    sched_queue: SchedulingQueue,
+    /// Failed scheduling cycles per still-pending pod.
+    retry_counts: HashMap<PodId, u32>,
+    /// Sequential-protocol pods not yet submitted (next arrives when the
+    /// current pod resolves: starts, wedges, or gives up).
+    seq_backlog: VecDeque<Pod>,
+    /// Is a WatcherTick event currently scheduled?
+    watcher_armed: bool,
     pub events: EventLog,
     pub records: Vec<PodRecord>,
     pub snapshots: Vec<ClusterSnapshot>,
+    pub submitted: usize,
     pub unschedulable: usize,
     pub failed_pulls: usize,
+    pub retries: u64,
     cfg: SimConfig,
 }
 
@@ -190,22 +265,31 @@ impl Simulation {
         }
         let scheduler = SchedImpl::build(&cfg);
         let n_nodes = state.node_count();
+        let mut sched_queue = SchedulingQueue::new();
+        sched_queue.backoff_secs = cfg.retry_backoff_secs;
         Simulation {
             state,
             registry,
-            cache: MetadataCache::new("/tmp/lrsched-sim-cache.json"),
+            cache: MetadataCache::new(&unique_cache_path()),
             watcher: Watcher::new(cfg.watcher_interval_secs),
             clock: Clock::new(),
             links,
             pulls: PullManager::new(n_nodes),
             scheduler,
-            pending: Vec::new(),
-            terminations: Vec::new(),
+            pending: HashMap::new(),
+            images: ImageLayerStore::new(),
+            queue: EventQueue::new(),
+            sched_queue,
+            retry_counts: HashMap::new(),
+            seq_backlog: VecDeque::new(),
+            watcher_armed: false,
             events: EventLog::new(),
             records: Vec::new(),
             snapshots: Vec::new(),
+            submitted: 0,
             unschedulable: 0,
             failed_pulls: 0,
+            retries: 0,
             cfg,
         }
     }
@@ -220,110 +304,109 @@ impl Simulation {
         self
     }
 
-    /// Complete every pending pull with `ready_at <= now`, then release
-    /// finite-duration pods whose run ended by `now`.
-    fn complete_due_pulls(&mut self, now: f64) {
-        let mut i = 0;
-        while i < self.pending.len() {
-            if self.pending[i].plan.ready_at <= now {
-                let p = self.pending.swap_remove(i);
-                self.finish_pull(p);
-            } else {
-                i += 1;
-            }
-        }
-        self.pulls.gc(now);
-        let mut j = 0;
-        while j < self.terminations.len() {
-            if self.terminations[j].0 <= now {
-                let (_, pod) = self.terminations.swap_remove(j);
-                // Resources release; layers stay cached until GC needs them.
-                let _ = self.state.unbind(pod);
-            } else {
-                j += 1;
-            }
-        }
+    /// Total events ever queued (observability for the scale harness).
+    pub fn events_queued(&self) -> u64 {
+        self.queue.pushed_total
     }
 
-    /// Kubelet image GC: when a node crosses the high disk-usage threshold
-    /// (kubelet's ImageGCHighThresholdPercent analog, 85%), evict unused
-    /// images down to the low threshold (70%).
-    fn gc_pressure_sweep(&mut self) {
-        if !self.cfg.gc_enabled {
+    // --- event loop -------------------------------------------------------
+
+    /// Schedule the next watcher poll if none is pending.
+    fn arm_watcher(&mut self, now: f64) {
+        if self.watcher_armed {
             return;
         }
-        let now = self.clock.now();
-        for i in 0..self.state.node_count() {
-            let node = crate::cluster::NodeId(i as u32);
-            let n = self.state.node(node);
-            let (disk, used) = (n.disk.0 as f64, n.disk_used.0 as f64);
-            if disk > 0.0 && used / disk > self.cfg.gc_high_pct {
-                // Free down to the low-threshold usage.
-                let target = Bytes((disk * (1.0 - self.cfg.gc_low_pct)) as u64);
-                let freed = kubelet::gc_images(&mut self.state, node, target);
-                if freed > Bytes::ZERO {
-                    self.events.record(
-                        now,
-                        crate::cluster::PodId(u64::MAX), // node-level event
-                        EventKind::Evicted { node, bytes: freed },
-                    );
+        let at = self.watcher.next_poll_at().max(now);
+        if at.is_finite() {
+            self.queue.push(at, EventPayload::WatcherTick);
+            self.watcher_armed = true;
+        }
+    }
+
+    /// Pop and dispatch events until the simulation quiesces. The watcher
+    /// re-arms itself only while real work remains, so the loop terminates.
+    fn run_events(&mut self) {
+        while let Some(ev) = self.queue.pop() {
+            if ev.payload.is_watcher() && !self.queue.has_pending_work() {
+                // Nothing left that a poll could affect: let the sim drain.
+                self.watcher_armed = false;
+                continue;
+            }
+            self.clock.advance_to(ev.at);
+            let t = self.clock.now();
+            match ev.payload {
+                EventPayload::WatcherTick => {
+                    self.watcher_armed = false;
+                    self.watcher.poll(t, &self.registry, &mut self.cache);
+                    let next = self.watcher.next_poll_at();
+                    if self.queue.has_pending_work() && next.is_finite() && next > t {
+                        self.queue.push(next, EventPayload::WatcherTick);
+                        self.watcher_armed = true;
+                    }
                 }
+                EventPayload::Arrival { pod } => {
+                    let pid = self.state.submit_pod(pod);
+                    self.submitted += 1;
+                    self.events.record(t, pid, EventKind::Submitted);
+                    self.sched_queue.push(pid);
+                    self.drain_sched_queue();
+                }
+                EventPayload::BackoffRelease => {
+                    if self.sched_queue.release_due(t) > 0 {
+                        self.drain_sched_queue();
+                    }
+                }
+                EventPayload::PullComplete { pod } => {
+                    if let Some(p) = self.pending.remove(&pod) {
+                        let duration = self.state.pod(pod).and_then(|x| x.duration_secs);
+                        let started = self.finish_pull(p);
+                        self.pulls.gc(t);
+                        if started {
+                            if let Some(d) = duration {
+                                self.queue.push(t + d, EventPayload::PodTermination { pod });
+                            }
+                        }
+                        self.chain_next_arrival(t);
+                    }
+                }
+                EventPayload::PodTermination { pod } => {
+                    // Resources release; layers stay cached until GC needs
+                    // them (image retention is the kubelet's GC job).
+                    let _ = self.state.unbind(pod);
+                    if self.cfg.gc_enabled {
+                        self.queue.push(t, EventPayload::GcSweep);
+                    }
+                }
+                EventPayload::GcSweep => self.gc_pressure_sweep(),
             }
         }
     }
 
-    fn finish_pull(&mut self, p: PendingStart) {
-        if self.cfg.gc_enabled {
-            let need = p.layers.difference_bytes(
-                &self.state.node(p.node).layers,
-                &self.state.interner,
-            );
-            if need > self.state.node(p.node).disk_free() {
-                let freed = kubelet::gc_images(&mut self.state, p.node, need);
-                if freed > Bytes::ZERO {
-                    self.events.record(
-                        p.plan.ready_at,
-                        p.pod,
-                        EventKind::Evicted { node: p.node, bytes: freed },
-                    );
-                }
-            }
-        }
-        match kubelet::complete_pull(&mut self.state, &p) {
-            Ok(_) => {
-                kubelet::remember_image_layers(&p.image, &p.layers);
-                self.events.record(
-                    p.plan.ready_at,
-                    p.pod,
-                    EventKind::PullFinished { node: p.node, secs: p.plan.ready_at - p.plan.start },
-                );
-                self.events
-                    .record(p.plan.ready_at, p.pod, EventKind::Started { node: p.node });
-            }
-            Err(e) => {
-                // Disk overcommitted by concurrent binds: the pod wedges
-                // (ImagePullBackOff analog). Counted, surfaced in events.
-                self.failed_pulls += 1;
-                self.events.record(
-                    p.plan.ready_at,
-                    p.pod,
-                    EventKind::Unschedulable { reason: format!("pull failed: {e}") },
-                );
+    /// In the sequential protocol, the next pod arrives once the current
+    /// one resolves (container started, pull wedged, or retries exhausted).
+    fn chain_next_arrival(&mut self, t: f64) {
+        if self.cfg.inter_arrival_secs.is_none() {
+            if let Some(pod) = self.seq_backlog.pop_front() {
+                self.queue.push(t, EventPayload::Arrival { pod });
             }
         }
     }
 
-    /// Deploy one pod at the current virtual time. Returns false if the
-    /// scheduler found no feasible node.
-    pub fn deploy(&mut self, pod: Pod) -> bool {
+    fn drain_sched_queue(&mut self) {
+        while let Some(pid) = self.sched_queue.pop() {
+            self.try_schedule(pid);
+        }
+    }
+
+    // --- scheduling cycle -------------------------------------------------
+
+    /// One scheduling cycle for `pid`: filter + score + bind + begin pull,
+    /// or park with back-off / give up.
+    fn try_schedule(&mut self, pid: PodId) {
         let now = self.clock.now();
-        self.watcher.tick(now, &self.registry, &mut self.cache);
-        self.complete_due_pulls(now);
         self.gc_pressure_sweep();
 
-        let pid = self.state.submit_pod(pod.clone());
-        self.events.record(now, pid, EventKind::Submitted);
-
+        let pod = self.state.pod(pid).cloned().expect("queued pod exists");
         let (meta, required, bytes) = CycleContext::prepare(&mut self.state, &self.cache, &pod);
         let ctx = CycleContext::new(&self.state, &pod, meta, required.clone(), bytes);
         let decision = match &mut self.scheduler {
@@ -349,13 +432,41 @@ impl Simulation {
             Ok(d) => d,
             Err(u) => {
                 drop(ctx);
-                self.unschedulable += 1;
-                self.events
-                    .record(now, pid, EventKind::Unschedulable { reason: u.to_string() });
-                return false;
+                let attempts = {
+                    let c = self.retry_counts.entry(pid).or_insert(0);
+                    *c += 1;
+                    *c
+                };
+                if attempts > self.cfg.retry_limit {
+                    // Retries exhausted: the pod is unschedulable for good.
+                    self.retry_counts.remove(&pid);
+                    self.unschedulable += 1;
+                    self.events
+                        .record(now, pid, EventKind::Unschedulable { reason: u.to_string() });
+                    self.chain_next_arrival(now);
+                } else {
+                    // Park with back-off and retry (kube-scheduler's
+                    // unschedulable queue, instead of dropping the pod).
+                    self.retries += 1;
+                    let release_at = self.sched_queue.park(pid, now);
+                    self.queue.push(release_at, EventPayload::BackoffRelease);
+                    self.events.record(
+                        now,
+                        pid,
+                        EventKind::Unschedulable {
+                            reason: format!(
+                                "parked for retry {attempts}/{} (0/{} nodes available)",
+                                self.cfg.retry_limit,
+                                u.rejections.len()
+                            ),
+                        },
+                    );
+                }
+                return;
             }
         };
         drop(ctx);
+        self.retry_counts.remove(&pid);
 
         self.events.record(
             now,
@@ -387,16 +498,8 @@ impl Simulation {
         let (wan_bytes, p2p_bytes) = (pending.wan_bytes, pending.p2p_bytes);
         let ready_at = pending.plan.ready_at;
         let download_secs = ready_at - now;
-        self.pending.push(pending);
-        if let Some(d) = pod.duration_secs {
-            self.terminations.push((ready_at + d, pid));
-        }
-
-        if self.cfg.inter_arrival_secs.is_none() {
-            // Sequential protocol: wait for the container to be ready.
-            self.clock.advance_to(ready_at);
-            self.complete_due_pulls(ready_at);
-        }
+        self.pending.insert(pid, pending);
+        self.queue.push(ready_at, EventPayload::PullComplete { pod: pid });
 
         let std_after = metrics::cluster_std(&self.state);
         if let SchedImpl::Rl(s) = &mut self.scheduler {
@@ -416,47 +519,151 @@ impl Simulation {
             final_score: decision.final_score,
             at: now,
         });
-        self.snapshots.push(metrics::snapshot(&self.state, self.clock.now()));
-        true
+        let every = self.cfg.snapshot_every.max(1);
+        if self.records.len() % every == 0 {
+            self.snapshots.push(metrics::snapshot(&self.state, now));
+        }
     }
 
-    /// Run a whole trace; timed mode advances the clock between arrivals.
-    pub fn run_trace(&mut self, pods: Vec<Pod>) -> SimReport {
-        for pod in pods {
-            self.deploy(pod);
-            if let Some(dt) = self.cfg.inter_arrival_secs {
-                let t = self.clock.now() + dt;
-                self.clock.advance_to(t);
+    // --- kubelet ----------------------------------------------------------
+
+    /// Kubelet image GC: when a node crosses the high disk-usage threshold
+    /// (kubelet's ImageGCHighThresholdPercent analog, 85%), evict unused
+    /// images down to the low threshold (70%).
+    fn gc_pressure_sweep(&mut self) {
+        if !self.cfg.gc_enabled {
+            return;
+        }
+        let now = self.clock.now();
+        for i in 0..self.state.node_count() {
+            let node = crate::cluster::NodeId(i as u32);
+            let n = self.state.node(node);
+            let (disk, used) = (n.disk.0 as f64, n.disk_used.0 as f64);
+            if disk > 0.0 && used / disk > self.cfg.gc_high_pct {
+                // Free down to the low-threshold usage.
+                let target = Bytes((disk * (1.0 - self.cfg.gc_low_pct)) as u64);
+                let freed = kubelet::gc_images(&mut self.state, &self.images, node, target);
+                if freed > Bytes::ZERO {
+                    self.events.record(
+                        now,
+                        crate::cluster::PodId(u64::MAX), // node-level event
+                        EventKind::Evicted { node, bytes: freed },
+                    );
+                }
             }
         }
-        // Drain outstanding pulls.
-        let drain_at = self
-            .pending
-            .iter()
-            .map(|p| p.plan.ready_at)
-            .fold(self.clock.now(), f64::max);
-        self.clock.advance_to(drain_at);
-        self.complete_due_pulls(drain_at);
+    }
+
+    /// Install the pulled image and start the container. Returns whether
+    /// the container actually started.
+    fn finish_pull(&mut self, p: PendingStart) -> bool {
+        let now = p.plan.ready_at;
+        if self.cfg.gc_enabled {
+            let need = p.layers.difference_bytes(
+                &self.state.node(p.node).layers,
+                &self.state.interner,
+            );
+            if need > self.state.node(p.node).disk_free() {
+                let freed = kubelet::gc_images(&mut self.state, &self.images, p.node, need);
+                if freed > Bytes::ZERO {
+                    self.events.record(
+                        now,
+                        p.pod,
+                        EventKind::Evicted { node: p.node, bytes: freed },
+                    );
+                }
+            }
+        }
+        match kubelet::complete_pull(&mut self.state, &p) {
+            Ok(_) => {
+                self.images.remember(&p.image, &p.layers);
+                self.events.record(
+                    now,
+                    p.pod,
+                    EventKind::PullFinished { node: p.node, secs: now - p.plan.start },
+                );
+                self.events.record(now, p.pod, EventKind::Started { node: p.node });
+                true
+            }
+            Err(e) => {
+                // Disk overcommitted by concurrent binds: the pod wedges
+                // (ImagePullBackOff analog). Counted, surfaced in events.
+                self.failed_pulls += 1;
+                self.events.record(
+                    now,
+                    p.pod,
+                    EventKind::Unschedulable { reason: format!("pull failed: {e}") },
+                );
+                false
+            }
+        }
+    }
+
+    // --- public driving API ----------------------------------------------
+
+    /// Deploy one pod at the current virtual time and run the event loop to
+    /// quiescence. Returns false if the scheduler never found a feasible
+    /// node (even after retries).
+    pub fn deploy(&mut self, pod: Pod) -> bool {
+        let pid = pod.id;
+        let now = self.clock.now();
+        self.arm_watcher(now);
+        self.queue.push(now, EventPayload::Arrival { pod });
+        self.run_events();
+        // A record exists iff the pod bound. (The binding itself may be
+        // gone already: a finite-duration pod can terminate inside the
+        // same drain.)
+        self.records.iter().rev().any(|r| r.pod == pid)
+    }
+
+    /// Run a whole trace through the event queue. Timed mode enqueues all
+    /// arrivals up front; sequential mode chains each arrival to the
+    /// previous pod's resolution. Returns once every event — including
+    /// terminations and back-off releases due after the last pull — fired.
+    pub fn run_trace(&mut self, pods: Vec<Pod>) -> SimReport {
+        let t0 = self.clock.now();
+        self.arm_watcher(t0);
+        match self.cfg.inter_arrival_secs {
+            Some(dt) => {
+                for (i, pod) in pods.into_iter().enumerate() {
+                    self.queue.push(t0 + i as f64 * dt, EventPayload::Arrival { pod });
+                }
+            }
+            None => {
+                self.seq_backlog.extend(pods);
+                if let Some(pod) = self.seq_backlog.pop_front() {
+                    self.queue.push(t0, EventPayload::Arrival { pod });
+                }
+            }
+        }
+        self.run_events();
+        // Final snapshot so end-of-run metrics (final_std, disk usage) see
+        // the fully drained state — terminations included.
+        self.snapshots.push(metrics::snapshot(&self.state, self.clock.now()));
         self.report()
     }
 
     pub fn report(&self) -> SimReport {
-        let (w1, w2, trace) = match &self.scheduler {
+        let (w1, w2, wmid, trace) = match &self.scheduler {
             SchedImpl::Lr(s) => (
                 s.stats.omega1_used,
                 s.stats.omega2_used,
+                s.stats.omega_mid_used,
                 s.stats.omega_trace.clone(),
             ),
-            SchedImpl::Rl(_) => (0, 0, Vec::new()),
+            SchedImpl::Rl(_) => (0, 0, 0, Vec::new()),
         };
         SimReport {
             scheduler: self.cfg.scheduler.label(),
             records: self.records.clone(),
             snapshots: self.snapshots.clone(),
+            submitted: self.submitted,
             unschedulable: self.unschedulable,
             failed_pulls: self.failed_pulls,
+            retries: self.retries,
             omega1_used: w1,
             omega2_used: w2,
+            omega_mid_used: wmid,
             omega_trace: trace,
         }
     }
@@ -490,8 +697,10 @@ mod tests {
         let mut sim = Simulation::new(nodes(4), reg, SimConfig::default());
         let report = sim.run_trace(trace);
         assert_eq!(report.deployed(), 10);
+        assert_eq!(report.submitted, 10);
         assert_eq!(report.unschedulable, 0);
         assert_eq!(report.failed_pulls, 0);
+        assert!(report.accounting_balanced());
         assert!(report.total_download() > Bytes::ZERO);
         sim.state.check_invariants().unwrap();
         // Clock advanced by the total download time.
@@ -571,6 +780,7 @@ mod tests {
         let mut sim = Simulation::new(nodes(4), Registry::with_corpus(), cfg);
         let report = sim.run_trace(trace.clone());
         assert_eq!(report.omega1_used + report.omega2_used, 12);
+        assert_eq!(report.omega_mid_used, 0, "TwoLevel has no mid weight");
         assert_eq!(report.omega_trace.len(), 12);
 
         let mut cfg = SimConfig::default();
@@ -578,6 +788,7 @@ mod tests {
         let mut sim = Simulation::new(nodes(4), Registry::with_corpus(), cfg);
         let report = sim.run_trace(trace);
         assert_eq!(report.omega1_used + report.omega2_used, 0);
+        let _ = reg;
     }
 
     #[test]
@@ -591,5 +802,99 @@ mod tests {
         let report = sim.run_trace(vec![big, ok]);
         assert_eq!(report.unschedulable, 1);
         assert_eq!(report.deployed(), 1);
+        // The impossible pod exercised the back-off queue before giving up.
+        assert_eq!(report.retries as u32, SimConfig::default().retry_limit);
+        assert!(report.accounting_balanced());
+    }
+
+    #[test]
+    fn terminations_fire_after_final_pull() {
+        // Seed bug: the drain only advanced to the last pull's ready_at,
+        // so terminations due later never fired and resources stayed bound.
+        let reg = Registry::with_corpus();
+        let mut gen = WorkloadGen::new(&reg, WorkloadConfig::default());
+        let pods: Vec<Pod> = (0..6).map(|_| gen.next_pod().with_duration(40.0)).collect();
+        let mut cfg = SimConfig::default();
+        cfg.inter_arrival_secs = Some(1.0);
+        let mut sim = Simulation::new(nodes(3), reg, cfg);
+        let report = sim.run_trace(pods);
+        assert_eq!(report.deployed(), 6);
+        for node in sim.state.nodes() {
+            assert_eq!(node.used, Resources::ZERO, "{}: resources still bound", node.name);
+            assert!(node.pods.is_empty());
+        }
+        // The final snapshot reflects the drained cluster.
+        let last = report.snapshots.last().unwrap();
+        assert_eq!(last.cpu_util, 0.0);
+        assert_eq!(last.mem_util, 0.0);
+        assert!((report.final_std() - 0.0).abs() < 1e-12);
+        sim.state.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn retried_pod_binds_when_capacity_frees() {
+        let reg = Registry::with_corpus();
+        let mut b = crate::cluster::PodBuilder::new();
+        // Pod A fills the single node; pod B must wait for A to die.
+        let a = b.build("redis:7.2", Resources::cores_gb(3.9, 0.5)).with_duration(30.0);
+        let bpod = b.build("nginx:1.25", Resources::cores_gb(3.9, 0.5));
+        let mut cfg = SimConfig::default();
+        cfg.inter_arrival_secs = Some(1.0);
+        cfg.retry_limit = 20;
+        let mut sim = Simulation::new(nodes(1), reg, cfg);
+        let report = sim.run_trace(vec![a, bpod]);
+        assert_eq!(report.deployed(), 2, "retry must eventually bind pod B");
+        assert_eq!(report.unschedulable, 0);
+        assert!(report.retries > 0, "pod B must have parked at least once");
+        assert!(report.accounting_balanced());
+        sim.state.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn per_instance_cache_paths_differ() {
+        let a = Simulation::new(nodes(1), Registry::with_corpus(), SimConfig::default());
+        let b = Simulation::new(nodes(1), Registry::with_corpus(), SimConfig::default());
+        assert_ne!(a.cache.cache_file, b.cache.cache_file);
+    }
+
+    #[test]
+    fn snapshot_cadence_bounds_memory() {
+        let reg = Registry::with_corpus();
+        let trace = WorkloadGen::new(&reg, WorkloadConfig::default()).trace(20);
+        let mut cfg = SimConfig::default();
+        cfg.snapshot_every = 7;
+        let mut sim = Simulation::new(nodes(4), reg, cfg);
+        let report = sim.run_trace(trace);
+        // 20 placements / 7 = 2 periodic snapshots + 1 final.
+        assert_eq!(report.snapshots.len(), 3);
+    }
+
+    #[test]
+    fn accounting_balances_under_churn_and_pressure() {
+        let reg = Registry::with_corpus();
+        let trace = WorkloadGen::new(
+            &reg,
+            WorkloadConfig {
+                seed: 3,
+                duration_range: Some((10.0, 120.0)),
+                ..WorkloadConfig::default()
+            },
+        )
+        .trace(60);
+        let mut cfg = SimConfig::default();
+        cfg.inter_arrival_secs = Some(0.5);
+        cfg.gc_enabled = true;
+        let mut sim = Simulation::new(nodes(2), reg, cfg);
+        let report = sim.run_trace(trace);
+        assert_eq!(report.submitted, 60);
+        assert!(
+            report.accounting_balanced(),
+            "completed {} + failed {} + unschedulable {} != submitted {}",
+            report.completed(),
+            report.failed_pulls,
+            report.unschedulable,
+            report.submitted
+        );
+        sim.state.check_invariants().unwrap();
     }
 }

@@ -1,0 +1,233 @@
+//! The discrete-event core: a unified, timestamp-ordered event queue.
+//!
+//! Every state transition the simulator performs — pod arrivals, pull
+//! completions, pod terminations, registry-watcher ticks, kubelet GC
+//! pressure sweeps, and scheduling-queue back-off releases — is a
+//! first-class timestamped event popped in order from one `BinaryHeap`.
+//! This replaces the seed engine's "process everything at the next
+//! arrival" linear scans, which could only observe completions at arrival
+//! instants and never fired terminations due after the final pull.
+//!
+//! Ordering is total and deterministic:
+//! 1. ascending timestamp,
+//! 2. at equal timestamps, ascending *class* — completions before
+//!    terminations before sweeps before back-off releases before arrivals,
+//!    mirroring the order the API server processed them in the seed engine
+//!    (watcher refresh → pull completions → terminations → GC → schedule),
+//! 3. at equal (timestamp, class), FIFO by insertion sequence.
+
+use crate::cluster::{Pod, PodId};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happens when an event fires.
+#[derive(Debug)]
+pub enum EventPayload {
+    /// Registry watcher poll (paper §V-1; re-armed while work remains).
+    WatcherTick,
+    /// All layers for `pod`'s image are present on its node.
+    PullComplete { pod: PodId },
+    /// A finite-duration pod's run ends; its resources release.
+    PodTermination { pod: PodId },
+    /// Kubelet image-GC pressure sweep across all nodes.
+    GcSweep,
+    /// Scheduling-queue back-off expiry: parked pods become schedulable.
+    BackoffRelease,
+    /// A pod is submitted to the API server.
+    Arrival { pod: Pod },
+}
+
+impl EventPayload {
+    /// Same-timestamp ordering class (lower fires first).
+    fn class(&self) -> u8 {
+        match self {
+            EventPayload::WatcherTick => 0,
+            EventPayload::PullComplete { .. } => 1,
+            EventPayload::PodTermination { .. } => 2,
+            EventPayload::GcSweep => 3,
+            EventPayload::BackoffRelease => 4,
+            EventPayload::Arrival { .. } => 5,
+        }
+    }
+
+    pub fn is_watcher(&self) -> bool {
+        matches!(self, EventPayload::WatcherTick)
+    }
+}
+
+/// A scheduled event. Ord is (at, class, seq); timestamps are finite by
+/// construction (`EventQueue::push` rejects non-finite times).
+#[derive(Debug)]
+pub struct QueuedEvent {
+    pub at: f64,
+    class: u8,
+    seq: u64,
+    pub payload: EventPayload,
+}
+
+impl PartialEq for QueuedEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl Eq for QueuedEvent {}
+
+impl PartialOrd for QueuedEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueuedEvent {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Finite timestamps: total order is safe.
+        self.at
+            .partial_cmp(&other.at)
+            .expect("event timestamps are finite")
+            .then(self.class.cmp(&other.class))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Min-heap of simulation events with deterministic tie-breaking.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<std::cmp::Reverse<QueuedEvent>>,
+    next_seq: u64,
+    /// Events that represent real pending work (everything but WatcherTick)
+    /// — used to decide when the recurring watcher may stop re-arming.
+    non_watcher: usize,
+    /// Total events ever pushed (observability for the scale harness).
+    pub pushed_total: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `payload` at absolute time `at` (must be finite).
+    pub fn push(&mut self, at: f64, payload: EventPayload) {
+        assert!(at.is_finite(), "non-finite event time {at}");
+        if !payload.is_watcher() {
+            self.non_watcher += 1;
+        }
+        let ev = QueuedEvent { at, class: payload.class(), seq: self.next_seq, payload };
+        self.next_seq += 1;
+        self.pushed_total += 1;
+        self.heap.push(std::cmp::Reverse(ev));
+    }
+
+    /// Pop the next event in (time, class, seq) order.
+    pub fn pop(&mut self) -> Option<QueuedEvent> {
+        let ev = self.heap.pop()?.0;
+        if !ev.payload.is_watcher() {
+            self.non_watcher -= 1;
+        }
+        Some(ev)
+    }
+
+    /// Time of the next event, if any.
+    pub fn peek_at(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.0.at)
+    }
+
+    /// Are any non-watcher (real work) events outstanding?
+    pub fn has_pending_work(&self) -> bool {
+        self.non_watcher > 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn times_and_classes(q: &mut EventQueue) -> Vec<(f64, u8)> {
+        let mut out = Vec::new();
+        while let Some(ev) = q.pop() {
+            out.push((ev.at, ev.payload.class()));
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_timestamp_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EventPayload::PullComplete { pod: PodId(1) });
+        q.push(1.0, EventPayload::PullComplete { pod: PodId(2) });
+        q.push(2.0, EventPayload::PodTermination { pod: PodId(3) });
+        let order = times_and_classes(&mut q);
+        assert_eq!(order.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn equal_times_order_by_class() {
+        let mut q = EventQueue::new();
+        // Push in reverse-class order; pops must come back class-sorted:
+        // watcher, pull, termination, gc, backoff, arrival.
+        let mut b = crate::cluster::PodBuilder::new();
+        q.push(5.0, EventPayload::Arrival { pod: b.build("redis:7.2", crate::cluster::Resources::ZERO) });
+        q.push(5.0, EventPayload::BackoffRelease);
+        q.push(5.0, EventPayload::GcSweep);
+        q.push(5.0, EventPayload::PodTermination { pod: PodId(1) });
+        q.push(5.0, EventPayload::PullComplete { pod: PodId(2) });
+        q.push(5.0, EventPayload::WatcherTick);
+        let order = times_and_classes(&mut q);
+        assert_eq!(order.iter().map(|(_, c)| *c).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn equal_time_and_class_is_fifo() {
+        let mut q = EventQueue::new();
+        for pod in 0..10u64 {
+            q.push(1.0, EventPayload::PullComplete { pod: PodId(pod) });
+        }
+        let mut pods = Vec::new();
+        while let Some(ev) = q.pop() {
+            if let EventPayload::PullComplete { pod } = ev.payload {
+                pods.push(pod.0);
+            }
+        }
+        assert_eq!(pods, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn watcher_events_do_not_count_as_work() {
+        let mut q = EventQueue::new();
+        q.push(0.0, EventPayload::WatcherTick);
+        assert!(!q.has_pending_work());
+        q.push(1.0, EventPayload::GcSweep);
+        assert!(q.has_pending_work());
+        q.pop(); // watcher
+        assert!(q.has_pending_work());
+        q.pop(); // gc
+        assert!(!q.has_pending_work());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn rejects_non_finite_times() {
+        let mut q = EventQueue::new();
+        q.push(f64::INFINITY, EventPayload::GcSweep);
+    }
+
+    #[test]
+    fn peek_reports_next_time() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_at(), None);
+        q.push(4.0, EventPayload::GcSweep);
+        q.push(2.0, EventPayload::BackoffRelease);
+        assert_eq!(q.peek_at(), Some(2.0));
+        assert_eq!(q.len(), 2);
+    }
+}

@@ -10,6 +10,7 @@ use super::bandwidth::LinkModel;
 use crate::cluster::{ClusterState, NodeId, PodId};
 use crate::registry::{ImageRef, LayerSet};
 use crate::util::units::Bytes;
+use std::collections::HashMap;
 
 /// A pod whose layers are being pulled; the container starts at `ready_at`.
 #[derive(Debug, Clone)]
@@ -23,6 +24,40 @@ pub struct PendingStart {
     pub wan_bytes: Bytes,
     /// Bytes fetched from peer edge nodes over the LAN (§VII extension).
     pub p2p_bytes: Bytes,
+}
+
+/// Image → layer-set store so GC can resolve an image's layers without
+/// reaching back to the registry (containerd's image store, per kubelet).
+///
+/// One store per [`super::Simulation`]: the seed kept this in a
+/// process-wide `thread_local!`, which leaked image→layer mappings across
+/// simulations (and across tests sharing a thread).
+#[derive(Debug, Clone, Default)]
+pub struct ImageLayerStore {
+    map: HashMap<String, LayerSet>,
+}
+
+impl ImageLayerStore {
+    pub fn new() -> ImageLayerStore {
+        ImageLayerStore::default()
+    }
+
+    /// Record an image's layer set (called at install time by the engine).
+    pub fn remember(&mut self, image: &ImageRef, layers: &LayerSet) {
+        self.map.insert(image.key(), layers.clone());
+    }
+
+    pub fn layers(&self, image: &ImageRef) -> Option<&LayerSet> {
+        self.map.get(&image.key())
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
 }
 
 /// Begin the pull for a freshly bound pod. With `p2p_lan` set, layers
@@ -78,7 +113,12 @@ pub fn complete_pull(state: &mut ClusterState, pending: &PendingStart) -> Result
 /// Image GC: evict images (and their now-unreferenced layers) that no
 /// running pod uses, oldest-first, until `free_target` bytes are free.
 /// Returns bytes freed.
-pub fn gc_images(state: &mut ClusterState, node: NodeId, free_target: Bytes) -> Bytes {
+pub fn gc_images(
+    state: &mut ClusterState,
+    images: &ImageLayerStore,
+    node: NodeId,
+    free_target: Bytes,
+) -> Bytes {
     let mut freed = Bytes::ZERO;
     loop {
         if state.node(node).disk_free() >= free_target {
@@ -101,46 +141,24 @@ pub fn gc_images(state: &mut ClusterState, node: NodeId, free_target: Bytes) -> 
             None => break, // everything in use; cannot free more
         };
         // Layers of the victim that are not shared with any other cached
-        // image on this node.
+        // image on this node, resolved through the per-simulation image
+        // store (the node only tracks the union of its layers).
         let mut shared_with_others = LayerSet::new();
         for other in state.node(node).images.clone() {
             if other == victim {
                 continue;
             }
-            // Layer sets per image are recovered through the interner-backed
-            // metadata the simulator keeps in the registry cache; the node
-            // only tracks the union, so the caller-supplied metadata lookup
-            // is threaded through `image_layers`.
-            if let Some(set) = image_layers(state, &other) {
-                shared_with_others.union_with(&set);
+            if let Some(set) = images.layers(&other) {
+                shared_with_others.union_with(set);
             }
         }
-        if let Some(victim_layers) = image_layers(state, &victim) {
+        if let Some(victim_layers) = images.layers(&victim) {
             let unique: Vec<_> = victim_layers.difference_ids(&shared_with_others);
             freed += state.evict_layers(node, &unique);
         }
         state.remove_image(node, &victim);
     }
     freed
-}
-
-/// The simulator records each installed image's layer set here so GC can
-/// resolve image → layers without reaching back to the registry.
-/// (In a real kubelet this is containerd's image store.)
-use std::cell::RefCell;
-use std::collections::HashMap;
-
-thread_local! {
-    static IMAGE_LAYERS: RefCell<HashMap<String, LayerSet>> = RefCell::new(HashMap::new());
-}
-
-/// Record an image's layer set (called at install time by the engine).
-pub fn remember_image_layers(image: &ImageRef, layers: &LayerSet) {
-    IMAGE_LAYERS.with(|m| m.borrow_mut().insert(image.key(), layers.clone()));
-}
-
-fn image_layers(_state: &ClusterState, image: &ImageRef) -> Option<LayerSet> {
-    IMAGE_LAYERS.with(|m| m.borrow().get(&image.key()).cloned())
 }
 
 #[cfg(test)]
@@ -198,6 +216,21 @@ mod tests {
     }
 
     #[test]
+    fn image_store_is_instance_scoped() {
+        let corpus = hub::corpus();
+        let redis = corpus.iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
+        let mut state = ClusterState::new();
+        let (_, layers) = state.intern_image(redis);
+        let mut a = ImageLayerStore::new();
+        a.remember(&redis.image_ref(), &layers);
+        assert!(a.layers(&redis.image_ref()).is_some());
+        // A second store starts empty: no cross-instance leakage.
+        let b = ImageLayerStore::new();
+        assert!(b.is_empty());
+        assert!(b.layers(&redis.image_ref()).is_none());
+    }
+
+    #[test]
     fn gc_evicts_unused_images_only() {
         let (mut state, _, _) = setup();
         let corpus = hub::corpus();
@@ -207,8 +240,9 @@ mod tests {
         let (_, nl) = state.intern_image(nginx);
         state.install_image(NodeId(0), &redis.image_ref(), &rl).unwrap();
         state.install_image(NodeId(0), &nginx.image_ref(), &nl).unwrap();
-        remember_image_layers(&redis.image_ref(), &rl);
-        remember_image_layers(&nginx.image_ref(), &nl);
+        let mut images = ImageLayerStore::new();
+        images.remember(&redis.image_ref(), &rl);
+        images.remember(&nginx.image_ref(), &nl);
         // nginx is in use by a running pod; redis is idle.
         let mut b = PodBuilder::new();
         let pod = b.build("nginx:1.25", Resources::cores_gb(0.1, 0.1));
@@ -216,7 +250,7 @@ mod tests {
         state.bind(pid, NodeId(0)).unwrap();
 
         let before = state.node(NodeId(0)).disk_used;
-        let freed = gc_images(&mut state, NodeId(0), Bytes::from_gb(1.0));
+        let freed = gc_images(&mut state, &images, NodeId(0), Bytes::from_gb(1.0));
         assert!(freed > Bytes::ZERO);
         assert!(state.node(NodeId(0)).disk_used < before);
         assert!(!state.node(NodeId(0)).has_image(&redis.image_ref()));

@@ -8,6 +8,7 @@ pub mod bandwidth;
 pub mod clock;
 pub mod download;
 pub mod engine;
+pub mod events;
 pub mod kubelet;
 pub mod metrics;
 pub mod p2p;
@@ -17,5 +18,6 @@ pub use bandwidth::LinkModel;
 pub use clock::Clock;
 pub use download::PullManager;
 pub use engine::{SchedulerChoice, SimConfig, SimReport, Simulation};
+pub use events::{EventPayload, EventQueue};
 pub use metrics::{ClusterSnapshot, PodRecord};
 pub use workload::{Popularity, WorkloadConfig, WorkloadGen};

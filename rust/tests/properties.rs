@@ -159,7 +159,8 @@ fn simulation_preserves_cluster_invariants() {
     check(PropConfig { cases: 16, ..Default::default() }, |rng, case| {
         let registry = Registry::with_corpus();
         let wl = WorkloadConfig { seed: case as u64, ..Default::default() };
-        let trace = WorkloadGen::new(&registry, wl).trace(rng.range(1, 30));
+        let n_pods = rng.range(1, 30);
+        let trace = WorkloadGen::new(&registry, wl).trace(n_pods);
         let mut cfg = SimConfig::default();
         cfg.scheduler = [SchedulerChoice::Default, SchedulerChoice::Layer, SchedulerChoice::LR]
             [rng.range(0, 3)];
@@ -178,8 +179,101 @@ fn simulation_preserves_cluster_invariants() {
             prop_assert!(node.disk_used <= node.disk, "Eq. 6 violated");
             prop_assert!(node.pods.len() <= node.max_containers, "Eq. 7 violated");
         }
-        // Eq. 8: deployed + unschedulable + failed accounts for every pod.
-        prop_assert!(report.deployed() + report.unschedulable <= 30, "pod accounting");
+        // Eq. 8 + event accounting: every submitted pod resolves exactly
+        // once — completed, wedged, or unschedulable after retries.
+        prop_assert_eq!(report.submitted, n_pods);
+        prop_assert!(
+            report.accounting_balanced(),
+            "completed {} + failed {} + unschedulable {} != submitted {}",
+            report.completed(),
+            report.failed_pulls,
+            report.unschedulable,
+            report.submitted
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn events_interleave_in_timestamp_order() {
+    // The event-driven core must emit the audit stream in nondecreasing
+    // time order even when pulls, terminations, GC sweeps, and back-off
+    // releases overlap timed arrivals (the seed engine recorded pull
+    // completions out of order because it only drained at arrivals).
+    check(PropConfig { cases: 12, ..Default::default() }, |rng, case| {
+        let registry = Registry::with_corpus();
+        let wl = WorkloadConfig {
+            seed: 1000 + case as u64,
+            duration_range: Some((rng.f64_range(5.0, 30.0), rng.f64_range(30.0, 200.0))),
+            ..Default::default()
+        };
+        let trace = WorkloadGen::new(&registry, wl).trace(rng.range(5, 40));
+        let mut cfg = SimConfig::default();
+        cfg.inter_arrival_secs = Some(rng.f64_range(0.2, 3.0));
+        cfg.gc_enabled = rng.chance(0.7);
+        cfg.retry_limit = rng.range(0, 6) as u32;
+        let mut sim = Simulation::new(
+            lrsched::exp::common::paper_nodes(rng.range(2, 6)),
+            registry,
+            cfg,
+        );
+        let report = sim.run_trace(trace);
+        let log = sim.events.all();
+        prop_assert!(!log.is_empty(), "no events recorded");
+        for w in log.windows(2) {
+            prop_assert!(
+                w[1].at >= w[0].at - 1e-9,
+                "event log out of order: {:?} after {:?}",
+                w[1],
+                w[0]
+            );
+        }
+        prop_assert!(report.accounting_balanced(), "dropped events");
+        sim.state.check_invariants()?;
+        Ok(())
+    });
+}
+
+#[test]
+fn retried_pods_bind_once_capacity_frees() {
+    // A pod that finds the cluster full parks with back-off and must bind
+    // once the blocking pod's finite duration ends — never silently drop.
+    check(PropConfig { cases: 12, ..Default::default() }, |rng, _| {
+        let registry = Registry::with_corpus();
+        let mut b = lrsched::cluster::PodBuilder::new();
+        let blocker_secs = rng.f64_range(10.0, 90.0);
+        let blocker = b
+            .build("redis:7.2", Resources::cores_gb(3.9, 0.5))
+            .with_duration(blocker_secs);
+        let waiter = b.build("nginx:1.25", Resources::cores_gb(3.9, 0.5));
+        let mut cfg = SimConfig::default();
+        cfg.inter_arrival_secs = Some(rng.f64_range(0.5, 2.0));
+        cfg.retry_backoff_secs = rng.f64_range(1.0, 8.0);
+        // Enough retries to outlast the blocker regardless of draws.
+        cfg.retry_limit = 200;
+        let mut sim = Simulation::new(
+            vec![lrsched::cluster::Node::new(
+                NodeId(0),
+                "only",
+                Resources::cores_gb(4.0, 4.0),
+                Bytes::from_gb(30.0),
+                lrsched::util::units::Bandwidth::from_mbps(10.0),
+            )],
+            registry,
+            cfg,
+        );
+        let report = sim.run_trace(vec![blocker, waiter]);
+        prop_assert_eq!(report.deployed(), 2);
+        prop_assert_eq!(report.unschedulable, 0);
+        prop_assert!(report.retries > 0, "waiter never parked");
+        prop_assert!(report.accounting_balanced(), "accounting");
+        // The waiter bound only after the blocker released its resources.
+        let waiter_bind = report.records.last().unwrap().at;
+        prop_assert!(
+            waiter_bind >= blocker_secs,
+            "waiter bound at {waiter_bind} before blocker could die ({blocker_secs})"
+        );
+        sim.state.check_invariants()?;
         Ok(())
     });
 }
