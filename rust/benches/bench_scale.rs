@@ -4,7 +4,10 @@
 //!   arena must win, since steady-state cycles touch only dirty rows;
 //! - event-engine throughput on a timed trace with finite-duration pods,
 //!   GC, and scheduling-queue retries (default 20k pods; set
-//!   LRSCHED_BENCH_FULL=1 for the 100k-pod acceptance run).
+//!   LRSCHED_BENCH_FULL=1 for the 100k-pod acceptance run);
+//! - the same trace under **churn** (node joins/drains, a 5% crash rate,
+//!   and a registry outage window) — volatility bookkeeping must keep
+//!   event throughput within 1.5× of the static-cluster baseline.
 //!
 //! Run: `cargo bench --bench bench_scale`
 
@@ -14,7 +17,9 @@ use lrsched::registry::{hub, Registry};
 use lrsched::sched::lrscheduler::build_inputs;
 use lrsched::sched::scoring::ScoreArena;
 use lrsched::sched::{default_framework, CycleContext, NativeScorer, ScoringBackend, WeightParams};
-use lrsched::sim::{Popularity, SchedulerChoice, SimConfig, Simulation, WorkloadConfig, WorkloadGen};
+use lrsched::sim::{
+    ChurnConfig, Popularity, SchedulerChoice, SimConfig, Simulation, WorkloadConfig, WorkloadGen,
+};
 use lrsched::testing::bench::{bench, header};
 use lrsched::testing::fixtures;
 use std::time::Instant;
@@ -89,35 +94,40 @@ fn main() {
     // --- event-engine scale run ------------------------------------------
     let full = std::env::var("LRSCHED_BENCH_FULL").is_ok();
     let pods = if full { 100_000 } else { 20_000 };
-    let registry = Registry::with_corpus();
-    let trace = WorkloadGen::new(
-        &registry,
-        WorkloadConfig {
-            seed: 42,
-            popularity: Popularity::Zipf(1.1),
-            duration_range: Some((30.0, 300.0)),
-            ..Default::default()
-        },
-    )
-    .trace(pods);
-    let mut cfg = SimConfig::default();
-    cfg.scheduler = SchedulerChoice::LR;
-    cfg.inter_arrival_secs = Some(0.3);
-    cfg.gc_enabled = true;
-    cfg.retry_limit = 10;
-    cfg.snapshot_every = 1000;
-    let mut sim = Simulation::new(common::scale_nodes(64), registry, cfg)
-        .with_backend(Box::new(NativeScorer));
-    let t0 = Instant::now();
-    let report = sim.run_trace(trace);
-    let wall = t0.elapsed().as_secs_f64();
-    sim.state.check_invariants().expect("invariants");
+    let engine_run = |churn: Option<ChurnConfig>| {
+        let registry = Registry::with_corpus();
+        let trace = WorkloadGen::new(
+            &registry,
+            WorkloadConfig {
+                seed: 42,
+                popularity: Popularity::Zipf(1.1),
+                duration_range: Some((30.0, 300.0)),
+                ..Default::default()
+            },
+        )
+        .trace(pods);
+        let mut cfg = SimConfig::default();
+        cfg.scheduler = SchedulerChoice::LR;
+        cfg.inter_arrival_secs = Some(0.3);
+        cfg.gc_enabled = true;
+        cfg.retry_limit = 10;
+        cfg.snapshot_every = 1000;
+        cfg.churn = churn;
+        let mut sim = Simulation::new(common::scale_nodes(64), registry, cfg)
+            .with_backend(Box::new(NativeScorer));
+        let t0 = Instant::now();
+        let report = sim.run_trace(trace);
+        let wall = t0.elapsed().as_secs_f64();
+        sim.state.check_invariants().expect("invariants");
+        let (virtual_secs, events) = (sim.clock.now(), sim.events_queued());
+        (report, wall, virtual_secs, events)
+    };
+
+    let (report, wall, virtual_secs, events) = engine_run(None);
     println!(
         "event engine: {pods} pods / 64 nodes in {wall:.2}s wall ({:.0} pods/s), \
-         virtual {:.0}s, events {}",
+         virtual {virtual_secs:.0}s, events {events}",
         pods as f64 / wall.max(1e-9),
-        sim.clock.now(),
-        sim.events_queued()
     );
     println!(
         "  completed={} failed={} unschedulable={} retries={} download={:.1} GB",
@@ -129,11 +139,48 @@ fn main() {
     );
     assert!(
         report.accounting_balanced(),
-        "dropped events: completed {} + failed {} + unschedulable {} != submitted {}",
+        "dropped events: completed {} + failed {} + unschedulable {} + lost {} != submitted {}",
         report.completed(),
         report.failed_pulls,
         report.unschedulable,
+        report.lost_to_crash,
         report.submitted
     );
     println!("  accounting balanced: no dropped events");
+
+    // --- churn mode: joins/drains, 5% crash rate, one outage window ------
+    let churn = ChurnConfig {
+        seed: 42,
+        horizon_secs: pods as f64 * 0.3,
+        joins: 3,
+        drains: 2,
+        crash_fraction: 0.05,
+        outages: 1,
+        outage_secs: 60.0,
+        ..Default::default()
+    };
+    let (creport, cwall, cvirtual, cevents) = engine_run(Some(churn));
+    println!(
+        "churn engine: {pods} pods / 64 nodes in {cwall:.2}s wall ({:.0} pods/s), \
+         virtual {cvirtual:.0}s, events {cevents}",
+        pods as f64 / cwall.max(1e-9),
+    );
+    println!(
+        "  joined={} drained={} crashed={} resubmitted={} stalled={} wakeups={} lost={}",
+        creport.nodes_joined,
+        creport.nodes_drained,
+        creport.nodes_crashed,
+        creport.resubmitted,
+        creport.pulls_stalled,
+        creport.wakeups,
+        creport.lost_to_crash
+    );
+    assert!(creport.accounting_balanced(), "churn run dropped events");
+    assert!(creport.nodes_crashed >= 1, "5% of 64 nodes must crash");
+    let slowdown = cwall / wall.max(1e-9);
+    println!("  churn slowdown vs static cluster: {slowdown:.2}x (budget 1.5x)");
+    assert!(
+        slowdown <= 1.5,
+        "churn bookkeeping degraded event throughput {slowdown:.2}x (> 1.5x budget)"
+    );
 }

@@ -22,6 +22,23 @@ pub enum EventKind {
     Started { node: NodeId },
     /// Image layers evicted from a node under disk pressure.
     Evicted { node: NodeId, bytes: Bytes },
+    /// A node joined the cluster (empty layer cache).
+    NodeJoined { node: NodeId },
+    /// A node was cordoned: running pods finish, no new bindings.
+    NodeDrained { node: NodeId },
+    /// A node crashed; its running/pulling pods were lost.
+    NodeCrashed { node: NodeId, lost_pods: usize },
+    /// A crash-lost pod re-entered the scheduling queue (does not count
+    /// against the retry limit).
+    Resubmitted,
+    /// An in-flight layer pull stalled on a registry outage; it resumes
+    /// and completes at `until`.
+    PullStalled { node: NodeId, until: f64 },
+    /// The registry became unreachable until `until` (watcher keeps its
+    /// last good cache; WAN pulls stall).
+    RegistryOutageStart { until: f64 },
+    /// Registry connectivity restored.
+    RegistryOutageEnd,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -67,6 +84,28 @@ impl EventLog {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn churn_kinds_recorded_for_table_accounting() {
+        // Node-level records use the sentinel pod id, like Evicted does.
+        let mut log = EventLog::new();
+        let node_scope = PodId(u64::MAX);
+        log.record(1.0, node_scope, EventKind::NodeJoined { node: NodeId(4) });
+        log.record(2.0, node_scope, EventKind::NodeDrained { node: NodeId(1) });
+        log.record(3.0, node_scope, EventKind::NodeCrashed { node: NodeId(2), lost_pods: 3 });
+        log.record(3.0, PodId(7), EventKind::Resubmitted);
+        log.record(4.0, PodId(8), EventKind::PullStalled { node: NodeId(0), until: 9.0 });
+        log.record(4.0, node_scope, EventKind::RegistryOutageStart { until: 9.0 });
+        log.record(9.0, node_scope, EventKind::RegistryOutageEnd);
+        assert_eq!(log.len(), 7);
+        assert_eq!(log.for_pod(PodId(7)).count(), 1);
+        let crashes = log
+            .all()
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::NodeCrashed { .. }))
+            .count();
+        assert_eq!(crashes, 1);
+    }
 
     #[test]
     fn record_and_query() {

@@ -9,7 +9,7 @@ pub mod resources;
 pub mod state;
 
 pub use events::{Event, EventKind, EventLog};
-pub use node::{Node, NodeId, Taint};
+pub use node::{Node, NodeId, NodeStatus, Taint};
 pub use pod::{Pod, PodBuilder, PodId};
 pub use resources::Resources;
 pub use state::{ClusterState, StateError};

@@ -13,6 +13,20 @@ use std::collections::BTreeMap;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct NodeId(pub u32);
 
+/// Node lifecycle status (edge clusters are volatile: nodes join, drain,
+/// and crash mid-run — EdgePier-style churn the simulator injects as
+/// events).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NodeStatus {
+    /// Accepting new pods.
+    #[default]
+    Ready,
+    /// Cordoned: running pods finish, no new bindings (kubectl drain).
+    Draining,
+    /// Crashed/unreachable: pods lost, inventory gone.
+    Down,
+}
+
 /// A node taint (key=value); pods need a matching toleration or the
 /// TaintToleration plugin deprioritizes/filters the node.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -42,6 +56,8 @@ pub struct Node {
     pub taints: Vec<Taint>,
     /// Free disk the VolumeBinding plugin can bind against.
     pub volume_capacity: Bytes,
+    /// Lifecycle status; non-Ready nodes are filtered from scheduling.
+    pub status: NodeStatus,
 
     // --- mutable inventory (the t-dependent sets of §III-A) --------------
     /// Requested resources of all pods assigned here (p_n(t), e_n(t)).
@@ -72,6 +88,7 @@ impl Node {
             labels: BTreeMap::new(),
             taints: Vec::new(),
             volume_capacity: disk,
+            status: NodeStatus::Ready,
             used: Resources::ZERO,
             pods: Vec::new(),
             images: Vec::new(),
@@ -94,6 +111,16 @@ impl Node {
     pub fn with_max_containers(mut self, n: usize) -> Node {
         self.max_containers = n;
         self
+    }
+
+    /// Can the scheduler bind new pods here?
+    pub fn is_schedulable(&self) -> bool {
+        self.status == NodeStatus::Ready
+    }
+
+    /// Is the node alive (Ready or Draining — its pods keep running)?
+    pub fn is_up(&self) -> bool {
+        self.status != NodeStatus::Down
     }
 
     /// Resources still schedulable.
@@ -171,6 +198,16 @@ mod tests {
         assert_eq!(n.disk_free(), Bytes::from_gb(30.0));
         n.disk_used = Bytes::from_gb(29.0);
         assert_eq!(n.disk_free(), Bytes::from_gb(1.0));
+    }
+
+    #[test]
+    fn status_gates_schedulability() {
+        let mut n = node();
+        assert!(n.is_schedulable() && n.is_up());
+        n.status = NodeStatus::Draining;
+        assert!(!n.is_schedulable() && n.is_up());
+        n.status = NodeStatus::Down;
+        assert!(!n.is_schedulable() && !n.is_up());
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! the mutation API the API server / kubelets drive: bind, install image,
 //! evict, release.
 
-use super::node::{Node, NodeId};
+use super::node::{Node, NodeId, NodeStatus};
 use super::pod::{Pod, PodId};
 use crate::registry::{ImageMetadata, ImageRef, LayerId, LayerInterner, LayerSet};
 use crate::util::units::Bytes;
@@ -70,6 +70,41 @@ impl ClusterState {
 
     pub fn node_count(&self) -> usize {
         self.nodes.len()
+    }
+
+    /// The id the next joining node must use (ids are dense).
+    pub fn next_node_id(&self) -> NodeId {
+        NodeId(self.nodes.len() as u32)
+    }
+
+    /// Nodes currently accepting new pods.
+    pub fn schedulable_node_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_schedulable()).count()
+    }
+
+    // --- churn (node lifecycle) --------------------------------------------
+
+    /// Cordon a node: running pods finish, no new bindings (kubectl drain).
+    pub fn drain_node(&mut self, id: NodeId) {
+        self.nodes[id.0 as usize].status = NodeStatus::Draining;
+    }
+
+    /// Crash a node: its pods lose their bindings (the caller resubmits
+    /// them), and its image/layer inventory is gone — a replacement node
+    /// would start cold, per edge-volatility models (EdgePier). Returns the
+    /// pods that were bound there, in binding order.
+    pub fn crash_node(&mut self, id: NodeId) -> Vec<PodId> {
+        let lost = self.nodes[id.0 as usize].pods.clone();
+        for &pid in &lost {
+            let _ = self.unbind(pid);
+        }
+        let node = &mut self.nodes[id.0 as usize];
+        node.status = NodeStatus::Down;
+        node.layers = LayerSet::new();
+        node.layers_version += 1;
+        node.images.clear();
+        node.disk_used = Bytes::ZERO;
+        lost
     }
 
     // --- pods ---------------------------------------------------------------
@@ -237,6 +272,12 @@ impl ClusterState {
             }
         }
         for node in &self.nodes {
+            // A crashed node holds nothing.
+            if node.status == NodeStatus::Down
+                && !(node.pods.is_empty() && node.layers.is_empty())
+            {
+                return Err(format!("down node {} still holds pods/layers", node.name));
+            }
             // Disk accounting matches the layer set.
             let computed = node.layers.total_bytes(&self.interner);
             if computed != node.disk_used {
@@ -388,6 +429,65 @@ mod tests {
         s.remove_image(NodeId(0), &redis.image_ref());
         assert!(s.node(NodeId(0)).images.is_empty());
         s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn crash_unbinds_pods_and_wipes_inventory() {
+        let mut s = cluster();
+        let corpus = hub::corpus();
+        let redis = corpus.iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
+        let (_, layers) = s.intern_image(redis);
+        s.install_image(NodeId(1), &redis.image_ref(), &layers).unwrap();
+        let v0 = s.node(NodeId(1)).layers_version;
+        let mut b = PodBuilder::new();
+        let p1 = s.submit_pod(b.build("redis:7.2", Resources::cores_gb(1.0, 1.0)));
+        let p2 = s.submit_pod(b.build("nginx:1.25", Resources::cores_gb(0.5, 0.5)));
+        s.bind(p1, NodeId(1)).unwrap();
+        s.bind(p2, NodeId(1)).unwrap();
+
+        let lost = s.crash_node(NodeId(1));
+        assert_eq!(lost, vec![p1, p2], "lost pods surface in binding order");
+        let n = s.node(NodeId(1));
+        assert_eq!(n.status, super::NodeStatus::Down);
+        assert!(n.pods.is_empty());
+        assert_eq!(n.used, Resources::ZERO);
+        assert_eq!(n.disk_used, Bytes::ZERO);
+        assert_eq!(n.layers.len(), 0);
+        assert!(n.layers_version > v0, "arena dirty-row path must see the wipe");
+        assert_eq!(s.binding(p1), None);
+        // The pods themselves survive for resubmission.
+        assert!(s.pod(p1).is_some() && s.pod(p2).is_some());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn drain_marks_node_unschedulable_but_up() {
+        let mut s = cluster();
+        let mut b = PodBuilder::new();
+        let pid = s.submit_pod(b.build("redis:7.2", Resources::cores_gb(1.0, 1.0)));
+        s.bind(pid, NodeId(0)).unwrap();
+        s.drain_node(NodeId(0));
+        let n = s.node(NodeId(0));
+        assert!(!n.is_schedulable() && n.is_up());
+        assert_eq!(n.pods, vec![pid], "running pods keep running through a drain");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn joined_node_gets_next_dense_id() {
+        let mut s = cluster();
+        let id = s.next_node_id();
+        assert_eq!(id, NodeId(3));
+        s.add_node(Node::new(
+            id,
+            "join1",
+            Resources::cores_gb(4.0, 4.0),
+            Bytes::from_gb(20.0),
+            Bandwidth::from_mbps(10.0),
+        ));
+        assert_eq!(s.node_count(), 4);
+        assert_eq!(s.schedulable_node_count(), 4);
+        assert_eq!(s.node(id).layers.len(), 0, "joined nodes start cold");
     }
 
     #[test]

@@ -14,7 +14,9 @@ const ABOUT: &str = "lrsched — layer-aware, resource-adaptive container schedu
 
 Subcommands:
   simulate   run a workload trace through a scheduler on the paper testbed
-  scale      drive a 100k-pod timed trace with churn through the event engine
+  scale      drive a 100k-pod timed trace through the event engine; add
+             --churn for node joins/drains/crashes + a registry outage
+             window (e.g. `lrsched scale --churn --churn-crash-frac 0.05`)
   fig3       regenerate Fig. 3 (a-f): performance vs node count
   fig4       regenerate Fig. 4: download time vs bandwidth
   fig5       regenerate Fig. 5: accumulated download size
@@ -82,6 +84,27 @@ fn scale_spec() -> Vec<OptSpec> {
         OptSpec { name: "backoff", help: "scheduling-queue back-off (s)", default: Some("5") },
         OptSpec { name: "snapshot-every", help: "snapshot cadence (placements)", default: Some("1000") },
         OptSpec { name: "no-gc", help: "disable kubelet image GC", default: None },
+        OptSpec {
+            name: "churn",
+            help: "enable cluster volatility: node joins/drains/crashes + a registry \
+                   outage window (e.g. `lrsched scale --churn`)",
+            default: None,
+        },
+        OptSpec { name: "churn-seed", help: "churn RNG seed (defaults to --seed)", default: Some("") },
+        OptSpec { name: "churn-joins", help: "nodes joining mid-trace", default: Some("3") },
+        OptSpec { name: "churn-drains", help: "nodes drained mid-trace", default: Some("2") },
+        OptSpec {
+            name: "churn-crash-frac",
+            help: "fraction of the initial fleet that crashes",
+            default: Some("0.05"),
+        },
+        OptSpec { name: "churn-outages", help: "registry outage windows", default: Some("1") },
+        OptSpec { name: "churn-outage-secs", help: "outage window length (s)", default: Some("60") },
+        OptSpec {
+            name: "no-wake",
+            help: "disable capacity-driven wake-ups (fixed back-off timers only)",
+            default: None,
+        },
         OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
     ]
 }
@@ -114,6 +137,21 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
     cfg.retry_limit = args.get_parsed::<u32>("retry-limit")?.unwrap_or(10);
     cfg.retry_backoff_secs = args.f64_or("backoff", 5.0)?;
     cfg.snapshot_every = args.usize_or("snapshot-every", 1000)?.max(1);
+    cfg.wake_on_capacity = !args.flag("no-wake");
+    if args.flag("churn") {
+        // Spread volatility across the arrival window of the whole trace.
+        let horizon = (pods as f64 * arrival.max(1e-6)).max(60.0);
+        cfg.churn = Some(lrsched::sim::ChurnConfig {
+            seed: args.u64_or("churn-seed", seed)?,
+            horizon_secs: horizon,
+            joins: args.usize_or("churn-joins", 3)?,
+            drains: args.usize_or("churn-drains", 2)?,
+            crash_fraction: args.f64_or("churn-crash-frac", 0.05)?,
+            outages: args.usize_or("churn-outages", 1)?,
+            outage_secs: args.f64_or("churn-outage-secs", 60.0)?,
+            ..Default::default()
+        });
+    }
 
     let registry = Registry::with_corpus();
     let wl = lrsched::sim::WorkloadConfig {
@@ -124,6 +162,7 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
     };
     let trace = WorkloadGen::new(&registry, wl).trace(pods);
 
+    let churn_enabled = cfg.churn.is_some();
     let mut sim = Simulation::new(common::scale_nodes(nodes), registry, cfg);
     let backend = args.str_or("backend", "native");
     match backend {
@@ -148,13 +187,28 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
         backend,
     );
     println!(
-        "submitted={} completed={} failed_pulls={} unschedulable={} retries={}",
+        "submitted={} completed={} failed_pulls={} unschedulable={} lost_to_crash={} retries={}",
         report.submitted,
         report.completed(),
         report.failed_pulls,
         report.unschedulable,
+        report.lost_to_crash,
         report.retries
     );
+    if churn_enabled {
+        println!(
+            "churn: joined={} drained={} crashed={} resubmitted={} pulls_stalled={} wakeups={} \
+             end-of-run schedulable nodes={}/{}",
+            report.nodes_joined,
+            report.nodes_drained,
+            report.nodes_crashed,
+            report.resubmitted,
+            report.pulls_stalled,
+            report.wakeups,
+            sim.state.schedulable_node_count(),
+            sim.state.node_count()
+        );
+    }
     println!(
         "events queued={} virtual time={:.1}s wall={:.2}s throughput={:.0} pods/s",
         sim.events_queued(),
@@ -170,10 +224,11 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
     );
     if !report.accounting_balanced() {
         return Err(format!(
-            "dropped events: completed {} + failed {} + unschedulable {} != submitted {}",
+            "dropped events: completed {} + failed {} + unschedulable {} + lost {} != submitted {}",
             report.completed(),
             report.failed_pulls,
             report.unschedulable,
+            report.lost_to_crash,
             report.submitted
         ));
     }
@@ -198,7 +253,13 @@ fn run() -> Result<(), String> {
                 Some("simulate") => println!("{}", cli::usage("simulate", "Run the simulator", &simulate_spec())),
                 Some("scale") => println!(
                     "{}",
-                    cli::usage("scale", "Drive a large timed trace through the event engine", &scale_spec())
+                    cli::usage(
+                        "scale",
+                        "Drive a large timed trace through the event engine.\n\
+                         Example: lrsched scale --churn    (100k pods with node\n\
+                         joins/drains/crashes and a registry outage window)",
+                        &scale_spec()
+                    )
                 ),
                 Some(c @ ("fig3" | "fig4" | "fig5" | "table1")) => {
                     println!("{}", cli::usage(c, "Regenerate a paper experiment", &common_spec()))

@@ -18,6 +18,9 @@ pub const DEFAULT_POLL_SECS: f64 = 10.0;
 pub struct Watcher {
     pub poll_interval_secs: f64,
     next_poll_at: f64,
+    /// Registry reachability. During an outage window polls fail fast and
+    /// the last good cache stays in place.
+    online: bool,
     /// Statistics for observability/tests.
     pub polls: u64,
     pub images_seen: u64,
@@ -29,10 +32,21 @@ impl Watcher {
         Watcher {
             poll_interval_secs,
             next_poll_at: 0.0,
+            online: true,
             polls: 0,
             images_seen: 0,
             failures: 0,
         }
+    }
+
+    /// Flip registry reachability (driven by the simulator's
+    /// `RegistryOutage` events).
+    pub fn set_online(&mut self, online: bool) {
+        self.online = online;
+    }
+
+    pub fn is_online(&self) -> bool {
+        self.online
     }
 
     pub fn with_default_interval() -> Watcher {
@@ -54,6 +68,12 @@ impl Watcher {
     pub fn poll(&mut self, now: f64, registry: &Registry, cache: &mut MetadataCache) -> usize {
         self.polls += 1;
         self.next_poll_at = now + self.poll_interval_secs;
+        if !self.online {
+            // Registry unreachable: keep the last good cache — the paper's
+            // motivated behaviour for unstable edge links.
+            self.failures += 1;
+            return 0;
+        }
         let mut fresh = MetadataCache::new(&cache.cache_file);
         for name in registry.catalog() {
             let tags = match registry.tags(&name) {
@@ -119,6 +139,22 @@ mod tests {
         assert!(!w.tick(9.99, &reg, &mut cache));
         assert!(w.tick(10.0, &reg, &mut cache));
         assert_eq!(w.polls, 2);
+    }
+
+    #[test]
+    fn outage_keeps_last_good_cache() {
+        let reg = Registry::with_corpus();
+        let mut cache = MetadataCache::new("/tmp/unused.json");
+        let mut w = Watcher::new(10.0);
+        w.poll(0.0, &reg, &mut cache);
+        assert_eq!(cache.len(), 30);
+        w.set_online(false);
+        assert_eq!(w.poll(10.0, &reg, &mut cache), 0);
+        assert_eq!(cache.len(), 30, "outage must not wipe the cache");
+        assert_eq!(w.failures, 1);
+        assert_eq!(w.next_poll_at(), 20.0, "polling cadence continues");
+        w.set_online(true);
+        assert!(w.poll(20.0, &reg, &mut cache) > 0);
     }
 
     #[test]

@@ -120,6 +120,14 @@ impl Framework {
         let mut feasible = Vec::new();
         let mut rejections = Vec::new();
         'nodes: for node in ctx.state.nodes() {
+            // NodeUnschedulable analog: drained/crashed nodes never pass,
+            // regardless of profile (hard lifecycle constraint, so it lives
+            // in the framework rather than a toggleable plugin).
+            if !node.is_schedulable() {
+                let why = if node.is_up() { "node is draining" } else { "node is down" };
+                rejections.push((node.name.clone(), "NodeUnschedulable", why.to_string()));
+                continue 'nodes;
+            }
             for f in &self.filters {
                 if let FilterResult::Reject(reason) = f.filter(ctx, node) {
                     rejections.push((node.name.clone(), f.name(), reason));
@@ -274,6 +282,26 @@ mod tests {
         let err = fw.run(&c).unwrap_err();
         assert_eq!(err.rejections.len(), 1);
         assert!(err.to_string().contains("RejectAll"));
+    }
+
+    #[test]
+    fn draining_and_down_nodes_never_feasible() {
+        let (mut state, pod) = setup(3);
+        state.drain_node(NodeId(0));
+        state.crash_node(NodeId(2));
+        let c = ctx(&state, &pod);
+        let fw = Framework::new("test"); // no plugins: only the lifecycle gate
+        let feasible = fw.feasible(&c).unwrap();
+        assert_eq!(feasible, vec![NodeId(1)]);
+
+        let mut state2 = state.clone();
+        state2.drain_node(NodeId(1));
+        let c2 = ctx(&state2, &pod);
+        let err = fw.feasible(&c2).unwrap_err();
+        assert_eq!(err.rejections.len(), 3);
+        assert!(err.rejections.iter().all(|(_, p, _)| *p == "NodeUnschedulable"));
+        assert!(err.to_string().contains("draining"));
+        assert!(err.to_string().contains("down"));
     }
 
     #[test]

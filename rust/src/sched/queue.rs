@@ -1,15 +1,48 @@
 //! Scheduling queue — FIFO of pending pods with a back-off parking lot for
 //! unschedulable ones, a small analog of kube-scheduler's active/backoff
 //! queues so the simulator can retry pods that failed filtering.
+//!
+//! Two release paths exist, mirroring kube-scheduler:
+//! - **Timer** ([`SchedulingQueue::release_due`]): the classic back-off
+//!   expiry, always armed as a fallback.
+//! - **Wake-up** ([`SchedulingQueue::wake_capacity`]): a capacity-freeing
+//!   cluster event (pod termination, image eviction, node join, registry
+//!   outage end) immediately releases parked pods whose unschedulable
+//!   reason it could cure — kube-scheduler's `QueueingHint` mechanism.
+//!
+//! Both paths release in FIFO order *by park time*. (An earlier version
+//! used `swap_remove`, releasing same-deadline pods in arbitrary order,
+//! which broke retry-order determinism once wake-ups released batches.)
 
 use crate::cluster::PodId;
 use std::collections::VecDeque;
 
+/// What could cure a parked pod's unschedulable reason — kube-scheduler's
+/// `QueueingHint` reduced to the two classes this simulator distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ParkCure {
+    /// Freed capacity can cure it (resources, disk, container slots, or a
+    /// node joining): released by capacity wake-ups *and* the timer.
+    #[default]
+    Capacity,
+    /// Nothing the wake-up events model can cure (taints, affinity):
+    /// released only by the back-off timer.
+    Timer,
+}
+
+/// One parked pod. Entries live in park order, which is release order.
+#[derive(Debug, Clone)]
+struct Parked {
+    pod: PodId,
+    release_at: f64,
+    cure: ParkCure,
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct SchedulingQueue {
     active: VecDeque<PodId>,
-    /// (pod, retry-at time).
-    backoff: Vec<(PodId, f64)>,
+    /// Parked pods in FIFO park order.
+    backoff: Vec<Parked>,
     pub backoff_secs: f64,
 }
 
@@ -29,31 +62,56 @@ impl SchedulingQueue {
 
     /// Park an unschedulable pod until `now + backoff_secs`; returns the
     /// release time so event-driven callers can schedule the release.
+    /// Capacity wake-ups may release it earlier (see [`ParkCure`]).
     pub fn park(&mut self, pod: PodId, now: f64) -> f64 {
+        self.park_with_cure(pod, now, ParkCure::Capacity)
+    }
+
+    /// [`SchedulingQueue::park`] with an explicit cure classification.
+    pub fn park_with_cure(&mut self, pod: PodId, now: f64, cure: ParkCure) -> f64 {
         let release_at = now + self.backoff_secs;
-        self.backoff.push((pod, release_at));
+        self.backoff.push(Parked { pod, release_at, cure });
         release_at
     }
 
-    /// Move pods whose back-off expired back to the active queue.
-    pub fn release_due(&mut self, now: f64) -> usize {
-        let mut released = 0;
-        let mut i = 0;
-        while i < self.backoff.len() {
-            if self.backoff[i].1 <= now {
-                let (pod, _) = self.backoff.swap_remove(i);
-                self.active.push_back(pod);
-                released += 1;
+    /// Move every parked pod matching `pred` to the active queue, in FIFO
+    /// order by park time (the shared core of both release paths).
+    fn release_where(&mut self, pred: impl Fn(&Parked) -> bool) -> Vec<PodId> {
+        let mut released = Vec::new();
+        let active = &mut self.active;
+        self.backoff.retain(|p| {
+            if pred(p) {
+                active.push_back(p.pod);
+                released.push(p.pod);
+                false
             } else {
-                i += 1;
+                true
             }
-        }
+        });
         released
+    }
+
+    /// Move pods whose back-off expired back to the active queue, in FIFO
+    /// order by park time.
+    pub fn release_due(&mut self, now: f64) -> usize {
+        self.release_where(|p| p.release_at <= now).len()
+    }
+
+    /// Capacity wake-up: a capacity-freeing event occurred, so release every
+    /// pod parked with [`ParkCure::Capacity`] immediately (FIFO by park
+    /// time), ignoring its back-off deadline. Timer-only parks stay. Returns
+    /// the released pods so the caller can grant them a free (uncharged)
+    /// retry — wake-ups are opportunistic and must not burn the budget.
+    pub fn wake_capacity(&mut self) -> Vec<PodId> {
+        self.release_where(|p| p.cure == ParkCure::Capacity)
     }
 
     /// Earliest back-off expiry (for event-driven simulation).
     pub fn next_release_at(&self) -> Option<f64> {
-        self.backoff.iter().map(|(_, t)| *t).min_by(|a, b| a.partial_cmp(b).unwrap())
+        self.backoff
+            .iter()
+            .map(|p| p.release_at)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 
     pub fn is_empty(&self) -> bool {
@@ -104,5 +162,49 @@ mod tests {
         assert_eq!(q.release_due(5.0), 1);
         assert_eq!(q.parked_len(), 1);
         assert_eq!(q.release_due(8.0), 1);
+    }
+
+    #[test]
+    fn same_deadline_batch_releases_fifo_by_park_time() {
+        // Regression: swap_remove released same-deadline pods in arbitrary
+        // order; batch releases must preserve park order.
+        let mut q = SchedulingQueue::new();
+        for pod in 0..8u64 {
+            q.park(PodId(pod), 0.0); // all release at 5.0
+        }
+        assert_eq!(q.release_due(5.0), 8);
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|p| p.0).collect();
+        assert_eq!(order, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wake_releases_capacity_parks_only_in_fifo_order() {
+        let mut q = SchedulingQueue::new();
+        q.park_with_cure(PodId(1), 0.0, ParkCure::Capacity);
+        q.park_with_cure(PodId(2), 1.0, ParkCure::Timer);
+        q.park_with_cure(PodId(3), 2.0, ParkCure::Capacity);
+        assert_eq!(
+            q.wake_capacity(),
+            vec![PodId(1), PodId(3)],
+            "only capacity-curable pods wake, in park order"
+        );
+        assert_eq!(q.pop(), Some(PodId(1)));
+        assert_eq!(q.pop(), Some(PodId(3)));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.parked_len(), 1, "timer-parked pod still waits");
+        assert_eq!(q.release_due(6.0), 1);
+        assert_eq!(q.pop(), Some(PodId(2)));
+    }
+
+    #[test]
+    fn wake_before_deadline_beats_timer() {
+        let mut q = SchedulingQueue::new();
+        let release_at = q.park(PodId(9), 10.0);
+        assert_eq!(release_at, 15.0);
+        // Capacity frees at t=11, well before the 15.0 deadline.
+        assert_eq!(q.wake_capacity(), vec![PodId(9)]);
+        assert_eq!(q.pop(), Some(PodId(9)));
+        // The stale timer release later finds nothing to do.
+        assert_eq!(q.release_due(15.0), 0);
     }
 }

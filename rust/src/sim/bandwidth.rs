@@ -33,6 +33,41 @@ impl LinkModel {
         self.node_bw[node] = bw;
     }
 
+    /// Register the link of a node that joined the cluster mid-run.
+    pub fn add_node(&mut self, bw: Bandwidth) {
+        self.node_bw.push(bw);
+        self.node_free_at.push(0.0);
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.node_bw.len()
+    }
+
+    /// Delay the most recent booking on `node` by `extra` seconds — used
+    /// when a transfer is *planned during* a registry outage (the booking
+    /// just made by `schedule_transfer` is the latest on both the node
+    /// link and, if capped, the registry uplink).
+    pub fn delay_booking(&mut self, node: usize, extra: f64) {
+        self.node_free_at[node] += extra;
+        if self.registry_uplink.is_some() {
+            self.registry_free_at += extra;
+        }
+    }
+
+    /// Registry outage: every transfer still in flight at `now` (link busy
+    /// past `now`) pauses for `extra` seconds — bookings shift so transfers
+    /// planned after the outage queue behind the resumed ones.
+    pub fn stall_in_flight(&mut self, now: f64, extra: f64) {
+        for t in self.node_free_at.iter_mut() {
+            if *t > now {
+                *t += extra;
+            }
+        }
+        if self.registry_free_at > now {
+            self.registry_free_at += extra;
+        }
+    }
+
     /// Schedule a transfer of `bytes` to `node` starting no earlier than
     /// `now`; returns (start, finish) and books the link.
     pub fn schedule_transfer(&mut self, node: usize, bytes: Bytes, now: f64) -> (f64, f64) {
@@ -91,5 +126,28 @@ mod tests {
         lm.registry_uplink = Some(Bandwidth::from_mbps(10.0));
         let (_, f) = lm.schedule_transfer(0, Bytes::from_mb(100.0), 0.0);
         assert_eq!(f, 10.0, "uplink is the bottleneck");
+    }
+
+    #[test]
+    fn joined_node_gets_fresh_link() {
+        let mut lm = LinkModel::new(vec![Bandwidth::from_mbps(10.0)]);
+        lm.add_node(Bandwidth::from_mbps(20.0));
+        assert_eq!(lm.node_count(), 2);
+        let (s, f) = lm.schedule_transfer(1, Bytes::from_mb(40.0), 100.0);
+        assert_eq!((s, f), (100.0, 102.0));
+    }
+
+    #[test]
+    fn outage_stall_shifts_busy_links_only() {
+        let mut lm = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 2]);
+        lm.schedule_transfer(0, Bytes::from_mb(100.0), 0.0); // busy until 10
+        lm.schedule_transfer(1, Bytes::from_mb(10.0), 0.0); // busy until 1
+        lm.stall_in_flight(2.0, 5.0);
+        // Node 0 was mid-transfer: its link frees 5s later; node 1 had
+        // already finished and is unaffected.
+        let (s0, _) = lm.schedule_transfer(0, Bytes::from_mb(10.0), 2.0);
+        assert_eq!(s0, 15.0);
+        let (s1, _) = lm.schedule_transfer(1, Bytes::from_mb(10.0), 2.0);
+        assert_eq!(s1, 2.0);
     }
 }

@@ -72,6 +72,41 @@ impl PullManager {
         }
     }
 
+    /// Register a node that joined the cluster mid-run (no pulls yet).
+    pub fn add_node(&mut self) {
+        self.in_flight.push(HashMap::new());
+    }
+
+    /// Forget a crashed node's in-flight pulls: the layers never arrive,
+    /// and no future pod can wait on them (the node is down).
+    pub fn clear_node(&mut self, node: usize) {
+        self.in_flight[node].clear();
+    }
+
+    /// Delay the in-flight finishes of specific `layers` on `node` — used
+    /// when a pull is *planned during* a registry outage: its WAN transfer
+    /// cannot move bytes until the window ends, and same-node followers
+    /// waiting on these layers must observe the delayed arrival.
+    pub fn delay_layers(&mut self, node: usize, layers: &[LayerId], extra: f64) {
+        for l in layers {
+            if let Some(finish) = self.in_flight[node].get_mut(l) {
+                *finish += extra;
+            }
+        }
+    }
+
+    /// Registry outage: push every in-flight layer's finish time past the
+    /// stall so peers waiting on those layers observe the delayed arrival.
+    pub fn stall_in_flight(&mut self, now: f64, extra: f64) {
+        for m in &mut self.in_flight {
+            for finish in m.values_mut() {
+                if *finish > now {
+                    *finish += extra;
+                }
+            }
+        }
+    }
+
     pub fn in_flight_count(&self, node: usize) -> usize {
         self.in_flight[node].len()
     }
@@ -141,6 +176,34 @@ mod tests {
         pulls.plan(0, &[LayerId(3)], &interner, &mut links, 0.0);
         let p = pulls.plan(1, &[LayerId(3)], &interner, &mut links, 0.0);
         assert_eq!(p.bytes, Bytes::from_mb(40.0), "different node re-downloads");
+    }
+
+    #[test]
+    fn stall_shifts_only_in_flight_finishes() {
+        let (interner, mut links, mut pulls) = setup();
+        pulls.plan(0, &[LayerId(0)], &interner, &mut links, 0.0); // finish 1.0
+        pulls.plan(1, &[LayerId(2)], &interner, &mut links, 0.0); // finish 3.0
+        // Outage at t=2 for 10s: node 0's pull already finished, node 1's
+        // in-flight pull shifts to 13.0.
+        pulls.stall_in_flight(2.0, 10.0);
+        let p = pulls.plan(1, &[LayerId(2)], &interner, &mut links, 2.5);
+        assert_eq!(p.bytes, Bytes::ZERO);
+        assert_eq!(p.ready_at, 13.0, "peer waits for the stalled pull");
+        let q = pulls.plan(0, &[LayerId(0)], &interner, &mut links, 2.5);
+        assert_eq!(q.ready_at, 2.5, "completed pull was not shifted");
+    }
+
+    #[test]
+    fn joined_and_crashed_nodes_bookkeeping() {
+        let (interner, mut links, mut pulls) = setup();
+        pulls.add_node();
+        links.add_node(crate::util::units::Bandwidth::from_mbps(10.0));
+        assert_eq!(links.node_count(), 3);
+        let p = pulls.plan(2, &[LayerId(0)], &interner, &mut links, 0.0);
+        assert_eq!(p.bytes, Bytes::from_mb(10.0));
+        assert_eq!(pulls.in_flight_count(2), 1);
+        pulls.clear_node(2);
+        assert_eq!(pulls.in_flight_count(2), 0);
     }
 
     #[test]

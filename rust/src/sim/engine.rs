@@ -23,15 +23,20 @@ use super::download::PullManager;
 use super::events::{EventPayload, EventQueue};
 use super::kubelet::{self, ImageLayerStore, PendingStart};
 use super::metrics::{self, ClusterSnapshot, PodRecord};
-use crate::cluster::{ClusterState, EventKind, EventLog, Node, Pod, PodId};
+use super::workload::{ChurnAction, ChurnConfig, ChurnModel};
+use crate::cluster::{ClusterState, EventKind, EventLog, Node, NodeId, Pod, PodId, Resources};
 use crate::registry::{MetadataCache, Registry, Watcher};
-use crate::sched::queue::SchedulingQueue;
+use crate::sched::queue::{ParkCure, SchedulingQueue};
 use crate::sched::rl::{RlParams, RlScheduler};
 use crate::sched::scoring::ScoringBackend;
-use crate::sched::{CycleContext, FrameworkConfig, LrScheduler, WeightParams};
+use crate::sched::{CycleContext, FrameworkConfig, LrScheduler, Unschedulable, WeightParams};
 use crate::util::units::{Bandwidth, Bytes};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sentinel pod id for node-level event records (same convention the GC
+/// eviction records already use).
+const NODE_SCOPE: PodId = PodId(u64::MAX);
 
 /// Which of the paper's three schedulers to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -98,6 +103,15 @@ pub struct SimConfig {
     /// placement, the paper-experiment default; the 100k-pod scale harness
     /// raises this to bound memory). A final snapshot is always taken.
     pub snapshot_every: usize,
+    /// Cluster-volatility model: node joins/drains/crashes and registry
+    /// outage windows injected as events over the trace (None = the
+    /// static cluster of the paper's testbed).
+    pub churn: Option<ChurnConfig>,
+    /// Capacity-driven wake-ups (kube-scheduler `QueueingHint` analog):
+    /// capacity-freeing events release parked pods immediately instead of
+    /// waiting out their back-off timer (which stays armed as a fallback).
+    /// Off reproduces PR 1's pure fixed-back-off behaviour.
+    pub wake_on_capacity: bool,
 }
 
 impl Default for SimConfig {
@@ -117,8 +131,25 @@ impl Default for SimConfig {
             retry_limit: 3,
             retry_backoff_secs: 5.0,
             snapshot_every: 1,
+            churn: None,
+            wake_on_capacity: true,
         }
     }
+}
+
+/// The terminal (latest) state of one submitted pod. A crash can revert a
+/// resolved pod to `Lost`; its resubmission then re-resolves it, so each
+/// pod contributes exactly one bucket to the accounting identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PodOutcome {
+    /// Container started (and was not subsequently lost to a crash).
+    Started,
+    /// Image install wedged (ImagePullBackOff analog).
+    FailedPull,
+    /// Exhausted its retries without binding.
+    Unschedulable,
+    /// Lost when its node crashed; awaiting (or denied) re-resolution.
+    Lost,
 }
 
 /// Aggregated outcome of a simulation run.
@@ -127,14 +158,32 @@ pub struct SimReport {
     pub scheduler: &'static str,
     pub records: Vec<PodRecord>,
     pub snapshots: Vec<ClusterSnapshot>,
-    /// Pods submitted to the API server.
+    /// Pods submitted to the API server (crash resubmissions of the same
+    /// pod do not re-count).
     pub submitted: usize,
+    /// Pods whose final state is started/ran (crash-lost instances that
+    /// re-resolved count once, in their final bucket).
+    pub started: usize,
     /// Pods that exhausted their retries without binding.
     pub unschedulable: usize,
     /// Bound pods whose image install wedged (ImagePullBackOff analog).
     pub failed_pulls: usize,
+    /// Pods whose final state is crash-lost (nonzero only if the run ends
+    /// before a resubmitted pod re-resolves).
+    pub lost_to_crash: usize,
     /// Scheduling-cycle failures that parked a pod for retry.
     pub retries: u64,
+    /// Pod instances returned to the scheduling queue by node crashes
+    /// (does not count against the retry limit).
+    pub resubmitted: u64,
+    /// In-flight pulls stalled by registry outage windows.
+    pub pulls_stalled: u64,
+    /// Parked pods released early by capacity-driven wake-ups
+    /// (`QueueingHint` analog) instead of their back-off timer.
+    pub wakeups: u64,
+    pub nodes_joined: usize,
+    pub nodes_drained: usize,
+    pub nodes_crashed: usize,
     pub omega1_used: u64,
     pub omega2_used: u64,
     /// Decisions taken at a mid-range ω (ThreeLevel / Linear policies).
@@ -155,20 +204,23 @@ impl SimReport {
         self.snapshots.last().map(|s| s.std_score).unwrap_or(0.0)
     }
 
-    /// Pods the scheduler bound (includes pulls that later wedged).
+    /// Placements the scheduler bound (includes pulls that later wedged;
+    /// under churn a crash-resubmitted pod adds a placement per bind).
     pub fn deployed(&self) -> usize {
         self.records.len()
     }
 
-    /// Pods that bound *and* started (deployed minus wedged pulls).
+    /// Pods that bound *and* started (final state, crash losses excluded).
     pub fn completed(&self) -> usize {
-        self.records.len() - self.failed_pulls
+        self.started
     }
 
-    /// No dropped events: every submitted pod is accounted for as
-    /// completed, wedged, or unschedulable-after-retries.
+    /// No dropped events: every submitted pod is accounted for exactly
+    /// once — completed, wedged, unschedulable-after-retries, or lost to a
+    /// node crash — even under churn.
     pub fn accounting_balanced(&self) -> bool {
-        self.completed() + self.failed_pulls + self.unschedulable == self.submitted
+        self.completed() + self.failed_pulls + self.unschedulable + self.lost_to_crash
+            == self.submitted
     }
 }
 
@@ -238,13 +290,33 @@ pub struct Simulation {
     seq_backlog: VecDeque<Pod>,
     /// Is a WatcherTick event currently scheduled?
     watcher_armed: bool,
+    /// Terminal state per submitted pod (the accounting source of truth;
+    /// a crash reverts a pod to `Lost` until it re-resolves).
+    outcomes: HashMap<PodId, PodOutcome>,
+    /// Termination-timer epoch per pod: bumped when a crash loses the
+    /// instance, so a stale `PodTermination` cannot kill the rebound one.
+    epochs: HashMap<PodId, u64>,
+    /// Pods released by a capacity wake-up whose next failed cycle is
+    /// free: wake-ups are opportunistic extra attempts on top of the
+    /// timer cadence, so they must not burn `retry_limit` (kube's
+    /// `QueueingHint` re-queues without consuming back-off budget).
+    retry_grace: std::collections::HashSet<PodId>,
+    /// Pods whose resolution already released the next sequential
+    /// arrival (each pod chains exactly once; see `chain_next_arrival`).
+    chained: std::collections::HashSet<PodId>,
+    /// Registry unreachable until this virtual time (0 = reachable).
+    outage_until: f64,
     pub events: EventLog,
     pub records: Vec<PodRecord>,
     pub snapshots: Vec<ClusterSnapshot>,
     pub submitted: usize,
-    pub unschedulable: usize,
-    pub failed_pulls: usize,
     pub retries: u64,
+    pub resubmitted: u64,
+    pub pulls_stalled: u64,
+    pub wakeups: u64,
+    pub nodes_joined: usize,
+    pub nodes_drained: usize,
+    pub nodes_crashed: usize,
     cfg: SimConfig,
 }
 
@@ -283,13 +355,22 @@ impl Simulation {
             retry_counts: HashMap::new(),
             seq_backlog: VecDeque::new(),
             watcher_armed: false,
+            outcomes: HashMap::new(),
+            epochs: HashMap::new(),
+            retry_grace: std::collections::HashSet::new(),
+            chained: std::collections::HashSet::new(),
+            outage_until: 0.0,
             events: EventLog::new(),
             records: Vec::new(),
             snapshots: Vec::new(),
             submitted: 0,
-            unschedulable: 0,
-            failed_pulls: 0,
             retries: 0,
+            resubmitted: 0,
+            pulls_stalled: 0,
+            wakeups: 0,
+            nodes_joined: 0,
+            nodes_drained: 0,
+            nodes_crashed: 0,
             cfg,
         }
     }
@@ -358,34 +439,207 @@ impl Simulation {
                 }
                 EventPayload::PullComplete { pod } => {
                     if let Some(p) = self.pending.remove(&pod) {
+                        if p.plan.ready_at > t + 1e-9 {
+                            // A registry outage stalled this pull after its
+                            // completion was queued (or this is a stale
+                            // pre-crash event racing a rebind): the layers
+                            // actually land at the updated ready time.
+                            let at = p.plan.ready_at;
+                            self.pending.insert(pod, p);
+                            self.queue.push(at, EventPayload::PullComplete { pod });
+                            continue;
+                        }
                         let duration = self.state.pod(pod).and_then(|x| x.duration_secs);
                         let started = self.finish_pull(p);
                         self.pulls.gc(t);
                         if started {
                             if let Some(d) = duration {
-                                self.queue.push(t + d, EventPayload::PodTermination { pod });
+                                let epoch = self.epochs.get(&pod).copied().unwrap_or(0);
+                                self.queue
+                                    .push(t + d, EventPayload::PodTermination { pod, epoch });
                             }
                         }
-                        self.chain_next_arrival(t);
+                        self.chain_next_arrival(t, pod);
                     }
                 }
-                EventPayload::PodTermination { pod } => {
+                EventPayload::PodTermination { pod, epoch } => {
+                    // Ignore stale timers from a pre-crash instance: the
+                    // pod may be rebound and running a fresh epoch.
+                    if self.epochs.get(&pod).copied().unwrap_or(0) != epoch {
+                        continue;
+                    }
                     // Resources release; layers stay cached until GC needs
                     // them (image retention is the kubelet's GC job).
-                    let _ = self.state.unbind(pod);
+                    let released = self.state.unbind(pod).is_ok();
                     if self.cfg.gc_enabled {
                         self.queue.push(t, EventPayload::GcSweep);
                     }
+                    // QueueingHint: freed capacity wakes parked pods now,
+                    // instead of at their back-off deadline.
+                    if released && self.wake_parked() > 0 {
+                        self.drain_sched_queue();
+                    }
                 }
-                EventPayload::GcSweep => self.gc_pressure_sweep(),
+                EventPayload::GcSweep => {
+                    let evicted = self.gc_pressure_sweep();
+                    // Freed disk can cure NodeCapacity rejections.
+                    if evicted && self.wake_parked() > 0 {
+                        self.drain_sched_queue();
+                    }
+                }
+                EventPayload::NodeJoin => self.handle_node_join(t),
+                EventPayload::NodeDrain { node } => {
+                    if self.state.node(node).is_schedulable() {
+                        self.state.drain_node(node);
+                        self.nodes_drained += 1;
+                        self.events.record(t, NODE_SCOPE, EventKind::NodeDrained { node });
+                    }
+                }
+                EventPayload::NodeCrash { node } => self.handle_node_crash(t, node),
+                EventPayload::RegistryOutageStart { until } => {
+                    self.handle_outage_start(t, until)
+                }
+                EventPayload::RegistryOutageEnd => {
+                    if t >= self.outage_until - 1e-9 {
+                        self.watcher.set_online(true);
+                        self.events.record(t, NODE_SCOPE, EventKind::RegistryOutageEnd);
+                        // Stalled pulls resume: treat connectivity return
+                        // as a wake-up source (it unblocks progress).
+                        if self.wake_parked() > 0 {
+                            self.drain_sched_queue();
+                        }
+                    }
+                }
             }
         }
     }
 
+    // --- cluster volatility -----------------------------------------------
+
+    /// A cold node joins: dense next id, empty layer cache (the
+    /// `ScoreArena` spots the new row via `layers_version`), fresh link
+    /// and pull bookkeeping — then parked pods wake: new capacity may
+    /// cure their rejection.
+    fn handle_node_join(&mut self, t: f64) {
+        let spec = self.cfg.churn.clone().unwrap_or_default();
+        let id = self.state.next_node_id();
+        let mut node = Node::new(
+            id,
+            &format!("join{:03}", self.nodes_joined + 1),
+            Resources::cores_gb(spec.join_cores, spec.join_mem_gb),
+            Bytes::from_gb(spec.join_disk_gb),
+            Bandwidth::from_mbps(spec.join_bw_mbps),
+        );
+        if let Some(mbps) = self.cfg.bandwidth_mbps {
+            node.bandwidth = Bandwidth::from_mbps(mbps);
+        }
+        let bw = node.bandwidth;
+        self.state.add_node(node);
+        self.links.add_node(bw);
+        self.pulls.add_node();
+        self.nodes_joined += 1;
+        self.events.record(t, NODE_SCOPE, EventKind::NodeJoined { node: id });
+        if self.wake_parked() > 0 {
+            self.drain_sched_queue();
+        }
+    }
+
+    /// A node crashes: its running/pulling pods lose their instance and
+    /// resubmit to the scheduling queue — without counting against the
+    /// retry limit (kube controllers recreate pods of failed nodes; the
+    /// retry budget guards scheduling failures, not infrastructure loss).
+    fn handle_node_crash(&mut self, t: f64, node: NodeId) {
+        if !self.state.node(node).is_up() {
+            return;
+        }
+        let lost = self.state.crash_node(node);
+        self.nodes_crashed += 1;
+        // Known approximation: with a shared `registry_uplink` cap, the
+        // dead node's in-flight transfer keeps its scalar booking on the
+        // uplink (the link model tracks only free-at times, not per-
+        // transfer provenance), so other nodes' pulls may queue behind a
+        // phantom transfer until its original finish. See ROADMAP.
+        self.pulls.clear_node(node.0 as usize);
+        self.events
+            .record(t, NODE_SCOPE, EventKind::NodeCrashed { node, lost_pods: lost.len() });
+        for pid in lost {
+            // In-flight pull (if any) dies with the node; its queued
+            // PullComplete event becomes a no-op.
+            self.pending.remove(&pid);
+            // Invalidate the old instance's termination timer.
+            *self.epochs.entry(pid).or_insert(0) += 1;
+            self.outcomes.insert(pid, PodOutcome::Lost);
+            self.retry_counts.remove(&pid);
+            self.resubmitted += 1;
+            self.events.record(t, pid, EventKind::Resubmitted);
+            self.sched_queue.push(pid);
+        }
+        self.drain_sched_queue();
+    }
+
+    /// Registry becomes unreachable until `until`: the watcher keeps its
+    /// last good cache, and every in-flight WAN pull pauses for the
+    /// remainder of the window.
+    fn handle_outage_start(&mut self, t: f64, until: f64) {
+        let effective_from = self.outage_until.max(t);
+        if until <= effective_from {
+            return; // window already covered by a live outage
+        }
+        let extra = until - effective_from;
+        self.watcher.set_online(false);
+        self.events.record(t, NODE_SCOPE, EventKind::RegistryOutageStart { until });
+        self.links.stall_in_flight(t, extra);
+        self.pulls.stall_in_flight(t, extra);
+        // Collect, then sort: HashMap iteration order must never reach
+        // the event log (byte-identical reports per seed). Only pulls
+        // whose *WAN transfer* is still in flight stall (`finish > t`,
+        // matching `stall_in_flight`'s bookkeeping) — pure-P2P/LAN tails
+        // and zero-byte cache hits don't touch the registry, matching
+        // the bind-during-outage exemption in `try_schedule`.
+        let mut stalled: Vec<(PodId, NodeId, f64)> = Vec::new();
+        for (pid, p) in self.pending.iter_mut() {
+            if p.plan.bytes > Bytes::ZERO && p.plan.finish > t {
+                p.plan.finish += extra;
+                p.plan.ready_at = p.plan.ready_at.max(p.plan.finish);
+                stalled.push((*pid, p.node, p.plan.ready_at));
+            }
+        }
+        stalled.sort_by_key(|(pid, _, _)| pid.0);
+        for (pid, node, resume_at) in stalled {
+            self.pulls_stalled += 1;
+            self.events
+                .record(t, pid, EventKind::PullStalled { node, until: resume_at });
+        }
+        self.outage_until = until;
+        self.queue.push(until, EventPayload::RegistryOutageEnd);
+    }
+
+    /// Capacity wake-up (`QueueingHint`): release parked pods whose
+    /// rejection freed capacity could cure. Their `BackoffRelease` events
+    /// stay queued as harmless no-op fallbacks, and each woken pod's next
+    /// failed cycle is free — a wake retry is an opportunistic bonus, so
+    /// it must not erode the `retry_limit × backoff` wall-clock coverage
+    /// the timer path guarantees. Returns released count.
+    fn wake_parked(&mut self) -> usize {
+        if !self.cfg.wake_on_capacity {
+            return 0;
+        }
+        let woken = self.sched_queue.wake_capacity();
+        self.wakeups += woken.len() as u64;
+        let n = woken.len();
+        for pid in woken {
+            self.retry_grace.insert(pid);
+        }
+        n
+    }
+
     /// In the sequential protocol, the next pod arrives once the current
-    /// one resolves (container started, pull wedged, or retries exhausted).
-    fn chain_next_arrival(&mut self, t: f64) {
-        if self.cfg.inter_arrival_secs.is_none() {
+    /// one resolves (container started, pull wedged, or retries
+    /// exhausted). A pod releases the next arrival exactly once: a crash
+    /// re-resolution must not run arrivals ahead of the one-at-a-time
+    /// protocol, and a mid-pull crash must not lose the chain.
+    fn chain_next_arrival(&mut self, t: f64, resolved: PodId) {
+        if self.cfg.inter_arrival_secs.is_none() && self.chained.insert(resolved) {
             if let Some(pod) = self.seq_backlog.pop_front() {
                 self.queue.push(t, EventPayload::Arrival { pod });
             }
@@ -432,23 +686,29 @@ impl Simulation {
             Ok(d) => d,
             Err(u) => {
                 drop(ctx);
+                // Wake-released cycles are uncharged (see `wake_parked`);
+                // timer releases and first attempts consume the budget.
+                let graced = self.retry_grace.remove(&pid);
                 let attempts = {
                     let c = self.retry_counts.entry(pid).or_insert(0);
-                    *c += 1;
+                    if !graced {
+                        *c += 1;
+                    }
                     *c
                 };
                 if attempts > self.cfg.retry_limit {
                     // Retries exhausted: the pod is unschedulable for good.
                     self.retry_counts.remove(&pid);
-                    self.unschedulable += 1;
+                    self.outcomes.insert(pid, PodOutcome::Unschedulable);
                     self.events
                         .record(now, pid, EventKind::Unschedulable { reason: u.to_string() });
-                    self.chain_next_arrival(now);
+                    self.chain_next_arrival(now, pid);
                 } else {
                     // Park with back-off and retry (kube-scheduler's
                     // unschedulable queue, instead of dropping the pod).
+                    // The cure class routes capacity wake-ups to it.
                     self.retries += 1;
-                    let release_at = self.sched_queue.park(pid, now);
+                    let release_at = self.sched_queue.park_with_cure(pid, now, cure_for(&u));
                     self.queue.push(release_at, EventPayload::BackoffRelease);
                     self.events.record(
                         now,
@@ -467,6 +727,7 @@ impl Simulation {
         };
         drop(ctx);
         self.retry_counts.remove(&pid);
+        self.retry_grace.remove(&pid);
 
         self.events.record(
             now,
@@ -475,7 +736,7 @@ impl Simulation {
         );
         self.state.bind(pid, decision.node).expect("bind after schedule");
 
-        let pending = kubelet::begin_pull(
+        let mut pending = kubelet::begin_pull(
             &self.state,
             &mut self.pulls,
             &mut self.links,
@@ -495,6 +756,25 @@ impl Simulation {
                 layers: pending.plan.new_layers.len(),
             },
         );
+        if self.outage_until > now && pending.plan.bytes > Bytes::ZERO {
+            // WAN transfer begun during a registry outage: it cannot move
+            // bytes until the window closes. Shift the transfer finish,
+            // the in-flight layer bookkeeping (so same-node followers
+            // wait for the real arrival and `PullManager::gc` cannot drop
+            // the entries mid-stall), and the link booking.
+            let stall = self.outage_until - now;
+            pending.plan.finish += stall;
+            pending.plan.ready_at = pending.plan.ready_at.max(pending.plan.finish);
+            self.pulls
+                .delay_layers(decision.node.0 as usize, &pending.plan.new_layers, stall);
+            self.links.delay_booking(decision.node.0 as usize, stall);
+            self.pulls_stalled += 1;
+            self.events.record(
+                now,
+                pid,
+                EventKind::PullStalled { node: decision.node, until: pending.plan.ready_at },
+            );
+        }
         let (wan_bytes, p2p_bytes) = (pending.wan_bytes, pending.p2p_bytes);
         let ready_at = pending.plan.ready_at;
         let download_secs = ready_at - now;
@@ -529,29 +809,36 @@ impl Simulation {
 
     /// Kubelet image GC: when a node crosses the high disk-usage threshold
     /// (kubelet's ImageGCHighThresholdPercent analog, 85%), evict unused
-    /// images down to the low threshold (70%).
-    fn gc_pressure_sweep(&mut self) {
+    /// images down to the low threshold (70%). Returns whether anything
+    /// was evicted (eviction is a capacity-freeing wake-up source).
+    fn gc_pressure_sweep(&mut self) -> bool {
         if !self.cfg.gc_enabled {
-            return;
+            return false;
         }
+        let mut evicted_any = false;
         let now = self.clock.now();
         for i in 0..self.state.node_count() {
-            let node = crate::cluster::NodeId(i as u32);
+            let node = NodeId(i as u32);
             let n = self.state.node(node);
+            if !n.is_up() {
+                continue; // a crashed node's disk is gone, not reclaimable
+            }
             let (disk, used) = (n.disk.0 as f64, n.disk_used.0 as f64);
             if disk > 0.0 && used / disk > self.cfg.gc_high_pct {
                 // Free down to the low-threshold usage.
                 let target = Bytes((disk * (1.0 - self.cfg.gc_low_pct)) as u64);
                 let freed = kubelet::gc_images(&mut self.state, &self.images, node, target);
                 if freed > Bytes::ZERO {
+                    evicted_any = true;
                     self.events.record(
                         now,
-                        crate::cluster::PodId(u64::MAX), // node-level event
+                        NODE_SCOPE, // node-level event
                         EventKind::Evicted { node, bytes: freed },
                     );
                 }
             }
         }
+        evicted_any
     }
 
     /// Install the pulled image and start the container. Returns whether
@@ -577,6 +864,7 @@ impl Simulation {
         match kubelet::complete_pull(&mut self.state, &p) {
             Ok(_) => {
                 self.images.remember(&p.image, &p.layers);
+                self.outcomes.insert(p.pod, PodOutcome::Started);
                 self.events.record(
                     now,
                     p.pod,
@@ -588,7 +876,7 @@ impl Simulation {
             Err(e) => {
                 // Disk overcommitted by concurrent binds: the pod wedges
                 // (ImagePullBackOff analog). Counted, surfaced in events.
-                self.failed_pulls += 1;
+                self.outcomes.insert(p.pod, PodOutcome::FailedPull);
                 self.events.record(
                     now,
                     p.pod,
@@ -616,13 +904,42 @@ impl Simulation {
         self.records.iter().rev().any(|r| r.pod == pid)
     }
 
+    /// Queue an arbitrary event at absolute virtual time `at` — the
+    /// failure-injection hook: tests and harnesses drive node churn and
+    /// registry outages through it without a [`ChurnConfig`].
+    pub fn inject_event(&mut self, at: f64, payload: EventPayload) {
+        self.queue.push(at, payload);
+    }
+
+    /// Enqueue the seeded cluster-volatility trace (if configured).
+    fn inject_churn_trace(&mut self, t0: f64) {
+        let churn = match &self.cfg.churn {
+            Some(c) => c.clone(),
+            None => return,
+        };
+        for ev in ChurnModel::trace(&churn, self.state.node_count()) {
+            let at = t0 + ev.at;
+            let payload = match ev.action {
+                ChurnAction::Join => EventPayload::NodeJoin,
+                ChurnAction::Drain { node } => EventPayload::NodeDrain { node },
+                ChurnAction::Crash { node } => EventPayload::NodeCrash { node },
+                ChurnAction::Outage { secs } => {
+                    EventPayload::RegistryOutageStart { until: at + secs }
+                }
+            };
+            self.queue.push(at, payload);
+        }
+    }
+
     /// Run a whole trace through the event queue. Timed mode enqueues all
     /// arrivals up front; sequential mode chains each arrival to the
     /// previous pod's resolution. Returns once every event — including
-    /// terminations and back-off releases due after the last pull — fired.
+    /// terminations, churn, and back-off releases due after the last pull
+    /// — fired.
     pub fn run_trace(&mut self, pods: Vec<Pod>) -> SimReport {
         let t0 = self.clock.now();
         self.arm_watcher(t0);
+        self.inject_churn_trace(t0);
         match self.cfg.inter_arrival_secs {
             Some(dt) => {
                 for (i, pod) in pods.into_iter().enumerate() {
@@ -653,19 +970,56 @@ impl Simulation {
             ),
             SchedImpl::Rl(_) => (0, 0, 0, Vec::new()),
         };
+        // Tally terminal pod states: every submitted pod lands in exactly
+        // one bucket (the accounting identity the scale harness checks).
+        let (mut started, mut failed, mut unsched, mut lost) = (0, 0, 0, 0);
+        for outcome in self.outcomes.values() {
+            match outcome {
+                PodOutcome::Started => started += 1,
+                PodOutcome::FailedPull => failed += 1,
+                PodOutcome::Unschedulable => unsched += 1,
+                PodOutcome::Lost => lost += 1,
+            }
+        }
         SimReport {
             scheduler: self.cfg.scheduler.label(),
             records: self.records.clone(),
             snapshots: self.snapshots.clone(),
             submitted: self.submitted,
-            unschedulable: self.unschedulable,
-            failed_pulls: self.failed_pulls,
+            started,
+            unschedulable: unsched,
+            failed_pulls: failed,
+            lost_to_crash: lost,
             retries: self.retries,
+            resubmitted: self.resubmitted,
+            pulls_stalled: self.pulls_stalled,
+            wakeups: self.wakeups,
+            nodes_joined: self.nodes_joined,
+            nodes_drained: self.nodes_drained,
+            nodes_crashed: self.nodes_crashed,
             omega1_used: w1,
             omega2_used: w2,
             omega_mid_used: wmid,
             omega_trace: trace,
         }
+    }
+}
+
+/// Which wake-up class could cure this rejection set? If *any* node was
+/// rejected for lack of capacity (resources, container slots, disk/volume,
+/// or node lifecycle), freed capacity might cure the pod; purely
+/// constraint-based rejections (taints, affinity) only a timer revisits.
+fn cure_for(u: &Unschedulable) -> ParkCure {
+    let capacity_ish = u.rejections.iter().any(|(_, plugin, _)| {
+        matches!(
+            *plugin,
+            "NodeResourcesFit" | "NodeCapacity" | "VolumeBinding" | "NodeUnschedulable"
+        )
+    });
+    if capacity_ish {
+        ParkCure::Capacity
+    } else {
+        ParkCure::Timer
     }
 }
 
@@ -867,6 +1221,220 @@ mod tests {
         let report = sim.run_trace(trace);
         // 20 placements / 7 = 2 periodic snapshots + 1 final.
         assert_eq!(report.snapshots.len(), 3);
+    }
+
+    #[test]
+    fn node_crash_resubmits_running_pods() {
+        // 3 nodes × 2 pods of 1.5 cores each (a third never fits): node 0's
+        // crash loses 2 instances, which resubmit without burning the retry
+        // budget and rebind once survivors terminate.
+        let reg = Registry::with_corpus();
+        let mut b = crate::cluster::PodBuilder::new();
+        let pods: Vec<Pod> = (0..6)
+            .map(|_| b.build("redis:7.2", Resources::cores_gb(1.5, 0.5)).with_duration(120.0))
+            .collect();
+        let mut cfg = SimConfig::default();
+        cfg.inter_arrival_secs = Some(1.0);
+        cfg.retry_limit = 200;
+        let mut sim = Simulation::new(nodes(3), reg, cfg);
+        sim.inject_event(50.0, EventPayload::NodeCrash { node: NodeId(0) });
+        let report = sim.run_trace(pods);
+
+        assert_eq!(report.nodes_crashed, 1);
+        assert_eq!(report.resubmitted, 2, "node 0 held exactly 2 pods at t=50");
+        assert_eq!(report.deployed(), 8, "6 first placements + 2 re-placements");
+        assert_eq!(report.completed(), 6, "every pod eventually ran");
+        assert_eq!(report.lost_to_crash, 0, "all lost instances re-resolved");
+        assert_eq!(report.unschedulable, 0);
+        assert!(report.accounting_balanced());
+        let down = sim.state.node(NodeId(0));
+        assert!(!down.is_up());
+        assert!(down.pods.is_empty());
+        assert_eq!(down.disk_used, Bytes::ZERO, "crashed node lost its cache");
+        let crashes = sim
+            .events
+            .all()
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::NodeCrashed { lost_pods: 2, .. }))
+            .count();
+        assert_eq!(crashes, 1);
+        assert_eq!(
+            sim.events.all().iter().filter(|e| e.kind == EventKind::Resubmitted).count(),
+            2
+        );
+        sim.state.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn drain_stops_new_bindings_and_lets_pods_finish() {
+        let reg = Registry::with_corpus();
+        let mut b = crate::cluster::PodBuilder::new();
+        let first = b.build("redis:7.2", Resources::cores_gb(0.5, 0.5)).with_duration(30.0);
+        let later: Vec<Pod> =
+            (0..2).map(|_| b.build("nginx:1.25", Resources::cores_gb(0.5, 0.5))).collect();
+        let mut pods = vec![first];
+        pods.extend(later);
+        let mut cfg = SimConfig::default();
+        cfg.inter_arrival_secs = Some(5.0);
+        let mut sim = Simulation::new(nodes(2), reg, cfg);
+        // Cordon worker1 after the first pod binds there (tie-break picks
+        // the lower node id on an idle cluster) but before the others land.
+        sim.inject_event(2.5, EventPayload::NodeDrain { node: NodeId(0) });
+        let report = sim.run_trace(pods);
+
+        assert_eq!(report.nodes_drained, 1);
+        assert_eq!(report.deployed(), 3);
+        assert_eq!(report.records[0].node, "worker1");
+        assert!(
+            report.records.iter().skip(1).all(|r| r.node == "worker2"),
+            "post-drain bindings must avoid the cordoned node"
+        );
+        // The drained node's pod ran to completion there.
+        assert!(sim.state.node(NodeId(0)).pods.is_empty());
+        assert!(!sim.state.node(NodeId(0)).is_schedulable());
+        assert!(sim.state.node(NodeId(0)).is_up());
+        assert!(report.accounting_balanced());
+        sim.state.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn joined_node_wakes_and_binds_parked_pod() {
+        // A full single-node cluster parks pod B; a cold node joining at
+        // t=30 must wake it immediately — before its next back-off deadline
+        // — and the ScoreArena path must pick the new row up cleanly.
+        let reg = Registry::with_corpus();
+        let mut b = crate::cluster::PodBuilder::new();
+        let a = b.build("redis:7.2", Resources::cores_gb(3.9, 0.5));
+        let bpod = b.build("nginx:1.25", Resources::cores_gb(3.9, 0.5));
+        let mut cfg = SimConfig::default();
+        cfg.inter_arrival_secs = Some(1.0);
+        cfg.retry_limit = 100;
+        cfg.retry_backoff_secs = 7.0; // deadlines at 8, 15, 22, 29, 36...
+        let mut sim = Simulation::new(nodes(1), reg, cfg).with_backend(Box::new(
+            crate::sched::NativeScorer,
+        ));
+        sim.inject_event(30.0, EventPayload::NodeJoin);
+        let report = sim.run_trace(vec![a, bpod]);
+
+        assert_eq!(report.nodes_joined, 1);
+        assert_eq!(report.completed(), 2);
+        assert!(report.wakeups >= 1, "join must wake the parked pod");
+        let bind = report.records.last().unwrap();
+        assert_eq!(bind.node, "join001", "only the joined node has room");
+        assert_eq!(bind.at, 30.0, "wake-up binds at the join, not at t=36 back-off");
+        assert!(bind.download > Bytes::ZERO, "joined node starts with a cold cache");
+        assert!(report.accounting_balanced());
+        sim.state.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn registry_outage_stalls_inflight_pulls() {
+        let run = |outage: bool| {
+            let reg = Registry::with_corpus();
+            let mut b = crate::cluster::PodBuilder::new();
+            let pod = b.build("wordpress:6.4", Resources::cores_gb(0.5, 0.5));
+            let mut sim = Simulation::new(nodes(1), reg, SimConfig::default());
+            if outage {
+                sim.inject_event(1.0, EventPayload::RegistryOutageStart { until: 31.0 });
+            }
+            let report = sim.run_trace(vec![pod]);
+            let started_at = sim
+                .events
+                .all()
+                .iter()
+                .find(|e| matches!(e.kind, EventKind::Started { .. }))
+                .map(|e| e.at)
+                .expect("pod started");
+            (report, started_at)
+        };
+        let (base, t_base) = run(false);
+        let (stalled, t_stalled) = run(true);
+        assert_eq!(base.pulls_stalled, 0);
+        assert_eq!(stalled.pulls_stalled, 1);
+        assert!(
+            (t_stalled - (t_base + 30.0)).abs() < 1e-6,
+            "30s outage must delay the start by exactly its remainder: \
+             base {t_base}, stalled {t_stalled}"
+        );
+        assert!(stalled
+            .records
+            .iter()
+            .all(|r| r.download == base.records[0].download));
+        assert!(stalled.accounting_balanced());
+    }
+
+    #[test]
+    fn wakeups_bind_no_later_than_fixed_backoff() {
+        // Acceptance regression: on the same trace, capacity-driven
+        // wake-ups must bind a retried pod no later than PR 1's fixed
+        // back-off timers would.
+        let bind_time = |wake: bool| {
+            let reg = Registry::with_corpus();
+            let mut b = crate::cluster::PodBuilder::new();
+            let blocker =
+                b.build("redis:7.2", Resources::cores_gb(3.9, 0.5)).with_duration(40.0);
+            let waiter = b.build("nginx:1.25", Resources::cores_gb(3.9, 0.5));
+            let mut cfg = SimConfig::default();
+            cfg.inter_arrival_secs = Some(1.0);
+            cfg.retry_limit = 100;
+            cfg.retry_backoff_secs = 7.0;
+            cfg.wake_on_capacity = wake;
+            let mut sim = Simulation::new(nodes(1), reg, cfg);
+            let report = sim.run_trace(vec![blocker, waiter]);
+            assert_eq!(report.deployed(), 2);
+            report.records.last().unwrap().at
+        };
+        let woken = bind_time(true);
+        let timed = bind_time(false);
+        assert!(
+            woken <= timed + 1e-9,
+            "wake-up bound at {woken}, later than fixed back-off at {timed}"
+        );
+        assert!(woken < timed, "with a 7s back-off the wake-up must win outright");
+    }
+
+    #[test]
+    fn churn_model_trace_keeps_accounting_balanced() {
+        let reg = Registry::with_corpus();
+        let trace = WorkloadGen::new(
+            &reg,
+            WorkloadConfig {
+                seed: 11,
+                duration_range: Some((20.0, 200.0)),
+                ..WorkloadConfig::default()
+            },
+        )
+        .trace(80);
+        let mut cfg = SimConfig::default();
+        cfg.inter_arrival_secs = Some(0.5);
+        cfg.gc_enabled = true;
+        cfg.retry_limit = 10;
+        cfg.churn = Some(crate::sim::workload::ChurnConfig {
+            seed: 5,
+            horizon_secs: 120.0,
+            joins: 2,
+            drains: 1,
+            crash_fraction: 0.3,
+            outages: 1,
+            outage_secs: 20.0,
+            ..Default::default()
+        });
+        let mut sim = Simulation::new(nodes(4), reg, cfg);
+        let report = sim.run_trace(trace);
+        assert_eq!(report.submitted, 80);
+        assert_eq!(report.nodes_crashed, 1, "30% of 4 nodes rounds to 1 crash");
+        assert_eq!(report.nodes_drained, 1);
+        assert_eq!(report.nodes_joined, 2);
+        assert!(
+            report.accounting_balanced(),
+            "completed {} + failed {} + unschedulable {} + lost {} != submitted {}",
+            report.completed(),
+            report.failed_pulls,
+            report.unschedulable,
+            report.lost_to_crash,
+            report.submitted
+        );
+        sim.state.check_invariants().unwrap();
     }
 
     #[test]

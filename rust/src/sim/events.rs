@@ -2,7 +2,8 @@
 //!
 //! Every state transition the simulator performs — pod arrivals, pull
 //! completions, pod terminations, registry-watcher ticks, kubelet GC
-//! pressure sweeps, and scheduling-queue back-off releases — is a
+//! pressure sweeps, scheduling-queue back-off releases, and cluster
+//! volatility (node join/drain/crash, registry outage windows) — is a
 //! first-class timestamped event popped in order from one `BinaryHeap`.
 //! This replaces the seed engine's "process everything at the next
 //! arrival" linear scans, which could only observe completions at arrival
@@ -10,13 +11,29 @@
 //!
 //! Ordering is total and deterministic:
 //! 1. ascending timestamp,
-//! 2. at equal timestamps, ascending *class* — completions before
-//!    terminations before sweeps before back-off releases before arrivals,
-//!    mirroring the order the API server processed them in the seed engine
-//!    (watcher refresh → pull completions → terminations → GC → schedule),
+//! 2. at equal timestamps, ascending *class* per the table below —
+//!    capacity restoration (outage end, node join) lands before the pod
+//!    lifecycle it could unblock, capacity loss (drain, crash, outage
+//!    start) after it, and scheduling attempts (back-off releases,
+//!    arrivals) last, so a same-instant retry sees the fully updated
+//!    cluster,
 //! 3. at equal (timestamp, class), FIFO by insertion sequence.
+//!
+//! | class | payload              | effect at equal timestamps            |
+//! |-------|----------------------|---------------------------------------|
+//! |   0   | `WatcherTick`        | metadata refresh first (API watcher)  |
+//! |   1   | `RegistryOutageEnd`  | connectivity back before pulls land   |
+//! |   2   | `NodeJoin`           | new capacity visible to this instant  |
+//! |   3   | `PullComplete`       | layer installs / container starts     |
+//! |   4   | `PodTermination`     | resources release (wake-up source)    |
+//! |   5   | `NodeDrain`          | cordon after in-flight starts settle  |
+//! |   6   | `NodeCrash`          | pod loss + resubmission               |
+//! |   7   | `RegistryOutageStart`| stalls pulls queued later this instant|
+//! |   8   | `GcSweep`            | disk pressure relief                  |
+//! |   9   | `BackoffRelease`     | retries see the updated cluster       |
+//! |  10   | `Arrival`            | new pods schedule last                |
 
-use crate::cluster::{Pod, PodId};
+use crate::cluster::{NodeId, Pod, PodId};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -25,10 +42,26 @@ use std::collections::BinaryHeap;
 pub enum EventPayload {
     /// Registry watcher poll (paper §V-1; re-armed while work remains).
     WatcherTick,
+    /// Registry connectivity restored (stalled pulls resume; wake-up
+    /// source for parked pods).
+    RegistryOutageEnd,
+    /// A cold node (empty layer cache) joins the cluster; capacity-driven
+    /// wake-up source.
+    NodeJoin,
     /// All layers for `pod`'s image are present on its node.
     PullComplete { pod: PodId },
-    /// A finite-duration pod's run ends; its resources release.
-    PodTermination { pod: PodId },
+    /// A finite-duration pod's run ends; its resources release. `epoch`
+    /// guards against stale terminations after a crash resubmitted the pod
+    /// (a rebound pod's old timer must not kill the new instance).
+    PodTermination { pod: PodId, epoch: u64 },
+    /// A node is cordoned: running pods finish, no new bindings.
+    NodeDrain { node: NodeId },
+    /// A node crashes: its running/pulling pods resubmit to the
+    /// scheduling queue (without counting against the retry limit).
+    NodeCrash { node: NodeId },
+    /// The registry becomes unreachable until `until`: watcher polls fail
+    /// (last good cache kept) and in-flight WAN pulls stall.
+    RegistryOutageStart { until: f64 },
     /// Kubelet image-GC pressure sweep across all nodes.
     GcSweep,
     /// Scheduling-queue back-off expiry: parked pods become schedulable.
@@ -38,15 +71,20 @@ pub enum EventPayload {
 }
 
 impl EventPayload {
-    /// Same-timestamp ordering class (lower fires first).
+    /// Same-timestamp ordering class (lower fires first; see module docs).
     fn class(&self) -> u8 {
         match self {
             EventPayload::WatcherTick => 0,
-            EventPayload::PullComplete { .. } => 1,
-            EventPayload::PodTermination { .. } => 2,
-            EventPayload::GcSweep => 3,
-            EventPayload::BackoffRelease => 4,
-            EventPayload::Arrival { .. } => 5,
+            EventPayload::RegistryOutageEnd => 1,
+            EventPayload::NodeJoin => 2,
+            EventPayload::PullComplete { .. } => 3,
+            EventPayload::PodTermination { .. } => 4,
+            EventPayload::NodeDrain { .. } => 5,
+            EventPayload::NodeCrash { .. } => 6,
+            EventPayload::RegistryOutageStart { .. } => 7,
+            EventPayload::GcSweep => 8,
+            EventPayload::BackoffRelease => 9,
+            EventPayload::Arrival { .. } => 10,
         }
     }
 
@@ -164,7 +202,7 @@ mod tests {
         let mut q = EventQueue::new();
         q.push(3.0, EventPayload::PullComplete { pod: PodId(1) });
         q.push(1.0, EventPayload::PullComplete { pod: PodId(2) });
-        q.push(2.0, EventPayload::PodTermination { pod: PodId(3) });
+        q.push(2.0, EventPayload::PodTermination { pod: PodId(3), epoch: 0 });
         let order = times_and_classes(&mut q);
         assert_eq!(order.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![1.0, 2.0, 3.0]);
     }
@@ -172,17 +210,26 @@ mod tests {
     #[test]
     fn equal_times_order_by_class() {
         let mut q = EventQueue::new();
-        // Push in reverse-class order; pops must come back class-sorted:
-        // watcher, pull, termination, gc, backoff, arrival.
+        // Push in reverse-class order; pops must come back sorted per the
+        // module-doc table: watcher, outage end, join, pull, termination,
+        // drain, crash, outage start, gc, backoff, arrival.
         let mut b = crate::cluster::PodBuilder::new();
         q.push(5.0, EventPayload::Arrival { pod: b.build("redis:7.2", crate::cluster::Resources::ZERO) });
         q.push(5.0, EventPayload::BackoffRelease);
         q.push(5.0, EventPayload::GcSweep);
-        q.push(5.0, EventPayload::PodTermination { pod: PodId(1) });
+        q.push(5.0, EventPayload::RegistryOutageStart { until: 9.0 });
+        q.push(5.0, EventPayload::NodeCrash { node: NodeId(2) });
+        q.push(5.0, EventPayload::NodeDrain { node: NodeId(1) });
+        q.push(5.0, EventPayload::PodTermination { pod: PodId(1), epoch: 0 });
         q.push(5.0, EventPayload::PullComplete { pod: PodId(2) });
+        q.push(5.0, EventPayload::NodeJoin);
+        q.push(5.0, EventPayload::RegistryOutageEnd);
         q.push(5.0, EventPayload::WatcherTick);
         let order = times_and_classes(&mut q);
-        assert_eq!(order.iter().map(|(_, c)| *c).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(
+            order.iter().map(|(_, c)| *c).collect::<Vec<_>>(),
+            (0..=10).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -48,28 +48,42 @@ pub struct ClusterSnapshot {
     pub std_score: f64,
 }
 
-/// Mean of Eq. 11 over all nodes — the paper's cluster "STD" column.
+/// Mean of Eq. 11 over the *live* nodes — the paper's cluster "STD"
+/// column. Crashed (Down) nodes are excluded: they hold no load by
+/// construction, and averaging their permanent zeros under churn would
+/// deflate the balance metric (and the RL reward built on it).
 pub fn cluster_std(state: &ClusterState) -> f64 {
-    let nodes = state.nodes();
-    if nodes.is_empty() {
+    let live: Vec<f64> = state
+        .nodes()
+        .iter()
+        .filter(|n| n.is_up())
+        .map(dynamic_weight::std_score)
+        .collect();
+    if live.is_empty() {
         return 0.0;
     }
-    nodes.iter().map(dynamic_weight::std_score).sum::<f64>() / nodes.len() as f64
+    live.iter().sum::<f64>() / live.len() as f64
 }
 
+/// Snapshot over the live (non-crashed) nodes; `per_node` keeps one row
+/// per node id for stable Fig. 3a–c plotting, with Down rows zeroed.
 pub fn snapshot(state: &ClusterState, at: f64) -> ClusterSnapshot {
     let mut cpu_sum = 0.0;
     let mut mem_sum = 0.0;
     let mut disk = Bytes::ZERO;
+    let mut live = 0usize;
     let mut per_node = Vec::with_capacity(state.node_count());
     for n in state.nodes() {
         let (c, m) = n.utilisation();
-        cpu_sum += c;
-        mem_sum += m;
-        disk += n.disk_used;
         per_node.push((c, m, n.disk_used));
+        if n.is_up() {
+            live += 1;
+            cpu_sum += c;
+            mem_sum += m;
+            disk += n.disk_used;
+        }
     }
-    let k = state.node_count().max(1) as f64;
+    let k = live.max(1) as f64;
     ClusterSnapshot {
         at,
         cpu_util: cpu_sum / k,
@@ -114,5 +128,31 @@ mod tests {
     fn empty_cluster_std_is_zero() {
         let state = ClusterState::new();
         assert_eq!(cluster_std(&state), 0.0);
+    }
+
+    #[test]
+    fn crashed_nodes_do_not_deflate_the_metrics() {
+        let mut state = ClusterState::new();
+        for i in 0..3 {
+            state.add_node(Node::new(
+                NodeId(i),
+                &format!("n{i}"),
+                Resources::cores_gb(4.0, 4.0),
+                Bytes::from_gb(20.0),
+                Bandwidth::from_mbps(10.0),
+            ));
+        }
+        let mut b = PodBuilder::new();
+        let pid = state.submit_pod(b.build("redis:7.2", Resources::cores_gb(2.0, 1.0)));
+        state.bind(pid, NodeId(0)).unwrap();
+        let before = snapshot(&state, 1.0);
+        state.crash_node(NodeId(2));
+        let after = snapshot(&state, 2.0);
+        // Averages now span the 2 live nodes, not 3: utilisation rises.
+        assert!((after.cpu_util - 0.25).abs() < 1e-9); // (0.5 + 0) / 2
+        assert!(after.cpu_util > before.cpu_util);
+        assert!(after.std_score > before.std_score);
+        assert_eq!(after.per_node.len(), 3, "rows stay per node id");
+        assert_eq!(after.per_node[2], (0.0, 0.0, Bytes::ZERO));
     }
 }

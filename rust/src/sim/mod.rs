@@ -20,4 +20,6 @@ pub use download::PullManager;
 pub use engine::{SchedulerChoice, SimConfig, SimReport, Simulation};
 pub use events::{EventPayload, EventQueue};
 pub use metrics::{ClusterSnapshot, PodRecord};
-pub use workload::{Popularity, WorkloadConfig, WorkloadGen};
+pub use workload::{
+    ChurnAction, ChurnConfig, ChurnEvent, ChurnModel, Popularity, WorkloadConfig, WorkloadGen,
+};

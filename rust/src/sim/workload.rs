@@ -4,8 +4,14 @@
 //! Pods draw an image uniformly (or Zipf-weighted, the realistic variant)
 //! from the corpus, CPU requests uniform in [100m, 1000m], memory uniform
 //! in [100 MB, 1 GB]. Traces are reproducible from the seed.
+//!
+//! Alongside pods, this module generates the *cluster-volatility* trace
+//! ([`ChurnModel`]): node joins, drains, crashes, and registry outage
+//! windows spread over a horizon — the EdgePier-style edge churn the
+//! engine injects as events. Churn traces are reproducible from their own
+//! seed, independent of the pod-trace seed.
 
-use crate::cluster::{Pod, PodBuilder, Resources};
+use crate::cluster::{NodeId, Pod, PodBuilder, Resources};
 use crate::registry::Registry;
 use crate::util::rng::Pcg;
 use crate::util::units::{Bytes, MilliCpu};
@@ -103,6 +109,121 @@ impl WorkloadGen {
     }
 }
 
+// --- cluster volatility (churn) ------------------------------------------
+
+/// Parameters of the seeded churn model. Rates are totals over the
+/// `horizon_secs` window, so a trace's volatility is explicit and
+/// reproducible rather than emergent from per-second probabilities.
+#[derive(Debug, Clone)]
+pub struct ChurnConfig {
+    /// Churn RNG seed (independent of the pod-trace seed).
+    pub seed: u64,
+    /// Window over which churn events are spread.
+    pub horizon_secs: f64,
+    /// Cold nodes that join during the window.
+    pub joins: usize,
+    /// Initial-fleet nodes cordoned during the window.
+    pub drains: usize,
+    /// Fraction of the initial fleet that crashes (EdgePier-style loss).
+    pub crash_fraction: f64,
+    /// Registry outage windows.
+    pub outages: usize,
+    /// Duration of each outage window.
+    pub outage_secs: f64,
+    /// Spec of joining nodes (mirrors the `scale` fleet by default).
+    pub join_cores: f64,
+    pub join_mem_gb: f64,
+    pub join_disk_gb: f64,
+    pub join_bw_mbps: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> ChurnConfig {
+        ChurnConfig {
+            seed: 42,
+            horizon_secs: 600.0,
+            joins: 2,
+            drains: 1,
+            crash_fraction: 0.05,
+            outages: 1,
+            outage_secs: 30.0,
+            join_cores: 4.0,
+            join_mem_gb: 8.0,
+            join_disk_gb: 64.0,
+            join_bw_mbps: 100.0,
+        }
+    }
+}
+
+/// One churn occurrence at absolute offset `at` from trace start.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChurnEvent {
+    pub at: f64,
+    pub action: ChurnAction,
+}
+
+/// What happens to the cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChurnAction {
+    Join,
+    Drain { node: NodeId },
+    Crash { node: NodeId },
+    /// Registry unreachable for `[at, at + secs)`.
+    Outage { secs: f64 },
+}
+
+/// Deterministic churn-trace generator.
+pub struct ChurnModel;
+
+impl ChurnModel {
+    /// Generate the volatility trace for a fleet of `initial_nodes`.
+    /// Crash/drain victims are distinct nodes of the initial fleet, and at
+    /// least one initial node is always left untouched so the cluster
+    /// cannot become permanently unschedulable before any join lands.
+    pub fn trace(cfg: &ChurnConfig, initial_nodes: usize) -> Vec<ChurnEvent> {
+        let mut rng = Pcg::new(cfg.seed, 13);
+        let mut events: Vec<ChurnEvent> = Vec::new();
+        let span = cfg.horizon_secs.max(1.0);
+        // Events land in the middle 90% of the window so joins/crashes
+        // interleave with live traffic instead of bunching at the edges.
+        let when = |rng: &mut Pcg| rng.f64_range(0.05 * span, 0.95 * span);
+
+        let crashes = ((initial_nodes as f64) * cfg.crash_fraction).round() as usize;
+        let mut victims: Vec<u32> = (0..initial_nodes as u32).collect();
+        rng.shuffle(&mut victims);
+        // Keep one untouched survivor.
+        let budget = initial_nodes.saturating_sub(1);
+        let crashes = crashes.min(budget);
+        let drains = cfg.drains.min(budget - crashes);
+
+        for &node in victims.iter().take(crashes) {
+            events.push(ChurnEvent {
+                at: when(&mut rng),
+                action: ChurnAction::Crash { node: NodeId(node) },
+            });
+        }
+        for &node in victims.iter().skip(crashes).take(drains) {
+            events.push(ChurnEvent {
+                at: when(&mut rng),
+                action: ChurnAction::Drain { node: NodeId(node) },
+            });
+        }
+        for _ in 0..cfg.joins {
+            events.push(ChurnEvent { at: when(&mut rng), action: ChurnAction::Join });
+        }
+        for _ in 0..cfg.outages {
+            events.push(ChurnEvent {
+                at: when(&mut rng),
+                action: ChurnAction::Outage { secs: cfg.outage_secs },
+            });
+        }
+        // Stable order: by time, ties by generation order (sort_by is
+        // stable, so equal timestamps keep the push order above).
+        events.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+        events
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +271,64 @@ mod tests {
         for p in &trace {
             assert!(allowed.contains(&p.image.name.as_str()), "{}", p.image);
         }
+    }
+
+    #[test]
+    fn churn_trace_is_deterministic_and_sorted() {
+        let cfg = ChurnConfig { joins: 3, drains: 2, crash_fraction: 0.25, ..Default::default() };
+        let a = ChurnModel::trace(&cfg, 8);
+        let b = ChurnModel::trace(&cfg, 8);
+        assert_eq!(a, b, "same churn seed ⇒ same volatility trace");
+        assert!(!a.is_empty());
+        for w in a.windows(2) {
+            assert!(w[1].at >= w[0].at, "churn events must be time-sorted");
+        }
+        for ev in &a {
+            assert!(ev.at >= 0.0 && ev.at <= cfg.horizon_secs);
+        }
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 7;
+        assert_ne!(ChurnModel::trace(&cfg2, 8), a, "different churn seeds differ");
+    }
+
+    #[test]
+    fn churn_victims_are_distinct_and_leave_a_survivor() {
+        let cfg = ChurnConfig {
+            drains: 10,
+            crash_fraction: 1.0, // ask for everything; the model must clamp
+            joins: 0,
+            outages: 0,
+            ..Default::default()
+        };
+        let trace = ChurnModel::trace(&cfg, 4);
+        let mut touched = std::collections::HashSet::new();
+        for ev in &trace {
+            match ev.action {
+                ChurnAction::Crash { node } | ChurnAction::Drain { node } => {
+                    assert!(touched.insert(node), "node {node:?} targeted twice");
+                }
+                _ => {}
+            }
+        }
+        assert!(touched.len() <= 3, "at least one initial node stays untouched");
+    }
+
+    #[test]
+    fn churn_counts_match_config() {
+        let cfg = ChurnConfig {
+            joins: 2,
+            drains: 1,
+            crash_fraction: 0.5,
+            outages: 2,
+            outage_secs: 15.0,
+            ..Default::default()
+        };
+        let trace = ChurnModel::trace(&cfg, 6);
+        let count = |f: &dyn Fn(&ChurnAction) -> bool| trace.iter().filter(|e| f(&e.action)).count();
+        assert_eq!(count(&|a| matches!(a, ChurnAction::Join)), 2);
+        assert_eq!(count(&|a| matches!(a, ChurnAction::Drain { .. })), 1);
+        assert_eq!(count(&|a| matches!(a, ChurnAction::Crash { .. })), 3);
+        assert_eq!(count(&|a| matches!(a, ChurnAction::Outage { .. })), 2);
     }
 
     #[test]

@@ -16,12 +16,18 @@ pub struct PropConfig {
 
 impl Default for PropConfig {
     fn default() -> PropConfig {
-        // LRSCHED_PROP_CASES overrides for soak runs.
+        // LRSCHED_PROP_CASES overrides for soak runs; PROPTEST_SEED
+        // re-seeds the whole suite (the CI matrix runs several seeds so
+        // seed-specific passes can't hide invariant violations).
         let cases = std::env::var("LRSCHED_PROP_CASES")
             .ok()
             .and_then(|v| v.parse().ok())
             .unwrap_or(64);
-        PropConfig { cases, seed: 0x5eed }
+        let seed = std::env::var("PROPTEST_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0x5eed);
+        PropConfig { cases, seed }
     }
 }
 

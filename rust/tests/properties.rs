@@ -6,7 +6,9 @@ use lrsched::registry::{hub, LayerId, LayerInterner, LayerSet};
 use lrsched::sched::dynamic_weight::WeightParams;
 use lrsched::sched::scoring::{NativeScorer, ScoreInputs, ScoringBackend, NEG_MASK};
 use lrsched::sched::{default_framework, CycleContext, LrScheduler};
-use lrsched::sim::{SchedulerChoice, SimConfig, Simulation, WorkloadConfig, WorkloadGen};
+use lrsched::sim::{
+    ChurnConfig, SchedulerChoice, SimConfig, SimReport, Simulation, WorkloadConfig, WorkloadGen,
+};
 use lrsched::registry::Registry;
 use lrsched::testing::fixtures;
 use lrsched::testing::prop::{check, PropConfig};
@@ -301,6 +303,186 @@ fn simulation_is_deterministic() {
             prop_assert_eq!(ra.download.0, rb.download.0);
         }
         let _ = case;
+        Ok(())
+    });
+}
+
+/// Render the parts of a run that must be bit-stable across identical
+/// seeds: every placement record, every audit event, and the counters.
+fn run_fingerprint(report: &SimReport, sim: &Simulation) -> String {
+    format!(
+        "{:?}|{:?}|{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
+        report.records,
+        sim.events.all(),
+        report.submitted,
+        report.completed(),
+        report.failed_pulls,
+        report.unschedulable,
+        report.lost_to_crash,
+        report.retries,
+        report.resubmitted,
+        report.wakeups,
+        report.pulls_stalled,
+        report.nodes_crashed,
+    )
+}
+
+#[test]
+fn churn_simulation_is_deterministic() {
+    // Identical seeds must give byte-identical reports *with churn
+    // enabled*: crashes, wake-up batches, outage stalls, and resubmission
+    // order are all part of the deterministic event order.
+    check(PropConfig { cases: 6, ..Default::default() }, |rng, _| {
+        let seed = rng.next_u64();
+        let churn_seed = rng.next_u64();
+        let n_nodes = rng.range(3, 6);
+        let n_pods = rng.range(20, 60);
+        let run = || {
+            let registry = Registry::with_corpus();
+            let wl = WorkloadConfig {
+                seed,
+                duration_range: Some((15.0, 120.0)),
+                ..Default::default()
+            };
+            let trace = WorkloadGen::new(&registry, wl).trace(n_pods);
+            let mut cfg = SimConfig::default();
+            cfg.scheduler = SchedulerChoice::LR;
+            cfg.inter_arrival_secs = Some(0.5);
+            cfg.gc_enabled = true;
+            cfg.retry_limit = 8;
+            cfg.churn = Some(ChurnConfig {
+                seed: churn_seed,
+                horizon_secs: 90.0,
+                joins: 2,
+                drains: 1,
+                crash_fraction: 0.34,
+                outages: 1,
+                outage_secs: 15.0,
+                ..Default::default()
+            });
+            let mut sim = Simulation::new(
+                lrsched::exp::common::paper_nodes(n_nodes),
+                registry,
+                cfg,
+            );
+            let report = sim.run_trace(trace);
+            (report, sim)
+        };
+        let (ra, sa) = run();
+        let (rb, sb) = run();
+        prop_assert_eq!(run_fingerprint(&ra, &sa), run_fingerprint(&rb, &sb));
+        Ok(())
+    });
+}
+
+#[test]
+fn churn_accounting_always_balances() {
+    // Under arbitrary volatility traces, every submitted pod lands in
+    // exactly one terminal bucket:
+    // completed + failed + unschedulable + lost_to_crash == submitted.
+    check(PropConfig { cases: 10, ..Default::default() }, |rng, case| {
+        let registry = Registry::with_corpus();
+        let wl = WorkloadConfig {
+            seed: 9000 + case as u64,
+            duration_range: if rng.chance(0.7) {
+                Some((rng.f64_range(5.0, 30.0), rng.f64_range(30.0, 150.0)))
+            } else {
+                None
+            },
+            ..Default::default()
+        };
+        let n_pods = rng.range(10, 60);
+        let trace = WorkloadGen::new(&registry, wl).trace(n_pods);
+        let mut cfg = SimConfig::default();
+        cfg.inter_arrival_secs = Some(rng.f64_range(0.2, 2.0));
+        cfg.gc_enabled = rng.chance(0.5);
+        cfg.retry_limit = rng.range(0, 8) as u32;
+        cfg.wake_on_capacity = rng.chance(0.8);
+        cfg.churn = Some(ChurnConfig {
+            seed: rng.next_u64(),
+            horizon_secs: rng.f64_range(30.0, 200.0),
+            joins: rng.range(0, 4),
+            drains: rng.range(0, 3),
+            crash_fraction: rng.f64_range(0.0, 0.6),
+            outages: rng.range(0, 3),
+            outage_secs: rng.f64_range(5.0, 60.0),
+            ..Default::default()
+        });
+        let n_nodes = rng.range(2, 6);
+        let mut sim = Simulation::new(
+            lrsched::exp::common::paper_nodes(n_nodes),
+            registry,
+            cfg,
+        );
+        let report = sim.run_trace(trace);
+        prop_assert_eq!(report.submitted, n_pods);
+        prop_assert!(
+            report.accounting_balanced(),
+            "completed {} + failed {} + unschedulable {} + lost {} != submitted {}",
+            report.completed(),
+            report.failed_pulls,
+            report.unschedulable,
+            report.lost_to_crash,
+            report.submitted
+        );
+        // The audit stream stays time-ordered through churn.
+        for w in sim.events.all().windows(2) {
+            prop_assert!(
+                w[1].at >= w[0].at - 1e-9,
+                "event log out of order under churn: {:?} after {:?}",
+                w[1],
+                w[0]
+            );
+        }
+        sim.state.check_invariants()?;
+        Ok(())
+    });
+}
+
+#[test]
+fn wakeups_never_bind_later_than_backoff() {
+    // No-starvation regression vs PR 1: on identical blocker/waiter
+    // scenarios, a wake-up-released pod binds no later than its fixed
+    // back-off release would have.
+    check(PropConfig { cases: 10, ..Default::default() }, |rng, _| {
+        let blocker_secs = rng.f64_range(10.0, 80.0);
+        let backoff = rng.f64_range(1.0, 9.0);
+        let arrival = rng.f64_range(0.5, 2.0);
+        let run = |wake: bool| {
+            let registry = Registry::with_corpus();
+            let mut b = PodBuilder::new();
+            let blocker = b
+                .build("redis:7.2", Resources::cores_gb(3.9, 0.5))
+                .with_duration(blocker_secs);
+            let waiter = b.build("nginx:1.25", Resources::cores_gb(3.9, 0.5));
+            let mut cfg = SimConfig::default();
+            cfg.inter_arrival_secs = Some(arrival);
+            cfg.retry_backoff_secs = backoff;
+            cfg.retry_limit = 500;
+            cfg.wake_on_capacity = wake;
+            let mut sim = Simulation::new(
+                vec![lrsched::cluster::Node::new(
+                    NodeId(0),
+                    "only",
+                    Resources::cores_gb(4.0, 4.0),
+                    Bytes::from_gb(30.0),
+                    lrsched::util::units::Bandwidth::from_mbps(10.0),
+                )],
+                registry,
+                cfg,
+            );
+            let report = sim.run_trace(vec![blocker.clone(), waiter.clone()]);
+            (report.deployed(), report.records.last().unwrap().at, report.wakeups)
+        };
+        let (dep_wake, bind_wake, wakeups) = run(true);
+        let (dep_timer, bind_timer, _) = run(false);
+        prop_assert_eq!(dep_wake, 2);
+        prop_assert_eq!(dep_timer, 2);
+        prop_assert!(wakeups >= 1, "termination must wake the parked waiter");
+        prop_assert!(
+            bind_wake <= bind_timer + 1e-9,
+            "wake-up bound at {bind_wake}, fixed back-off at {bind_timer}"
+        );
         Ok(())
     });
 }

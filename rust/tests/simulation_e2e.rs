@@ -305,6 +305,60 @@ fn scale_100k_pods_event_engine_no_dropped_events() {
 }
 
 #[test]
+#[ignore = "large acceptance run (~100k pods); run with `cargo test --release -- --ignored`"]
+fn scale_100k_pods_with_churn_accounting_holds() {
+    // The churn acceptance bar (`scale --churn` equivalent): 100k pods on
+    // 64 nodes with joins, drains, a 5% crash rate, and a registry outage
+    // window — every pod still resolves into exactly one bucket:
+    // completed + failed + unschedulable + lost_to_crash == submitted.
+    let registry = Registry::with_corpus();
+    let trace = WorkloadGen::new(
+        &registry,
+        WorkloadConfig {
+            seed: 42,
+            popularity: Popularity::Zipf(1.1),
+            duration_range: Some((30.0, 300.0)),
+            ..Default::default()
+        },
+    )
+    .trace(100_000);
+    let mut cfg = SimConfig::default();
+    cfg.scheduler = SchedulerChoice::LR;
+    cfg.inter_arrival_secs = Some(0.3);
+    cfg.gc_enabled = true;
+    cfg.retry_limit = 10;
+    cfg.snapshot_every = 1000;
+    cfg.churn = Some(lrsched::sim::ChurnConfig {
+        seed: 42,
+        horizon_secs: 100_000.0 * 0.3,
+        joins: 3,
+        drains: 2,
+        crash_fraction: 0.05,
+        outages: 1,
+        outage_secs: 60.0,
+        ..Default::default()
+    });
+    let mut sim = Simulation::new(common::scale_nodes(64), registry, cfg);
+    let report = sim.run_trace(trace);
+    sim.state.check_invariants().unwrap();
+    assert_eq!(report.submitted, 100_000);
+    assert_eq!(report.nodes_crashed, 3, "5% of 64 nodes");
+    assert_eq!(report.nodes_joined, 3);
+    assert!(report.pulls_stalled > 0, "the outage window must hit in-flight pulls");
+    assert!(report.resubmitted > 0, "crashes must resubmit running pods");
+    assert!(
+        report.accounting_balanced(),
+        "dropped events: completed {} + failed {} + unschedulable {} + lost {} != submitted {}",
+        report.completed(),
+        report.failed_pulls,
+        report.unschedulable,
+        report.lost_to_crash,
+        report.submitted
+    );
+    assert!(report.deployed() > 50_000, "churn should keep most pods deployable");
+}
+
+#[test]
 fn soak_full_stack_500_pods() {
     // Everything at once: 500 Zipf pods with finite lifetimes, timed
     // arrivals (overlapping pulls), constrained registry uplink, kubelet
