@@ -7,7 +7,9 @@ use std::collections::BTreeMap;
 /// Declarative option spec for one subcommand.
 #[derive(Debug, Clone)]
 pub struct OptSpec {
+    /// Option name without the leading `--`.
     pub name: &'static str,
+    /// One-line help text shown by `usage`.
     pub help: &'static str,
     /// None ⇒ boolean flag, Some(default) ⇒ takes a value.
     pub default: Option<&'static str>,
@@ -18,18 +20,24 @@ pub struct OptSpec {
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Arguments that were not options (or followed `--`).
     pub positional: Vec<String>,
 }
 
 impl Args {
+    /// Raw value of `--name` (None when the option was absent and had no
+    /// non-empty default).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// Was the boolean flag `--name` passed?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Parse `--name` as `T`, distinguishing absent (Ok(None)) from
+    /// unparsable (Err).
     pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
         match self.get(name) {
             None => Ok(None),
@@ -40,18 +48,22 @@ impl Args {
         }
     }
 
+    /// `--name` as usize, or `default` when absent.
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
         Ok(self.get_parsed::<usize>(name)?.unwrap_or(default))
     }
 
+    /// `--name` as u64, or `default` when absent.
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
         Ok(self.get_parsed::<u64>(name)?.unwrap_or(default))
     }
 
+    /// `--name` as f64, or `default` when absent.
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
         Ok(self.get_parsed::<f64>(name)?.unwrap_or(default))
     }
 
+    /// `--name` as a string slice, or `default` when absent.
     pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }

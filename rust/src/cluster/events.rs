@@ -6,46 +6,98 @@ use super::node::NodeId;
 use super::pod::PodId;
 use crate::util::units::Bytes;
 
+/// What happened to a pod (or node — node-scoped records use a sentinel
+/// pod id) at one instant of the lifecycle.
 #[derive(Debug, Clone, PartialEq)]
 pub enum EventKind {
     /// Pod submitted to the API server.
     Submitted,
     /// Scheduler picked a node (with the winning score).
-    Scheduled { node: NodeId, score: f64 },
+    Scheduled {
+        /// Chosen node.
+        node: NodeId,
+        /// Winning final score.
+        score: f64,
+    },
     /// Scheduler found no feasible node.
-    Unschedulable { reason: String },
+    Unschedulable {
+        /// Why (plugin rejections or retry bookkeeping).
+        reason: String,
+    },
     /// Layer pull started on the node.
-    PullStarted { node: NodeId, bytes: Bytes, layers: usize },
+    PullStarted {
+        /// Pulling node.
+        node: NodeId,
+        /// Bytes this pull transfers (new layers only).
+        bytes: Bytes,
+        /// Number of new layers.
+        layers: usize,
+    },
     /// All layers present; container starting.
-    PullFinished { node: NodeId, secs: f64 },
+    PullFinished {
+        /// Pulling node.
+        node: NodeId,
+        /// Wall (virtual) seconds from pull start.
+        secs: f64,
+    },
     /// Container running.
-    Started { node: NodeId },
+    Started {
+        /// Hosting node.
+        node: NodeId,
+    },
     /// Image layers evicted from a node under disk pressure.
-    Evicted { node: NodeId, bytes: Bytes },
+    Evicted {
+        /// Node under pressure.
+        node: NodeId,
+        /// Bytes freed.
+        bytes: Bytes,
+    },
     /// A node joined the cluster (empty layer cache).
-    NodeJoined { node: NodeId },
+    NodeJoined {
+        /// The new node.
+        node: NodeId,
+    },
     /// A node was cordoned: running pods finish, no new bindings.
-    NodeDrained { node: NodeId },
+    NodeDrained {
+        /// The cordoned node.
+        node: NodeId,
+    },
     /// A node crashed; its running/pulling pods were lost.
-    NodeCrashed { node: NodeId, lost_pods: usize },
+    NodeCrashed {
+        /// The crashed node.
+        node: NodeId,
+        /// Pod instances lost (they resubmit).
+        lost_pods: usize,
+    },
     /// A crash-lost pod re-entered the scheduling queue (does not count
     /// against the retry limit).
     Resubmitted,
     /// An in-flight layer pull stalled on a registry outage; it resumes
     /// and completes at `until`.
-    PullStalled { node: NodeId, until: f64 },
+    PullStalled {
+        /// Pulling node.
+        node: NodeId,
+        /// When the stalled pull completes.
+        until: f64,
+    },
     /// The registry became unreachable until `until` (watcher keeps its
     /// last good cache; WAN pulls stall).
-    RegistryOutageStart { until: f64 },
+    RegistryOutageStart {
+        /// When connectivity returns.
+        until: f64,
+    },
     /// Registry connectivity restored.
     RegistryOutageEnd,
 }
 
+/// One audit record: what happened to whom, when.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Event {
     /// Virtual time (seconds).
     pub at: f64,
+    /// Subject pod (`PodId(u64::MAX)` for node-scoped records).
     pub pod: PodId,
+    /// What happened.
     pub kind: EventKind,
 }
 
@@ -56,26 +108,32 @@ pub struct EventLog {
 }
 
 impl EventLog {
+    /// An empty log.
     pub fn new() -> EventLog {
         EventLog::default()
     }
 
+    /// Append one record.
     pub fn record(&mut self, at: f64, pod: PodId, kind: EventKind) {
         self.events.push(Event { at, pod, kind });
     }
 
+    /// Every record, in append order.
     pub fn all(&self) -> &[Event] {
         &self.events
     }
 
+    /// Records concerning one pod.
     pub fn for_pod(&self, pod: PodId) -> impl Iterator<Item = &Event> {
         self.events.iter().filter(move |e| e.pod == pod)
     }
 
+    /// Number of records.
     pub fn len(&self) -> usize {
         self.events.len()
     }
 
+    /// Is the log empty?
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }

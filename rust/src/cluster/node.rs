@@ -31,7 +31,9 @@ pub enum NodeStatus {
 /// TaintToleration plugin deprioritizes/filters the node.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Taint {
+    /// Taint key.
     pub key: String,
+    /// Taint value (tolerations match key and value exactly).
     pub value: String,
     /// Hard taints filter (NoSchedule); soft taints only lower the score
     /// (PreferNoSchedule) — both exist in Kubernetes and the paper's plugin
@@ -42,7 +44,9 @@ pub struct Taint {
 /// An edge node.
 #[derive(Debug, Clone)]
 pub struct Node {
+    /// Dense node id (row index in dense scoring).
     pub id: NodeId,
+    /// Human-readable node name (e.g. `worker1`, `edge042`).
     pub name: String,
     /// Allocatable resources (paper: CPU cores p_n, memory e_n).
     pub capacity: Resources,
@@ -52,7 +56,9 @@ pub struct Node {
     pub bandwidth: Bandwidth,
     /// Max simultaneously running containers C_n.
     pub max_containers: usize,
+    /// Node labels (selectors and affinity terms match against these).
     pub labels: BTreeMap<String, String>,
+    /// Node taints (see [`Taint`]).
     pub taints: Vec<Taint>,
     /// Free disk the VolumeBinding plugin can bind against.
     pub volume_capacity: Bytes,
@@ -77,6 +83,7 @@ pub struct Node {
 }
 
 impl Node {
+    /// A Ready node with empty inventory and kubelet-default max pods.
     pub fn new(id: NodeId, name: &str, capacity: Resources, disk: Bytes, bandwidth: Bandwidth) -> Node {
         Node {
             id,
@@ -98,16 +105,19 @@ impl Node {
         }
     }
 
+    /// Builder: add a label.
     pub fn with_label(mut self, key: &str, value: &str) -> Node {
         self.labels.insert(key.to_string(), value.to_string());
         self
     }
 
+    /// Builder: add a taint (`hard` = NoSchedule, else PreferNoSchedule).
     pub fn with_taint(mut self, key: &str, value: &str, hard: bool) -> Node {
         self.taints.push(Taint { key: key.to_string(), value: value.to_string(), hard });
         self
     }
 
+    /// Builder: override the max simultaneously running containers.
     pub fn with_max_containers(mut self, n: usize) -> Node {
         self.max_containers = n;
         self

@@ -16,6 +16,7 @@ pub struct PodId(pub u64);
 /// Node-affinity term: a label that must (or should) match.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct AffinityTerm {
+    /// Node-label key to match.
     pub key: String,
     /// Matches when the node has `key` with a value in `values`.
     pub values: Vec<String>,
@@ -26,7 +27,9 @@ pub struct AffinityTerm {
 /// Node affinity: required terms filter nodes, preferred terms score them.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct NodeAffinity {
+    /// Terms that filter nodes (all must match).
     pub required: Vec<AffinityTerm>,
+    /// Terms that score nodes (weighted).
     pub preferred: Vec<AffinityTerm>,
 }
 
@@ -36,10 +39,12 @@ pub struct NodeAffinity {
 pub struct PodAffinityTerm {
     /// Pod label selector: key=value.
     pub label_key: String,
+    /// Value the selector matches.
     pub label_value: String,
     /// Topology key defining the co-location domain (e.g. `zone`,
     /// `kubernetes.io/hostname`).
     pub topology_key: String,
+    /// Soft-term weight.
     pub weight: u32,
     /// true ⇒ anti-affinity (repel).
     pub anti: bool,
@@ -49,7 +54,9 @@ pub struct PodAffinityTerm {
 /// TaintToleration plugin needs).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Toleration {
+    /// Tolerated taint key.
     pub key: String,
+    /// Tolerated taint value.
     pub value: String,
 }
 
@@ -57,29 +64,43 @@ pub struct Toleration {
 /// across domains of `topology_key`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TopologySpread {
+    /// Node-label key defining the spread domains.
     pub topology_key: String,
+    /// Maximum allowed count difference between domains.
     pub max_skew: u32,
 }
 
 /// A persistent-volume claim (consumed by the VolumeBinding plugin).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct VolumeClaim {
+    /// Requested volume size.
     pub size: Bytes,
 }
 
 /// A pod: one container (image + requests) plus placement constraints.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Pod {
+    /// Dense pod identity assigned by the API server.
     pub id: PodId,
+    /// Pod name (`pod-<id>` from the builder).
     pub name: String,
+    /// Container image reference.
     pub image: ImageRef,
+    /// Resource requests scheduling reserves.
     pub requests: Resources,
+    /// Pod labels (matched by inter-pod affinity and topology spread).
     pub labels: BTreeMap<String, String>,
+    /// Hard node-label selector.
     pub node_selector: BTreeMap<String, String>,
+    /// Node affinity (required filters + preferred scores).
     pub affinity: NodeAffinity,
+    /// Inter-pod (anti-)affinity terms.
     pub pod_affinity: Vec<PodAffinityTerm>,
+    /// Tolerated node taints.
     pub tolerations: Vec<Toleration>,
+    /// Topology-spread constraints.
     pub topology_spread: Vec<TopologySpread>,
+    /// Persistent-volume claims.
     pub volume_claims: Vec<VolumeClaim>,
     /// Which scheduler handles this pod (`schedulerName` in K8s).
     pub scheduler_name: String,
@@ -90,6 +111,7 @@ pub struct Pod {
 }
 
 impl Pod {
+    /// A pod with no constraints, handled by the `lrscheduler` profile.
     pub fn new(id: PodId, name: &str, image: ImageRef, requests: Resources) -> Pod {
         Pod {
             id,
@@ -108,31 +130,37 @@ impl Pod {
         }
     }
 
+    /// Builder: give the pod a finite run time.
     pub fn with_duration(mut self, secs: f64) -> Pod {
         self.duration_secs = Some(secs);
         self
     }
 
+    /// Builder: add a label.
     pub fn with_label(mut self, key: &str, value: &str) -> Pod {
         self.labels.insert(key.to_string(), value.to_string());
         self
     }
 
+    /// Builder: add a hard node-selector entry.
     pub fn with_selector(mut self, key: &str, value: &str) -> Pod {
         self.node_selector.insert(key.to_string(), value.to_string());
         self
     }
 
+    /// Builder: tolerate a taint.
     pub fn with_toleration(mut self, key: &str, value: &str) -> Pod {
         self.tolerations.push(Toleration { key: key.to_string(), value: value.to_string() });
         self
     }
 
+    /// Builder: add a volume claim.
     pub fn with_volume(mut self, size: Bytes) -> Pod {
         self.volume_claims.push(VolumeClaim { size });
         self
     }
 
+    /// Does any toleration match this taint exactly?
     pub fn tolerates(&self, taint_key: &str, taint_value: &str) -> bool {
         self.tolerations
             .iter()
@@ -146,10 +174,12 @@ pub struct PodBuilder {
 }
 
 impl PodBuilder {
+    /// A builder starting at pod id 0.
     pub fn new() -> PodBuilder {
         PodBuilder { next_id: 0 }
     }
 
+    /// Build a pod with the next dense id (image parsed as `name[:tag]`).
     pub fn build(&mut self, image: &str, requests: Resources) -> Pod {
         let id = PodId(self.next_id);
         self.next_id += 1;

@@ -6,29 +6,37 @@ use crate::util::units::{Bytes, MilliCpu};
 /// A (cpu, memory) resource vector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct Resources {
+    /// CPU request/capacity in millicores.
     pub cpu: MilliCpu,
+    /// Memory request/capacity in bytes.
     pub memory: Bytes,
 }
 
 impl Resources {
+    /// The zero vector.
     pub const ZERO: Resources = Resources { cpu: MilliCpu::ZERO, memory: Bytes::ZERO };
 
+    /// Construct from explicit units.
     pub fn new(cpu: MilliCpu, memory: Bytes) -> Resources {
         Resources { cpu, memory }
     }
 
+    /// Construct from whole cores and gigabytes.
     pub fn cores_gb(cores: f64, gb: f64) -> Resources {
         Resources { cpu: MilliCpu::from_cores(cores), memory: Bytes::from_gb(gb) }
     }
 
+    /// Does this request fit inside `available` on every dimension?
     pub fn fits_within(&self, available: &Resources) -> bool {
         self.cpu <= available.cpu && self.memory <= available.memory
     }
 
+    /// Component-wise sum.
     pub fn checked_add(&self, rhs: &Resources) -> Resources {
         Resources { cpu: self.cpu + rhs.cpu, memory: self.memory + rhs.memory }
     }
 
+    /// Component-wise subtraction, clamping at zero.
     pub fn saturating_sub(&self, rhs: &Resources) -> Resources {
         Resources {
             cpu: self.cpu.saturating_sub(rhs.cpu),

@@ -12,10 +12,21 @@ use std::collections::BTreeMap;
 /// Errors from state mutations.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum StateError {
+    /// Referenced node id does not exist.
     UnknownNode(u32),
+    /// Referenced pod id does not exist.
     UnknownPod(u64),
+    /// Bind attempted on an already-bound pod.
     AlreadyBound(u64),
-    DiskFull { node: u32, need: Bytes, free: Bytes },
+    /// Image install exceeded the node's disk.
+    DiskFull {
+        /// The full node.
+        node: u32,
+        /// Bytes the install needed.
+        need: Bytes,
+        /// Bytes actually free.
+        free: Bytes,
+    },
 }
 
 impl std::fmt::Display for StateError {
@@ -39,16 +50,19 @@ pub struct ClusterState {
     nodes: Vec<Node>,
     pods: BTreeMap<PodId, Pod>,
     bindings: BTreeMap<PodId, NodeId>,
+    /// Shared content-addressed layer interner (digest ↔ dense id).
     pub interner: LayerInterner,
 }
 
 impl ClusterState {
+    /// An empty cluster.
     pub fn new() -> ClusterState {
         ClusterState::default()
     }
 
     // --- nodes ------------------------------------------------------------
 
+    /// Register a node (ids must be dense and in order).
     pub fn add_node(&mut self, node: Node) -> NodeId {
         debug_assert_eq!(node.id.0 as usize, self.nodes.len(), "node ids must be dense");
         let id = node.id;
@@ -56,18 +70,22 @@ impl ClusterState {
         id
     }
 
+    /// Node by id (panics on unknown ids — ids are dense).
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id.0 as usize]
     }
 
+    /// Mutable node access (prefer the mutation API below).
     pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
         &mut self.nodes[id.0 as usize]
     }
 
+    /// All nodes, dense by id.
     pub fn nodes(&self) -> &[Node] {
         &self.nodes
     }
 
+    /// Total nodes ever registered (including Down ones).
     pub fn node_count(&self) -> usize {
         self.nodes.len()
     }
@@ -109,24 +127,29 @@ impl ClusterState {
 
     // --- pods ---------------------------------------------------------------
 
+    /// Register a pod with the API server.
     pub fn submit_pod(&mut self, pod: Pod) -> PodId {
         let id = pod.id;
         self.pods.insert(id, pod);
         id
     }
 
+    /// Pod by id, if known.
     pub fn pod(&self, id: PodId) -> Option<&Pod> {
         self.pods.get(&id)
     }
 
+    /// Every submitted pod.
     pub fn pods(&self) -> impl Iterator<Item = &Pod> {
         self.pods.values()
     }
 
+    /// Node a pod is bound to, if any.
     pub fn binding(&self, pod: PodId) -> Option<NodeId> {
         self.bindings.get(&pod).copied()
     }
 
+    /// The full pod → node binding table.
     pub fn bindings(&self) -> &BTreeMap<PodId, NodeId> {
         &self.bindings
     }

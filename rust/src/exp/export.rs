@@ -46,6 +46,7 @@ pub fn report_to_json(rep: &SimReport) -> Json {
     o
 }
 
+/// Fig. 3 cells as a JSON document for external plotting.
 pub fn fig3_to_json(fig: &Fig3) -> Json {
     let mut o = Json::obj();
     o.set("figure", Json::Str("fig3".into())).set(
@@ -72,6 +73,7 @@ pub fn fig3_to_json(fig: &Fig3) -> Json {
     o
 }
 
+/// Fig. 4 series as a JSON document for external plotting.
 pub fn fig4_to_json(fig: &Fig4) -> Json {
     let mut o = Json::obj();
     o.set("figure", Json::Str("fig4".into())).set(
@@ -86,6 +88,7 @@ pub fn fig4_to_json(fig: &Fig4) -> Json {
     o
 }
 
+/// Fig. 5 series as a JSON document for external plotting.
 pub fn fig5_to_json(fig: &Fig5) -> Json {
     let mut o = Json::obj();
     o.set("figure", Json::Str("fig5".into()));

@@ -14,7 +14,9 @@ use crate::util::units::Bytes;
 /// One (node count, scheduler) cell of the figure.
 #[derive(Debug, Clone)]
 pub struct Fig3Cell {
+    /// Worker-node count of this run (3/4/5).
     pub n_nodes: usize,
+    /// Scheduler label.
     pub scheduler: &'static str,
     /// (a) mean CPU utilisation across nodes at the end of the run.
     pub cpu_util: f64,
@@ -28,11 +30,14 @@ pub struct Fig3Cell {
     pub download_mb: f64,
     /// (f) ω usage counts (0/0 for Default).
     pub omega1_used: u64,
+    /// (f) ω₂ usage count.
     pub omega2_used: u64,
 }
 
+/// The full figure: one cell per (node count, scheduler) pair.
 #[derive(Debug, Clone)]
 pub struct Fig3 {
+    /// Cells in (node count, scheduler) iteration order.
     pub cells: Vec<Fig3Cell>,
 }
 
@@ -98,6 +103,7 @@ fn max_containers(choice: SchedulerChoice, n_nodes: usize, seed: u64) -> usize {
     deployed
 }
 
+/// Regenerate the figure's data for a seeded workload.
 pub fn run(seed: u64, n_pods: usize) -> Fig3 {
     let mut cells = Vec::new();
     for n_nodes in [3usize, 4, 5] {
@@ -126,6 +132,7 @@ pub fn run(seed: u64, n_pods: usize) -> Fig3 {
 }
 
 impl Fig3 {
+    /// Cell lookup (panics when absent).
     pub fn cell(&self, n_nodes: usize, scheduler: &str) -> &Fig3Cell {
         self.cells
             .iter()
@@ -149,6 +156,7 @@ impl Fig3 {
         total / k as f64
     }
 
+    /// Render the figure as an aligned text table.
     pub fn print(&self) -> String {
         let rows: Vec<Vec<String>> = self
             .cells

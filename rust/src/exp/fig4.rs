@@ -8,15 +8,19 @@ use super::common;
 use super::report;
 use crate::sim::SchedulerChoice;
 
+/// The bandwidth sweep (MB/s), edge-poor to edge-rich.
 pub const BANDWIDTHS_MBPS: [f64; 5] = [2.0, 4.0, 8.0, 16.0, 32.0];
 
+/// The figure's data: one download-time series per scheduler.
 #[derive(Debug, Clone)]
 pub struct Fig4 {
+    /// Swept bandwidths (MB/s).
     pub bandwidths_mbps: Vec<f64>,
     /// Per scheduler: total download seconds at each bandwidth.
     pub secs: Vec<(&'static str, Vec<f64>)>,
 }
 
+/// Regenerate the figure's data for a seeded workload.
 pub fn run(seed: u64, n_pods: usize, n_nodes: usize) -> Fig4 {
     let trace = common::paper_trace(seed, n_pods);
     let mut secs: Vec<(&'static str, Vec<f64>)> = SchedulerChoice::all()
@@ -37,6 +41,7 @@ pub fn run(seed: u64, n_pods: usize, n_nodes: usize) -> Fig4 {
 }
 
 impl Fig4 {
+    /// Download-time series of one scheduler (panics when absent).
     pub fn series_for(&self, scheduler: &str) -> &[f64] {
         &self.secs.iter().find(|(s, _)| *s == scheduler).expect("series").1
     }
@@ -52,6 +57,7 @@ impl Fig4 {
             / def.len() as f64
     }
 
+    /// Render the figure as aligned text series.
     pub fn print(&self) -> String {
         let mut out = String::from("Fig. 4 — download time (s) vs bandwidth (MB/s)\n");
         let lines: Vec<(String, Vec<f64>)> = std::iter::once((

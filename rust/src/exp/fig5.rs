@@ -5,12 +5,14 @@
 use super::common;
 use super::report;
 
+/// The figure's data: one cumulative-download series per scheduler.
 #[derive(Debug, Clone)]
 pub struct Fig5 {
     /// Per scheduler: cumulative MB after each of the n pods.
     pub cumulative_mb: Vec<(&'static str, Vec<f64>)>,
 }
 
+/// Regenerate the figure's data for a seeded workload.
 pub fn run(seed: u64, n_pods: usize, n_nodes: usize) -> Fig5 {
     let trace = common::paper_trace(seed, n_pods);
     let cumulative_mb = common::run_all(n_nodes, &trace, |_| {})
@@ -32,6 +34,7 @@ pub fn run(seed: u64, n_pods: usize, n_nodes: usize) -> Fig5 {
 }
 
 impl Fig5 {
+    /// Cumulative series of one scheduler (panics when absent).
     pub fn series_for(&self, scheduler: &str) -> &[f64] {
         &self
             .cumulative_mb
@@ -41,6 +44,7 @@ impl Fig5 {
             .1
     }
 
+    /// Render the figure as aligned text series.
     pub fn print(&self) -> String {
         let mut out = String::from("Fig. 5 — accumulated download size (MB) per deployed pod\n");
         let lines: Vec<(String, Vec<f64>)> = self

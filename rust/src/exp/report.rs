@@ -47,10 +47,12 @@ pub fn series(title: &str, lines: &[(String, Vec<f64>)], precision: usize) -> St
     out
 }
 
+/// Format with 1 decimal place.
 pub fn f1(v: f64) -> String {
     format!("{v:.1}")
 }
 
+/// Format with 3 decimal places.
 pub fn f3(v: f64) -> String {
     format!("{v:.3}")
 }

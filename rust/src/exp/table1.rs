@@ -6,23 +6,35 @@ use super::common;
 use super::report;
 use crate::util::units::Bytes;
 
+/// One row: container `i` as placed by one scheduler.
 #[derive(Debug, Clone)]
 pub struct Table1Row {
+    /// 1-based container index within the trace.
     pub container: usize,
+    /// Scheduler label.
     pub scheduler: &'static str,
+    /// Image key (`name:tag`).
     pub image: String,
+    /// Node the container landed on.
     pub node: String,
+    /// WAN bytes pulled for this container.
     pub download: Bytes,
+    /// Seconds from bind to ready.
     pub secs: f64,
+    /// Cluster STD after this placement.
     pub std: f64,
 }
 
+/// The full table across all three schedulers.
 #[derive(Debug, Clone)]
 pub struct Table1 {
+    /// All rows, scheduler-major.
     pub rows: Vec<Table1Row>,
+    /// Containers per scheduler.
     pub n_pods: usize,
 }
 
+/// Regenerate the table for a seeded workload.
 pub fn run(seed: u64, n_pods: usize, n_nodes: usize) -> Table1 {
     let trace = common::paper_trace(seed, n_pods);
     let mut rows = Vec::new();
@@ -43,22 +55,27 @@ pub fn run(seed: u64, n_pods: usize, n_nodes: usize) -> Table1 {
 }
 
 impl Table1 {
+    /// Rows of one scheduler, in container order.
     pub fn rows_for(&self, scheduler: &str) -> Vec<&Table1Row> {
         self.rows.iter().filter(|r| r.scheduler == scheduler).collect()
     }
 
+    /// Summed download size of one scheduler's rows.
     pub fn total_download(&self, scheduler: &str) -> Bytes {
         self.rows_for(scheduler).iter().map(|r| r.download).sum()
     }
 
+    /// Summed download time of one scheduler's rows.
     pub fn total_secs(&self, scheduler: &str) -> f64 {
         self.rows_for(scheduler).iter().map(|r| r.secs).sum()
     }
 
+    /// STD after the last placement of one scheduler.
     pub fn final_std(&self, scheduler: &str) -> f64 {
         self.rows_for(scheduler).last().map(|r| r.std).unwrap_or(0.0)
     }
 
+    /// Render the table as aligned text.
     pub fn print(&self) -> String {
         let mut table_rows = Vec::new();
         for i in 1..=self.n_pods {

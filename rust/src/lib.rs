@@ -15,7 +15,63 @@
 //!   and serves them on the scheduling hot path; a pure-rust scorer provides
 //!   the always-available fallback and the differential-testing oracle.
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index.
+//! See `DESIGN.md` for the full system inventory and experiment index, and
+//! `docs/ARCHITECTURE.md` for the module map, event lifecycle, and trace
+//! pipeline.
+//!
+//! ## Quickstart: a small `scale`-style run
+//!
+//! Build an edge fleet, generate a seeded workload, and drive it through
+//! the event engine — the same path the `lrsched scale` subcommand takes
+//! (timed arrivals, finite pod lifetimes, accounting identity at the end):
+//!
+//! ```
+//! use lrsched::cluster::{Node, NodeId, Resources};
+//! use lrsched::registry::Registry;
+//! use lrsched::sim::{Popularity, SimConfig, Simulation, WorkloadConfig, WorkloadGen};
+//! use lrsched::util::units::{Bandwidth, Bytes};
+//!
+//! // A uniform 3-node edge fleet: 4 cores / 8 GB / 64 GB disk per node.
+//! let nodes: Vec<Node> = (0..3)
+//!     .map(|i| {
+//!         Node::new(
+//!             NodeId(i),
+//!             &format!("edge{i}"),
+//!             Resources::cores_gb(4.0, 8.0),
+//!             Bytes::from_gb(64.0),
+//!             Bandwidth::from_mbps(100.0),
+//!         )
+//!     })
+//!     .collect();
+//!
+//! // A seeded 8-pod workload with Zipf image popularity and finite
+//! // lifetimes, drawn from the synthetic Docker Hub corpus.
+//! let registry = Registry::with_corpus();
+//! let workload = WorkloadConfig {
+//!     seed: 7,
+//!     popularity: Popularity::Zipf(1.1),
+//!     duration_range: Some((30.0, 120.0)),
+//!     ..WorkloadConfig::default()
+//! };
+//! let pods = WorkloadGen::new(&registry, workload).trace(8);
+//!
+//! // Timed arrivals every 0.5 s; pulls overlap across nodes.
+//! let mut cfg = SimConfig::default();
+//! cfg.inter_arrival_secs = Some(0.5);
+//! let mut sim = Simulation::new(nodes, registry, cfg);
+//! let report = sim.run_trace(pods);
+//!
+//! assert_eq!(report.submitted, 8);
+//! assert_eq!(report.completed(), 8);
+//! // No dropped events: every pod is in exactly one terminal bucket.
+//! assert!(report.accounting_balanced());
+//! assert!(report.total_download() > Bytes::ZERO);
+//! ```
+//!
+//! To replay a *real* cluster trace instead of the synthetic generator,
+//! see [`sim::trace`] and `docs/SCALE.md`.
+
+#![warn(missing_docs)]
 
 pub mod cli;
 pub mod cluster;

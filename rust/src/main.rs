@@ -16,7 +16,9 @@ Subcommands:
   simulate   run a workload trace through a scheduler on the paper testbed
   scale      drive a 100k-pod timed trace through the event engine; add
              --churn for node joins/drains/crashes + a registry outage
-             window (e.g. `lrsched scale --churn --churn-crash-frac 0.05`)
+             window (e.g. `lrsched scale --churn --churn-crash-frac 0.05`),
+             or replay a real cluster trace with --trace <csv>
+             --trace-format {alibaba,azure} (see docs/SCALE.md)
   fig3       regenerate Fig. 3 (a-f): performance vs node count
   fig4       regenerate Fig. 4: download time vs bandwidth
   fig5       regenerate Fig. 5: accumulated download size
@@ -80,6 +82,28 @@ fn scale_spec() -> Vec<OptSpec> {
         OptSpec { name: "duration-min", help: "min pod lifetime (s)", default: Some("30") },
         OptSpec { name: "duration-max", help: "max pod lifetime (s)", default: Some("300") },
         OptSpec { name: "zipf", help: "image-popularity Zipf exponent (0 = uniform)", default: Some("1.1") },
+        OptSpec {
+            name: "trace",
+            help: "replay a real cluster-trace CSV instead of the synthetic Zipf \
+                   workload (disables --pods/--zipf/--duration-*/--arrival)",
+            default: Some(""),
+        },
+        OptSpec { name: "trace-format", help: "alibaba|azure (see docs/SCALE.md)", default: Some("alibaba") },
+        OptSpec {
+            name: "trace-speedup",
+            help: "divide trace arrival offsets and durations by this factor",
+            default: Some("1"),
+        },
+        OptSpec {
+            name: "trace-limit",
+            help: "replay at most N trace events, in file order (0 = all)",
+            default: Some("0"),
+        },
+        OptSpec {
+            name: "trace-strict",
+            help: "reject malformed/out-of-order/duplicate rows instead of repairing",
+            default: None,
+        },
         OptSpec { name: "retry-limit", help: "retries before a pod is unschedulable", default: Some("10") },
         OptSpec { name: "backoff", help: "scheduling-queue back-off (s)", default: Some("5") },
         OptSpec { name: "snapshot-every", help: "snapshot cadence (placements)", default: Some("1000") },
@@ -111,7 +135,7 @@ fn scale_spec() -> Vec<OptSpec> {
 
 fn run_scale(rest: &[String]) -> Result<(), String> {
     use lrsched::sched::NativeScorer;
-    use lrsched::sim::Popularity;
+    use lrsched::sim::{trace, ErrorMode, Popularity, TraceFormat, TraceOptions};
 
     let args = cli::parse(rest, &scale_spec())?;
     apply_log_level(&args)?;
@@ -130,6 +154,62 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
         other => return Err(format!("unknown scheduler {other:?}")),
     };
 
+    // Workload: a real trace replay (--trace) or the synthetic Zipf
+    // generator. Both reduce to explicit (arrival-offset, pod) pairs.
+    let (registry, arrivals, horizon, trace_note) = match args.get("trace") {
+        Some(path) => {
+            let fmt_name = args.str_or("trace-format", "alibaba");
+            let format = TraceFormat::parse(fmt_name)
+                .ok_or_else(|| format!("unknown trace format {fmt_name:?} (expected alibaba|azure)"))?;
+            let speedup = args.f64_or("trace-speedup", 1.0)?;
+            if speedup <= 0.0 {
+                return Err("--trace-speedup must be positive".to_string());
+            }
+            let limit = args.usize_or("trace-limit", 0)?;
+            let opts = TraceOptions {
+                format,
+                mode: if args.flag("trace-strict") { ErrorMode::Strict } else { ErrorMode::Lenient },
+                speedup,
+                limit: if limit == 0 { None } else { Some(limit) },
+                seed,
+            };
+            let t = trace::load(std::path::Path::new(path), &opts).map_err(|e| e.to_string())?;
+            let registry = t.synthesize_registry();
+            let arrivals = t.arrivals();
+            let s = &t.stats;
+            let note = format!(
+                "trace: {path} format={} events={} apps={} span={:.1}s speedup={speedup:.0}x \
+                 skipped={} duplicates={}{}",
+                format.label(),
+                s.events,
+                s.apps,
+                s.span_secs,
+                s.skipped,
+                s.duplicates,
+                if s.resorted { " (resorted)" } else { "" },
+            );
+            (registry, arrivals, s.span_secs.max(60.0), Some(note))
+        }
+        None => {
+            let registry = Registry::with_corpus();
+            let wl = lrsched::sim::WorkloadConfig {
+                seed,
+                popularity: if zipf > 0.0 { Popularity::Zipf(zipf) } else { Popularity::Uniform },
+                duration_range: if dmax > 0.0 { Some((dmin, dmax.max(dmin))) } else { None },
+                ..Default::default()
+            };
+            let dt = arrival.max(1e-6);
+            let arrivals = WorkloadGen::new(&registry, wl)
+                .trace(pods)
+                .into_iter()
+                .enumerate()
+                .map(|(i, p)| (i as f64 * dt, p))
+                .collect::<Vec<_>>();
+            (registry, arrivals, (pods as f64 * dt).max(60.0), None)
+        }
+    };
+    let n_pods = arrivals.len();
+
     let mut cfg = SimConfig::default();
     cfg.scheduler = scheduler;
     cfg.inter_arrival_secs = Some(arrival.max(1e-6));
@@ -140,7 +220,6 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
     cfg.wake_on_capacity = !args.flag("no-wake");
     if args.flag("churn") {
         // Spread volatility across the arrival window of the whole trace.
-        let horizon = (pods as f64 * arrival.max(1e-6)).max(60.0);
         cfg.churn = Some(lrsched::sim::ChurnConfig {
             seed: args.u64_or("churn-seed", seed)?,
             horizon_secs: horizon,
@@ -152,15 +231,6 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
             ..Default::default()
         });
     }
-
-    let registry = Registry::with_corpus();
-    let wl = lrsched::sim::WorkloadConfig {
-        seed,
-        popularity: if zipf > 0.0 { Popularity::Zipf(zipf) } else { Popularity::Uniform },
-        duration_range: if dmax > 0.0 { Some((dmin, dmax.max(dmin))) } else { None },
-        ..Default::default()
-    };
-    let trace = WorkloadGen::new(&registry, wl).trace(pods);
 
     let churn_enabled = cfg.churn.is_some();
     let mut sim = Simulation::new(common::scale_nodes(nodes), registry, cfg);
@@ -174,15 +244,17 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
         other => return Err(format!("unknown backend {other:?} (expected native|dense)")),
     }
     let wall = std::time::Instant::now();
-    let report = sim.run_trace(trace);
+    let report = sim.run_arrivals(arrivals);
     let wall = wall.elapsed().as_secs_f64();
     sim.state.check_invariants().map_err(|e| format!("invariant violated: {e}"))?;
 
+    if let Some(note) = &trace_note {
+        println!("{note}");
+    }
     println!(
-        "scale: {} pods / {} nodes / {:.2}s arrivals / scheduler={} backend={}",
-        pods,
+        "scale: {} pods / {} nodes / scheduler={} backend={}",
+        n_pods,
         nodes,
-        arrival,
         report.scheduler,
         backend,
     );
@@ -214,7 +286,7 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
         sim.events_queued(),
         sim.clock.now(),
         wall,
-        pods as f64 / wall.max(1e-9)
+        n_pods as f64 / wall.max(1e-9)
     );
     println!(
         "download total={:.1} GB final_std={:.4} snapshots={}",
@@ -256,8 +328,12 @@ fn run() -> Result<(), String> {
                     cli::usage(
                         "scale",
                         "Drive a large timed trace through the event engine.\n\
-                         Example: lrsched scale --churn    (100k pods with node\n\
-                         joins/drains/crashes and a registry outage window)",
+                         Examples:\n\
+                           lrsched scale --churn    (100k pods with node\n\
+                           joins/drains/crashes and a registry outage window)\n\
+                           lrsched scale --trace tests/fixtures/alibaba_mini.csv \\\n\
+                             --trace-format alibaba --trace-speedup 10\n\
+                         See docs/SCALE.md for the full flag reference.",
                         &scale_spec()
                     )
                 ),

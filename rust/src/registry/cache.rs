@@ -18,10 +18,12 @@ pub struct MetadataCache {
 }
 
 impl MetadataCache {
+    /// An empty cache that persists to `cache_file`.
     pub fn new(cache_file: &str) -> MetadataCache {
         MetadataCache { cache_file: cache_file.to_string(), lists: BTreeMap::new() }
     }
 
+    /// Insert/refresh one image's metadata.
     pub fn insert(&mut self, meta: ImageMetadata) {
         self.lists.insert(meta.image_ref().key(), meta);
     }
@@ -31,22 +33,27 @@ impl MetadataCache {
         self.lists.get(&image.key())
     }
 
+    /// Cached images.
     pub fn len(&self) -> usize {
         self.lists.len()
     }
 
+    /// Is the cache empty?
     pub fn is_empty(&self) -> bool {
         self.lists.is_empty()
     }
 
+    /// Every cached manifest, in key order.
     pub fn iter(&self) -> impl Iterator<Item = &ImageMetadata> {
         self.lists.values()
     }
 
+    /// Drop every entry.
     pub fn clear(&mut self) {
         self.lists.clear();
     }
 
+    /// Serialize in the paper's `cache.json` shape.
     pub fn to_json(&self) -> Json {
         let mut lists = Json::obj();
         for (k, v) in &self.lists {
@@ -58,6 +65,7 @@ impl MetadataCache {
         o
     }
 
+    /// Parse the paper's `cache.json` shape; None on any inconsistency.
     pub fn from_json(v: &Json) -> Option<MetadataCache> {
         let mut cache = MetadataCache::new(v.get("catch_file")?.as_str()?);
         for (k, entry) in v.get("lists")?.as_obj()? {

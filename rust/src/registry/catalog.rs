@@ -8,7 +8,9 @@ use std::collections::BTreeMap;
 /// Registry error type.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RegistryError {
+    /// No repository with this name.
     UnknownImage(String),
+    /// Repository exists but the tag does not.
     UnknownTag(String),
 }
 
@@ -33,6 +35,7 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// An empty registry.
     pub fn new() -> Registry {
         Registry::default()
     }
@@ -82,6 +85,7 @@ impl Registry {
         self.images.values().flat_map(|tags| tags.values())
     }
 
+    /// Total (name, tag) manifests.
     pub fn image_count(&self) -> usize {
         self.images.values().map(|t| t.len()).sum()
     }

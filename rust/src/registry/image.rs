@@ -9,11 +9,14 @@ use std::fmt;
 /// An image reference `repo/name:tag` as written in a pod spec.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ImageRef {
+    /// Repository/name part (may include a registry host prefix).
     pub name: String,
+    /// Tag (defaults to `latest` when parsing).
     pub tag: String,
 }
 
 impl ImageRef {
+    /// Construct from explicit name and tag.
     pub fn new(name: &str, tag: &str) -> ImageRef {
         ImageRef { name: name.to_string(), tag: tag.to_string() }
     }
@@ -35,6 +38,7 @@ impl ImageRef {
         self.name.rsplit('/').next().unwrap_or(&self.name)
     }
 
+    /// Canonical `name:tag` key.
     pub fn key(&self) -> String {
         format!("{}:{}", self.name, self.tag)
     }
@@ -51,13 +55,18 @@ impl fmt::Display for ImageRef {
 pub struct ImageMetadata {
     /// Manifest digest (paper `Id`).
     pub id: String,
+    /// Image name.
     pub name: String,
+    /// Image tag.
     pub tag: String,
+    /// Sum of layer sizes.
     pub total_size: Bytes,
+    /// The layer stack, base first.
     pub layers: Vec<LayerMetadata>,
 }
 
 impl ImageMetadata {
+    /// Construct, computing `total_size` from the layers.
     pub fn new(id: &str, name: &str, tag: &str, layers: Vec<LayerMetadata>) -> ImageMetadata {
         let total_size = layers.iter().map(|l| l.size).sum();
         ImageMetadata {
@@ -69,10 +78,13 @@ impl ImageMetadata {
         }
     }
 
+    /// The `name:tag` reference for this manifest.
     pub fn image_ref(&self) -> ImageRef {
         ImageRef::new(&self.name, &self.tag)
     }
 
+    /// `name` without a leading repository prefix (paper's
+    /// `NameWithoutRepo`).
     pub fn name_without_repo(&self) -> &str {
         self.image_ref();
         self.name.rsplit('/').next().unwrap_or(&self.name)
@@ -106,6 +118,7 @@ impl ImageMetadata {
         o
     }
 
+    /// Parse a `cache.json` entry; None on malformed/inconsistent data.
     pub fn from_json(v: &Json) -> Option<ImageMetadata> {
         let layers = v
             .get("l_meta")?

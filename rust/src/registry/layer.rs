@@ -19,6 +19,7 @@ pub struct LayerId(pub u32);
 pub struct LayerMetadata {
     /// Content digest, e.g. `sha256:8f4e…`.
     pub digest: String,
+    /// Compressed layer size.
     pub size: Bytes,
 }
 
@@ -34,6 +35,7 @@ pub struct LayerInterner {
 }
 
 impl LayerInterner {
+    /// An empty interner.
     pub fn new() -> LayerInterner {
         LayerInterner::default()
     }
@@ -56,14 +58,17 @@ impl LayerInterner {
         id
     }
 
+    /// Id of an already-interned digest.
     pub fn lookup(&self, digest: &str) -> Option<LayerId> {
         self.by_digest.get(digest).copied()
     }
 
+    /// Size of an interned layer.
     pub fn size(&self, id: LayerId) -> Bytes {
         self.sizes[id.0 as usize]
     }
 
+    /// Digest of an interned layer.
     pub fn digest(&self, id: LayerId) -> &str {
         &self.digests[id.0 as usize]
     }
@@ -73,6 +78,7 @@ impl LayerInterner {
         self.digests.len()
     }
 
+    /// Has nothing been interned yet?
     pub fn is_empty(&self) -> bool {
         self.digests.is_empty()
     }
@@ -98,10 +104,12 @@ pub struct LayerSet {
 }
 
 impl LayerSet {
+    /// The empty set.
     pub fn new() -> LayerSet {
         LayerSet::default()
     }
 
+    /// A set holding exactly `ids`.
     pub fn from_ids(ids: &[LayerId]) -> LayerSet {
         let mut s = LayerSet::new();
         for &id in ids {
@@ -116,12 +124,14 @@ impl LayerSet {
         }
     }
 
+    /// Add a layer.
     pub fn insert(&mut self, id: LayerId) {
         let (w, b) = (id.0 as usize / 64, id.0 as usize % 64);
         self.ensure(w);
         self.words[w] |= 1 << b;
     }
 
+    /// Remove a layer (no-op when absent).
     pub fn remove(&mut self, id: LayerId) {
         let (w, b) = (id.0 as usize / 64, id.0 as usize % 64);
         if w < self.words.len() {
@@ -129,19 +139,23 @@ impl LayerSet {
         }
     }
 
+    /// Is `id` in the set?
     pub fn contains(&self, id: LayerId) -> bool {
         let (w, b) = (id.0 as usize / 64, id.0 as usize % 64);
         w < self.words.len() && self.words[w] & (1 << b) != 0
     }
 
+    /// Number of layers in the set.
     pub fn len(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
 
+    /// Is the set empty?
     pub fn is_empty(&self) -> bool {
         self.words.iter().all(|&w| w == 0)
     }
 
+    /// In-place union (node gains `other`'s layers).
     pub fn union_with(&mut self, other: &LayerSet) {
         self.ensure(other.words.len().saturating_sub(1));
         for (i, &w) in other.words.iter().enumerate() {
@@ -149,6 +163,7 @@ impl LayerSet {
         }
     }
 
+    /// Iterate members in ascending id order.
     pub fn iter(&self) -> impl Iterator<Item = LayerId> + '_ {
         self.words.iter().enumerate().flat_map(|(wi, &w)| {
             let mut bits = w;

@@ -14,20 +14,25 @@ use super::catalog::Registry;
 /// Poll interval from the paper: "waits for 10 seconds by default".
 pub const DEFAULT_POLL_SECS: f64 = 10.0;
 
+/// The periodic registry poller.
 #[derive(Debug, Clone)]
 pub struct Watcher {
+    /// Seconds between polls.
     pub poll_interval_secs: f64,
     next_poll_at: f64,
     /// Registry reachability. During an outage window polls fail fast and
     /// the last good cache stays in place.
     online: bool,
-    /// Statistics for observability/tests.
+    /// Polls attempted (statistics for observability/tests).
     pub polls: u64,
+    /// Manifests walked across all successful polls.
     pub images_seen: u64,
+    /// Polls that failed (registry offline).
     pub failures: u64,
 }
 
 impl Watcher {
+    /// A watcher polling every `poll_interval_secs`, due immediately.
     pub fn new(poll_interval_secs: f64) -> Watcher {
         Watcher {
             poll_interval_secs,
@@ -45,10 +50,12 @@ impl Watcher {
         self.online = online;
     }
 
+    /// Is the registry currently reachable?
     pub fn is_online(&self) -> bool {
         self.online
     }
 
+    /// A watcher at the paper's 10-second default interval.
     pub fn with_default_interval() -> Watcher {
         Watcher::new(DEFAULT_POLL_SECS)
     }

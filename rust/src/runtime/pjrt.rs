@@ -12,15 +12,18 @@ pub struct PjRt {
 }
 
 impl PjRt {
+    /// A PJRT client on the CPU platform.
     pub fn cpu() -> Result<PjRt> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(PjRt { client })
     }
 
+    /// Platform name reported by the client.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Devices visible to the client.
     pub fn device_count(&self) -> usize {
         self.client.device_count()
     }

@@ -36,7 +36,9 @@ fn f32_literal(len: usize, dims: &[i64]) -> xla::Literal {
 /// Execution statistics (observability + perf tests).
 #[derive(Debug, Clone, Default)]
 pub struct ScorerStats {
+    /// Successful XLA executions.
     pub executions: u64,
+    /// Cycles served by the native scorer (shape overflow or error).
     pub native_fallbacks: u64,
     /// Executions per variant, parallel to the variant list.
     pub per_variant: Vec<u64>,
@@ -46,6 +48,7 @@ pub struct ScorerStats {
 pub struct XlaScorer {
     variants: Vec<Variant>,
     native: NativeScorer,
+    /// Execution statistics (observability + perf tests).
     pub stats: ScorerStats,
     // Reused staging buffers (hot path: avoid per-cycle allocation).
     staging: Vec<f32>,
@@ -114,6 +117,7 @@ impl XlaScorer {
         bail!("artifacts/manifest.json not found — run `make artifacts` first")
     }
 
+    /// Names of the compiled shape variants, smallest first.
     pub fn variant_names(&self) -> Vec<&str> {
         self.variants.iter().map(|v| v.name.as_str()).collect()
     }

@@ -26,8 +26,11 @@ impl std::error::Error for XlaUnavailable {}
 /// Execution statistics — mirrors `scorer::ScorerStats`.
 #[derive(Debug, Clone, Default)]
 pub struct ScorerStats {
+    /// Successful XLA executions (always 0 in the stub).
     pub executions: u64,
+    /// Cycles served by the native scorer instead.
     pub native_fallbacks: u64,
+    /// Executions per compiled variant (always empty in the stub).
     pub per_variant: Vec<u64>,
 }
 
@@ -36,18 +39,22 @@ pub struct ScorerStats {
 /// expect when artifacts or the PJRT toolchain are absent.
 pub struct XlaScorer {
     native: NativeScorer,
+    /// Execution statistics (observability parity with the real scorer).
     pub stats: ScorerStats,
 }
 
 impl XlaScorer {
+    /// Mirrors `scorer::XlaScorer::load`; always unavailable in the stub.
     pub fn load(_artifacts_dir: &Path) -> Result<XlaScorer, XlaUnavailable> {
         Err(XlaUnavailable)
     }
 
+    /// Mirrors `scorer::XlaScorer::load_default`; always unavailable.
     pub fn load_default() -> Result<XlaScorer, XlaUnavailable> {
         Err(XlaUnavailable)
     }
 
+    /// Compiled shape variants (always empty in the stub).
     pub fn variant_names(&self) -> Vec<&str> {
         Vec::new()
     }

@@ -10,7 +10,9 @@ use crate::util::units::Bytes;
 /// One scheduling cycle for one pod.
 #[derive(Debug)]
 pub struct CycleContext<'a> {
+    /// Cluster snapshot the cycle scores against.
     pub state: &'a ClusterState,
+    /// The pod being scheduled.
     pub pod: &'a Pod,
     /// Layer metadata for the pod's image, from the registry cache
     /// (None when the cache has never seen the image — the scheduler then
@@ -40,6 +42,8 @@ impl<'a> CycleContext<'a> {
         }
     }
 
+    /// Assemble a context from already-prepared parts (see
+    /// [`CycleContext::prepare`]).
     pub fn new(
         state: &'a ClusterState,
         pod: &'a Pod,

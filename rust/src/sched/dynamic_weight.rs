@@ -14,11 +14,15 @@ use crate::util::units::Bytes;
 /// Thresholds and weights from the paper's §VI-A settings.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WeightParams {
+    /// ω when the Eq. 13 gate passes (favor layer sharing).
     pub omega1: f64,
+    /// ω otherwise (favor resource balance).
     pub omega2: f64,
     /// h_size in MB (the paper's D_c^n(t) > h_size with h_size = 10).
     pub h_size_mb: f64,
+    /// h_CPU threshold on Eq. 12.
     pub h_cpu: f64,
+    /// h_STD threshold on Eq. 11.
     pub h_std: f64,
 }
 

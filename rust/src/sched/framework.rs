@@ -14,6 +14,7 @@ pub const MAX_NODE_SCORE: f64 = 100.0;
 /// Outcome of a filter plugin for one node.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum FilterResult {
+    /// Node can host the pod.
     Pass,
     /// Node rejected with a human-readable reason (surfaces in events).
     Reject(String),
@@ -22,7 +23,9 @@ pub enum FilterResult {
 /// Filter extension point (also covers PreFilter checks — with single-pod
 /// cycles the distinction is only a caching optimization upstream).
 pub trait FilterPlugin {
+    /// Plugin name as surfaced in rejection reasons.
     fn name(&self) -> &'static str;
+    /// Can `node` host the cycle's pod?
     fn filter(&self, ctx: &CycleContext, node: &Node) -> FilterResult;
 }
 
@@ -30,8 +33,11 @@ pub trait FilterPlugin {
 /// then maps the raw vector to [0, MAX_NODE_SCORE] (identity by default,
 /// matching plugins that already emit 0–100).
 pub trait ScorePlugin {
+    /// Plugin name as surfaced in score breakdowns.
     fn name(&self) -> &'static str;
+    /// Raw score for one node.
     fn score(&self, ctx: &CycleContext, node: &Node) -> f64;
+    /// Map the raw vector to [0, MAX_NODE_SCORE] (identity by default).
     fn normalize(&self, _ctx: &CycleContext, _scores: &mut [f64]) {}
 }
 
@@ -80,6 +86,7 @@ impl std::fmt::Display for Unschedulable {
 
 /// A scheduler framework profile: ordered filters plus weighted scorers.
 pub struct Framework {
+    /// Profile name (e.g. `default`, `lrscheduler`).
     pub profile_name: String,
     filters: Vec<Box<dyn FilterPlugin>>,
     scorers: Vec<(Box<dyn ScorePlugin>, f64)>,
@@ -88,6 +95,7 @@ pub struct Framework {
 /// Per-node score detail for observability and the experiment reports.
 #[derive(Debug, Clone)]
 pub struct NodeScore {
+    /// The scored node.
     pub node: NodeId,
     /// Weighted sum over all score plugins after normalization.
     pub total: f64,
@@ -96,20 +104,24 @@ pub struct NodeScore {
 }
 
 impl Framework {
+    /// An empty profile.
     pub fn new(profile_name: &str) -> Framework {
         Framework { profile_name: profile_name.to_string(), filters: Vec::new(), scorers: Vec::new() }
     }
 
+    /// Builder: append a filter plugin.
     pub fn add_filter(mut self, plugin: Box<dyn FilterPlugin>) -> Framework {
         self.filters.push(plugin);
         self
     }
 
+    /// Builder: append a score plugin with its weight.
     pub fn add_scorer(mut self, plugin: Box<dyn ScorePlugin>, weight: f64) -> Framework {
         self.scorers.push((plugin, weight));
         self
     }
 
+    /// Names of the registered score plugins, in order.
     pub fn scorer_names(&self) -> Vec<&'static str> {
         self.scorers.iter().map(|(p, _)| p.name()).collect()
     }

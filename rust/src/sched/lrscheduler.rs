@@ -25,6 +25,7 @@ use crate::util::units::Bytes;
 /// The outcome of one scheduling cycle.
 #[derive(Debug, Clone)]
 pub struct Decision {
+    /// The winning node.
     pub node: NodeId,
     /// Final S^{k,n}(t) of the winning node.
     pub final_score: f64,
@@ -47,7 +48,9 @@ pub struct Decision {
 /// corrupted the Fig. 3f ω₂ column.)
 #[derive(Debug, Clone, Default)]
 pub struct WeightStats {
+    /// Decisions taken at ω₁.
     pub omega1_used: u64,
+    /// Decisions taken at ω₂.
     pub omega2_used: u64,
     /// Decisions whose ω matched neither ω₁ nor ω₂ (mid-range weights).
     pub omega_mid_used: u64,
@@ -59,19 +62,24 @@ pub struct WeightStats {
 /// (S = S_K8s); `Some(Static(4.0))` is the Layer baseline; the paper's
 /// LRScheduler is `Some(TwoLevel)`.
 pub struct LrScheduler {
+    /// Configuration name (`default` / `layer` / `lrscheduler`).
     pub name: String,
     framework: Framework,
+    /// Dynamic-weight parameters (ω₁, ω₂, thresholds).
     pub params: WeightParams,
+    /// Weight policy; None reproduces the Default baseline.
     pub policy: Option<WeightPolicy>,
     /// Dense scoring backend (XLA artifact). None ⇒ native per-node math.
     backend: Option<Box<dyn ScoringBackend>>,
     /// Persistent dense-input arena for the backend path — reused across
     /// cycles instead of rebuilding O(N·L) buffers from zeros each time.
     arena: ScoreArena,
+    /// Running ω-usage statistics (Fig. 3f).
     pub stats: WeightStats,
 }
 
 impl LrScheduler {
+    /// Assemble a scheduler from a framework profile and weight policy.
     pub fn new(name: &str, framework: Framework, policy: Option<WeightPolicy>) -> LrScheduler {
         LrScheduler {
             name: name.to_string(),
@@ -89,10 +97,12 @@ impl LrScheduler {
         LrScheduler::new("default", framework, None)
     }
 
+    /// The Layer baseline: static ω = 4.
     pub fn layer_scheduler(framework: Framework) -> LrScheduler {
         LrScheduler::new("layer", framework, Some(WeightPolicy::Static(4.0)))
     }
 
+    /// The paper's LRScheduler: two-level dynamic ω.
     pub fn lr_scheduler(framework: Framework) -> LrScheduler {
         LrScheduler::new("lrscheduler", framework, Some(WeightPolicy::TwoLevel))
     }
@@ -103,6 +113,7 @@ impl LrScheduler {
         self
     }
 
+    /// Name of the installed scoring backend (`native` without one).
     pub fn backend_name(&self) -> &'static str {
         self.backend.as_ref().map(|b| b.name()).unwrap_or("native")
     }

@@ -10,6 +10,8 @@ use crate::cluster::Node;
 use crate::sched::context::CycleContext;
 use crate::sched::framework::{ScorePlugin, MAX_NODE_SCORE};
 
+/// NodeResourcesBalancedAllocation: favor nodes whose CPU and memory
+/// utilisation stay close to each other after placement.
 pub struct BalancedAllocation;
 
 impl ScorePlugin for BalancedAllocation {

@@ -8,6 +8,8 @@ use crate::cluster::Node;
 use crate::sched::context::CycleContext;
 use crate::sched::framework::{FilterPlugin, FilterResult};
 
+/// The paper's §III-C capacity constraints: container slots and disk
+/// headroom for the image's missing layers.
 pub struct NodeCapacity;
 
 impl FilterPlugin for NodeCapacity {

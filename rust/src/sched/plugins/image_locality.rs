@@ -16,6 +16,7 @@ use crate::util::units::Bytes;
 const MIN_THRESHOLD: f64 = 23.0 * 1024.0 * 1024.0; // 23 MiB
 const MAX_THRESHOLD: f64 = 1000.0 * 1024.0 * 1024.0; // 1000 MiB
 
+/// ImageLocality: favor nodes that already hold (part of) the image.
 pub struct ImageLocality;
 
 impl ImageLocality {

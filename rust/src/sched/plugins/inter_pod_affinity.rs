@@ -9,6 +9,8 @@ use crate::cluster::Node;
 use crate::sched::context::CycleContext;
 use crate::sched::framework::{ScorePlugin, MAX_NODE_SCORE};
 
+/// InterPodAffinity: attract to / repel from nodes running pods matched
+/// by (anti-)affinity terms, within their topology domains.
 pub struct InterPodAffinity;
 
 impl ScorePlugin for InterPodAffinity {

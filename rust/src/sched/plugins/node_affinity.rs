@@ -15,6 +15,7 @@ fn term_matches(node: &Node, key: &str, values: &[String]) -> bool {
         .unwrap_or(false)
 }
 
+/// NodeAffinity filter: hard node-selector and required affinity terms.
 pub struct NodeAffinityFilter;
 
 impl FilterPlugin for NodeAffinityFilter {
@@ -40,6 +41,7 @@ impl FilterPlugin for NodeAffinityFilter {
     }
 }
 
+/// NodeAffinity score: weighted preferred affinity terms.
 pub struct NodeAffinityScore;
 
 impl ScorePlugin for NodeAffinityScore {

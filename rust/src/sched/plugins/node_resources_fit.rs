@@ -9,6 +9,8 @@ use crate::cluster::Node;
 use crate::sched::context::CycleContext;
 use crate::sched::framework::{FilterPlugin, FilterResult, ScorePlugin, MAX_NODE_SCORE};
 
+/// NodeResourcesFit filter: requests must fit the node's allocatable
+/// resources (Eqs. 6–7).
 pub struct NodeResourcesFit;
 
 impl FilterPlugin for NodeResourcesFit {

@@ -9,6 +9,8 @@ use crate::cluster::Node;
 use crate::sched::context::CycleContext;
 use crate::sched::framework::{normalize_inverse, ScorePlugin};
 
+/// PodTopologySpread: spread label-matched pods evenly across topology
+/// domains (lower skew scores higher).
 pub struct PodTopologySpread;
 
 impl ScorePlugin for PodTopologySpread {

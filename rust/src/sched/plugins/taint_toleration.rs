@@ -11,6 +11,8 @@ use crate::sched::framework::{
     normalize_inverse, FilterPlugin, FilterResult, ScorePlugin,
 };
 
+/// TaintToleration filter: hard (NoSchedule) taints require a matching
+/// toleration.
 pub struct TaintTolerationFilter;
 
 impl FilterPlugin for TaintTolerationFilter {
@@ -31,6 +33,8 @@ impl FilterPlugin for TaintTolerationFilter {
     }
 }
 
+/// TaintToleration score: soft (PreferNoSchedule) taints lower the
+/// score unless tolerated.
 pub struct TaintTolerationScore;
 
 impl ScorePlugin for TaintTolerationScore {

@@ -15,6 +15,8 @@ fn claimed(ctx: &CycleContext) -> Bytes {
     ctx.pod.volume_claims.iter().map(|c| c.size).sum()
 }
 
+/// VolumeBinding filter: claimed volumes must fit the node's volume
+/// capacity.
 pub struct VolumeBindingFilter;
 
 impl FilterPlugin for VolumeBindingFilter {
@@ -34,6 +36,7 @@ impl FilterPlugin for VolumeBindingFilter {
     }
 }
 
+/// VolumeBinding score: favor nodes with more volume headroom.
 pub struct VolumeBindingScore;
 
 impl ScorePlugin for VolumeBindingScore {

@@ -10,13 +10,21 @@ use super::plugins::*;
 /// hard constraints).
 #[derive(Debug, Clone)]
 pub struct FrameworkConfig {
+    /// ImageLocality score plugin.
     pub image_locality: bool,
+    /// TaintToleration score plugin.
     pub taint_toleration: bool,
+    /// NodeAffinity score plugin.
     pub node_affinity: bool,
+    /// PodTopologySpread score plugin.
     pub pod_topology_spread: bool,
+    /// NodeResourcesFit/LeastAllocated score plugin.
     pub least_allocated: bool,
+    /// VolumeBinding score plugin.
     pub volume_binding: bool,
+    /// InterPodAffinity score plugin.
     pub inter_pod_affinity: bool,
+    /// NodeResourcesBalancedAllocation score plugin.
     pub balanced_allocation: bool,
 }
 

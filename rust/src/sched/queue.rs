@@ -38,19 +38,23 @@ struct Parked {
     cure: ParkCure,
 }
 
+/// The active/back-off queue pair.
 #[derive(Debug, Clone, Default)]
 pub struct SchedulingQueue {
     active: VecDeque<PodId>,
     /// Parked pods in FIFO park order.
     backoff: Vec<Parked>,
+    /// Back-off applied by [`SchedulingQueue::park`].
     pub backoff_secs: f64,
 }
 
 impl SchedulingQueue {
+    /// An empty queue with the 5-second default back-off.
     pub fn new() -> SchedulingQueue {
         SchedulingQueue { active: VecDeque::new(), backoff: Vec::new(), backoff_secs: 5.0 }
     }
 
+    /// Enqueue a pod for scheduling.
     pub fn push(&mut self, pod: PodId) {
         self.active.push_back(pod);
     }
@@ -114,14 +118,17 @@ impl SchedulingQueue {
             .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 
+    /// Nothing active and nothing parked?
     pub fn is_empty(&self) -> bool {
         self.active.is_empty() && self.backoff.is_empty()
     }
 
+    /// Pods awaiting a scheduling cycle.
     pub fn active_len(&self) -> usize {
         self.active.len()
     }
 
+    /// Pods parked in back-off.
     pub fn parked_len(&self) -> usize {
         self.backoff.len()
     }

@@ -24,9 +24,11 @@ pub const N_FEATURES: usize = 7;
 /// Hyper-parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct RlParams {
+    /// Initial exploration rate.
     pub epsilon: f64,
     /// ε decay per decision (exploration annealing).
     pub epsilon_decay: f64,
+    /// SGD step size for the online update.
     pub learning_rate: f64,
     /// Weight of the balance term in the reward.
     pub lambda_std: f64,
@@ -50,17 +52,21 @@ impl Default for RlParams {
 /// LRScheduler, so hard constraints (Eqs. 6–8) always hold.
 pub struct RlScheduler {
     framework: Framework,
+    /// Hyper-parameters.
     pub params: RlParams,
     weights: [f64; N_FEATURES + 1],
     epsilon: f64,
     rng: Pcg,
     /// Features of the last decision, kept for the online update.
     last_features: Option<[f64; N_FEATURES + 1]>,
+    /// Total decisions taken.
     pub decisions: u64,
+    /// Decisions that explored (random pick) instead of exploiting.
     pub explorations: u64,
 }
 
 impl RlScheduler {
+    /// A fresh agent with zero weights and a seeded exploration RNG.
     pub fn new(framework: Framework, params: RlParams, seed: u64) -> RlScheduler {
         RlScheduler {
             framework,
@@ -143,6 +149,7 @@ impl RlScheduler {
         }
     }
 
+    /// The learned linear-model weights (for tests/inspection).
     pub fn weights(&self) -> &[f64] {
         &self.weights
     }

@@ -20,7 +20,9 @@ pub const NEG_MASK: f32 = -1.0e30;
 /// Dense inputs for one scheduling cycle.
 #[derive(Debug, Clone)]
 pub struct ScoreInputs {
+    /// Logical node count (≤ row capacity).
     pub n_nodes: usize,
+    /// Logical layer count (≤ column capacity).
     pub n_layers: usize,
     /// Row-major node×layer presence (1.0 where the node holds the layer).
     pub present: Vec<f32>,
@@ -28,14 +30,19 @@ pub struct ScoreInputs {
     pub req: Vec<f32>,
     /// Layer sizes in MB.
     pub sizes_mb: Vec<f32>,
+    /// Per-node CPU requested (millicores, any consistent unit).
     pub cpu_used: Vec<f32>,
+    /// Per-node CPU capacity.
     pub cpu_cap: Vec<f32>,
+    /// Per-node memory requested.
     pub mem_used: Vec<f32>,
+    /// Per-node memory capacity.
     pub mem_cap: Vec<f32>,
     /// S_K8s per node (already weighted/normalized by the framework).
     pub k8s_score: Vec<f32>,
     /// 1.0 for feasible nodes, 0.0 for filtered ones.
     pub feasible: Vec<f32>,
+    /// Dynamic-weight parameters.
     pub params: WeightParams,
 }
 
@@ -86,7 +93,9 @@ pub struct ScoreOutputs {
 
 /// Backend interface implemented natively and by the XLA runtime.
 pub trait ScoringBackend {
+    /// Backend name for reports (`native` / `xla`).
     fn name(&self) -> &'static str;
+    /// Score one cycle's dense inputs.
     fn score(&mut self, inputs: &ScoreInputs) -> ScoreOutputs;
 }
 
@@ -193,6 +202,7 @@ impl Default for ScoreArena {
 }
 
 impl ScoreArena {
+    /// An empty arena (first fill allocates).
     pub fn new() -> ScoreArena {
         ScoreArena {
             inputs: ScoreInputs::zeros(0, 0, WeightParams::default()),

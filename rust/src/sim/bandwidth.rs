@@ -8,6 +8,7 @@
 
 use crate::util::units::{Bandwidth, Bytes};
 
+/// The per-node link and shared-uplink booking ledger.
 #[derive(Debug, Clone)]
 pub struct LinkModel {
     /// Per-node downlink.
@@ -16,21 +17,39 @@ pub struct LinkModel {
     node_free_at: Vec<f64>,
     /// Optional shared registry uplink (None = unconstrained).
     pub registry_uplink: Option<Bandwidth>,
-    registry_free_at: f64,
+    /// Per-transfer bookings on the shared uplink, `(node, finish)`.
+    /// Tracking provenance (instead of one scalar free-at time) lets a
+    /// crashed node's in-flight transfer release the uplink
+    /// ([`LinkModel::release_node`]) instead of leaving a phantom booking
+    /// later pulls queue behind.
+    uplink_bookings: Vec<(usize, f64)>,
 }
 
 impl LinkModel {
+    /// Build the ledger for a fleet with the given per-node downlinks.
     pub fn new(node_bw: Vec<Bandwidth>) -> LinkModel {
         let n = node_bw.len();
-        LinkModel { node_bw, node_free_at: vec![0.0; n], registry_uplink: None, registry_free_at: 0.0 }
+        LinkModel {
+            node_bw,
+            node_free_at: vec![0.0; n],
+            registry_uplink: None,
+            uplink_bookings: Vec::new(),
+        }
     }
 
+    /// Downlink bandwidth of `node`.
     pub fn bandwidth(&self, node: usize) -> Bandwidth {
         self.node_bw[node]
     }
 
+    /// Override the downlink bandwidth of `node`.
     pub fn set_bandwidth(&mut self, node: usize, bw: Bandwidth) {
         self.node_bw[node] = bw;
+    }
+
+    /// Earliest time the shared uplink is free (max live booking).
+    fn uplink_free_at(&self) -> f64 {
+        self.uplink_bookings.iter().map(|&(_, f)| f).fold(0.0, f64::max)
     }
 
     /// Register the link of a node that joined the cluster mid-run.
@@ -39,6 +58,7 @@ impl LinkModel {
         self.node_free_at.push(0.0);
     }
 
+    /// Number of registered node links.
     pub fn node_count(&self) -> usize {
         self.node_bw.len()
     }
@@ -49,8 +69,10 @@ impl LinkModel {
     /// link and, if capped, the registry uplink).
     pub fn delay_booking(&mut self, node: usize, extra: f64) {
         self.node_free_at[node] += extra;
-        if self.registry_uplink.is_some() {
-            self.registry_free_at += extra;
+        if let Some((_, finish)) =
+            self.uplink_bookings.iter_mut().rev().find(|(n, _)| *n == node)
+        {
+            *finish += extra;
         }
     }
 
@@ -63,9 +85,20 @@ impl LinkModel {
                 *t += extra;
             }
         }
-        if self.registry_free_at > now {
-            self.registry_free_at += extra;
+        for (_, finish) in self.uplink_bookings.iter_mut() {
+            if *finish > now {
+                *finish += extra;
+            }
         }
+    }
+
+    /// A node crashed: drop its uplink bookings, so its dead in-flight
+    /// transfer stops occupying the shared registry uplink. Transfers
+    /// already planned keep their (pessimistic) times — history is not
+    /// rewritten — but every pull planned after the crash sees the uplink
+    /// back at baseline.
+    pub fn release_node(&mut self, node: usize) {
+        self.uplink_bookings.retain(|&(n, _)| n != node);
     }
 
     /// Schedule a transfer of `bytes` to `node` starting no earlier than
@@ -73,7 +106,7 @@ impl LinkModel {
     pub fn schedule_transfer(&mut self, node: usize, bytes: Bytes, now: f64) -> (f64, f64) {
         let mut start = now.max(self.node_free_at[node]);
         if self.registry_uplink.is_some() {
-            start = start.max(self.registry_free_at);
+            start = start.max(self.uplink_free_at());
         }
         let mut secs = self.node_bw[node].transfer_secs(bytes);
         if let Some(up) = self.registry_uplink {
@@ -82,7 +115,9 @@ impl LinkModel {
         let finish = start + secs;
         self.node_free_at[node] = finish;
         if self.registry_uplink.is_some() {
-            self.registry_free_at = finish;
+            // Prune settled bookings first so the ledger stays O(in-flight).
+            self.uplink_bookings.retain(|&(_, f)| f > now);
+            self.uplink_bookings.push((node, finish));
         }
         (start, finish)
     }
@@ -135,6 +170,33 @@ mod tests {
         assert_eq!(lm.node_count(), 2);
         let (s, f) = lm.schedule_transfer(1, Bytes::from_mb(40.0), 100.0);
         assert_eq!((s, f), (100.0, 102.0));
+    }
+
+    #[test]
+    fn crash_releases_uplink_booking() {
+        // Regression (ROADMAP churn follow-on): a crashed node's in-flight
+        // transfer must release the shared registry uplink instead of
+        // leaving a phantom scalar booking other nodes queue behind.
+        let mut lm = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 2]);
+        lm.registry_uplink = Some(Bandwidth::from_mbps(10.0));
+        let (_, f0) = lm.schedule_transfer(0, Bytes::from_mb(1000.0), 0.0);
+        assert_eq!(f0, 100.0);
+        // Node 0 crashes at t=5; its transfer dies with it.
+        lm.release_node(0);
+        let (s1, f1) = lm.schedule_transfer(1, Bytes::from_mb(10.0), 5.0);
+        assert_eq!((s1, f1), (5.0, 6.0), "uplink capacity back to baseline");
+    }
+
+    #[test]
+    fn release_keeps_other_nodes_bookings() {
+        let mut lm = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 3]);
+        lm.registry_uplink = Some(Bandwidth::from_mbps(10.0));
+        lm.schedule_transfer(0, Bytes::from_mb(100.0), 0.0); // uplink to 10
+        let (_, f1) = lm.schedule_transfer(1, Bytes::from_mb(100.0), 0.0); // to 20
+        lm.release_node(0);
+        // Node 1's live transfer still occupies the uplink.
+        let (s2, _) = lm.schedule_transfer(2, Bytes::from_mb(10.0), 1.0);
+        assert_eq!(s2, f1, "surviving booking still serializes the uplink");
     }
 
     #[test]

@@ -7,10 +7,12 @@ pub struct Clock {
 }
 
 impl Clock {
+    /// A clock at t = 0.
     pub fn new() -> Clock {
         Clock { now: 0.0 }
     }
 
+    /// Current virtual time in seconds.
     pub fn now(&self) -> f64 {
         self.now
     }
@@ -23,6 +25,7 @@ impl Clock {
         }
     }
 
+    /// Advance by a non-negative delta.
     pub fn advance_by(&mut self, dt: f64) {
         assert!(dt >= 0.0, "negative advance {dt}");
         self.now += dt;

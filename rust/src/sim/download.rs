@@ -13,8 +13,9 @@ use std::collections::HashMap;
 pub struct PullPlan {
     /// Bytes this pull actually transfers (new layers only).
     pub bytes: Bytes,
-    /// Transfer start/finish for the new layers (equal when bytes = 0).
+    /// Transfer start for the new layers.
     pub start: f64,
+    /// Transfer finish (equal to `start` when bytes = 0).
     pub finish: f64,
     /// When *all* required layers are present (waits on other pods'
     /// in-flight pulls too) — the container can start at `ready_at`.
@@ -30,6 +31,7 @@ pub struct PullManager {
 }
 
 impl PullManager {
+    /// A manager for an `n_nodes` fleet with nothing in flight.
     pub fn new(n_nodes: usize) -> PullManager {
         PullManager { in_flight: vec![HashMap::new(); n_nodes] }
     }
@@ -107,6 +109,7 @@ impl PullManager {
         }
     }
 
+    /// Layers currently in flight to `node`.
     pub fn in_flight_count(&self, node: usize) -> usize {
         self.in_flight[node].len()
     }

@@ -53,6 +53,7 @@ pub enum SchedulerChoice {
 }
 
 impl SchedulerChoice {
+    /// Human-readable scheduler name (report/CLI output).
     pub fn label(&self) -> &'static str {
         match self {
             SchedulerChoice::Default => "Default",
@@ -62,6 +63,7 @@ impl SchedulerChoice {
         }
     }
 
+    /// The paper's three-way comparison set (Default/Layer/LR).
     pub fn all() -> [SchedulerChoice; 3] {
         [SchedulerChoice::Default, SchedulerChoice::Layer, SchedulerChoice::LR]
     }
@@ -70,8 +72,11 @@ impl SchedulerChoice {
 /// Simulation configuration.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
+    /// Which scheduler drives the simulation.
     pub scheduler: SchedulerChoice,
+    /// Dynamic-weight parameters for the LR scheduler.
     pub params: WeightParams,
+    /// Plugin-profile configuration for the scheduling framework.
     pub framework: FrameworkConfig,
     /// Override every node's bandwidth (Fig. 4 sweeps this).
     pub bandwidth_mbps: Option<f64>,
@@ -155,8 +160,11 @@ enum PodOutcome {
 /// Aggregated outcome of a simulation run.
 #[derive(Debug, Clone)]
 pub struct SimReport {
+    /// Label of the scheduler that ran.
     pub scheduler: &'static str,
+    /// One record per successful placement, in bind order.
     pub records: Vec<PodRecord>,
+    /// Periodic cluster snapshots plus the final one.
     pub snapshots: Vec<ClusterSnapshot>,
     /// Pods submitted to the API server (crash resubmissions of the same
     /// pod do not re-count).
@@ -181,25 +189,34 @@ pub struct SimReport {
     /// Parked pods released early by capacity-driven wake-ups
     /// (`QueueingHint` analog) instead of their back-off timer.
     pub wakeups: u64,
+    /// Nodes that joined mid-run.
     pub nodes_joined: usize,
+    /// Nodes cordoned mid-run.
     pub nodes_drained: usize,
+    /// Nodes crashed mid-run.
     pub nodes_crashed: usize,
+    /// Decisions taken at ω₁ (low weight).
     pub omega1_used: u64,
+    /// Decisions taken at ω₂ (high weight).
     pub omega2_used: u64,
     /// Decisions taken at a mid-range ω (ThreeLevel / Linear policies).
     pub omega_mid_used: u64,
+    /// ω chosen per decision, in bind order (Fig. 3f).
     pub omega_trace: Vec<f64>,
 }
 
 impl SimReport {
+    /// Total WAN bytes pulled across all placements (the paper's cost).
     pub fn total_download(&self) -> Bytes {
         self.records.iter().map(|r| r.download).sum()
     }
 
+    /// Sum of per-placement download times (Table I's time column).
     pub fn total_download_secs(&self) -> f64 {
         self.records.iter().map(|r| r.download_secs).sum()
     }
 
+    /// Cluster STD at the end of the run (last snapshot).
     pub fn final_std(&self) -> f64 {
         self.snapshots.last().map(|s| s.std_score).unwrap_or(0.0)
     }
@@ -267,10 +284,14 @@ fn unique_cache_path() -> String {
 
 /// The simulator.
 pub struct Simulation {
+    /// Cluster state (nodes, pods, bindings, layer inventory).
     pub state: ClusterState,
+    /// The registry serving image metadata and layers.
     pub registry: Registry,
+    /// Watcher-maintained metadata cache the scheduler reads.
     pub cache: MetadataCache,
     watcher: Watcher,
+    /// Virtual clock.
     pub clock: Clock,
     links: LinkModel,
     pulls: PullManager,
@@ -306,21 +327,34 @@ pub struct Simulation {
     chained: std::collections::HashSet<PodId>,
     /// Registry unreachable until this virtual time (0 = reachable).
     outage_until: f64,
+    /// Audit log of everything that happened.
     pub events: EventLog,
+    /// Placement records (mirrored into the report).
     pub records: Vec<PodRecord>,
+    /// Cluster snapshots (mirrored into the report).
     pub snapshots: Vec<ClusterSnapshot>,
+    /// Pods submitted so far (crash resubmissions don't re-count).
     pub submitted: usize,
+    /// Scheduling-cycle failures that parked a pod.
     pub retries: u64,
+    /// Pod instances returned to the queue by node crashes.
     pub resubmitted: u64,
+    /// In-flight pulls stalled by registry outages.
     pub pulls_stalled: u64,
+    /// Parked pods released early by capacity wake-ups.
     pub wakeups: u64,
+    /// Nodes that joined mid-run.
     pub nodes_joined: usize,
+    /// Nodes cordoned mid-run.
     pub nodes_drained: usize,
+    /// Nodes crashed mid-run.
     pub nodes_crashed: usize,
     cfg: SimConfig,
 }
 
 impl Simulation {
+    /// Build a simulation over `nodes` and `registry` (applies the
+    /// config's bandwidth override and uplink cap to the link model).
     pub fn new(nodes: Vec<Node>, registry: Registry, cfg: SimConfig) -> Simulation {
         let mut state = ClusterState::new();
         let mut bws = Vec::new();
@@ -554,11 +588,11 @@ impl Simulation {
         }
         let lost = self.state.crash_node(node);
         self.nodes_crashed += 1;
-        // Known approximation: with a shared `registry_uplink` cap, the
-        // dead node's in-flight transfer keeps its scalar booking on the
-        // uplink (the link model tracks only free-at times, not per-
-        // transfer provenance), so other nodes' pulls may queue behind a
-        // phantom transfer until its original finish. See ROADMAP.
+        // The dead node's in-flight transfer releases the shared registry
+        // uplink (per-transfer bookings in `LinkModel`), so other nodes'
+        // pulls planned after the crash see uplink capacity at baseline
+        // instead of queuing behind a phantom transfer.
+        self.links.release_node(node.0 as usize);
         self.pulls.clear_node(node.0 as usize);
         self.events
             .record(t, NODE_SCOPE, EventKind::NodeCrashed { node, lost_pods: lost.len() });
@@ -953,6 +987,28 @@ impl Simulation {
                 }
             }
         }
+        self.drain_and_report()
+    }
+
+    /// Replay explicit `(arrival-offset, pod)` pairs — the trace-replay
+    /// entry point ([`crate::sim::trace`]): each pod arrives at
+    /// `now + offset`, preserving a real trace's burstiness instead of the
+    /// fixed `inter_arrival_secs` cadence. Offsets must be finite;
+    /// negative offsets clamp to the current time.
+    pub fn run_arrivals(&mut self, arrivals: Vec<(f64, Pod)>) -> SimReport {
+        let t0 = self.clock.now();
+        self.arm_watcher(t0);
+        self.inject_churn_trace(t0);
+        for (offset, pod) in arrivals {
+            self.queue.push(t0 + offset.max(0.0), EventPayload::Arrival { pod });
+        }
+        self.drain_and_report()
+    }
+
+    /// Run the event loop to quiescence, take the final snapshot, and
+    /// build the report (shared tail of [`Simulation::run_trace`] and
+    /// [`Simulation::run_arrivals`]).
+    fn drain_and_report(&mut self) -> SimReport {
         self.run_events();
         // Final snapshot so end-of-run metrics (final_std, disk usage) see
         // the fully drained state — terminations included.
@@ -960,6 +1016,8 @@ impl Simulation {
         self.report()
     }
 
+    /// Aggregate the current outcome tallies, records, and snapshots into
+    /// a [`SimReport`] (also the tail of every `run_*` entry point).
     pub fn report(&self) -> SimReport {
         let (w1, w2, wmid, trace) = match &self.scheduler {
             SchedImpl::Lr(s) => (
@@ -1391,6 +1449,63 @@ mod tests {
             "wake-up bound at {woken}, later than fixed back-off at {timed}"
         );
         assert!(woken < timed, "with a 7s back-off the wake-up must win outright");
+    }
+
+    #[test]
+    fn crashed_nodes_inflight_transfer_releases_uplink() {
+        // Regression (ROADMAP churn follow-on): node 0 crashes mid-pull on
+        // a capped shared registry uplink. Its resubmitted pod re-pulls on
+        // node 1 and must start that transfer at crash time — not behind
+        // the dead node's phantom uplink booking.
+        let reg = Registry::with_corpus();
+        let mut b = crate::cluster::PodBuilder::new();
+        // wordpress:6.4 is 243 MB ⇒ 243 s on a 1 MB/s uplink.
+        let pod = b.build("wordpress:6.4", Resources::cores_gb(0.5, 0.5));
+        let mut cfg = SimConfig::default();
+        cfg.registry_uplink_mbps = Some(1.0);
+        let mut sim = Simulation::new(nodes(2), reg, cfg);
+        sim.inject_event(50.0, EventPayload::NodeCrash { node: NodeId(0) });
+        let report = sim.run_trace(vec![pod]);
+
+        assert_eq!(report.nodes_crashed, 1);
+        assert_eq!(report.resubmitted, 1);
+        assert_eq!(report.completed(), 1);
+        assert!(report.accounting_balanced());
+        let started_at = sim
+            .events
+            .all()
+            .iter()
+            .find(|e| matches!(e.kind, EventKind::Started { .. }))
+            .map(|e| e.at)
+            .expect("pod started");
+        // Crash at 50 + full 243 s re-pull = 293; the pre-fix phantom
+        // booking would push the restart to t=243 (finish 486).
+        assert!(
+            (started_at - 293.0).abs() < 1e-6,
+            "re-pull queued behind a phantom uplink booking: started at {started_at}"
+        );
+        sim.state.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn run_arrivals_replays_explicit_offsets() {
+        let reg = Registry::with_corpus();
+        let mut b = crate::cluster::PodBuilder::new();
+        let arrivals = vec![
+            (0.0, b.build("redis:7.2", Resources::cores_gb(0.5, 0.5))),
+            (0.0, b.build("redis:7.2", Resources::cores_gb(0.5, 0.5))),
+            (7.5, b.build("nginx:1.25", Resources::cores_gb(0.5, 0.5)).with_duration(30.0)),
+        ];
+        let mut sim = Simulation::new(nodes(3), reg, SimConfig::default());
+        let report = sim.run_arrivals(arrivals);
+        assert_eq!(report.submitted, 3);
+        assert_eq!(report.deployed(), 3);
+        assert!(report.accounting_balanced());
+        // Bursty arrivals land at their trace offsets, not a fixed cadence.
+        assert_eq!(report.records[0].at, 0.0);
+        assert_eq!(report.records[1].at, 0.0);
+        assert_eq!(report.records[2].at, 7.5);
+        sim.state.check_invariants().unwrap();
     }
 
     #[test]

@@ -11,27 +11,17 @@
 //!
 //! Ordering is total and deterministic:
 //! 1. ascending timestamp,
-//! 2. at equal timestamps, ascending *class* per the table below —
-//!    capacity restoration (outage end, node join) lands before the pod
-//!    lifecycle it could unblock, capacity loss (drain, crash, outage
-//!    start) after it, and scheduling attempts (back-off releases,
-//!    arrivals) last, so a same-instant retry sees the fully updated
-//!    cluster,
+//! 2. at equal timestamps, ascending *class* — capacity restoration
+//!    (outage end, node join) lands before the pod lifecycle it could
+//!    unblock, capacity loss (drain, crash, outage start) after it, and
+//!    scheduling attempts (back-off releases, arrivals) last, so a
+//!    same-instant retry sees the fully updated cluster,
 //! 3. at equal (timestamp, class), FIFO by insertion sequence.
 //!
-//! | class | payload              | effect at equal timestamps            |
-//! |-------|----------------------|---------------------------------------|
-//! |   0   | `WatcherTick`        | metadata refresh first (API watcher)  |
-//! |   1   | `RegistryOutageEnd`  | connectivity back before pulls land   |
-//! |   2   | `NodeJoin`           | new capacity visible to this instant  |
-//! |   3   | `PullComplete`       | layer installs / container starts     |
-//! |   4   | `PodTermination`     | resources release (wake-up source)    |
-//! |   5   | `NodeDrain`          | cordon after in-flight starts settle  |
-//! |   6   | `NodeCrash`          | pod loss + resubmission               |
-//! |   7   | `RegistryOutageStart`| stalls pulls queued later this instant|
-//! |   8   | `GcSweep`            | disk pressure relief                  |
-//! |   9   | `BackoffRelease`     | retries see the updated cluster       |
-//! |  10   | `Arrival`            | new pods schedule last                |
+//! The canonical 11-class table lives in `docs/ARCHITECTURE.md`
+//! ("Same-timestamp ordering"); the private `EventPayload::class`
+//! method is its implementation, and `equal_times_order_by_class` in
+//! this module's tests pins every row.
 
 use crate::cluster::{NodeId, Pod, PodId};
 use std::cmp::Ordering;
@@ -49,25 +39,45 @@ pub enum EventPayload {
     /// wake-up source.
     NodeJoin,
     /// All layers for `pod`'s image are present on its node.
-    PullComplete { pod: PodId },
+    PullComplete {
+        /// The pod whose pull finished.
+        pod: PodId,
+    },
     /// A finite-duration pod's run ends; its resources release. `epoch`
     /// guards against stale terminations after a crash resubmitted the pod
     /// (a rebound pod's old timer must not kill the new instance).
-    PodTermination { pod: PodId, epoch: u64 },
+    PodTermination {
+        /// The terminating pod.
+        pod: PodId,
+        /// Instance epoch this timer belongs to.
+        epoch: u64,
+    },
     /// A node is cordoned: running pods finish, no new bindings.
-    NodeDrain { node: NodeId },
+    NodeDrain {
+        /// The node to cordon.
+        node: NodeId,
+    },
     /// A node crashes: its running/pulling pods resubmit to the
     /// scheduling queue (without counting against the retry limit).
-    NodeCrash { node: NodeId },
+    NodeCrash {
+        /// The node that crashes.
+        node: NodeId,
+    },
     /// The registry becomes unreachable until `until`: watcher polls fail
     /// (last good cache kept) and in-flight WAN pulls stall.
-    RegistryOutageStart { until: f64 },
+    RegistryOutageStart {
+        /// Absolute end of the outage window.
+        until: f64,
+    },
     /// Kubelet image-GC pressure sweep across all nodes.
     GcSweep,
     /// Scheduling-queue back-off expiry: parked pods become schedulable.
     BackoffRelease,
     /// A pod is submitted to the API server.
-    Arrival { pod: Pod },
+    Arrival {
+        /// The arriving pod spec.
+        pod: Pod,
+    },
 }
 
 impl EventPayload {
@@ -88,6 +98,7 @@ impl EventPayload {
         }
     }
 
+    /// Is this a recurring watcher tick (not "real" pending work)?
     pub fn is_watcher(&self) -> bool {
         matches!(self, EventPayload::WatcherTick)
     }
@@ -97,9 +108,11 @@ impl EventPayload {
 /// construction (`EventQueue::push` rejects non-finite times).
 #[derive(Debug)]
 pub struct QueuedEvent {
+    /// Absolute virtual time the event fires.
     pub at: f64,
     class: u8,
     seq: u64,
+    /// What happens when it fires.
     pub payload: EventPayload,
 }
 
@@ -141,6 +154,7 @@ pub struct EventQueue {
 }
 
 impl EventQueue {
+    /// An empty queue.
     pub fn new() -> EventQueue {
         EventQueue::default()
     }
@@ -176,10 +190,12 @@ impl EventQueue {
         self.non_watcher > 0
     }
 
+    /// Events currently queued.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// Is the queue empty?
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

@@ -15,10 +15,15 @@ use std::collections::HashMap;
 /// A pod whose layers are being pulled; the container starts at `ready_at`.
 #[derive(Debug, Clone)]
 pub struct PendingStart {
+    /// The pod being started.
     pub pod: PodId,
+    /// Node it is bound to.
     pub node: NodeId,
+    /// Image being pulled.
     pub image: ImageRef,
+    /// Full layer set the image requires.
     pub layers: LayerSet,
+    /// Transfer plan for the missing layers.
     pub plan: PullPlan,
     /// Bytes pulled from the registry over the WAN (the paper's cost).
     pub wan_bytes: Bytes,
@@ -38,6 +43,7 @@ pub struct ImageLayerStore {
 }
 
 impl ImageLayerStore {
+    /// An empty store.
     pub fn new() -> ImageLayerStore {
         ImageLayerStore::default()
     }
@@ -47,14 +53,17 @@ impl ImageLayerStore {
         self.map.insert(image.key(), layers.clone());
     }
 
+    /// Layer set of a remembered image.
     pub fn layers(&self, image: &ImageRef) -> Option<&LayerSet> {
         self.map.get(&image.key())
     }
 
+    /// Remembered images.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Is the store empty?
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }

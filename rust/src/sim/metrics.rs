@@ -10,8 +10,11 @@ use crate::util::units::Bytes;
 /// One per-pod deployment record — a row of Table I.
 #[derive(Debug, Clone)]
 pub struct PodRecord {
+    /// The deployed pod.
     pub pod: PodId,
+    /// Image key (`name:tag`).
     pub image: String,
+    /// Name of the node it bound to.
     pub node: String,
     /// Bytes pulled from the registry over the WAN for this pod (Eq. 1;
     /// with P2P sharing enabled, peer-served layers are excluded).
@@ -35,6 +38,7 @@ pub struct PodRecord {
 /// Cluster-wide usage snapshot — a point of Fig. 3a–c.
 #[derive(Debug, Clone)]
 pub struct ClusterSnapshot {
+    /// Virtual time of the snapshot.
     pub at: f64,
     /// Mean CPU utilisation across nodes (fraction).
     pub cpu_util: f64,

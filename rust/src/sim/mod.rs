@@ -1,8 +1,9 @@
 //! Discrete-event edge-cluster simulator: virtual clock, per-node link
 //! model, layer-pull dedup, kubelet lifecycle (pull → install → start,
-//! optional image GC), workload generation, and metrics collection.
-//! `engine::Simulation` is the API-server facade that glues the scheduler
-//! to all of it.
+//! optional image GC), workload generation, real-trace replay
+//! ([`trace`]), and metrics collection. `engine::Simulation` is the
+//! API-server facade that glues the scheduler to all of it. See
+//! `docs/ARCHITECTURE.md` for the event lifecycle and ordering contract.
 
 pub mod bandwidth;
 pub mod clock;
@@ -12,6 +13,7 @@ pub mod events;
 pub mod kubelet;
 pub mod metrics;
 pub mod p2p;
+pub mod trace;
 pub mod workload;
 
 pub use bandwidth::LinkModel;
@@ -20,6 +22,7 @@ pub use download::PullManager;
 pub use engine::{SchedulerChoice, SimConfig, SimReport, Simulation};
 pub use events::{EventPayload, EventQueue};
 pub use metrics::{ClusterSnapshot, PodRecord};
+pub use trace::{ErrorMode, Trace, TraceError, TraceEvent, TraceFormat, TraceOptions, TraceStats};
 pub use workload::{
     ChurnAction, ChurnConfig, ChurnEvent, ChurnModel, Popularity, WorkloadConfig, WorkloadGen,
 };

@@ -17,9 +17,11 @@ use crate::util::units::Bytes;
 pub struct SourcePlan {
     /// Layers only the registry can serve (WAN).
     pub registry_layers: Vec<LayerId>,
+    /// Total bytes of the registry-served layers.
     pub registry_bytes: Bytes,
     /// Layers available from a peer edge node (LAN), with the peer chosen.
     pub peer_layers: Vec<(LayerId, NodeId)>,
+    /// Total bytes served by peers.
     pub peer_bytes: Bytes,
 }
 

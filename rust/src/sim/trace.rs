@@ -1,0 +1,931 @@
+//! Real-trace replay: import public cluster traces and replay them through
+//! the event engine instead of the synthetic Zipf workload.
+//!
+//! The paper validates LRScheduler on a real system; related work (e.g.
+//! TD3-Sched, the joint task-scheduling/image-caching line) grounds its
+//! evaluation on measured cluster traces. This module closes that gap for
+//! the `scale` harness with a three-stage pipeline:
+//!
+//! 1. **Parse** — a streaming, line-by-line CSV importer (no full-file
+//!    buffering, so multi-million-row traces replay in bounded memory)
+//!    converts each row into the format-agnostic [`TraceEvent`]
+//!    intermediate representation. Two concrete formats are supported:
+//!    Alibaba cluster-trace `batch_task`-style CSV ([`TraceFormat::Alibaba`])
+//!    and Azure packing-trace-style CSV ([`TraceFormat::Azure`]).
+//! 2. **Synthesize** — public traces name tasks/VM types but carry no image
+//!    manifests, so [`Trace::synthesize_registry`] deterministically hashes
+//!    each app key into a layer stack (shared OS base + shared runtime
+//!    layers + unique app layers). Equal app keys always map to the same
+//!    image, so the trace's app-popularity skew becomes image-popularity
+//!    skew — exactly the signal layer-aware scheduling exploits.
+//! 3. **Replay** — [`Trace::arrivals`] builds `(arrival-offset, Pod)` pairs
+//!    that [`crate::sim::Simulation::run_arrivals`] pushes into the event
+//!    queue, preserving the trace's burstiness and heavy-tailed lifetimes.
+//!    [`TraceOptions::speedup`] compresses virtual time and
+//!    [`TraceOptions::limit`] truncates the trace so runs stay bounded.
+//!
+//! Malformed input is handled per [`ErrorMode`]: `Strict` rejects the first
+//! bad row (with its line number), `Lenient` skips bad rows, drops
+//! duplicate task ids, and re-sorts out-of-order timestamps — every repair
+//! is counted in [`TraceStats`], never silent.
+//!
+//! See `docs/ARCHITECTURE.md` ("Trace replay") for the pipeline diagram and
+//! `docs/SCALE.md` for copy-pasteable CLI runs against the bundled
+//! fixtures under `rust/tests/fixtures/`.
+
+use crate::cluster::{Pod, PodBuilder, Resources};
+use crate::registry::hub::digest_for;
+use crate::registry::{ImageMetadata, LayerMetadata, Registry};
+use crate::util::rng::Pcg;
+use crate::util::units::{Bytes, MilliCpu};
+use std::collections::{BTreeSet, HashSet};
+use std::fmt;
+use std::io::BufRead;
+use std::path::Path;
+
+/// Reference edge-node shape used to de-normalize trace resource columns
+/// (Alibaba `plan_cpu`/`plan_mem` are percentages of a machine; Azure
+/// packing `core`/`memory` are fractions of a server). Matches the
+/// `scale` fleet built by `exp::common::scale_nodes`: 4 cores / 8 GB.
+pub const REF_NODE_CORES: f64 = 4.0;
+/// Reference node memory in GB (see [`REF_NODE_CORES`]).
+pub const REF_NODE_MEM_GB: f64 = 8.0;
+
+/// Floor for de-normalized CPU requests: traces contain near-zero plans,
+/// and a zero-request pod would trivially fit everywhere, hiding the
+/// packing problem the replay is meant to exercise.
+const MIN_CPU_MILLI: u64 = 10;
+/// Floor for de-normalized memory requests (see [`MIN_CPU_MILLI`]).
+const MIN_MEM_BYTES: u64 = 16_000_000;
+
+const SECS_PER_DAY: f64 = 86_400.0;
+
+/// Which on-disk trace dialect to parse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// Alibaba cluster-trace `batch_task.csv` dialect: headerless rows of
+    /// `task_name,instance_num,job_name,task_type,status,start_time,`
+    /// `end_time,plan_cpu,plan_mem` with times in seconds, `plan_cpu` in
+    /// percent-of-core units (100 = 1 core) and `plan_mem` in percent of
+    /// a machine's memory ([`REF_NODE_MEM_GB`]). Each row expands into
+    /// `instance_num` pods. The app key is `task_name` (recurring DAG
+    /// node names carry the popularity skew).
+    Alibaba,
+    /// Azure packing-trace dialect: a header line naming at least
+    /// `vmid,starttime,endtime,core,memory` (an `appname`/`vmtypeid`/
+    /// `tenantid` column, in that priority order, provides the app key),
+    /// times in fractional days, and `core`/`memory` as fractions of a
+    /// server ([`REF_NODE_CORES`]/[`REF_NODE_MEM_GB`]).
+    Azure,
+}
+
+impl TraceFormat {
+    /// Parse a CLI-style format name (`alibaba` | `azure`).
+    pub fn parse(s: &str) -> Option<TraceFormat> {
+        match s {
+            "alibaba" => Some(TraceFormat::Alibaba),
+            "azure" => Some(TraceFormat::Azure),
+            _ => None,
+        }
+    }
+
+    /// CLI-facing name of the format.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceFormat::Alibaba => "alibaba",
+            TraceFormat::Azure => "azure",
+        }
+    }
+}
+
+/// How parse problems are handled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorMode {
+    /// Fail on the first malformed row, duplicate task id, or
+    /// out-of-order timestamp — with the offending line number.
+    Strict,
+    /// Skip malformed rows and duplicate task ids, and re-sort
+    /// out-of-order timestamps; every repair is counted in
+    /// [`TraceStats`].
+    Lenient,
+}
+
+/// Importer configuration.
+#[derive(Debug, Clone)]
+pub struct TraceOptions {
+    /// Trace dialect to parse.
+    pub format: TraceFormat,
+    /// Strict vs lenient error handling.
+    pub mode: ErrorMode,
+    /// Virtual-time compression: arrival offsets *and* task durations are
+    /// divided by this factor (> 1 makes week-long traces replayable in
+    /// bounded virtual time while preserving the workload's shape).
+    pub speedup: f64,
+    /// Stop after this many parsed events (None = whole trace). The
+    /// limit truncates in *file order* while streaming — before any
+    /// lenient re-sort — so on an out-of-order trace the kept window is
+    /// the first N events of the file, not the N earliest timestamps
+    /// (the trade keeps multi-million-row imports one bounded pass).
+    pub limit: Option<usize>,
+    /// Seed for the deterministic layer-composition synthesis.
+    pub seed: u64,
+}
+
+impl Default for TraceOptions {
+    fn default() -> TraceOptions {
+        TraceOptions {
+            format: TraceFormat::Alibaba,
+            mode: ErrorMode::Lenient,
+            speedup: 1.0,
+            limit: None,
+            seed: 42,
+        }
+    }
+}
+
+/// Format-agnostic intermediate representation of one task/VM in a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// 1-based source line this event was parsed from.
+    pub line: usize,
+    /// Arrival offset in seconds from trace start (normalized so the
+    /// earliest event is at 0, then divided by [`TraceOptions::speedup`]).
+    pub submit_at: f64,
+    /// Unique task instance id (duplicate detection key before instance
+    /// expansion; unique per emitted event afterwards).
+    pub task_id: String,
+    /// Image identity / layer-synthesis key. Equal keys replay as the
+    /// same image, preserving the trace's app-popularity skew.
+    pub app: String,
+    /// De-normalized CPU request in millicores.
+    pub cpu_milli: u64,
+    /// De-normalized memory request in bytes.
+    pub mem_bytes: u64,
+    /// Task lifetime in (speedup-scaled) seconds; None = runs forever
+    /// (the trace row had no end time — a service, or a task still
+    /// running when the trace window closed).
+    pub duration_secs: Option<f64>,
+}
+
+/// What went wrong while importing a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceError {
+    /// I/O failure reading the trace.
+    Io(String),
+    /// A row could not be parsed (strict mode only; lenient skips).
+    Malformed {
+        /// 1-based line number of the offending row.
+        line: usize,
+        /// Human-readable parse failure.
+        reason: String,
+    },
+    /// Timestamps went backwards (strict mode only; lenient re-sorts).
+    OutOfOrder {
+        /// 1-based line number of the first row that went back in time.
+        line: usize,
+    },
+    /// The same task id appeared twice (strict mode only; lenient drops
+    /// the later occurrence).
+    DuplicateTask {
+        /// 1-based line number of the second occurrence.
+        line: usize,
+        /// The duplicated task id.
+        task: String,
+    },
+    /// The trace contained no usable rows.
+    Empty,
+}
+
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceError::Io(e) => write!(f, "trace I/O error: {e}"),
+            TraceError::Malformed { line, reason } => {
+                write!(f, "trace line {line}: {reason}")
+            }
+            TraceError::OutOfOrder { line } => {
+                write!(f, "trace line {line}: timestamp out of order (strict mode)")
+            }
+            TraceError::DuplicateTask { line, task } => {
+                write!(f, "trace line {line}: duplicate task id {task:?} (strict mode)")
+            }
+            TraceError::Empty => write!(f, "trace contained no usable rows"),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// Importer bookkeeping: what was parsed, what was repaired, what was
+/// dropped. Lenient-mode repairs are visible here, never silent.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceStats {
+    /// Data rows seen (excluding blank/comment/header lines).
+    pub rows: usize,
+    /// Events emitted (after instance expansion and `limit` truncation).
+    pub events: usize,
+    /// Malformed rows skipped (lenient mode).
+    pub skipped: usize,
+    /// Duplicate task ids dropped (lenient mode).
+    pub duplicates: usize,
+    /// Whether out-of-order timestamps were re-sorted (lenient mode).
+    pub resorted: bool,
+    /// Replayed span in (speedup-scaled) seconds: offset of the last
+    /// arrival.
+    pub span_secs: f64,
+    /// Distinct app keys (= synthesized images).
+    pub apps: usize,
+}
+
+/// A parsed trace, ready to synthesize a registry and build arrivals.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Normalized events, sorted by `submit_at`.
+    pub events: Vec<TraceEvent>,
+    /// Importer bookkeeping.
+    pub stats: TraceStats,
+    /// Layer-synthesis seed carried from [`TraceOptions::seed`].
+    seed: u64,
+}
+
+/// One raw row before normalization (absolute trace timestamps).
+struct RawRow {
+    task_id: String,
+    app: String,
+    start: f64,
+    /// Absolute end time; None = no end recorded.
+    end: Option<f64>,
+    cpu_milli: u64,
+    mem_bytes: u64,
+    /// Pods to expand this row into (Alibaba `instance_num`).
+    instances: u64,
+}
+
+/// Parse a trace file from `path`.
+pub fn load(path: &Path, opts: &TraceOptions) -> Result<Trace, TraceError> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| TraceError::Io(format!("{}: {e}", path.display())))?;
+    parse_reader(std::io::BufReader::new(file), opts)
+}
+
+/// Parse a trace from any buffered reader, line by line (no full-file
+/// buffering). Blank lines and `#`-comments are skipped in both modes; a
+/// literal `task_name…` header on an Alibaba trace is tolerated.
+pub fn parse_reader<R: BufRead>(reader: R, opts: &TraceOptions) -> Result<Trace, TraceError> {
+    assert!(opts.speedup > 0.0, "trace speedup must be positive");
+    let mut stats = TraceStats::default();
+    let mut events: Vec<TraceEvent> = Vec::new();
+    let mut seen_tasks: HashSet<String> = HashSet::new();
+    // Azure column map, built from the header line.
+    let mut azure_cols: Option<AzureCols> = None;
+    let limit = opts.limit.unwrap_or(usize::MAX);
+
+    'lines: for (idx, line) in reader.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = line.map_err(|e| TraceError::Io(e.to_string()))?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        match opts.format {
+            TraceFormat::Alibaba => {
+                // Tolerate a header on the first data line (the real
+                // trace has none; comment/blank lines may precede it).
+                // Matching the first two header column names keeps a
+                // task literally named `task_name…` from false-matching.
+                if stats.rows == 0 && trimmed.starts_with("task_name,instance_num") {
+                    continue;
+                }
+            }
+            TraceFormat::Azure => {
+                if azure_cols.is_none() {
+                    azure_cols = Some(AzureCols::from_header(trimmed, lineno)?);
+                    continue;
+                }
+            }
+        }
+        stats.rows += 1;
+        let parsed = match opts.format {
+            TraceFormat::Alibaba => parse_alibaba_row(trimmed),
+            TraceFormat::Azure => {
+                parse_azure_row(trimmed, azure_cols.as_ref().expect("header parsed"))
+            }
+        };
+        let row = match parsed {
+            Ok(row) => row,
+            Err(reason) => match opts.mode {
+                ErrorMode::Strict => {
+                    return Err(TraceError::Malformed { line: lineno, reason })
+                }
+                ErrorMode::Lenient => {
+                    stats.skipped += 1;
+                    continue;
+                }
+            },
+        };
+        if !seen_tasks.insert(row.task_id.clone()) {
+            match opts.mode {
+                ErrorMode::Strict => {
+                    return Err(TraceError::DuplicateTask { line: lineno, task: row.task_id })
+                }
+                ErrorMode::Lenient => {
+                    stats.duplicates += 1;
+                    continue;
+                }
+            }
+        }
+        for k in 0..row.instances {
+            if events.len() >= limit {
+                break 'lines;
+            }
+            let task_id = if row.instances == 1 {
+                row.task_id.clone()
+            } else {
+                format!("{}#{k}", row.task_id)
+            };
+            events.push(TraceEvent {
+                line: lineno,
+                submit_at: row.start, // absolute; normalized below
+                task_id,
+                app: row.app.clone(),
+                cpu_milli: row.cpu_milli,
+                mem_bytes: row.mem_bytes,
+                duration_secs: row.end.map(|e| e - row.start),
+            });
+        }
+    }
+
+    if events.is_empty() {
+        return Err(TraceError::Empty);
+    }
+
+    // Order check on the raw timestamps (the trace's own order).
+    let ooo_line =
+        events.windows(2).find(|w| w[1].submit_at < w[0].submit_at).map(|w| w[1].line);
+    if let Some(line) = ooo_line {
+        match opts.mode {
+            ErrorMode::Strict => return Err(TraceError::OutOfOrder { line }),
+            ErrorMode::Lenient => {
+                stats.resorted = true;
+                // Stable: equal timestamps keep the trace's row order.
+                events.sort_by(|a, b| a.submit_at.partial_cmp(&b.submit_at).unwrap());
+            }
+        }
+    }
+
+    // Normalize: earliest arrival at t=0, then compress by `speedup`.
+    let t0 = events[0].submit_at;
+    for ev in &mut events {
+        ev.submit_at = (ev.submit_at - t0) / opts.speedup;
+        if let Some(d) = &mut ev.duration_secs {
+            *d /= opts.speedup;
+        }
+    }
+
+    stats.events = events.len();
+    stats.span_secs = events.last().map(|e| e.submit_at).unwrap_or(0.0);
+    stats.apps = events.iter().map(|e| e.app.as_str()).collect::<BTreeSet<_>>().len();
+    Ok(Trace { events, stats, seed: opts.seed })
+}
+
+/// Split and validate one headerless Alibaba `batch_task` row.
+fn parse_alibaba_row(line: &str) -> Result<RawRow, String> {
+    let cols: Vec<&str> = line.split(',').map(|c| c.trim()).collect();
+    if cols.len() < 9 {
+        return Err(format!("expected 9 columns, found {}", cols.len()));
+    }
+    let task_name = cols[0];
+    let job_name = cols[2];
+    if task_name.is_empty() {
+        return Err("empty task_name".to_string());
+    }
+    let instances = match cols[1] {
+        "" => 1,
+        s => s.parse::<u64>().map_err(|_| format!("bad instance_num {s:?}"))?,
+    };
+    if instances == 0 {
+        // A zero-instance row would vanish silently from the replay;
+        // surface it as malformed (strict rejects, lenient counts it).
+        return Err("instance_num is 0".to_string());
+    }
+    let start = parse_f64(cols[5], "start_time")?;
+    let end = match cols[6] {
+        "" => None,
+        s => Some(parse_f64(s, "end_time")?),
+    };
+    if let Some(e) = end {
+        if e < start {
+            return Err(format!("end_time {e} before start_time {start}"));
+        }
+    }
+    // plan_cpu: 100 = 1 core → ×10 millicores.
+    let plan_cpu = parse_f64(cols[7], "plan_cpu")?;
+    // plan_mem: percent of the reference machine's memory.
+    let plan_mem = parse_f64(cols[8], "plan_mem")?;
+    if plan_cpu < 0.0 || plan_mem < 0.0 {
+        return Err("negative resource plan".to_string());
+    }
+    Ok(RawRow {
+        task_id: format!("{task_name}@{job_name}"),
+        app: task_name.to_string(),
+        start,
+        end,
+        cpu_milli: ((plan_cpu * 10.0).round() as u64).max(MIN_CPU_MILLI),
+        mem_bytes: ((plan_mem / 100.0 * REF_NODE_MEM_GB * 1e9).round() as u64)
+            .max(MIN_MEM_BYTES),
+        instances,
+    })
+}
+
+/// Column indices resolved from an Azure-style header line.
+struct AzureCols {
+    /// Header width: data rows with fewer columns are malformed (a
+    /// truncated row must not silently pass as "no end time").
+    width: usize,
+    id: usize,
+    /// App-key column (`appname` > `vmtypeid` > `tenantid`); falls back
+    /// to the id column when absent.
+    app: usize,
+    start: usize,
+    end: Option<usize>,
+    cpu: usize,
+    mem: usize,
+}
+
+impl AzureCols {
+    fn from_header(header: &str, lineno: usize) -> Result<AzureCols, TraceError> {
+        let names: Vec<String> =
+            header.split(',').map(|c| c.trim().to_ascii_lowercase()).collect();
+        let find = |cands: &[&str]| cands.iter().find_map(|c| names.iter().position(|n| n == c));
+        let missing = |what: &str| TraceError::Malformed {
+            line: lineno,
+            reason: format!("azure header missing a {what} column (got {header:?})"),
+        };
+        let id = find(&["vmid", "id"]).ok_or_else(|| missing("vmid"))?;
+        let start = find(&["starttime", "start"]).ok_or_else(|| missing("starttime"))?;
+        let cpu = find(&["core", "cores", "vcpus"]).ok_or_else(|| missing("core"))?;
+        let mem = find(&["memory", "mem"]).ok_or_else(|| missing("memory"))?;
+        let app = find(&["appname", "app", "vmtypeid", "tenantid"]).unwrap_or(id);
+        let end = find(&["endtime", "end"]);
+        Ok(AzureCols { width: names.len(), id, app, start, end, cpu, mem })
+    }
+}
+
+/// Field accessor for a split Azure row (missing column ⇒ malformed).
+fn azure_field<'a>(fields: &[&'a str], i: usize, what: &str) -> Result<&'a str, String> {
+    fields.get(i).copied().ok_or_else(|| format!("row too short for {what} column"))
+}
+
+/// Split and validate one Azure-style data row against the header map.
+fn parse_azure_row(line: &str, cols: &AzureCols) -> Result<RawRow, String> {
+    let fields: Vec<&str> = line.split(',').map(|c| c.trim()).collect();
+    if fields.len() < cols.width {
+        return Err(format!(
+            "row has {} columns, header has {}",
+            fields.len(),
+            cols.width
+        ));
+    }
+    let id = azure_field(&fields, cols.id, "vmid")?;
+    if id.is_empty() {
+        return Err("empty vmid".to_string());
+    }
+    let app = azure_field(&fields, cols.app, "app")?;
+    // Times are fractional days. VMs alive before the trace window carry
+    // negative start times in the public packing trace; clamp to the
+    // window start (they are submitted at replay start).
+    let start =
+        parse_f64(azure_field(&fields, cols.start, "starttime")?, "starttime")?.max(0.0)
+            * SECS_PER_DAY;
+    let end = match cols.end {
+        None => None,
+        Some(i) => match fields.get(i).copied().unwrap_or("") {
+            "" => None,
+            s => Some(parse_f64(s, "endtime")?.max(0.0) * SECS_PER_DAY),
+        },
+    };
+    if let Some(e) = end {
+        if e < start {
+            return Err(format!("endtime {e} before starttime {start}"));
+        }
+    }
+    // core / memory: fractions of the reference server.
+    let core = parse_f64(azure_field(&fields, cols.cpu, "core")?, "core")?;
+    let mem = parse_f64(azure_field(&fields, cols.mem, "memory")?, "memory")?;
+    if core < 0.0 || mem < 0.0 {
+        return Err("negative resource fraction".to_string());
+    }
+    Ok(RawRow {
+        task_id: id.to_string(),
+        app: if app.is_empty() { id.to_string() } else { app.to_string() },
+        start,
+        end,
+        cpu_milli: ((core * REF_NODE_CORES * 1000.0).round() as u64).max(MIN_CPU_MILLI),
+        mem_bytes: ((mem * REF_NODE_MEM_GB * 1e9).round() as u64).max(MIN_MEM_BYTES),
+        instances: 1,
+    })
+}
+
+fn parse_f64(s: &str, what: &str) -> Result<f64, String> {
+    let v: f64 = s.parse().map_err(|_| format!("bad {what} {s:?}"))?;
+    if !v.is_finite() {
+        return Err(format!("non-finite {what} {s:?}"));
+    }
+    Ok(v)
+}
+
+// --- layer-composition synthesis ------------------------------------------
+
+/// Shared OS base layers the synthesizer draws from, with popularity
+/// weights (debian-family bases dominate real registries). Names reuse
+/// the `registry::hub` layer namespace so digests line up if a synthetic
+/// corpus and a trace corpus ever share a registry.
+const BASE_POOL: &[(&str, f64, f64)] = &[
+    ("os.debian12", 49.0, 4.0),
+    ("os.ubuntu2204", 29.0, 3.0),
+    ("os.alpine319", 3.4, 2.0),
+    ("os.debian11", 52.0, 1.0),
+];
+
+/// Shared runtime/dependency layers (language stacks, cert bundles).
+const RUNTIME_POOL: &[(&str, f64)] = &[
+    ("rt.jre17", 92.0),
+    ("rt.python311", 19.0),
+    ("rt.node18", 48.0),
+    ("rt.go121", 68.0),
+    ("rt.php82", 31.0),
+    ("dep.ca-certs", 3.0),
+    ("dep.curl", 48.0),
+    ("rt.dotnet8", 110.0),
+];
+
+/// FNV-1a over the app key — the deterministic hash that anchors all
+/// per-app synthesis decisions.
+fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The `(name, tag)` a given app key synthesizes to. A short hash suffix
+/// keeps sanitized names collision-free.
+pub fn image_name_for_app(app: &str) -> (String, String) {
+    let mut s: String = app
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.' {
+                c.to_ascii_lowercase()
+            } else {
+                '-'
+            }
+        })
+        .collect();
+    s.truncate(40);
+    (format!("trace/{s}-{:08x}", (fnv64(app) >> 32) as u32), "r1".to_string())
+}
+
+/// Deterministically synthesize the image for one app key: a weighted
+/// shared base, 0–2 shared runtime layers, and 1–2 unique app layers with
+/// heavy-tailed sizes. Same `(app, seed)` ⇒ byte-identical manifest.
+pub fn synthesize_image(app: &str, seed: u64) -> ImageMetadata {
+    let mut rng = Pcg::new(seed ^ fnv64(app), 29);
+    let weights: Vec<f64> = BASE_POOL.iter().map(|(_, _, w)| *w).collect();
+    let (base_name, base_mb, _) = BASE_POOL[rng.weighted(&weights)];
+    let mut layers =
+        vec![LayerMetadata { digest: digest_for(base_name), size: Bytes::from_mb(base_mb) }];
+    let mut rt_idx: Vec<usize> = (0..RUNTIME_POOL.len()).collect();
+    rng.shuffle(&mut rt_idx);
+    for &i in rt_idx.iter().take(rng.range(0, 3)) {
+        let (name, mb) = RUNTIME_POOL[i];
+        layers.push(LayerMetadata { digest: digest_for(name), size: Bytes::from_mb(mb) });
+    }
+    for k in 0..1 + rng.range(0, 2) {
+        let mb = (4.0 + rng.exponential(60.0)).min(400.0);
+        layers.push(LayerMetadata {
+            digest: digest_for(&format!("trace.app.{app}.{k}")),
+            size: Bytes::from_mb(mb),
+        });
+    }
+    let (name, tag) = image_name_for_app(app);
+    ImageMetadata::new(&digest_for(&format!("manifest.{name}:{tag}")), &name, &tag, layers)
+}
+
+impl Trace {
+    /// Build a registry holding one synthesized image per distinct app
+    /// key (sorted, so registry construction is deterministic).
+    pub fn synthesize_registry(&self) -> Registry {
+        let apps: BTreeSet<&str> = self.events.iter().map(|e| e.app.as_str()).collect();
+        let mut registry = Registry::new();
+        for app in apps {
+            registry.push(synthesize_image(app, self.seed));
+        }
+        registry
+    }
+
+    /// Build the `(arrival-offset, Pod)` pairs to feed
+    /// [`crate::sim::Simulation::run_arrivals`]. Pod ids are assigned in
+    /// trace order by a fresh [`PodBuilder`].
+    pub fn arrivals(&self) -> Vec<(f64, Pod)> {
+        let mut builder = PodBuilder::new();
+        self.events
+            .iter()
+            .map(|ev| {
+                let (name, tag) = image_name_for_app(&ev.app);
+                let mut pod = builder.build(
+                    &format!("{name}:{tag}"),
+                    Resources::new(MilliCpu(ev.cpu_milli), Bytes(ev.mem_bytes)),
+                );
+                if let Some(d) = ev.duration_secs {
+                    pod = pod.with_duration(d);
+                }
+                (ev.submit_at, pod)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const ALIBABA_OK: &str = "\
+task_m1,2,j_1,A,Terminated,100,160,50,0.5
+task_r2,1,j_1,A,Terminated,103,103,200,1.0
+task_m1,1,j_2,A,Terminated,110,,100,0.2
+";
+
+    fn parse_str(s: &str, opts: &TraceOptions) -> Result<Trace, TraceError> {
+        parse_reader(Cursor::new(s.as_bytes()), opts)
+    }
+
+    #[test]
+    fn alibaba_happy_path() {
+        let t = parse_str(ALIBABA_OK, &TraceOptions::default()).unwrap();
+        // Row 1 expands into 2 instances.
+        assert_eq!(t.events.len(), 4);
+        assert_eq!(t.stats.rows, 3);
+        assert_eq!(t.stats.events, 4);
+        assert_eq!(t.stats.skipped, 0);
+        assert_eq!(t.stats.apps, 2, "task_m1 recurs across jobs");
+        // Normalized to t=0.
+        assert_eq!(t.events[0].submit_at, 0.0);
+        assert_eq!(t.events[2].submit_at, 3.0);
+        assert_eq!(t.events[3].submit_at, 10.0);
+        // Durations: 60s, 0s (zero-duration task), forever.
+        assert_eq!(t.events[0].duration_secs, Some(60.0));
+        assert_eq!(t.events[2].duration_secs, Some(0.0));
+        assert_eq!(t.events[3].duration_secs, None);
+        // plan_cpu 50 → 500m; plan_mem 0.5% of 8 GB = 40 MB.
+        assert_eq!(t.events[0].cpu_milli, 500);
+        assert_eq!(t.events[0].mem_bytes, 40_000_000);
+        // Instance expansion keeps ids unique.
+        assert_eq!(t.events[0].task_id, "task_m1@j_1#0");
+        assert_eq!(t.events[1].task_id, "task_m1@j_1#1");
+        assert_eq!(t.events[3].task_id, "task_m1@j_2");
+    }
+
+    #[test]
+    fn speedup_scales_arrivals_and_durations() {
+        let opts = TraceOptions { speedup: 10.0, ..Default::default() };
+        let t = parse_str(ALIBABA_OK, &opts).unwrap();
+        assert_eq!(t.events[0].duration_secs, Some(6.0));
+        assert_eq!(t.events[3].submit_at, 1.0);
+        assert_eq!(t.stats.span_secs, 1.0);
+    }
+
+    #[test]
+    fn limit_truncates_mid_expansion() {
+        let opts = TraceOptions { limit: Some(1), ..Default::default() };
+        let t = parse_str(ALIBABA_OK, &opts).unwrap();
+        assert_eq!(t.events.len(), 1);
+    }
+
+    #[test]
+    fn malformed_rows_strict_vs_lenient() {
+        let bad = "task_a,1,j_1,A,Terminated,100,160,50,0.5\nnot-a-row\n";
+        let strict =
+            TraceOptions { mode: ErrorMode::Strict, ..Default::default() };
+        match parse_str(bad, &strict) {
+            Err(TraceError::Malformed { line: 2, .. }) => {}
+            other => panic!("expected Malformed at line 2, got {other:?}"),
+        }
+        let t = parse_str(bad, &TraceOptions::default()).unwrap();
+        assert_eq!(t.events.len(), 1);
+        assert_eq!(t.stats.skipped, 1);
+    }
+
+    #[test]
+    fn truncated_row_and_bad_numbers_are_malformed() {
+        for bad in [
+            "task_a,1,j_1,A,Terminated,100,160,50", // 8 columns
+            "task_a,1,j_1,A,Terminated,abc,160,50,0.5", // bad start
+            "task_a,1,j_1,A,Terminated,100,90,50,0.5", // end before start
+            "task_a,1,j_1,A,Terminated,100,160,-5,0.5", // negative cpu
+            ",1,j_1,A,Terminated,100,160,50,0.5",   // empty task name
+            "task_a,x,j_1,A,Terminated,100,160,50,0.5", // bad instance_num
+            "task_a,0,j_1,A,Terminated,100,160,50,0.5", // zero instances
+        ] {
+            let strict = TraceOptions { mode: ErrorMode::Strict, ..Default::default() };
+            assert!(
+                matches!(parse_str(bad, &strict), Err(TraceError::Malformed { .. })),
+                "{bad:?} should be malformed"
+            );
+        }
+    }
+
+    #[test]
+    fn out_of_order_resorted_or_rejected() {
+        let ooo = "\
+task_a,1,j_1,A,Terminated,200,260,50,0.5
+task_b,1,j_1,A,Terminated,100,160,50,0.5
+";
+        let strict = TraceOptions { mode: ErrorMode::Strict, ..Default::default() };
+        assert!(matches!(
+            parse_str(ooo, &strict),
+            Err(TraceError::OutOfOrder { line: 2 })
+        ));
+        let t = parse_str(ooo, &TraceOptions::default()).unwrap();
+        assert!(t.stats.resorted);
+        assert_eq!(t.events[0].app, "task_b");
+        assert_eq!(t.events[0].submit_at, 0.0);
+        assert_eq!(t.events[1].submit_at, 100.0);
+    }
+
+    #[test]
+    fn duplicate_task_ids_dropped_or_rejected() {
+        let dup = "\
+task_a,1,j_1,A,Terminated,100,160,50,0.5
+task_a,1,j_1,A,Terminated,120,180,50,0.5
+";
+        let strict = TraceOptions { mode: ErrorMode::Strict, ..Default::default() };
+        match parse_str(dup, &strict) {
+            Err(TraceError::DuplicateTask { line: 2, task }) => {
+                assert_eq!(task, "task_a@j_1");
+            }
+            other => panic!("expected DuplicateTask, got {other:?}"),
+        }
+        let t = parse_str(dup, &TraceOptions::default()).unwrap();
+        assert_eq!(t.events.len(), 1);
+        assert_eq!(t.stats.duplicates, 1);
+    }
+
+    #[test]
+    fn empty_trace_is_an_error() {
+        assert!(matches!(parse_str("", &TraceOptions::default()), Err(TraceError::Empty)));
+        assert!(matches!(
+            parse_str("# only a comment\n", &TraceOptions::default()),
+            Err(TraceError::Empty)
+        ));
+    }
+
+    const AZURE_OK: &str = "\
+vmId,tenantId,vmTypeId,priority,startTime,endTime,core,memory
+vm1,t1,type_web,1,0.0,0.5,0.25,0.125
+vm2,t1,type_web,1,-0.25,0.25,0.5,0.25
+vm3,t2,type_db,0,0.125,,0.25,0.5
+";
+
+    #[test]
+    fn azure_happy_path() {
+        let t = parse_str(AZURE_OK, &TraceOptions { format: TraceFormat::Azure, ..Default::default() })
+            .unwrap();
+        assert_eq!(t.events.len(), 3);
+        assert_eq!(t.stats.apps, 2);
+        // vm2's negative start clamps to the window start.
+        assert_eq!(t.events[0].submit_at, 0.0);
+        assert_eq!(t.events[1].submit_at, 0.0);
+        assert_eq!(t.events[2].submit_at, 0.125 * SECS_PER_DAY);
+        // 0.25 of a 4-core server = 1000m; 0.125 of 8 GB = 1 GB.
+        assert_eq!(t.events[0].cpu_milli, 1000);
+        assert_eq!(t.events[0].mem_bytes, 1_000_000_000);
+        // Durations: 0.5 days, 0.25 days (start clamped to 0), forever.
+        assert_eq!(t.events[0].duration_secs, Some(0.5 * SECS_PER_DAY));
+        assert_eq!(t.events[1].duration_secs, Some(0.25 * SECS_PER_DAY));
+        assert_eq!(t.events[2].duration_secs, None);
+    }
+
+    #[test]
+    fn azure_header_required_and_validated() {
+        let missing = "vmId,tenantId\nvm1,t1\n";
+        let opts = TraceOptions { format: TraceFormat::Azure, ..Default::default() };
+        assert!(matches!(
+            parse_str(missing, &opts),
+            Err(TraceError::Malformed { line: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn alibaba_header_tolerated_after_comments() {
+        let with_header = "\
+# comment block before the header
+task_name,instance_num,job_name,task_type,status,start_time,end_time,plan_cpu,plan_mem
+task_a,1,j_1,A,Terminated,100,160,50,0.5
+";
+        let strict = TraceOptions { mode: ErrorMode::Strict, ..Default::default() };
+        let t = parse_str(with_header, &strict).unwrap();
+        assert_eq!(t.events.len(), 1);
+        assert_eq!(t.stats.skipped, 0);
+    }
+
+    #[test]
+    fn azure_truncated_row_is_malformed_even_past_required_cols() {
+        // endtime is the LAST column: a row truncated before it must be
+        // malformed, not silently parsed as a forever-running VM.
+        let truncated = "\
+vmId,startTime,core,memory,endTime
+vm1,0.0,0.25,0.125
+";
+        let strict = TraceOptions {
+            format: TraceFormat::Azure,
+            mode: ErrorMode::Strict,
+            ..Default::default()
+        };
+        assert!(matches!(
+            parse_str(truncated, &strict),
+            Err(TraceError::Malformed { line: 2, .. })
+        ));
+        // An explicitly empty endtime field is still a valid service row.
+        let empty_end = "\
+vmId,startTime,core,memory,endTime
+vm1,0.0,0.25,0.125,
+";
+        let t = parse_str(
+            empty_end,
+            &TraceOptions { format: TraceFormat::Azure, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(t.events[0].duration_secs, None);
+    }
+
+    #[test]
+    fn azure_duplicate_vmid_detected() {
+        let dup = "\
+vmId,startTime,endTime,core,memory
+vm1,0.0,0.5,0.25,0.125
+vm1,0.1,0.6,0.25,0.125
+";
+        let opts = TraceOptions {
+            format: TraceFormat::Azure,
+            mode: ErrorMode::Strict,
+            ..Default::default()
+        };
+        assert!(matches!(parse_str(dup, &opts), Err(TraceError::DuplicateTask { .. })));
+    }
+
+    #[test]
+    fn synthesis_is_deterministic_and_skew_preserving() {
+        let a1 = synthesize_image("task_m1", 42);
+        let a2 = synthesize_image("task_m1", 42);
+        assert_eq!(a1, a2, "same (app, seed) ⇒ same manifest");
+        let b = synthesize_image("task_r2", 42);
+        assert_ne!(a1.image_ref(), b.image_ref());
+        let other_seed = synthesize_image("task_m1", 7);
+        assert_eq!(
+            a1.image_ref(),
+            other_seed.image_ref(),
+            "image identity depends only on the app key"
+        );
+        // Layer stacks: at least a base + one app layer, nothing empty.
+        for img in [&a1, &b] {
+            assert!(img.layers.len() >= 2);
+            assert!(img.total_size > Bytes::ZERO);
+        }
+    }
+
+    #[test]
+    fn synthesized_registry_shares_base_layers() {
+        let t = parse_str(ALIBABA_OK, &TraceOptions::default()).unwrap();
+        let reg = t.synthesize_registry();
+        assert_eq!(reg.image_count(), 2);
+        // Pods resolve against the synthesized registry.
+        for (_, pod) in t.arrivals() {
+            assert!(reg.manifest(&pod.image).is_ok(), "missing {}", pod.image);
+        }
+    }
+
+    #[test]
+    fn arrivals_preserve_trace_shape() {
+        let t = parse_str(ALIBABA_OK, &TraceOptions::default()).unwrap();
+        let arrivals = t.arrivals();
+        assert_eq!(arrivals.len(), 4);
+        assert_eq!(arrivals[0].0, 0.0);
+        assert_eq!(arrivals[3].0, 10.0);
+        // Same app ⇒ same image; instance expansion shares it too.
+        assert_eq!(arrivals[0].1.image, arrivals[1].1.image);
+        assert_eq!(arrivals[0].1.image, arrivals[3].1.image);
+        assert_ne!(arrivals[0].1.image, arrivals[2].1.image);
+        assert_eq!(arrivals[2].1.duration_secs, Some(0.0), "zero-duration task");
+    }
+
+    #[test]
+    fn image_names_sanitize_without_collisions() {
+        let (n1, _) = image_name_for_app("task/We ird:key");
+        assert!(n1.starts_with("trace/task-we-ird-key-"));
+        let (n2, _) = image_name_for_app("task/We ird!key");
+        assert_ne!(n1, n2, "hash suffix disambiguates sanitized collisions");
+    }
+}

@@ -26,9 +26,13 @@ pub enum Popularity {
     Zipf(f64),
 }
 
+/// Synthetic-workload parameters (see also [`crate::sim::trace`] for
+/// replaying real cluster traces instead).
 #[derive(Debug, Clone)]
 pub struct WorkloadConfig {
+    /// Pod-trace RNG seed.
     pub seed: u64,
+    /// Image-popularity model.
     pub popularity: Popularity,
     /// CPU request range in millicores.
     pub cpu_range: (u64, u64),
@@ -67,6 +71,7 @@ pub struct WorkloadGen {
 }
 
 impl WorkloadGen {
+    /// Build a generator over `registry`'s catalog (optionally allowlisted).
     pub fn new(registry: &Registry, cfg: WorkloadConfig) -> WorkloadGen {
         let mut choices: Vec<(String, String)> = registry
             .all_manifests()
@@ -132,8 +137,11 @@ pub struct ChurnConfig {
     pub outage_secs: f64,
     /// Spec of joining nodes (mirrors the `scale` fleet by default).
     pub join_cores: f64,
+    /// Memory (GB) of joining nodes.
     pub join_mem_gb: f64,
+    /// Disk (GB) of joining nodes.
     pub join_disk_gb: f64,
+    /// Downlink (MB/s) of joining nodes.
     pub join_bw_mbps: f64,
 }
 
@@ -158,18 +166,32 @@ impl Default for ChurnConfig {
 /// One churn occurrence at absolute offset `at` from trace start.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ChurnEvent {
+    /// Offset in seconds from trace start.
     pub at: f64,
+    /// What happens.
     pub action: ChurnAction,
 }
 
 /// What happens to the cluster.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ChurnAction {
+    /// A cold node joins the cluster.
     Join,
-    Drain { node: NodeId },
-    Crash { node: NodeId },
+    /// A node is cordoned (running pods finish).
+    Drain {
+        /// The drained node.
+        node: NodeId,
+    },
+    /// A node crashes (pods lost and resubmitted).
+    Crash {
+        /// The crashed node.
+        node: NodeId,
+    },
     /// Registry unreachable for `[at, at + secs)`.
-    Outage { secs: f64 },
+    Outage {
+        /// Window length in seconds.
+        secs: f64,
+    },
 }
 
 /// Deterministic churn-trace generator.

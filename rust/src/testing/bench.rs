@@ -4,17 +4,25 @@
 
 use std::time::Instant;
 
+/// Timing summary of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Measured iterations (after warmup).
     pub iters: usize,
+    /// Mean wall time per iteration, nanoseconds.
     pub mean_ns: f64,
+    /// Fastest iteration, nanoseconds.
     pub min_ns: f64,
+    /// Median iteration, nanoseconds.
     pub p50_ns: f64,
+    /// 95th-percentile iteration, nanoseconds.
     pub p95_ns: f64,
 }
 
 impl BenchResult {
+    /// One formatted result row (pair with [`header`]).
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>10} {:>10} {:>10} {:>10}   ({} iters)",
@@ -28,6 +36,7 @@ impl BenchResult {
     }
 }
 
+/// Column header row for [`BenchResult::report`] output.
 pub fn header() -> String {
     format!(
         "{:<44} {:>10} {:>10} {:>10} {:>10}",

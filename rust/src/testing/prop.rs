@@ -10,7 +10,9 @@ use crate::util::rng::Pcg;
 /// Configuration for one property run.
 #[derive(Debug, Clone, Copy)]
 pub struct PropConfig {
+    /// Cases to run (`LRSCHED_PROP_CASES` overrides).
     pub cases: usize,
+    /// Base seed (`PROPTEST_SEED` overrides).
     pub seed: u64,
 }
 
@@ -34,8 +36,11 @@ impl Default for PropConfig {
 /// A failing case.
 #[derive(Debug, Clone)]
 pub struct PropError {
+    /// Which case failed.
     pub case: usize,
+    /// Seed that replays the failure.
     pub seed: u64,
+    /// The property's failure message.
     pub message: String,
 }
 
@@ -64,7 +69,8 @@ where
     }
 }
 
-/// Convenience assertion helpers for property bodies.
+/// Assert inside a property body, returning `Err` with the formatted
+/// message instead of panicking (so the harness can report the seed).
 #[macro_export]
 macro_rules! prop_assert {
     ($cond:expr, $($fmt:tt)*) => {
@@ -74,6 +80,7 @@ macro_rules! prop_assert {
     };
 }
 
+/// `prop_assert!` specialization for equality with Debug output.
 #[macro_export]
 macro_rules! prop_assert_eq {
     ($a:expr, $b:expr) => {{

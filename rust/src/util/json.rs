@@ -14,17 +14,24 @@ use std::fmt;
 /// deterministic (stable key order), which keeps `cache.json` diffs clean.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
     /// Integer fast path (layer sizes, counts). `Num` is used otherwise.
     Int(i64),
+    /// Floating-point number.
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object with deterministic (sorted) key order.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// An empty JSON object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
@@ -40,6 +47,7 @@ impl Json {
         self
     }
 
+    /// Object field lookup; None for non-objects or missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -47,6 +55,7 @@ impl Json {
         }
     }
 
+    /// This value as a string, if it is one.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -54,6 +63,7 @@ impl Json {
         }
     }
 
+    /// This value as an integer (accepts integral floats).
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Json::Int(i) => Some(*i),
@@ -62,6 +72,7 @@ impl Json {
         }
     }
 
+    /// This value as a float (accepts integers).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Int(i) => Some(*i as f64),
@@ -70,6 +81,7 @@ impl Json {
         }
     }
 
+    /// This value as a boolean, if it is one.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -77,6 +89,7 @@ impl Json {
         }
     }
 
+    /// This value as an array slice, if it is one.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -84,6 +97,7 @@ impl Json {
         }
     }
 
+    /// This value as an object map, if it is one.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -189,7 +203,9 @@ fn write_escaped(out: &mut String, s: &str) {
 /// Parse error with byte offset for diagnostics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParseError {
+    /// Byte offset of the failure in the input.
     pub offset: usize,
+    /// What went wrong.
     pub message: String,
 }
 

@@ -4,21 +4,29 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Log severity, ordered from most to least severe.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Suspicious but survivable conditions.
     Warn = 1,
+    /// High-level progress (the default).
     Info = 2,
+    /// Per-decision detail.
     Debug = 3,
+    /// Everything, including hot-path chatter.
     Trace = 4,
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
+/// Set the process-global log level.
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Current process-global log level.
 pub fn level() -> Level {
     match LEVEL.load(Ordering::Relaxed) {
         0 => Level::Error,
@@ -38,6 +46,7 @@ pub fn init_from_env() {
     }
 }
 
+/// Parse a level name (case-insensitive); None for unknown names.
 pub fn parse_level(s: &str) -> Option<Level> {
     match s.to_ascii_lowercase().as_str() {
         "error" => Some(Level::Error),
@@ -49,10 +58,13 @@ pub fn parse_level(s: &str) -> Option<Level> {
     }
 }
 
+/// Would a message at `level` currently be emitted?
 pub fn enabled(level: Level) -> bool {
     level <= self::level()
 }
 
+/// Emit one log line to stderr if `level` is enabled (use the
+/// `log_error!`..`log_trace!` macros rather than calling this directly).
 pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if enabled(level) {
         let tag = match level {
@@ -66,22 +78,27 @@ pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     }
 }
 
+/// Log at [`util::logging::Level::Error`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! log_error {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*)) };
 }
+/// Log at [`util::logging::Level::Warn`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! log_warn {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*)) };
 }
+/// Log at [`util::logging::Level::Info`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*)) };
 }
+/// Log at [`util::logging::Level::Debug`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! log_debug {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*)) };
 }
+/// Log at [`util::logging::Level::Trace`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! log_trace {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, module_path!(), format_args!($($arg)*)) };

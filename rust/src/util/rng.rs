@@ -31,6 +31,7 @@ impl Pcg {
         Pcg::new(seed, 0)
     }
 
+    /// Next 32-bit output of the generator.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -39,6 +40,7 @@ impl Pcg {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 bits (two 32-bit outputs concatenated).
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }

@@ -47,10 +47,12 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Fresh accumulator.
     pub fn new() -> Welford {
         Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one observation in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let delta = x - self.mean;
@@ -60,10 +62,12 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Observations seen.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean; 0.0 before any observation.
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -72,6 +76,7 @@ impl Welford {
         }
     }
 
+    /// Running population variance; 0.0 before any observation.
     pub fn variance(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -80,10 +85,12 @@ impl Welford {
         }
     }
 
+    /// Running population standard deviation.
     pub fn std_dev(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest observation; 0.0 before any observation.
     pub fn min(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -92,6 +99,7 @@ impl Welford {
         }
     }
 
+    /// Largest observation; 0.0 before any observation.
     pub fn max(&self) -> f64 {
         if self.n == 0 {
             0.0

@@ -11,24 +11,30 @@ use std::ops::{Add, AddAssign, Sub, SubAssign};
 pub struct Bytes(pub u64);
 
 impl Bytes {
+    /// Zero bytes.
     pub const ZERO: Bytes = Bytes(0);
 
+    /// Construct from megabytes (10^6 bytes).
     pub fn from_mb(mb: f64) -> Bytes {
         Bytes((mb * 1_000_000.0).round() as u64)
     }
 
+    /// Construct from gigabytes (10^9 bytes).
     pub fn from_gb(gb: f64) -> Bytes {
         Bytes((gb * 1_000_000_000.0).round() as u64)
     }
 
+    /// This size in megabytes.
     pub fn as_mb(self) -> f64 {
         self.0 as f64 / 1_000_000.0
     }
 
+    /// This size in gigabytes.
     pub fn as_gb(self) -> f64 {
         self.0 as f64 / 1_000_000_000.0
     }
 
+    /// Subtract, clamping at zero.
     pub fn saturating_sub(self, rhs: Bytes) -> Bytes {
         Bytes(self.0.saturating_sub(rhs.0))
     }
@@ -86,16 +92,20 @@ impl fmt::Display for Bytes {
 pub struct MilliCpu(pub u64);
 
 impl MilliCpu {
+    /// Zero CPU.
     pub const ZERO: MilliCpu = MilliCpu(0);
 
+    /// Construct from whole cores (1 core = 1000m).
     pub fn from_cores(cores: f64) -> MilliCpu {
         MilliCpu((cores * 1000.0).round() as u64)
     }
 
+    /// This request in cores.
     pub fn as_cores(self) -> f64 {
         self.0 as f64 / 1000.0
     }
 
+    /// Subtract, clamping at zero.
     pub fn saturating_sub(self, rhs: MilliCpu) -> MilliCpu {
         MilliCpu(self.0.saturating_sub(rhs.0))
     }
@@ -138,10 +148,12 @@ impl fmt::Display for MilliCpu {
 pub struct Bandwidth(pub f64);
 
 impl Bandwidth {
+    /// Construct from MB/s.
     pub fn from_mbps(mb_per_s: f64) -> Bandwidth {
         Bandwidth(mb_per_s * 1_000_000.0)
     }
 
+    /// This bandwidth in MB/s.
     pub fn as_mbps(self) -> f64 {
         self.0 / 1_000_000.0
     }
