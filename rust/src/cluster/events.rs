@@ -6,6 +6,10 @@ use super::node::NodeId;
 use super::pod::PodId;
 use crate::util::units::Bytes;
 
+/// Sentinel pod id for node-scoped records (evictions, node lifecycle,
+/// registry outages) — shared by the engine and the sharded event lanes.
+pub const NODE_SCOPE: PodId = PodId(u64::MAX);
+
 /// What happened to a pod (or node — node-scoped records use a sentinel
 /// pod id) at one instant of the lifecycle.
 #[derive(Debug, Clone, PartialEq)]
@@ -131,6 +135,19 @@ impl EventLog {
     /// Number of records.
     pub fn len(&self) -> usize {
         self.events.len()
+    }
+
+    /// Render the whole log as one line per record, with lossless float
+    /// formatting — the determinism fingerprint `scale --events-out`
+    /// writes and the shard-equivalence tests diff. Two logs render
+    /// identically iff they are bit-identical.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::with_capacity(self.events.len() * 48);
+        for e in &self.events {
+            let _ = writeln!(s, "{:?} {} {:?}", e.at, e.pod.0, e.kind);
+        }
+        s
     }
 
     /// Is the log empty?

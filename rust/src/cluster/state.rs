@@ -54,6 +54,58 @@ pub struct ClusterState {
     pub interner: LayerInterner,
 }
 
+/// Install an image directly on one node: adds missing layers, charges
+/// disk (Eq. 6 capacity check), records the image. Returns bytes added.
+///
+/// This is the node-level body of [`ClusterState::install_image`], split
+/// out so the sharded engine's event lanes — which hold disjoint
+/// `&mut [Node]` slices rather than the whole state — run the exact same
+/// mutation (`docs/ARCHITECTURE.md`, "Sharded event lanes").
+pub fn install_image_on(
+    node: &mut Node,
+    interner: &LayerInterner,
+    image: &ImageRef,
+    layers: &LayerSet,
+) -> Result<Bytes, StateError> {
+    let added = layers.difference_bytes(&node.layers, interner);
+    let free = node.disk.saturating_sub(node.disk_used);
+    if added > free {
+        return Err(StateError::DiskFull { node: node.id.0, need: added, free });
+    }
+    // Bump on any membership change (layer sizes can be zero, so the
+    // byte delta alone must not gate the version).
+    let members_before = node.layers.len();
+    node.layers.union_with(layers);
+    if node.layers.len() != members_before {
+        node.layers_version += 1;
+    }
+    node.disk_used += added;
+    if !node.has_image(image) {
+        node.images.push(image.clone());
+    }
+    Ok(added)
+}
+
+/// Evict specific layers directly from one node (disk-pressure GC) — the
+/// node-level body of [`ClusterState::evict_layers`], shared with the
+/// sharded engine's event lanes. Returns bytes freed.
+pub fn evict_layers_on(node: &mut Node, interner: &LayerInterner, layers: &[LayerId]) -> Bytes {
+    let mut freed = Bytes::ZERO;
+    let mut removed_any = false;
+    for &l in layers {
+        if node.layers.contains(l) {
+            node.layers.remove(l);
+            removed_any = true;
+            freed += interner.size(l);
+        }
+    }
+    if removed_any {
+        node.layers_version += 1;
+    }
+    node.disk_used = node.disk_used.saturating_sub(freed);
+    freed
+}
+
 impl ClusterState {
     /// An empty cluster.
     pub fn new() -> ClusterState {
@@ -195,6 +247,26 @@ impl ClusterState {
         Ok(())
     }
 
+    /// Remove only the binding-table entry for `pod`, returning its node —
+    /// the first half of [`ClusterState::unbind`]. The sharded engine's
+    /// coordinator calls this while routing a termination; the owning lane
+    /// then applies the node-side [`Node::release`] in event order. Until
+    /// both halves run, the node's pod list and the binding table disagree
+    /// — callers must complete the pair before anything validates
+    /// invariants.
+    pub fn take_binding(&mut self, pod: PodId) -> Option<NodeId> {
+        self.bindings.remove(&pod)
+    }
+
+    /// Split the state into the disjoint borrows a parallel lane window
+    /// needs: the dense node table (mutable — partitioned into per-lane
+    /// slices by the caller), plus shared views of the pod table and the
+    /// layer interner. Bindings stay with the coordinator
+    /// ([`ClusterState::take_binding`]).
+    pub fn lane_split(&mut self) -> (&mut [Node], &BTreeMap<PodId, Pod>, &LayerInterner) {
+        (&mut self.nodes, &self.pods, &self.interner)
+    }
+
     // --- image/layer inventory ---------------------------------------------
 
     /// Intern an image's layers, returning (ids, layer set).
@@ -225,54 +297,24 @@ impl ClusterState {
 
     /// Install an image on a node: adds missing layers, charges disk
     /// (Eq. 6 capacity check), records the image. Returns bytes added.
+    /// (Delegates to [`install_image_on`], the node-level form the sharded
+    /// event lanes use directly.)
     pub fn install_image(
         &mut self,
         node_id: NodeId,
         image: &ImageRef,
         layers: &LayerSet,
     ) -> Result<Bytes, StateError> {
-        let added = {
-            let node = &self.nodes[node_id.0 as usize];
-            layers.difference_bytes(&node.layers, &self.interner)
-        };
-        let node = &mut self.nodes[node_id.0 as usize];
-        let free = node.disk.saturating_sub(node.disk_used);
-        if added > free {
-            return Err(StateError::DiskFull { node: node_id.0, need: added, free });
-        }
-        // Bump on any membership change (layer sizes can be zero, so the
-        // byte delta alone must not gate the version).
-        let members_before = node.layers.len();
-        node.layers.union_with(layers);
-        if node.layers.len() != members_before {
-            node.layers_version += 1;
-        }
-        node.disk_used += added;
-        if !node.has_image(image) {
-            node.images.push(image.clone());
-        }
-        Ok(added)
+        install_image_on(&mut self.nodes[node_id.0 as usize], &self.interner, image, layers)
     }
 
     /// Evict specific layers from a node (disk-pressure GC).
     /// Layers shared with still-present images should not be passed here;
     /// the caller (kubelet GC) decides the victim set. Returns bytes freed.
+    /// (Delegates to [`evict_layers_on`], the node-level form the sharded
+    /// event lanes use directly.)
     pub fn evict_layers(&mut self, node_id: NodeId, layers: &[LayerId]) -> Bytes {
-        let mut freed = Bytes::ZERO;
-        let mut removed_any = false;
-        let node = &mut self.nodes[node_id.0 as usize];
-        for &l in layers {
-            if node.layers.contains(l) {
-                node.layers.remove(l);
-                removed_any = true;
-                freed += self.interner.size(l);
-            }
-        }
-        if removed_any {
-            node.layers_version += 1;
-        }
-        node.disk_used = node.disk_used.saturating_sub(freed);
-        freed
+        evict_layers_on(&mut self.nodes[node_id.0 as usize], &self.interner, layers)
     }
 
     /// Drop an image record from a node (its unique layers should be passed

@@ -107,6 +107,22 @@ fn scale_spec() -> Vec<OptSpec> {
         OptSpec { name: "retry-limit", help: "retries before a pod is unschedulable", default: Some("10") },
         OptSpec { name: "backoff", help: "scheduling-queue back-off (s)", default: Some("5") },
         OptSpec { name: "snapshot-every", help: "snapshot cadence (placements)", default: Some("1000") },
+        OptSpec {
+            name: "shards",
+            help: "per-node event lanes (N worker threads; report is \
+                   byte-identical for every N)",
+            default: Some("1"),
+        },
+        OptSpec {
+            name: "report-out",
+            help: "write the full report fingerprint to this file",
+            default: Some(""),
+        },
+        OptSpec {
+            name: "events-out",
+            help: "write the event log (one line per record) to this file",
+            default: Some(""),
+        },
         OptSpec { name: "no-gc", help: "disable kubelet image GC", default: None },
         OptSpec {
             name: "churn",
@@ -218,6 +234,7 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
     cfg.retry_backoff_secs = args.f64_or("backoff", 5.0)?;
     cfg.snapshot_every = args.usize_or("snapshot-every", 1000)?.max(1);
     cfg.wake_on_capacity = !args.flag("no-wake");
+    cfg.shards = args.usize_or("shards", 1)?.max(1);
     if args.flag("churn") {
         // Spread volatility across the arrival window of the whole trace.
         cfg.churn = Some(lrsched::sim::ChurnConfig {
@@ -233,6 +250,7 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
     }
 
     let churn_enabled = cfg.churn.is_some();
+    let shards = cfg.shards;
     let mut sim = Simulation::new(common::scale_nodes(nodes), registry, cfg);
     let backend = args.str_or("backend", "native");
     match backend {
@@ -252,11 +270,12 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
         println!("{note}");
     }
     println!(
-        "scale: {} pods / {} nodes / scheduler={} backend={}",
+        "scale: {} pods / {} nodes / scheduler={} backend={} shards={}",
         n_pods,
         nodes,
         report.scheduler,
         backend,
+        shards,
     );
     println!(
         "submitted={} completed={} failed_pulls={} unschedulable={} lost_to_crash={} retries={}",
@@ -305,6 +324,14 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
         ));
     }
     println!("accounting balanced: no dropped events");
+    if let Some(path) = args.get("report-out") {
+        std::fs::write(path, report.render()).map_err(|e| format!("{path}: {e}"))?;
+        println!("wrote report fingerprint to {path}");
+    }
+    if let Some(path) = args.get("events-out") {
+        std::fs::write(path, sim.events.render()).map_err(|e| format!("{path}: {e}"))?;
+        println!("wrote event log to {path}");
+    }
     Ok(())
 }
 
@@ -331,6 +358,8 @@ fn run() -> Result<(), String> {
                          Examples:\n\
                            lrsched scale --churn    (100k pods with node\n\
                            joins/drains/crashes and a registry outage window)\n\
+                           lrsched scale --churn --shards 4   (sharded per-node\n\
+                           event lanes; report byte-identical to --shards 1)\n\
                            lrsched scale --trace tests/fixtures/alibaba_mini.csv \\\n\
                              --trace-format alibaba --trace-speedup 10\n\
                          See docs/SCALE.md for the full flag reference.",

@@ -2,12 +2,21 @@
 //! (HLO text) and serves them on the scheduling hot path. Python never
 //! runs here — `make artifacts` is the only build-time Python step.
 //!
-//! The real runtime needs the external `xla` + `anyhow` crates and is
-//! compiled only with `--features xla`. The default build ships a stub
-//! [`XlaScorer`] with the same surface whose loaders report the backend as
-//! unavailable, so every caller (CLI `--backend xla`, benches, e2e tests)
-//! degrades to the native scorer instead of failing to compile.
+//! Three build shapes (see `ffi.rs`):
+//! - default: the PJRT code is compiled out; a stub [`XlaScorer`] with
+//!   the same surface reports the backend unavailable, so every caller
+//!   (CLI `--backend xla`, benches, e2e tests) degrades to the native
+//!   scorer instead of failing to compile;
+//! - `--features xla`: the *real* `pjrt.rs`/`scorer.rs` compile against
+//!   the vendored type-level shim in `ffi.rs` (CI checks this, so the
+//!   PJRT path cannot rot unbuilt) and still report unavailable at
+//!   runtime;
+//! - `--features xla,xla-external`: binds to the real external `xla` +
+//!   `anyhow` crates (added to `[dependencies]` by hand) for an actual
+//!   PJRT backend.
 
+#[cfg(feature = "xla")]
+pub mod ffi;
 #[cfg(feature = "xla")]
 pub mod pjrt;
 #[cfg(feature = "xla")]

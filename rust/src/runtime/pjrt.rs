@@ -1,8 +1,13 @@
 //! PJRT wrapper — thin layer over the `xla` crate: one CPU client per
 //! process, HLO-text loading (the AOT interchange format, see
 //! `python/compile/aot.py`), compile-once semantics.
+//!
+//! Imports go through [`super::ffi`], so this file type-checks in CI
+//! against the vendored shim (`--features xla`) and binds to the real
+//! crates only with `--features xla,xla-external`.
 
-use anyhow::{Context, Result};
+use super::ffi::anyhow::{Context, Result};
+use super::ffi::xla;
 use std::path::Path;
 
 /// The PJRT client. Compilation happens once at startup; `execute` is the

@@ -6,10 +6,11 @@
 //! Falls back to the native scorer for cycles larger than every variant
 //! (and records that in `stats`), so the scheduler never fails over shapes.
 
+use super::ffi::anyhow::{bail, Context, Result};
+use super::ffi::xla;
 use super::pjrt::{Executable, PjRt};
 use crate::sched::scoring::{NativeScorer, ScoreInputs, ScoreOutputs, ScoringBackend};
 use crate::util::json;
-use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One compiled shape variant with persistent, reusable input literals —

@@ -7,6 +7,7 @@
 
 use super::context::CycleContext;
 use crate::cluster::{Node, NodeId};
+use crate::sim::shard::{par_fill, LanePool};
 
 /// Maximum plugin score, as in Kubernetes (`framework.MaxNodeScore`).
 pub const MAX_NODE_SCORE: f64 = 100.0;
@@ -22,7 +23,10 @@ pub enum FilterResult {
 
 /// Filter extension point (also covers PreFilter checks — with single-pod
 /// cycles the distinction is only a caching optimization upstream).
-pub trait FilterPlugin {
+/// Plugins must be `Send + Sync`: the sharded engine fans the per-node
+/// filter pass across worker threads (plugins are stateless structs, so
+/// this is free).
+pub trait FilterPlugin: Send + Sync {
     /// Plugin name as surfaced in rejection reasons.
     fn name(&self) -> &'static str;
     /// Can `node` host the cycle's pod?
@@ -31,8 +35,11 @@ pub trait FilterPlugin {
 
 /// Score extension point. `score` returns a raw value per node; `normalize`
 /// then maps the raw vector to [0, MAX_NODE_SCORE] (identity by default,
-/// matching plugins that already emit 0–100).
-pub trait ScorePlugin {
+/// matching plugins that already emit 0–100). `Send + Sync` for the same
+/// reason as [`FilterPlugin`]: per-node `score` calls fan out across
+/// worker threads in the sharded engine (`normalize` stays coordinator-
+/// side, it couples nodes).
+pub trait ScorePlugin: Send + Sync {
     /// Plugin name as surfaced in score breakdowns.
     fn name(&self) -> &'static str;
     /// Raw score for one node.
@@ -186,6 +193,96 @@ impl Framework {
     pub fn run(&self, ctx: &CycleContext) -> Result<Vec<NodeScore>, Unschedulable> {
         let feasible = self.feasible(ctx)?;
         Ok(self.score(ctx, &feasible))
+    }
+
+    /// [`Framework::feasible`], with the per-node filter pass fanned out
+    /// across `pool`. Per-node filter outcomes are pure functions of
+    /// (plugins, ctx, node) and land at fixed indices, and the feasible /
+    /// rejection lists are then assembled in node order on the calling
+    /// thread — so the result is bit-identical to the sequential pass.
+    pub fn feasible_with_pool(
+        &self,
+        ctx: &CycleContext,
+        pool: &LanePool,
+    ) -> Result<Vec<NodeId>, Unschedulable> {
+        let nodes = ctx.state.nodes();
+        let mut verdicts: Vec<Option<(&'static str, String)>> = vec![None; nodes.len()];
+        par_fill(pool, &mut verdicts, &|i, out| {
+            let node = &nodes[i];
+            *out = if !node.is_schedulable() {
+                // NodeUnschedulable analog, exactly as in `feasible`.
+                let why = if node.is_up() { "node is draining" } else { "node is down" };
+                Some(("NodeUnschedulable", why.to_string()))
+            } else {
+                let mut rejection = None;
+                for f in &self.filters {
+                    if let FilterResult::Reject(reason) = f.filter(ctx, node) {
+                        rejection = Some((f.name(), reason));
+                        break;
+                    }
+                }
+                rejection
+            };
+        });
+        let mut feasible = Vec::new();
+        let mut rejections = Vec::new();
+        for (node, verdict) in nodes.iter().zip(verdicts) {
+            match verdict {
+                None => feasible.push(node.id),
+                Some((plugin, reason)) => rejections.push((node.name.clone(), plugin, reason)),
+            }
+        }
+        if feasible.is_empty() {
+            Err(Unschedulable { rejections })
+        } else {
+            Ok(feasible)
+        }
+    }
+
+    /// [`Framework::score`], with the raw per-node `score` calls of every
+    /// plugin fanned out across `pool` in one pass. Normalization and the
+    /// weighted accumulation — the parts that couple nodes — run on the
+    /// calling thread over the same vectors in the same order, so totals
+    /// and breakdowns are bit-identical to the sequential pass.
+    pub fn score_with_pool(
+        &self,
+        ctx: &CycleContext,
+        feasible: &[NodeId],
+        pool: &LanePool,
+    ) -> Vec<NodeScore> {
+        let m = self.scorers.len();
+        // One flat row-major (node × plugin) matrix: the sequential pass
+        // makes two allocations per cycle and the fan-out must not add
+        // per-node ones on the hot path.
+        let mut raw_matrix = vec![0.0f64; feasible.len() * m];
+        crate::sim::shard::par_fill_rows(pool, &mut raw_matrix, m, &|i, row| {
+            let node = ctx.state.node(feasible[i]);
+            for (p_idx, (plugin, _)) in self.scorers.iter().enumerate() {
+                row[p_idx] = plugin.score(ctx, node);
+            }
+        });
+        let mut totals: Vec<NodeScore> = feasible
+            .iter()
+            .map(|&n| NodeScore { node: n, total: 0.0, breakdown: Vec::new() })
+            .collect();
+        let mut raw = vec![0.0f64; feasible.len()];
+        for (p_idx, (plugin, weight)) in self.scorers.iter().enumerate() {
+            for i in 0..feasible.len() {
+                raw[i] = raw_matrix[i * m + p_idx];
+            }
+            plugin.normalize(ctx, &mut raw);
+            for (i, ns) in totals.iter_mut().enumerate() {
+                debug_assert!(
+                    (-1e-9..=MAX_NODE_SCORE + 1e-9).contains(&raw[i]),
+                    "{} emitted out-of-range score {}",
+                    plugin.name(),
+                    raw[i]
+                );
+                ns.total += weight * raw[i];
+                ns.breakdown.push((plugin.name(), raw[i]));
+            }
+        }
+        totals
     }
 }
 
@@ -341,6 +438,46 @@ mod tests {
         let fw = Framework::new("test").add_scorer(Box::new(Flat), 1.0);
         let scores = fw.run(&c).unwrap();
         assert_eq!(select_best(&scores).unwrap().node, NodeId(0));
+    }
+
+    #[test]
+    fn pooled_passes_match_sequential_bit_for_bit() {
+        use crate::sim::shard::LanePool;
+        let (mut state, pod) = setup(9);
+        state.drain_node(NodeId(4));
+        let c = ctx(&state, &pod);
+        let fw = Framework::new("test")
+            .add_filter(Box::new(RejectOdd))
+            .add_scorer(Box::new(IdScore), 1.5);
+        let pool = LanePool::new(3);
+
+        let seq = fw.feasible(&c).unwrap();
+        let par = fw.feasible_with_pool(&c, &pool).unwrap();
+        assert_eq!(seq, par);
+
+        let s_seq = fw.score(&c, &seq);
+        let s_par = fw.score_with_pool(&c, &par, &pool);
+        assert_eq!(s_seq.len(), s_par.len());
+        for (a, b) in s_seq.iter().zip(&s_par) {
+            assert_eq!(a.node, b.node);
+            assert_eq!(a.total.to_bits(), b.total.to_bits(), "totals must be bit-identical");
+            assert_eq!(a.breakdown, b.breakdown);
+        }
+
+        // All-rejected: the pooled pass produces the same rejection list.
+        struct RejectAll2;
+        impl FilterPlugin for RejectAll2 {
+            fn name(&self) -> &'static str {
+                "RejectAll2"
+            }
+            fn filter(&self, _: &CycleContext, _: &Node) -> FilterResult {
+                FilterResult::Reject("no".into())
+            }
+        }
+        let fw2 = Framework::new("test").add_filter(Box::new(RejectAll2));
+        let e_seq = fw2.feasible(&c).unwrap_err();
+        let e_par = fw2.feasible_with_pool(&c, &pool).unwrap_err();
+        assert_eq!(e_seq, e_par);
     }
 
     #[test]

@@ -120,17 +120,41 @@ impl LrScheduler {
 
     /// Run one scheduling cycle (Algorithm 1).
     pub fn schedule(&mut self, ctx: &CycleContext) -> Result<Decision, Unschedulable> {
-        let feasible = self.framework.feasible(ctx)?;
-        let k8s_scores = self.framework.score(ctx, &feasible);
+        self.schedule_with_pool(ctx, None)
+    }
+
+    /// [`LrScheduler::schedule`], optionally fanning the per-node filter,
+    /// score-plugin, and layer-sharing passes across a
+    /// [`crate::sim::shard::LanePool`]. With `pool = None` this *is* the
+    /// sequential cycle; with a pool, per-node outputs land at fixed
+    /// indices and every reduction (normalize, weighted sum, argmax) runs
+    /// on the calling thread in node order, so the decision is
+    /// bit-identical either way. The dense backend path stays on the
+    /// calling thread (the arena fill is already one fused pass).
+    pub fn schedule_with_pool(
+        &mut self,
+        ctx: &CycleContext,
+        pool: Option<&crate::sim::shard::LanePool>,
+    ) -> Result<Decision, Unschedulable> {
+        let feasible = match pool {
+            Some(p) => self.framework.feasible_with_pool(ctx, p)?,
+            None => self.framework.feasible(ctx)?,
+        };
+        let k8s_scores = match pool {
+            Some(p) => self.framework.score_with_pool(ctx, &feasible, p),
+            None => self.framework.score(ctx, &feasible),
+        };
+        let dense = self.backend.is_some();
         let decision = match self.policy {
             None => {
                 // Default baseline: S = S_K8s.
                 let best = select_best(&k8s_scores).expect("nonempty feasible set");
                 self.decision_for(ctx, best.node, best.total, 0.0, best.total, 0.0)
             }
-            Some(policy) => match &mut self.backend {
+            Some(policy) if dense => self.schedule_dense(ctx, policy, &k8s_scores),
+            Some(policy) => match pool {
+                Some(p) => self.schedule_native_pool(ctx, policy, &k8s_scores, p),
                 None => self.schedule_native(ctx, policy, &k8s_scores),
-                Some(_) => self.schedule_dense(ctx, policy, &k8s_scores),
             },
         };
         if let Some(policy) = self.policy {
@@ -182,6 +206,40 @@ impl LrScheduler {
             let local = layer_score::local_bytes(ctx, node);
             let s_layer = layer_score::layer_sharing_score(local, ctx.required_bytes);
             let omega = weight_for(policy, &self.params, node, local);
+            let s = omega * s_layer + ns.total;
+            let better = match &best {
+                None => true,
+                Some(b) => s > b.final_score,
+            };
+            if better {
+                best = Some(self.decision_for(ctx, ns.node, s, s_layer, ns.total, omega));
+            }
+        }
+        best.expect("nonempty feasible set")
+    }
+
+    /// [`LrScheduler::schedule_native`] with the per-node layer/weight math
+    /// fanned across the pool; the first-max argmax reduction runs on the
+    /// calling thread in `k8s_scores` order, exactly like the sequential
+    /// loop, so the winner (and every recorded score) is bit-identical.
+    fn schedule_native_pool(
+        &self,
+        ctx: &CycleContext,
+        policy: WeightPolicy,
+        k8s_scores: &[NodeScore],
+        pool: &crate::sim::shard::LanePool,
+    ) -> Decision {
+        let mut lw: Vec<(f64, f64)> = vec![(0.0, 0.0); k8s_scores.len()];
+        let params = &self.params;
+        crate::sim::shard::par_fill(pool, &mut lw, &|i, out| {
+            let node = ctx.state.node(k8s_scores[i].node);
+            let local = layer_score::local_bytes(ctx, node);
+            let s_layer = layer_score::layer_sharing_score(local, ctx.required_bytes);
+            let omega = weight_for(policy, params, node, local);
+            *out = (s_layer, omega);
+        });
+        let mut best: Option<Decision> = None;
+        for (ns, &(s_layer, omega)) in k8s_scores.iter().zip(&lw) {
             let s = omega * s_layer + ns.total;
             let better = match &best {
                 None => true,
@@ -424,6 +482,36 @@ mod tests {
             assert_eq!(dn.node, dd.node, "backends disagree for {image}");
             assert!((dn.final_score - dd.final_score).abs() < 1e-3);
             assert_eq!(dn.omega, dd.omega);
+        }
+    }
+
+    #[test]
+    fn pooled_cycle_matches_sequential_bit_for_bit() {
+        use crate::sim::shard::LanePool;
+        let mut state = cluster(5);
+        let cache = cache();
+        let corpus = hub::corpus();
+        for (i, name) in [(0u32, "redis"), (2, "wordpress"), (4, "nginx")] {
+            let m = corpus.iter().find(|m| m.name == name).unwrap();
+            let (_, layers) = state.intern_image(m);
+            state.install_image(NodeId(i), &m.image_ref(), &layers).unwrap();
+        }
+        let pool = LanePool::new(3);
+        let mut b = PodBuilder::new();
+        for image in ["wordpress:6.4", "redis:7.2", "nginx:1.25"] {
+            let pod = b.build(image, Resources::cores_gb(0.5, 0.5));
+            let (meta, req, bytes) = CycleContext::prepare(&mut state, &cache, &pod);
+            let ctx = CycleContext::new(&state, &pod, meta, req, bytes);
+            let mut seq = LrScheduler::lr_scheduler(default_framework());
+            let mut par = LrScheduler::lr_scheduler(default_framework());
+            let ds = seq.schedule(&ctx).unwrap();
+            let dp = par.schedule_with_pool(&ctx, Some(&pool)).unwrap();
+            assert_eq!(ds.node, dp.node, "winner differs for {image}");
+            assert_eq!(ds.final_score.to_bits(), dp.final_score.to_bits());
+            assert_eq!(ds.layer_score.to_bits(), dp.layer_score.to_bits());
+            assert_eq!(ds.k8s_score.to_bits(), dp.k8s_score.to_bits());
+            assert_eq!(ds.omega.to_bits(), dp.omega.to_bits());
+            assert_eq!(ds.download_cost, dp.download_cost);
         }
     }
 

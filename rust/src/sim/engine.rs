@@ -16,6 +16,15 @@
 //! - **Timed arrivals** (`Some(dt)`): pods arrive every `dt` seconds and
 //!   pulls overlap — the load-test mode used by the concurrency tests and
 //!   the 100k-pod `scale` harness.
+//!
+//! With `SimConfig::shards > 1` the engine additionally runs **sharded
+//! per-node event lanes** ([`crate::sim::shard`]): node-local events
+//! (pull completions, terminations, per-node GC checks) between two
+//! coordinator events are drained in global order, routed to per-node
+//! lanes, processed in parallel, and their effects merged back in pop
+//! order — byte-identical to `shards = 1` by construction. Scheduling
+//! cycles fan their per-node filter/score/layer passes across the same
+//! worker pool. See `docs/ARCHITECTURE.md`, "Sharded event lanes".
 
 use super::bandwidth::LinkModel;
 use super::clock::Clock;
@@ -23,8 +32,11 @@ use super::download::PullManager;
 use super::events::{EventPayload, EventQueue};
 use super::kubelet::{self, ImageLayerStore, PendingStart};
 use super::metrics::{self, ClusterSnapshot, PodRecord};
+use super::shard::{lane_bounds, lane_of, GcParams, LaneEffects, LaneItem, LaneOutcome, LanePool, LaneTask, Shard};
 use super::workload::{ChurnAction, ChurnConfig, ChurnModel};
-use crate::cluster::{ClusterState, EventKind, EventLog, Node, NodeId, Pod, PodId, Resources};
+use crate::cluster::{
+    ClusterState, EventKind, EventLog, Node, NodeId, Pod, PodId, Resources, NODE_SCOPE,
+};
 use crate::registry::{MetadataCache, Registry, Watcher};
 use crate::sched::queue::{ParkCure, SchedulingQueue};
 use crate::sched::rl::{RlParams, RlScheduler};
@@ -33,10 +45,7 @@ use crate::sched::{CycleContext, FrameworkConfig, LrScheduler, Unschedulable, We
 use crate::util::units::{Bandwidth, Bytes};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-
-/// Sentinel pod id for node-level event records (same convention the GC
-/// eviction records already use).
-const NODE_SCOPE: PodId = PodId(u64::MAX);
+use std::sync::Mutex;
 
 /// Which of the paper's three schedulers to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -117,6 +126,14 @@ pub struct SimConfig {
     /// waiting out their back-off timer (which stays armed as a fallback).
     /// Off reproduces PR 1's pure fixed-back-off behaviour.
     pub wake_on_capacity: bool,
+    /// Per-node event lanes: partition the node table into this many
+    /// contiguous shards and process node-local events (pull completions,
+    /// terminations, per-node GC) in parallel between coordinator events,
+    /// fanning scheduling cycles across the same worker pool. `1` (the
+    /// default) is the fully sequential engine; any `N` produces a
+    /// byte-identical report and event log (`docs/ARCHITECTURE.md`,
+    /// "Sharded event lanes").
+    pub shards: usize,
 }
 
 impl Default for SimConfig {
@@ -138,6 +155,7 @@ impl Default for SimConfig {
             snapshot_every: 1,
             churn: None,
             wake_on_capacity: true,
+            shards: 1,
         }
     }
 }
@@ -239,6 +257,69 @@ impl SimReport {
         self.completed() + self.failed_pulls + self.unschedulable + self.lost_to_crash
             == self.submitted
     }
+
+    /// Render the full report — counters, every placement record, every
+    /// snapshot (including per-node rows), and the ω trace — with lossless
+    /// float formatting. Two reports render identically iff they are
+    /// bit-identical; this is the fingerprint `scale --report-out` writes
+    /// and the shard-equivalence tests and CI determinism job diff.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::with_capacity(64 + self.records.len() * 96);
+        let _ = writeln!(
+            s,
+            "scheduler={} submitted={} started={} failed_pulls={} unschedulable={} \
+             lost_to_crash={} retries={} resubmitted={} pulls_stalled={} wakeups={} \
+             nodes_joined={} nodes_drained={} nodes_crashed={} omega1={} omega2={} omega_mid={}",
+            self.scheduler,
+            self.submitted,
+            self.started,
+            self.failed_pulls,
+            self.unschedulable,
+            self.lost_to_crash,
+            self.retries,
+            self.resubmitted,
+            self.pulls_stalled,
+            self.wakeups,
+            self.nodes_joined,
+            self.nodes_drained,
+            self.nodes_crashed,
+            self.omega1_used,
+            self.omega2_used,
+            self.omega_mid_used,
+        );
+        for r in &self.records {
+            let _ = writeln!(
+                s,
+                "record pod={} image={} node={} download={} p2p={} secs={:?} std={:?} \
+                 omega={:?} layer={:?} final={:?} at={:?}",
+                r.pod.0,
+                r.image,
+                r.node,
+                r.download.0,
+                r.p2p.0,
+                r.download_secs,
+                r.std_after,
+                r.omega,
+                r.layer_score,
+                r.final_score,
+                r.at,
+            );
+        }
+        for snap in &self.snapshots {
+            let _ = write!(
+                s,
+                "snapshot at={:?} cpu={:?} mem={:?} disk={} std={:?} per_node=",
+                snap.at, snap.cpu_util, snap.mem_util, snap.disk_used.0, snap.std_score,
+            );
+            for (c, m, d) in &snap.per_node {
+                let _ = write!(s, "({c:?},{m:?},{}) ", d.0);
+            }
+            s.push('\n');
+        }
+        let _ = writeln!(s, "omega_trace={:?}", self.omega_trace);
+        s
+    }
 }
 
 /// The scheduler driving a simulation: the paper's Algorithm-1 family or
@@ -263,6 +344,40 @@ impl SchedImpl {
                 SchedImpl::Rl(RlScheduler::new(framework, RlParams::default(), 2024))
             }
         }
+    }
+}
+
+/// One parallel window of node-local events: per-lane routed work in
+/// global pop order, plus the speculative-termination bookkeeping the
+/// merge step needs (see [`Simulation::collect_window`]).
+struct Window {
+    /// Routed work per lane, each list in global pop order.
+    lanes: Vec<Vec<LaneItem>>,
+    /// Per-slot seq of the speculatively scheduled termination event
+    /// (cancelled at merge if the pull wedges).
+    spec: Vec<Option<u64>>,
+    /// Slots routed to lanes.
+    n_slots: usize,
+    /// Events consumed from the global queue — ≥ `n_slots`, because no-op
+    /// pops (stale events) and outage re-queues consume without routing.
+    consumed: usize,
+}
+
+impl Window {
+    fn new(n_lanes: usize) -> Window {
+        Window {
+            lanes: (0..n_lanes).map(|_| Vec::new()).collect(),
+            spec: Vec::new(),
+            n_slots: 0,
+            consumed: 0,
+        }
+    }
+
+    fn route(&mut self, lane: usize, task: LaneTask, spec: Option<u64>) {
+        let slot = self.n_slots;
+        self.n_slots += 1;
+        self.spec.push(spec);
+        self.lanes[lane].push(LaneItem { slot, task });
     }
 }
 
@@ -327,6 +442,9 @@ pub struct Simulation {
     chained: std::collections::HashSet<PodId>,
     /// Registry unreachable until this virtual time (0 = reachable).
     outage_until: f64,
+    /// Worker pool for sharded event lanes and scheduling fan-outs
+    /// (None when `SimConfig::shards <= 1`).
+    pool: Option<LanePool>,
     /// Audit log of everything that happened.
     pub events: EventLog,
     /// Placement records (mirrored into the report).
@@ -394,6 +512,7 @@ impl Simulation {
             retry_grace: std::collections::HashSet::new(),
             chained: std::collections::HashSet::new(),
             outage_until: 0.0,
+            pool: if cfg.shards > 1 { Some(LanePool::new(cfg.shards)) } else { None },
             events: EventLog::new(),
             records: Vec::new(),
             snapshots: Vec::new(),
@@ -440,7 +559,20 @@ impl Simulation {
 
     /// Pop and dispatch events until the simulation quiesces. The watcher
     /// re-arms itself only while real work remains, so the loop terminates.
+    /// With `shards > 1` and timed arrivals, node-local events are drained
+    /// in parallel windows on the per-node lanes instead.
     fn run_events(&mut self) {
+        if self.pool.is_some() && self.cfg.inter_arrival_secs.is_some() {
+            self.run_events_windowed();
+        } else {
+            self.run_events_seq();
+        }
+    }
+
+    /// The fully sequential event loop (`shards = 1`, and the sequential
+    /// arrival protocol regardless of shards — its arrival chaining makes
+    /// pull resolutions coordinator events).
+    fn run_events_seq(&mut self) {
         while let Some(ev) = self.queue.pop() {
             if ev.payload.is_watcher() && !self.queue.has_pending_work() {
                 // Nothing left that a poll could affect: let the sim drain.
@@ -449,7 +581,15 @@ impl Simulation {
             }
             self.clock.advance_to(ev.at);
             let t = self.clock.now();
-            match ev.payload {
+            self.step_event(t, ev.payload);
+        }
+    }
+
+    /// Dispatch one popped event at time `t` — the shared handler of the
+    /// sequential loop and the windowed loop's coordinator stretches.
+    fn step_event(&mut self, t: f64, payload: EventPayload) {
+        {
+            match payload {
                 EventPayload::WatcherTick => {
                     self.watcher_armed = false;
                     self.watcher.poll(t, &self.registry, &mut self.cache);
@@ -481,7 +621,7 @@ impl Simulation {
                             let at = p.plan.ready_at;
                             self.pending.insert(pod, p);
                             self.queue.push(at, EventPayload::PullComplete { pod });
-                            continue;
+                            return;
                         }
                         let duration = self.state.pod(pod).and_then(|x| x.duration_secs);
                         let started = self.finish_pull(p);
@@ -500,13 +640,19 @@ impl Simulation {
                     // Ignore stale timers from a pre-crash instance: the
                     // pod may be rebound and running a fresh epoch.
                     if self.epochs.get(&pod).copied().unwrap_or(0) != epoch {
-                        continue;
+                        return;
                     }
                     // Resources release; layers stay cached until GC needs
                     // them (image retention is the kubelet's GC job).
+                    let node = self.state.binding(pod);
                     let released = self.state.unbind(pod).is_ok();
                     if self.cfg.gc_enabled {
-                        self.queue.push(t, EventPayload::GcSweep);
+                        // Only this node's in-use image set changed, so the
+                        // pressure re-check is node-local (the full sweep
+                        // still runs at every scheduling cycle).
+                        if let Some(n) = node {
+                            self.queue.push(t, EventPayload::GcSweepNode { node: n });
+                        }
                     }
                     // QueueingHint: freed capacity wakes parked pods now,
                     // instead of at their back-off deadline.
@@ -517,6 +663,12 @@ impl Simulation {
                 EventPayload::GcSweep => {
                     let evicted = self.gc_pressure_sweep();
                     // Freed disk can cure NodeCapacity rejections.
+                    if evicted && self.wake_parked() > 0 {
+                        self.drain_sched_queue();
+                    }
+                }
+                EventPayload::GcSweepNode { node } => {
+                    let evicted = self.gc_check_node(node);
                     if evicted && self.wake_parked() > 0 {
                         self.drain_sched_queue();
                     }
@@ -546,6 +698,197 @@ impl Simulation {
                 }
             }
         }
+    }
+
+    // --- sharded event lanes ----------------------------------------------
+
+    /// The sharded event loop: alternate between parallel windows of
+    /// node-local events (drained in global order, routed to per-node
+    /// lanes, effects merged back in pop order) and sequential handling of
+    /// coordinator events. Byte-identical to [`Simulation::run_events_seq`]
+    /// by construction — see `docs/ARCHITECTURE.md`, "Sharded event lanes".
+    fn run_events_windowed(&mut self) {
+        let n_lanes = self.cfg.shards.max(1);
+        loop {
+            // A window is only safe while nothing is parked or queued for
+            // scheduling: then terminations/evictions cannot wake anything,
+            // so node-local events on different nodes are independent.
+            if self.sched_queue.is_empty() {
+                let w = self.collect_window(n_lanes);
+                let consumed = w.consumed;
+                if w.n_slots > 0 {
+                    self.process_window(w);
+                }
+                if consumed > 0 {
+                    continue;
+                }
+            }
+            match self.queue.pop() {
+                None => break,
+                Some(ev) => {
+                    if ev.payload.is_watcher() && !self.queue.has_pending_work() {
+                        self.watcher_armed = false;
+                        continue;
+                    }
+                    self.clock.advance_to(ev.at);
+                    let t = self.clock.now();
+                    self.step_event(t, ev.payload);
+                }
+            }
+        }
+    }
+
+    /// Drain a maximal prefix of node-local events from the global queue,
+    /// in (time, class, seq) order, routing each to the lane owning its
+    /// node. The coordinator performs each event's *predictable* half
+    /// inline — exactly the pushes and map updates the sequential handler
+    /// would do at the same point in the pop/push stream — and defers the
+    /// node mutation to the lane. A termination event for a just-finished
+    /// pull is scheduled *speculatively* (the lane has not yet confirmed
+    /// the container started); collection stops before popping an
+    /// unconfirmed speculative event, and the merge step cancels it if the
+    /// pull turned out to wedge.
+    fn collect_window(&mut self, n_lanes: usize) -> Window {
+        /// Bounds per-window memory (routed work + buffered effects).
+        const WINDOW_CAP: usize = 8192;
+        let n_nodes = self.state.node_count();
+        let mut w = Window::new(n_lanes);
+        let mut speculative: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        loop {
+            if w.n_slots >= WINDOW_CAP {
+                break;
+            }
+            match self.queue.peek() {
+                None => break,
+                Some(head) => {
+                    if !head.payload.is_node_local() || speculative.contains(&head.seq()) {
+                        break;
+                    }
+                }
+            }
+            let ev = self.queue.pop().expect("peeked head exists");
+            self.clock.advance_to(ev.at);
+            let t = ev.at;
+            w.consumed += 1;
+            match ev.payload {
+                EventPayload::PullComplete { pod } => {
+                    let ready_at = match self.pending.get(&pod) {
+                        None => continue, // stale post-crash event: no-op
+                        Some(p) => p.plan.ready_at,
+                    };
+                    if ready_at > t + 1e-9 {
+                        // Outage-stalled pull: re-queue at the real ready
+                        // time, exactly like the sequential handler.
+                        self.queue.push(ready_at, EventPayload::PullComplete { pod });
+                        continue;
+                    }
+                    let p = self.pending.remove(&pod).expect("pending checked above");
+                    let duration = self.state.pod(pod).and_then(|x| x.duration_secs);
+                    let mut spec = None;
+                    if let Some(d) = duration {
+                        // Speculative: the sequential engine pushes this
+                        // only if the container starts. The lane reports
+                        // `started` and the merge cancels on failure, so
+                        // the observable stream is identical either way.
+                        let epoch = self.epochs.get(&pod).copied().unwrap_or(0);
+                        let seq =
+                            self.queue.push(t + d, EventPayload::PodTermination { pod, epoch });
+                        speculative.insert(seq);
+                        spec = Some(seq);
+                    }
+                    let lane = lane_of(p.node.0 as usize, n_nodes, n_lanes);
+                    w.route(lane, LaneTask::Pull { p }, spec);
+                }
+                EventPayload::PodTermination { pod, epoch } => {
+                    if self.epochs.get(&pod).copied().unwrap_or(0) != epoch {
+                        continue; // stale pre-crash timer: no-op
+                    }
+                    let node = match self.state.take_binding(pod) {
+                        Some(n) => n,
+                        None => continue, // unreachable in practice: started pods are bound
+                    };
+                    if self.cfg.gc_enabled {
+                        self.queue.push(t, EventPayload::GcSweepNode { node });
+                    }
+                    let requests = self.state.pod(pod).expect("bound pod exists").requests;
+                    let lane = lane_of(node.0 as usize, n_nodes, n_lanes);
+                    w.route(lane, LaneTask::Term { pod, node, requests }, None);
+                }
+                EventPayload::GcSweepNode { node } => {
+                    let lane = lane_of(node.0 as usize, n_nodes, n_lanes);
+                    w.route(lane, LaneTask::Sweep { t, node }, None);
+                }
+                other => unreachable!("non-lane event {other:?} collected into a window"),
+            }
+        }
+        w
+    }
+
+    /// Advance every lane over its routed window in parallel, then merge
+    /// the buffered effects back in global pop order: event-log records
+    /// append in the order the sequential engine would have written them,
+    /// outcome/memo updates apply per slot, and a wedged pull cancels its
+    /// speculative termination.
+    fn process_window(&mut self, w: Window) {
+        let n_lanes = w.lanes.len();
+        let gc = GcParams {
+            enabled: self.cfg.gc_enabled,
+            high: self.cfg.gc_high_pct,
+            low: self.cfg.gc_low_pct,
+        };
+        let mut slot_effects: Vec<Option<LaneEffects>> = Vec::new();
+        slot_effects.resize_with(w.n_slots, || None);
+        {
+            let pool = self.pool.as_ref().expect("windowed mode requires a pool");
+            let images = &self.images;
+            let (nodes, pods, interner) = self.state.lane_split();
+            let bounds = lane_bounds(nodes.len(), n_lanes);
+            let mut shards: Vec<Mutex<Shard<'_>>> = Vec::with_capacity(n_lanes);
+            let mut rest = nodes;
+            for (&(lo, hi), items) in bounds.iter().zip(w.lanes) {
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+                rest = tail;
+                shards.push(Mutex::new(Shard::new(lo, head, items)));
+            }
+            pool.run(n_lanes, &|lane| {
+                let mut shard = shards[lane].lock().expect("lane lock");
+                shard.process(pods, interner, images, gc);
+            });
+            for shard in shards {
+                let shard = shard.into_inner().expect("lane lock");
+                for eff in shard.effects {
+                    let slot = eff.slot;
+                    slot_effects[slot] = Some(eff);
+                }
+            }
+        }
+        for (slot, eff) in slot_effects.into_iter().enumerate() {
+            let eff = match eff {
+                Some(e) => e,
+                None => continue, // slot routed but produced no effects
+            };
+            for (at, pod, kind) in eff.log {
+                self.events.record(at, pod, kind);
+            }
+            if let Some((pod, outcome)) = eff.outcome {
+                let mapped = match outcome {
+                    LaneOutcome::Started => PodOutcome::Started,
+                    LaneOutcome::FailedPull => PodOutcome::FailedPull,
+                };
+                self.outcomes.insert(pod, mapped);
+            }
+            if let Some((image, layers)) = eff.remember {
+                self.images.remember(&image, &layers);
+            }
+            if !eff.started {
+                // The pull wedged: retract the speculative termination so
+                // the queue reads exactly as the sequential engine's.
+                if let Some(seq) = w.spec[slot] {
+                    self.queue.cancel(seq);
+                }
+            }
+        }
+        self.pulls.gc(self.clock.now());
     }
 
     // --- cluster volatility -----------------------------------------------
@@ -697,8 +1040,9 @@ impl Simulation {
         let pod = self.state.pod(pid).cloned().expect("queued pod exists");
         let (meta, required, bytes) = CycleContext::prepare(&mut self.state, &self.cache, &pod);
         let ctx = CycleContext::new(&self.state, &pod, meta, required.clone(), bytes);
+        let pool = self.pool.as_ref();
         let decision = match &mut self.scheduler {
-            SchedImpl::Lr(s) => s.schedule(&ctx),
+            SchedImpl::Lr(s) => s.schedule_with_pool(&ctx, pool),
             SchedImpl::Rl(s) => s.schedule(&ctx).map(|node| {
                 // Build an equivalent decision record for the RL pick.
                 let n = ctx.state.node(node);
@@ -850,29 +1194,40 @@ impl Simulation {
             return false;
         }
         let mut evicted_any = false;
-        let now = self.clock.now();
         for i in 0..self.state.node_count() {
-            let node = NodeId(i as u32);
-            let n = self.state.node(node);
-            if !n.is_up() {
-                continue; // a crashed node's disk is gone, not reclaimable
-            }
-            let (disk, used) = (n.disk.0 as f64, n.disk_used.0 as f64);
-            if disk > 0.0 && used / disk > self.cfg.gc_high_pct {
-                // Free down to the low-threshold usage.
-                let target = Bytes((disk * (1.0 - self.cfg.gc_low_pct)) as u64);
-                let freed = kubelet::gc_images(&mut self.state, &self.images, node, target);
-                if freed > Bytes::ZERO {
-                    evicted_any = true;
-                    self.events.record(
-                        now,
-                        NODE_SCOPE, // node-level event
-                        EventKind::Evicted { node, bytes: freed },
-                    );
-                }
-            }
+            evicted_any |= self.gc_check_node(NodeId(i as u32));
         }
         evicted_any
+    }
+
+    /// The per-node body of [`Simulation::gc_pressure_sweep`], also the
+    /// [`EventPayload::GcSweepNode`] handler (a termination changes only
+    /// its own node's in-use image set). The sharded lanes replicate this
+    /// check verbatim against their node slices.
+    fn gc_check_node(&mut self, node: NodeId) -> bool {
+        if !self.cfg.gc_enabled {
+            return false;
+        }
+        let now = self.clock.now();
+        let n = self.state.node(node);
+        if !n.is_up() {
+            return false; // a crashed node's disk is gone, not reclaimable
+        }
+        let (disk, used) = (n.disk.0 as f64, n.disk_used.0 as f64);
+        if disk > 0.0 && used / disk > self.cfg.gc_high_pct {
+            // Free down to the low-threshold usage.
+            let target = Bytes((disk * (1.0 - self.cfg.gc_low_pct)) as u64);
+            let freed = kubelet::gc_images(&mut self.state, &self.images, node, target);
+            if freed > Bytes::ZERO {
+                self.events.record(
+                    now,
+                    NODE_SCOPE, // node-level event
+                    EventKind::Evicted { node, bytes: freed },
+                );
+                return true;
+            }
+        }
+        false
     }
 
     /// Install the pulled image and start the container. Returns whether
@@ -1550,6 +1905,97 @@ mod tests {
             report.submitted
         );
         sim.state.check_invariants().unwrap();
+    }
+
+    fn render_fingerprint(report: &SimReport, sim: &Simulation) -> String {
+        format!("{}\n{}", report.render(), sim.events.render())
+    }
+
+    #[test]
+    fn sharded_run_is_byte_identical_to_sequential() {
+        // The acceptance core: the same churny, GC-heavy timed workload
+        // through 1, 2, and 3 lanes must produce bit-identical reports and
+        // event logs.
+        let run = |shards: usize| {
+            let reg = Registry::with_corpus();
+            let trace = WorkloadGen::new(
+                &reg,
+                WorkloadConfig {
+                    seed: 17,
+                    duration_range: Some((15.0, 150.0)),
+                    ..WorkloadConfig::default()
+                },
+            )
+            .trace(70);
+            let mut cfg = SimConfig::default();
+            cfg.inter_arrival_secs = Some(0.4);
+            cfg.gc_enabled = true;
+            cfg.retry_limit = 8;
+            cfg.shards = shards;
+            cfg.churn = Some(crate::sim::workload::ChurnConfig {
+                seed: 9,
+                horizon_secs: 90.0,
+                joins: 2,
+                drains: 1,
+                crash_fraction: 0.25,
+                outages: 1,
+                outage_secs: 15.0,
+                ..Default::default()
+            });
+            let mut sim = Simulation::new(nodes(5), reg, cfg);
+            let report = sim.run_trace(trace);
+            sim.state.check_invariants().unwrap();
+            assert!(report.accounting_balanced());
+            (render_fingerprint(&report, &sim), sim.events_queued())
+        };
+        let (seq, ev1) = run(1);
+        for shards in [2, 3] {
+            let (par, evn) = run(shards);
+            assert_eq!(ev1, evn, "events-queued count diverged at {shards} shards");
+            assert_eq!(seq, par, "shards={shards} diverged from the sequential engine");
+        }
+    }
+
+    #[test]
+    fn sharded_sequential_protocol_uses_fanout_only_and_matches() {
+        // Sequential arrival protocol: windows are disabled (arrival
+        // chaining makes pull resolutions coordinator events), but the
+        // scheduling fan-out still runs — results must be identical.
+        let run = |shards: usize| {
+            let reg = Registry::with_corpus();
+            let trace = WorkloadGen::new(&reg, WorkloadConfig::default()).trace(12);
+            let mut cfg = SimConfig::default();
+            cfg.shards = shards;
+            let mut sim = Simulation::new(nodes(4), reg, cfg);
+            let report = sim.run_trace(trace);
+            render_fingerprint(&report, &sim)
+        };
+        assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn sharded_more_lanes_than_nodes_is_fine() {
+        let run = |shards: usize| {
+            let reg = Registry::with_corpus();
+            let trace = WorkloadGen::new(
+                &reg,
+                WorkloadConfig {
+                    seed: 3,
+                    duration_range: Some((10.0, 60.0)),
+                    ..WorkloadConfig::default()
+                },
+            )
+            .trace(20);
+            let mut cfg = SimConfig::default();
+            cfg.inter_arrival_secs = Some(0.5);
+            cfg.gc_enabled = true;
+            cfg.shards = shards;
+            let mut sim = Simulation::new(nodes(2), reg, cfg);
+            let report = sim.run_trace(trace);
+            sim.state.check_invariants().unwrap();
+            render_fingerprint(&report, &sim)
+        };
+        assert_eq!(run(1), run(6), "empty lanes must not perturb the merge");
     }
 
     #[test]

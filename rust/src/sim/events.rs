@@ -18,14 +18,20 @@
 //!    same-instant retry sees the fully updated cluster,
 //! 3. at equal (timestamp, class), FIFO by insertion sequence.
 //!
-//! The canonical 11-class table lives in `docs/ARCHITECTURE.md`
+//! The canonical 12-class table lives in `docs/ARCHITECTURE.md`
 //! ("Same-timestamp ordering"); the private `EventPayload::class`
 //! method is its implementation, and `equal_times_order_by_class` in
 //! this module's tests pins every row.
+//!
+//! The sharded engine ([`crate::sim::shard`]) additionally classifies
+//! every payload as *node-local* ([`EventPayload::is_node_local`]) or
+//! coordinator-only, and may [`EventQueue::cancel`] a speculatively
+//! scheduled event before it fires (see `docs/ARCHITECTURE.md`,
+//! "Sharded event lanes").
 
 use crate::cluster::{NodeId, Pod, PodId};
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 
 /// What happens when an event fires.
 #[derive(Debug)]
@@ -71,6 +77,14 @@ pub enum EventPayload {
     },
     /// Kubelet image-GC pressure sweep across all nodes.
     GcSweep,
+    /// Kubelet image-GC pressure check for a single node — scheduled by a
+    /// pod termination (only that node's in-use image set changed). Unlike
+    /// the cluster-wide [`EventPayload::GcSweep`], this class is
+    /// node-local, so the sharded engine can run it on the node's lane.
+    GcSweepNode {
+        /// The node whose disk pressure is re-checked.
+        node: NodeId,
+    },
     /// Scheduling-queue back-off expiry: parked pods become schedulable.
     BackoffRelease,
     /// A pod is submitted to the API server.
@@ -93,14 +107,29 @@ impl EventPayload {
             EventPayload::NodeCrash { .. } => 6,
             EventPayload::RegistryOutageStart { .. } => 7,
             EventPayload::GcSweep => 8,
-            EventPayload::BackoffRelease => 9,
-            EventPayload::Arrival { .. } => 10,
+            EventPayload::GcSweepNode { .. } => 9,
+            EventPayload::BackoffRelease => 10,
+            EventPayload::Arrival { .. } => 11,
         }
     }
 
     /// Is this a recurring watcher tick (not "real" pending work)?
     pub fn is_watcher(&self) -> bool {
         matches!(self, EventPayload::WatcherTick)
+    }
+
+    /// Does this event only touch one node's state (pull completions, pod
+    /// terminations, per-node GC checks)? Node-local classes are the ones
+    /// the sharded engine routes onto per-node event lanes; everything
+    /// else is coordinator-only and acts as an epoch barrier (see
+    /// `docs/ARCHITECTURE.md`, "Sharded event lanes").
+    pub fn is_node_local(&self) -> bool {
+        matches!(
+            self,
+            EventPayload::PullComplete { .. }
+                | EventPayload::PodTermination { .. }
+                | EventPayload::GcSweepNode { .. }
+        )
     }
 }
 
@@ -114,6 +143,14 @@ pub struct QueuedEvent {
     seq: u64,
     /// What happens when it fires.
     pub payload: EventPayload,
+}
+
+impl QueuedEvent {
+    /// Globally unique insertion sequence number — the FIFO tie-break at
+    /// equal (time, class), and the handle [`EventQueue::cancel`] takes.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
 }
 
 impl PartialEq for QueuedEvent {
@@ -149,7 +186,12 @@ pub struct EventQueue {
     /// Events that represent real pending work (everything but WatcherTick)
     /// — used to decide when the recurring watcher may stop re-arming.
     non_watcher: usize,
+    /// Sequence numbers cancelled before firing ([`EventQueue::cancel`]);
+    /// their heap entries are dropped silently on the way out.
+    cancelled: HashSet<u64>,
     /// Total events ever pushed (observability for the scale harness).
+    /// Cancelled events are subtracted again, so the counter reads as if
+    /// they were never scheduled.
     pub pushed_total: u64,
 }
 
@@ -159,20 +201,52 @@ impl EventQueue {
         EventQueue::default()
     }
 
-    /// Schedule `payload` at absolute time `at` (must be finite).
-    pub fn push(&mut self, at: f64, payload: EventPayload) {
+    /// Schedule `payload` at absolute time `at` (must be finite). Returns
+    /// the event's sequence number — the handle [`EventQueue::cancel`]
+    /// takes; most callers ignore it.
+    pub fn push(&mut self, at: f64, payload: EventPayload) -> u64 {
         assert!(at.is_finite(), "non-finite event time {at}");
         if !payload.is_watcher() {
             self.non_watcher += 1;
         }
-        let ev = QueuedEvent { at, class: payload.class(), seq: self.next_seq, payload };
+        let seq = self.next_seq;
+        let ev = QueuedEvent { at, class: payload.class(), seq, payload };
         self.next_seq += 1;
         self.pushed_total += 1;
         self.heap.push(std::cmp::Reverse(ev));
+        seq
     }
 
-    /// Pop the next event in (time, class, seq) order.
+    /// Cancel a scheduled (non-watcher) event before it fires: the entry
+    /// is dropped silently when it reaches the head, and the push/pending
+    /// counters are rolled back so the queue reads as if the event was
+    /// never scheduled. Used by the sharded engine to retract a
+    /// speculatively scheduled termination whose pull turned out to wedge.
+    /// Cancelling an already-fired or unknown seq is a no-op only if the
+    /// seq is never reused — callers must pass seqs of live events.
+    pub fn cancel(&mut self, seq: u64) {
+        if self.cancelled.insert(seq) {
+            self.pushed_total -= 1;
+            self.non_watcher -= 1;
+        }
+    }
+
+    /// Drop cancelled entries sitting at the heap head so peek/pop see a
+    /// live event.
+    fn drop_cancelled_head(&mut self) {
+        while let Some(head) = self.heap.peek() {
+            let seq = head.0.seq;
+            if self.cancelled.remove(&seq) {
+                self.heap.pop();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Pop the next live event in (time, class, seq) order.
     pub fn pop(&mut self) -> Option<QueuedEvent> {
+        self.drop_cancelled_head();
         let ev = self.heap.pop()?.0;
         if !ev.payload.is_watcher() {
             self.non_watcher -= 1;
@@ -180,7 +254,15 @@ impl EventQueue {
         Some(ev)
     }
 
-    /// Time of the next event, if any.
+    /// The next live event, without removing it — the sharded engine peeks
+    /// to decide whether the head extends the current lane window.
+    pub fn peek(&mut self) -> Option<&QueuedEvent> {
+        self.drop_cancelled_head();
+        self.heap.peek().map(|e| &e.0)
+    }
+
+    /// Time of the next event, if any. (May report a cancelled entry that
+    /// has not been skipped yet; [`EventQueue::peek`] never does.)
     pub fn peek_at(&self) -> Option<f64> {
         self.heap.peek().map(|e| e.0.at)
     }
@@ -190,7 +272,8 @@ impl EventQueue {
         self.non_watcher > 0
     }
 
-    /// Events currently queued.
+    /// Events currently queued (may include cancelled entries not yet
+    /// skipped out of the heap).
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -228,10 +311,11 @@ mod tests {
         let mut q = EventQueue::new();
         // Push in reverse-class order; pops must come back sorted per the
         // module-doc table: watcher, outage end, join, pull, termination,
-        // drain, crash, outage start, gc, backoff, arrival.
+        // drain, crash, outage start, gc, per-node gc, backoff, arrival.
         let mut b = crate::cluster::PodBuilder::new();
         q.push(5.0, EventPayload::Arrival { pod: b.build("redis:7.2", crate::cluster::Resources::ZERO) });
         q.push(5.0, EventPayload::BackoffRelease);
+        q.push(5.0, EventPayload::GcSweepNode { node: NodeId(3) });
         q.push(5.0, EventPayload::GcSweep);
         q.push(5.0, EventPayload::RegistryOutageStart { until: 9.0 });
         q.push(5.0, EventPayload::NodeCrash { node: NodeId(2) });
@@ -244,8 +328,53 @@ mod tests {
         let order = times_and_classes(&mut q);
         assert_eq!(
             order.iter().map(|(_, c)| *c).collect::<Vec<_>>(),
-            (0..=10).collect::<Vec<_>>()
+            (0..=11).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn node_local_classes_are_the_lane_set() {
+        assert!(EventPayload::PullComplete { pod: PodId(1) }.is_node_local());
+        assert!(EventPayload::PodTermination { pod: PodId(1), epoch: 0 }.is_node_local());
+        assert!(EventPayload::GcSweepNode { node: NodeId(0) }.is_node_local());
+        for p in [
+            EventPayload::WatcherTick,
+            EventPayload::RegistryOutageEnd,
+            EventPayload::NodeJoin,
+            EventPayload::NodeDrain { node: NodeId(0) },
+            EventPayload::NodeCrash { node: NodeId(0) },
+            EventPayload::RegistryOutageStart { until: 1.0 },
+            EventPayload::GcSweep,
+            EventPayload::BackoffRelease,
+        ] {
+            assert!(!p.is_node_local(), "{p:?} must be coordinator-only");
+        }
+    }
+
+    #[test]
+    fn cancelled_events_never_fire_and_counters_roll_back() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventPayload::GcSweep);
+        let seq = q.push(2.0, EventPayload::PodTermination { pod: PodId(9), epoch: 0 });
+        q.push(3.0, EventPayload::BackoffRelease);
+        assert_eq!(q.pushed_total, 3);
+        q.cancel(seq);
+        assert_eq!(q.pushed_total, 2, "cancel reads as never-scheduled");
+        let order = times_and_classes(&mut q);
+        assert_eq!(order.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn peek_skips_cancelled_head() {
+        let mut q = EventQueue::new();
+        let seq = q.push(1.0, EventPayload::GcSweep);
+        q.push(2.0, EventPayload::BackoffRelease);
+        q.cancel(seq);
+        let head = q.peek().expect("live event remains");
+        assert_eq!(head.at, 2.0);
+        assert!(q.has_pending_work());
+        assert_eq!(q.pop().unwrap().at, 2.0);
+        assert!(q.pop().is_none());
     }
 
     #[test]

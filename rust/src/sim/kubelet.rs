@@ -7,10 +7,10 @@
 
 use super::download::{PullManager, PullPlan};
 use super::bandwidth::LinkModel;
-use crate::cluster::{ClusterState, NodeId, PodId};
-use crate::registry::{ImageRef, LayerSet};
+use crate::cluster::{ClusterState, Node, NodeId, Pod, PodId};
+use crate::registry::{ImageRef, LayerInterner, LayerSet};
 use crate::util::units::Bytes;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// A pod whose layers are being pulled; the container starts at `ready_at`.
 #[derive(Debug, Clone)]
@@ -119,32 +119,76 @@ pub fn complete_pull(state: &mut ClusterState, pending: &PendingStart) -> Result
     state.install_image(pending.node, &pending.image, &pending.layers)
 }
 
-/// Image GC: evict images (and their now-unreferenced layers) that no
+/// Read access to the image → layer-set memo, abstracted so kubelet GC
+/// runs identically against the simulation-wide [`ImageLayerStore`]
+/// (sequential engine) and a lane-local [`OverlayImages`] view (sharded
+/// engine, where same-window installs are buffered per lane).
+pub trait ImageLayersSource {
+    /// Layer set of a remembered image, if known.
+    fn layers_of(&self, image: &ImageRef) -> Option<&LayerSet>;
+}
+
+impl ImageLayersSource for ImageLayerStore {
+    fn layers_of(&self, image: &ImageRef) -> Option<&LayerSet> {
+        self.layers(image)
+    }
+}
+
+/// An [`ImageLayersSource`] that checks a lane's not-yet-merged installs
+/// before the shared store. Every image cached on a node was installed by
+/// a pull *on that node* (same lane), so base + own-lane overlay always
+/// reproduces the sequential engine's view (entries are idempotent: an
+/// image key always maps to the same layer set).
+pub struct OverlayImages<'a> {
+    base: &'a ImageLayerStore,
+    overlay: &'a [(ImageRef, LayerSet)],
+}
+
+impl<'a> OverlayImages<'a> {
+    /// View `overlay` (this lane's window-local installs) over `base`.
+    pub fn new(base: &'a ImageLayerStore, overlay: &'a [(ImageRef, LayerSet)]) -> OverlayImages<'a> {
+        OverlayImages { base, overlay }
+    }
+}
+
+impl ImageLayersSource for OverlayImages<'_> {
+    fn layers_of(&self, image: &ImageRef) -> Option<&LayerSet> {
+        self.overlay
+            .iter()
+            .rev()
+            .find(|(i, _)| i == image)
+            .map(|(_, s)| s)
+            .or_else(|| self.base.layers(image))
+    }
+}
+
+/// Image GC against one node directly — the body of [`gc_images`], split
+/// out so the sharded engine's lanes (which own `&mut Node` slices and a
+/// read view of the pod table) evict exactly as the sequential engine
+/// does. Evicts images (and their now-unreferenced layers) that no
 /// running pod uses, oldest-first, until `free_target` bytes are free.
 /// Returns bytes freed.
-pub fn gc_images(
-    state: &mut ClusterState,
-    images: &ImageLayerStore,
-    node: NodeId,
+pub fn gc_images_node(
+    node: &mut Node,
+    pods: &BTreeMap<PodId, Pod>,
+    interner: &LayerInterner,
+    images: &dyn ImageLayersSource,
     free_target: Bytes,
 ) -> Bytes {
     let mut freed = Bytes::ZERO;
     loop {
-        if state.node(node).disk_free() >= free_target {
+        if node.disk_free() >= free_target {
             break;
         }
         // Images required by running pods on this node.
-        let in_use: Vec<ImageRef> = state
-            .pods_on(node)
+        let in_use: Vec<ImageRef> = node
+            .pods
+            .iter()
+            .filter_map(|p| pods.get(p))
             .map(|p| p.image.clone())
             .collect();
         // Oldest cached image not in use (images Vec is insertion-ordered).
-        let victim = state
-            .node(node)
-            .images
-            .iter()
-            .find(|img| !in_use.contains(img))
-            .cloned();
+        let victim = node.images.iter().find(|img| !in_use.contains(img)).cloned();
         let victim = match victim {
             Some(v) => v,
             None => break, // everything in use; cannot free more
@@ -153,21 +197,34 @@ pub fn gc_images(
         // image on this node, resolved through the per-simulation image
         // store (the node only tracks the union of its layers).
         let mut shared_with_others = LayerSet::new();
-        for other in state.node(node).images.clone() {
+        for other in node.images.clone() {
             if other == victim {
                 continue;
             }
-            if let Some(set) = images.layers(&other) {
+            if let Some(set) = images.layers_of(&other) {
                 shared_with_others.union_with(set);
             }
         }
-        if let Some(victim_layers) = images.layers(&victim) {
+        if let Some(victim_layers) = images.layers_of(&victim) {
             let unique: Vec<_> = victim_layers.difference_ids(&shared_with_others);
-            freed += state.evict_layers(node, &unique);
+            freed += crate::cluster::evict_layers_on(node, interner, &unique);
         }
-        state.remove_image(node, &victim);
+        node.images.retain(|i| i != &victim);
     }
     freed
+}
+
+/// Image GC: evict images (and their now-unreferenced layers) that no
+/// running pod uses, oldest-first, until `free_target` bytes are free.
+/// Returns bytes freed. (Delegates to [`gc_images_node`].)
+pub fn gc_images(
+    state: &mut ClusterState,
+    images: &ImageLayerStore,
+    node: NodeId,
+    free_target: Bytes,
+) -> Bytes {
+    let (nodes, pods, interner) = state.lane_split();
+    gc_images_node(&mut nodes[node.0 as usize], pods, interner, images, free_target)
 }
 
 #[cfg(test)]

@@ -13,6 +13,7 @@ pub mod events;
 pub mod kubelet;
 pub mod metrics;
 pub mod p2p;
+pub mod shard;
 pub mod trace;
 pub mod workload;
 
@@ -22,6 +23,7 @@ pub use download::PullManager;
 pub use engine::{SchedulerChoice, SimConfig, SimReport, Simulation};
 pub use events::{EventPayload, EventQueue};
 pub use metrics::{ClusterSnapshot, PodRecord};
+pub use shard::LanePool;
 pub use trace::{ErrorMode, Trace, TraceError, TraceEvent, TraceFormat, TraceOptions, TraceStats};
 pub use workload::{
     ChurnAction, ChurnConfig, ChurnEvent, ChurnModel, Popularity, WorkloadConfig, WorkloadGen,

@@ -1,0 +1,676 @@
+//! Sharded per-node event lanes — the parallel substrate of the engine's
+//! `--shards N` mode.
+//!
+//! The engine partitions the node table into `N` contiguous slices
+//! ([`lane_bounds`]) and classifies every event as *node-local* (pull
+//! completions, pod terminations, per-node GC checks — see
+//! [`super::events::EventPayload::is_node_local`]) or *coordinator-only*
+//! (scheduling cycles, arrivals, churn, registry outages, watcher ticks).
+//! Between two coordinator events the coordinator drains a **window** of
+//! node-local events from the global queue in (time, class, seq) order,
+//! routes each to the lane owning its node, and then advances all lanes
+//! in parallel on a [`LanePool`]. Lanes mutate only their own `&mut
+//! [Node]` slice and buffer every globally visible side effect (the
+//! crate-internal `LaneEffects`); the coordinator applies the buffers
+//! back in the original pop order, which makes the report and event log
+//! byte-identical to the sequential engine by construction. The
+//! merge-order proof sketch lives in `docs/ARCHITECTURE.md` ("Sharded
+//! event lanes").
+//!
+//! The same pool also fans the read-only half of a scheduling cycle
+//! (filters, score plugins, the layer-sharing pass) across node chunks via
+//! [`par_fill`] — chunk outputs land at fixed indices, so reductions run
+//! in the sequential engine's exact order regardless of which worker
+//! computed what.
+//!
+//! **Work stealing**: chunks/lanes are claimed from a shared atomic
+//! counter, not pinned to threads — a worker that finishes its lane early
+//! claims the next unclaimed one, so an overloaded lane's backlog is
+//! absorbed by idle workers without affecting outputs (claiming order
+//! never changes where a chunk's results land).
+
+use super::kubelet::{self, ImageLayerStore, OverlayImages, PendingStart};
+use crate::cluster::{install_image_on, EventKind, Node, Pod, PodId, Resources, NODE_SCOPE};
+use crate::cluster::NodeId;
+use crate::registry::{ImageRef, LayerInterner, LayerSet};
+use crate::util::units::Bytes;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+// --- partition math -------------------------------------------------------
+
+/// Partition `n` items into `lanes` contiguous `(lo, hi)` ranges whose
+/// sizes differ by at most one (the first `n % lanes` ranges get the extra
+/// item). Empty ranges are produced when `lanes > n`.
+pub fn lane_bounds(n: usize, lanes: usize) -> Vec<(usize, usize)> {
+    let lanes = lanes.max(1);
+    let q = n / lanes;
+    let r = n % lanes;
+    let mut out = Vec::with_capacity(lanes);
+    let mut lo = 0usize;
+    for i in 0..lanes {
+        let size = q + usize::from(i < r);
+        out.push((lo, lo + size));
+        lo += size;
+    }
+    out
+}
+
+/// The lane owning item `i` under the [`lane_bounds`] partition of `n`
+/// items into `lanes` ranges (O(1) inverse of the bounds table).
+pub fn lane_of(i: usize, n: usize, lanes: usize) -> usize {
+    let lanes = lanes.max(1);
+    debug_assert!(i < n, "item {i} outside partition of {n}");
+    let q = n / lanes;
+    let r = n % lanes;
+    let big = (q + 1) * r; // items covered by the r larger lanes
+    if i < big {
+        i / (q + 1)
+    } else {
+        r + (i - big) / q.max(1)
+    }
+}
+
+// --- the worker pool ------------------------------------------------------
+
+/// A persistent worker pool for lane windows and scheduling fan-outs.
+///
+/// `threads` counts the caller: a pool of `N` spawns `N − 1` workers, and
+/// the thread calling [`LanePool::run`] claims chunks alongside them.
+/// Claiming is the work-stealing mechanism: chunks are handed out from one
+/// atomic counter, so load imbalance between lanes self-corrects without
+/// any effect on where results land (determinism by construction).
+pub struct LanePool {
+    workers: Vec<JoinHandle<()>>,
+    senders: Vec<mpsc::Sender<Msg>>,
+    threads: usize,
+}
+
+enum Msg {
+    Job(Job),
+    Shutdown,
+}
+
+/// Type-erased pointer to the caller's task closure. Deliberately a raw
+/// pointer, not a reference: a worker that wakes up *after*
+/// [`LanePool::run`] returned may still move a stale `Job` out of its
+/// channel, and moving a dangling reference would be UB — moving a raw
+/// pointer is not. The pointer is only dereferenced under the
+/// `i < n_chunks` claim guard, which can only succeed while `run` is
+/// still blocked (see `run_job`).
+#[derive(Clone, Copy)]
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared access from any thread is fine),
+// and the pointer's validity window is enforced by `run`'s barrier.
+unsafe impl Send for TaskRef {}
+
+#[derive(Clone)]
+struct Job {
+    task: TaskRef,
+    state: Arc<JobState>,
+}
+
+struct JobState {
+    next: AtomicUsize,
+    done: AtomicUsize,
+    n_chunks: usize,
+    panicked: AtomicBool,
+}
+
+fn run_job(job: &Job) {
+    loop {
+        let i = job.state.next.fetch_add(1, Ordering::SeqCst);
+        if i >= job.state.n_chunks {
+            break;
+        }
+        // SAFETY: a chunk index below `n_chunks` can only be claimed while
+        // `run` is still blocked waiting for `done == n_chunks` (every
+        // claim must be completed before `run` returns), so the caller's
+        // closure is alive for the duration of this call.
+        let task: &(dyn Fn(usize) + Sync) = unsafe { &*job.task.0 };
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(i))).is_ok();
+        if !ok {
+            job.state.panicked.store(true, Ordering::SeqCst);
+        }
+        // The completion count is the release point `run` synchronizes on.
+        job.state.done.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+impl LanePool {
+    /// A pool of `threads` total workers (including the calling thread);
+    /// `threads <= 1` spawns nothing and `run` executes inline.
+    pub fn new(threads: usize) -> LanePool {
+        let threads = threads.max(1);
+        let mut workers = Vec::with_capacity(threads - 1);
+        let mut senders = Vec::with_capacity(threads - 1);
+        for i in 1..threads {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            let handle = std::thread::Builder::new()
+                .name(format!("lrsched-lane-{i}"))
+                .spawn(move || loop {
+                    // Jobs arrive back-to-back on the scheduling hot path
+                    // (several fan-outs per cycle); spin briefly before
+                    // blocking so a futex sleep/wake does not dominate
+                    // small jobs.
+                    let mut msg = None;
+                    for _ in 0..20_000 {
+                        match rx.try_recv() {
+                            Ok(m) => {
+                                msg = Some(m);
+                                break;
+                            }
+                            Err(mpsc::TryRecvError::Empty) => std::hint::spin_loop(),
+                            Err(mpsc::TryRecvError::Disconnected) => return,
+                        }
+                    }
+                    let msg = match msg {
+                        Some(m) => m,
+                        None => match rx.recv() {
+                            Ok(m) => m,
+                            Err(_) => return,
+                        },
+                    };
+                    match msg {
+                        Msg::Job(job) => run_job(&job),
+                        Msg::Shutdown => break,
+                    }
+                })
+                .expect("spawn lane worker");
+            workers.push(handle);
+            senders.push(tx);
+        }
+        LanePool { workers, senders, threads }
+    }
+
+    /// Total workers, including the calling thread.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `task(chunk)` for every `chunk in 0..n_chunks` across the pool,
+    /// returning once all chunks completed. Chunks are claimed dynamically
+    /// (work stealing); a panicking task fails the whole call after every
+    /// chunk has drained (no worker is left running).
+    pub fn run(&self, n_chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if n_chunks == 0 {
+            return;
+        }
+        let state = Arc::new(JobState {
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            n_chunks,
+            panicked: AtomicBool::new(false),
+        });
+        // Lifetime erasure happens here (reference → raw pointer, then a
+        // ptr cast that only widens the trait-object lifetime bound); the
+        // deref site in `run_job` proves validity via the claim guard,
+        // because this function blocks below until `done == n_chunks`.
+        let raw: *const (dyn Fn(usize) + Sync + '_) = task;
+        let job = Job {
+            task: TaskRef(raw as *const (dyn Fn(usize) + Sync)),
+            state: Arc::clone(&state),
+        };
+        for tx in &self.senders {
+            tx.send(Msg::Job(job.clone())).expect("lane worker alive");
+        }
+        // The caller is a worker too.
+        run_job(&job);
+        while state.done.load(Ordering::SeqCst) < n_chunks {
+            std::thread::yield_now();
+        }
+        assert!(
+            !state.panicked.load(Ordering::SeqCst),
+            "lane worker panicked during a parallel window"
+        );
+    }
+}
+
+impl Drop for LanePool {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// --- deterministic parallel fill -----------------------------------------
+
+struct Chunk<'a, T> {
+    base: usize,
+    items: &'a mut [T],
+}
+
+/// Fill `out[i] = f(i, …)` for every index in parallel. Results land at
+/// fixed indices, so downstream reductions iterate in the sequential
+/// engine's order regardless of scheduling — the primitive behind the
+/// sharded filter/score/layer passes.
+pub fn par_fill<T, F>(pool: &LanePool, out: &mut [T], f: &F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    // More chunks than workers so a slow chunk can be compensated by idle
+    // workers claiming the rest (work stealing granularity).
+    let n_chunks = (pool.threads() * 2).clamp(1, n);
+    let bounds = lane_bounds(n, n_chunks);
+    let mut chunks: Vec<Mutex<Chunk<'_, T>>> = Vec::with_capacity(n_chunks);
+    let mut rest = out;
+    for &(lo, hi) in &bounds {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+        rest = tail;
+        chunks.push(Mutex::new(Chunk { base: lo, items: head }));
+    }
+    pool.run(n_chunks, &|c| {
+        let mut g = chunks[c].lock().expect("chunk lock");
+        let base = g.base;
+        for (k, item) in g.items.iter_mut().enumerate() {
+            f(base + k, item);
+        }
+    });
+}
+
+/// Row-oriented [`par_fill`]: treat `out` as a dense row-major matrix of
+/// `out.len() / width` rows and fill `f(row_index, row_slice)` in
+/// parallel. One flat allocation serves a whole scheduling cycle's score
+/// matrix — no per-row `Vec`s on the hot path.
+pub fn par_fill_rows<T, F>(pool: &LanePool, out: &mut [T], width: usize, f: &F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if width == 0 {
+        return;
+    }
+    debug_assert_eq!(out.len() % width, 0, "out is not a whole number of rows");
+    let n = out.len() / width;
+    if n == 0 {
+        return;
+    }
+    let n_chunks = (pool.threads() * 2).clamp(1, n);
+    let bounds = lane_bounds(n, n_chunks);
+    let mut chunks: Vec<Mutex<Chunk<'_, T>>> = Vec::with_capacity(n_chunks);
+    let mut rest = out;
+    for &(lo, hi) in &bounds {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * width);
+        rest = tail;
+        chunks.push(Mutex::new(Chunk { base: lo, items: head }));
+    }
+    pool.run(n_chunks, &|c| {
+        let mut g = chunks[c].lock().expect("chunk lock");
+        let base = g.base;
+        for (k, row) in g.items.chunks_mut(width).enumerate() {
+            f(base + k, row);
+        }
+    });
+}
+
+// --- lane work items and effects -----------------------------------------
+
+/// GC knobs a lane needs to replicate the engine's per-node sweep.
+#[derive(Clone, Copy)]
+pub(crate) struct GcParams {
+    pub enabled: bool,
+    pub high: f64,
+    pub low: f64,
+}
+
+/// One node-local unit of work routed to a lane by the coordinator.
+pub(crate) enum LaneTask {
+    /// A pull completed: install the image and start the container
+    /// (the lane half of the engine's `finish_pull`).
+    Pull {
+        /// The in-flight pull, removed from the coordinator's pending map.
+        p: PendingStart,
+    },
+    /// A pod terminated: release its resources on its node (the binding
+    /// entry was already removed by the coordinator).
+    Term { pod: PodId, node: NodeId, requests: Resources },
+    /// Per-node kubelet GC pressure check.
+    Sweep { t: f64, node: NodeId },
+}
+
+/// A routed task tagged with its global pop-order slot.
+pub(crate) struct LaneItem {
+    pub slot: usize,
+    pub task: LaneTask,
+}
+
+/// Terminal pod outcome a lane observed (mapped onto the engine's private
+/// outcome enum at merge time).
+pub(crate) enum LaneOutcome {
+    /// Container started.
+    Started,
+    /// Image install wedged (ImagePullBackOff analog).
+    FailedPull,
+}
+
+/// Globally visible side effects of one lane task, buffered for the
+/// coordinator to apply in pop order at the window barrier.
+pub(crate) struct LaneEffects {
+    pub slot: usize,
+    /// Event-log records, in the exact order the sequential engine emits.
+    pub log: Vec<(f64, PodId, EventKind)>,
+    /// Terminal-outcome update for one pod.
+    pub outcome: Option<(PodId, LaneOutcome)>,
+    /// Image → layer-set memo entry (`ImageLayerStore::remember`).
+    pub remember: Option<(ImageRef, LayerSet)>,
+    /// Did the container start? `false` retracts the speculatively
+    /// scheduled termination event.
+    pub started: bool,
+}
+
+/// One event lane: a contiguous slice of the node table plus the window's
+/// routed work, processed in pop order, with effects buffered.
+pub(crate) struct Shard<'a> {
+    /// Global node id of `nodes[0]`.
+    pub base: usize,
+    /// This lane's slice of the node table.
+    pub nodes: &'a mut [Node],
+    /// Routed work in global pop order.
+    pub items: Vec<LaneItem>,
+    /// Buffered effects, one per item.
+    pub effects: Vec<LaneEffects>,
+    /// Window-local image installs (read by same-window GC on this lane).
+    overlay: Vec<(ImageRef, LayerSet)>,
+}
+
+impl<'a> Shard<'a> {
+    /// A lane over `nodes`, whose first element is global node `base`.
+    pub fn new(base: usize, nodes: &'a mut [Node], items: Vec<LaneItem>) -> Shard<'a> {
+        let cap = items.len();
+        Shard { base, nodes, items, effects: Vec::with_capacity(cap), overlay: Vec::new() }
+    }
+
+    /// Process every routed item in order, mirroring the sequential
+    /// engine's handlers exactly (`finish_pull`, the unbind release, the
+    /// per-node GC check) but against this lane's node slice, with all
+    /// globally visible effects buffered.
+    pub fn process(
+        &mut self,
+        pods: &BTreeMap<PodId, Pod>,
+        interner: &LayerInterner,
+        images: &ImageLayerStore,
+        gc: GcParams,
+    ) {
+        let base = self.base;
+        let nodes = &mut *self.nodes;
+        let overlay = &mut self.overlay;
+        let effects = &mut self.effects;
+        let items = std::mem::take(&mut self.items);
+        for item in items {
+            let mut eff = LaneEffects {
+                slot: item.slot,
+                log: Vec::new(),
+                outcome: None,
+                remember: None,
+                started: true,
+            };
+            match item.task {
+                LaneTask::Pull { p } => {
+                    let nidx = p.node.0 as usize - base;
+                    let now = p.plan.ready_at;
+                    if gc.enabled {
+                        let need = p.layers.difference_bytes(&nodes[nidx].layers, interner);
+                        if need > nodes[nidx].disk_free() {
+                            let view = OverlayImages::new(images, overlay);
+                            let freed = kubelet::gc_images_node(
+                                &mut nodes[nidx],
+                                pods,
+                                interner,
+                                &view,
+                                need,
+                            );
+                            if freed > Bytes::ZERO {
+                                eff.log.push((
+                                    now,
+                                    p.pod,
+                                    EventKind::Evicted { node: p.node, bytes: freed },
+                                ));
+                            }
+                        }
+                    }
+                    match install_image_on(&mut nodes[nidx], interner, &p.image, &p.layers) {
+                        Ok(_) => {
+                            overlay.push((p.image.clone(), p.layers.clone()));
+                            eff.remember = Some((p.image, p.layers));
+                            eff.outcome = Some((p.pod, LaneOutcome::Started));
+                            eff.log.push((
+                                now,
+                                p.pod,
+                                EventKind::PullFinished {
+                                    node: p.node,
+                                    secs: now - p.plan.start,
+                                },
+                            ));
+                            eff.log.push((now, p.pod, EventKind::Started { node: p.node }));
+                        }
+                        Err(e) => {
+                            // Disk overcommitted by concurrent binds: the
+                            // pod wedges (ImagePullBackOff analog).
+                            eff.outcome = Some((p.pod, LaneOutcome::FailedPull));
+                            eff.log.push((
+                                now,
+                                p.pod,
+                                EventKind::Unschedulable { reason: format!("pull failed: {e}") },
+                            ));
+                            eff.started = false;
+                        }
+                    }
+                }
+                LaneTask::Term { pod, node, requests } => {
+                    // Binding removal already happened on the coordinator;
+                    // this is the node half of `ClusterState::unbind`.
+                    nodes[node.0 as usize - base].release(pod, requests);
+                }
+                LaneTask::Sweep { t, node } => {
+                    let nidx = node.0 as usize - base;
+                    let n = &mut nodes[nidx];
+                    if gc.enabled && n.is_up() {
+                        let (disk, used) = (n.disk.0 as f64, n.disk_used.0 as f64);
+                        if disk > 0.0 && used / disk > gc.high {
+                            let target = Bytes((disk * (1.0 - gc.low)) as u64);
+                            let view = OverlayImages::new(images, overlay);
+                            let freed =
+                                kubelet::gc_images_node(n, pods, interner, &view, target);
+                            if freed > Bytes::ZERO {
+                                eff.log.push((
+                                    t,
+                                    NODE_SCOPE,
+                                    EventKind::Evicted { node, bytes: freed },
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            effects.push(eff);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn bounds_partition_exactly() {
+        for n in 0..40 {
+            for lanes in 1..8 {
+                let b = lane_bounds(n, lanes);
+                assert_eq!(b.len(), lanes);
+                assert_eq!(b[0].0, 0);
+                assert_eq!(b[lanes - 1].1, n);
+                for w in b.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "ranges must be contiguous");
+                }
+                let sizes: Vec<usize> = b.iter().map(|&(lo, hi)| hi - lo).collect();
+                let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(max - min <= 1, "sizes differ by more than one: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_of_inverts_bounds() {
+        for n in 1..40 {
+            for lanes in 1..8 {
+                let b = lane_bounds(n, lanes);
+                for i in 0..n {
+                    let l = lane_of(i, n, lanes);
+                    assert!(b[l].0 <= i && i < b[l].1, "item {i} not in lane {l} of {b:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_runs_every_chunk_exactly_once() {
+        let pool = LanePool::new(4);
+        let sum = AtomicU64::new(0);
+        let hits = AtomicUsize::new(0);
+        pool.run(100, &|i| {
+            sum.fetch_add(i as u64, Ordering::SeqCst);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 100);
+        assert_eq!(sum.load(Ordering::SeqCst), 99 * 100 / 2);
+        // The pool is reusable across jobs.
+        let again = AtomicUsize::new(0);
+        pool.run(7, &|_| {
+            again.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(again.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = LanePool::new(1);
+        let hits = AtomicUsize::new(0);
+        pool.run(13, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 13);
+    }
+
+    #[test]
+    #[should_panic(expected = "lane worker panicked")]
+    fn task_panics_fail_the_run() {
+        let pool = LanePool::new(3);
+        pool.run(8, &|i| {
+            if i == 5 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn par_fill_results_land_at_fixed_indices() {
+        let pool = LanePool::new(4);
+        let mut out = vec![0usize; 257];
+        par_fill(&pool, &mut out, &|i, slot| {
+            *slot = i * i;
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn par_fill_rows_fills_dense_matrices() {
+        let pool = LanePool::new(3);
+        let width = 5;
+        let rows = 37;
+        let mut out = vec![0usize; rows * width];
+        par_fill_rows(&pool, &mut out, width, &|i, row| {
+            assert_eq!(row.len(), width);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = i * 100 + j;
+            }
+        });
+        for i in 0..rows {
+            for j in 0..width {
+                assert_eq!(out[i * width + j], i * 100 + j);
+            }
+        }
+        // Degenerate shapes are no-ops, not panics.
+        let mut empty: Vec<usize> = Vec::new();
+        par_fill_rows(&pool, &mut empty, 4, &|_, _| unreachable!());
+        par_fill_rows(&pool, &mut out, 0, &|_, _| unreachable!());
+    }
+
+    #[test]
+    fn shard_processes_pull_and_sweep_like_the_engine() {
+        use crate::cluster::{ClusterState, Node, PodBuilder};
+        use crate::registry::hub;
+        use crate::sim::download::PullPlan;
+        use crate::util::units::Bandwidth;
+
+        let mut state = ClusterState::new();
+        state.add_node(Node::new(
+            NodeId(0),
+            "n0",
+            Resources::cores_gb(4.0, 4.0),
+            Bytes::from_gb(10.0),
+            Bandwidth::from_mbps(10.0),
+        ));
+        let corpus = hub::corpus();
+        let redis = corpus.iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
+        let (ids, layers) = state.intern_image(redis);
+        let mut b = PodBuilder::new();
+        let pod = state.submit_pod(b.build("redis:7.2", Resources::cores_gb(0.5, 0.5)));
+
+        let pending = PendingStart {
+            pod,
+            node: NodeId(0),
+            image: redis.image_ref(),
+            layers: layers.clone(),
+            plan: PullPlan {
+                bytes: redis.total_size,
+                start: 1.0,
+                finish: 7.0,
+                ready_at: 7.0,
+                new_layers: ids,
+            },
+            wan_bytes: redis.total_size,
+            p2p_bytes: Bytes::ZERO,
+        };
+
+        let images = ImageLayerStore::new();
+        let gc = GcParams { enabled: true, high: 0.85, low: 0.70 };
+        let (nodes, pods, interner) = state.lane_split();
+        let mut shard = Shard::new(
+            0,
+            nodes,
+            vec![
+                LaneItem { slot: 0, task: LaneTask::Pull { p: pending } },
+                LaneItem { slot: 1, task: LaneTask::Sweep { t: 7.0, node: NodeId(0) } },
+            ],
+        );
+        shard.process(pods, interner, &images, gc);
+
+        assert_eq!(shard.effects.len(), 2);
+        let pull_eff = &shard.effects[0];
+        assert!(pull_eff.started);
+        assert!(matches!(pull_eff.outcome, Some((p, LaneOutcome::Started)) if p == pod));
+        assert!(pull_eff.remember.is_some());
+        assert_eq!(pull_eff.log.len(), 2, "PullFinished then Started");
+        assert!(matches!(pull_eff.log[0].2, EventKind::PullFinished { .. }));
+        assert!(matches!(pull_eff.log[1].2, EventKind::Started { .. }));
+        // Below the pressure threshold: the sweep evicts nothing.
+        assert!(shard.effects[1].log.is_empty());
+        assert!(shard.nodes[0].has_image(&redis.image_ref()));
+        assert_eq!(shard.nodes[0].disk_used, redis.total_size);
+    }
+}

@@ -261,8 +261,19 @@ struct RawRow {
     instances: u64,
 }
 
-/// Parse a trace file from `path`.
+/// Parse a trace file from `path`. Files ending in `.gz` are gzip
+/// members (real cluster traces ship compressed — e.g. Alibaba's
+/// `batch_task.csv.gz`): they are decompressed in memory via the
+/// dependency-free [`crate::util::gzip`] decoder and then streamed
+/// line-by-line exactly like a plain file.
 pub fn load(path: &Path, opts: &TraceOptions) -> Result<Trace, TraceError> {
+    if path.extension().and_then(|e| e.to_str()) == Some("gz") {
+        let raw = std::fs::read(path)
+            .map_err(|e| TraceError::Io(format!("{}: {e}", path.display())))?;
+        let plain = crate::util::gzip::decompress(&raw)
+            .map_err(|e| TraceError::Io(format!("{}: {e}", path.display())))?;
+        return parse_reader(std::io::Cursor::new(plain), opts);
+    }
     let file = std::fs::File::open(path)
         .map_err(|e| TraceError::Io(format!("{}: {e}", path.display())))?;
     parse_reader(std::io::BufReader::new(file), opts)

@@ -1,0 +1,472 @@
+//! Gzip (RFC 1952) + DEFLATE (RFC 1951) decompression, dependency-free.
+//!
+//! The trace importer accepts `--trace foo.csv.gz`; real cluster traces
+//! ship gzipped (Alibaba `batch_task.csv.gz` is ~2 GB compressed). The
+//! crate is dependency-free by design (see `src/util/`), so instead of
+//! pulling in `flate2` this module implements the inflate side of the
+//! format directly: a bit-level reader, canonical-Huffman decoding (the
+//! counting scheme from zlib's `puff`), all three block types, and the
+//! CRC-32/ISIZE trailer check. Decompression is one-shot into a `Vec` —
+//! the importer then streams lines from the buffer exactly as it does
+//! from a plain file.
+
+use std::fmt;
+
+/// Why a gzip stream failed to decompress.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GzipError {
+    /// Input ended before the stream was complete.
+    Truncated,
+    /// The two-byte gzip magic (`1f 8b`) is missing.
+    BadMagic,
+    /// Structurally valid gzip, but a feature this decoder rejects
+    /// (e.g. a compression method other than DEFLATE).
+    Unsupported(&'static str),
+    /// The DEFLATE stream is internally inconsistent.
+    Corrupt(&'static str),
+    /// The decompressed bytes do not match the stored CRC-32.
+    CrcMismatch,
+    /// The decompressed length does not match the stored ISIZE.
+    SizeMismatch,
+}
+
+impl fmt::Display for GzipError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GzipError::Truncated => write!(f, "gzip stream truncated"),
+            GzipError::BadMagic => write!(f, "not a gzip stream (bad magic)"),
+            GzipError::Unsupported(what) => write!(f, "unsupported gzip feature: {what}"),
+            GzipError::Corrupt(what) => write!(f, "corrupt deflate stream: {what}"),
+            GzipError::CrcMismatch => write!(f, "gzip CRC-32 mismatch"),
+            GzipError::SizeMismatch => write!(f, "gzip ISIZE mismatch"),
+        }
+    }
+}
+
+impl std::error::Error for GzipError {}
+
+/// CRC-32 (IEEE 802.3, reflected, as gzip uses) of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, slot) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *slot = c;
+    }
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// LSB-first bit reader over a byte slice.
+struct BitReader<'a> {
+    data: &'a [u8],
+    /// Next unread byte.
+    pos: usize,
+    bitbuf: u32,
+    bitcnt: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(data: &'a [u8]) -> BitReader<'a> {
+        BitReader { data, pos: 0, bitbuf: 0, bitcnt: 0 }
+    }
+
+    /// Read `n <= 16` bits, LSB-first.
+    fn bits(&mut self, n: u32) -> Result<u32, GzipError> {
+        while self.bitcnt < n {
+            let byte = *self.data.get(self.pos).ok_or(GzipError::Truncated)? as u32;
+            self.pos += 1;
+            self.bitbuf |= byte << self.bitcnt;
+            self.bitcnt += 8;
+        }
+        let v = self.bitbuf & ((1u32 << n) - 1);
+        self.bitbuf >>= n;
+        self.bitcnt -= n;
+        Ok(v)
+    }
+
+    /// Discard the partial byte (stored blocks start byte-aligned). At
+    /// most 7 bits are ever buffered, so this never loses a whole byte.
+    fn align_byte(&mut self) {
+        self.bitbuf = 0;
+        self.bitcnt = 0;
+    }
+
+    /// Read one raw byte (caller must be byte-aligned).
+    fn byte(&mut self) -> Result<u8, GzipError> {
+        debug_assert_eq!(self.bitcnt, 0, "byte read while unaligned");
+        let b = *self.data.get(self.pos).ok_or(GzipError::Truncated)?;
+        self.pos += 1;
+        Ok(b)
+    }
+}
+
+/// A canonical Huffman code in the count/symbol form of zlib's `puff`:
+/// `counts[l]` codes of length `l`, symbols sorted by (length, symbol).
+struct Huffman {
+    counts: [u16; 16],
+    symbols: Vec<u16>,
+}
+
+impl Huffman {
+    fn build(lengths: &[u8]) -> Result<Huffman, GzipError> {
+        let mut counts = [0u16; 16];
+        for &l in lengths {
+            if l > 15 {
+                return Err(GzipError::Corrupt("code length > 15"));
+            }
+            counts[l as usize] += 1;
+        }
+        counts[0] = 0;
+        // Reject over-subscribed codes (incomplete ones are legal: a
+        // single-distance-code block uses one).
+        let mut left: i32 = 1;
+        for len in 1..16 {
+            left <<= 1;
+            left -= counts[len] as i32;
+            if left < 0 {
+                return Err(GzipError::Corrupt("oversubscribed huffman code"));
+            }
+        }
+        let mut offs = [0u16; 16];
+        for len in 1..15 {
+            offs[len + 1] = offs[len] + counts[len];
+        }
+        let n_symbols = lengths.iter().filter(|&&l| l != 0).count();
+        let mut symbols = vec![0u16; n_symbols];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l != 0 {
+                symbols[offs[l as usize] as usize] = sym as u16;
+                offs[l as usize] += 1;
+            }
+        }
+        Ok(Huffman { counts, symbols })
+    }
+
+    /// Decode one symbol, one bit at a time (adequate for trace-sized
+    /// inputs; a table-driven fast path can come later if profiles ask).
+    fn decode(&self, br: &mut BitReader<'_>) -> Result<u16, GzipError> {
+        let mut code: u32 = 0;
+        let mut first: u32 = 0;
+        let mut index: u32 = 0;
+        for len in 1..16 {
+            code |= br.bits(1)?;
+            let count = self.counts[len] as u32;
+            if code < first + count {
+                return Ok(self.symbols[(index + (code - first)) as usize]);
+            }
+            index += count;
+            first = (first + count) << 1;
+            code <<= 1;
+        }
+        Err(GzipError::Corrupt("invalid huffman code"))
+    }
+}
+
+const LEN_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+    131, 163, 195, 227, 258,
+];
+const LEN_EXTRA: [u8; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+];
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+    2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+const DIST_EXTRA: [u8; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+    13, 13,
+];
+
+/// Decode one Huffman-coded block body into `out`.
+fn inflate_block(
+    br: &mut BitReader<'_>,
+    out: &mut Vec<u8>,
+    litlen: &Huffman,
+    dist: &Huffman,
+) -> Result<(), GzipError> {
+    loop {
+        let sym = litlen.decode(br)?;
+        if sym < 256 {
+            out.push(sym as u8);
+        } else if sym == 256 {
+            return Ok(());
+        } else {
+            let idx = (sym - 257) as usize;
+            if idx >= LEN_BASE.len() {
+                return Err(GzipError::Corrupt("invalid length symbol"));
+            }
+            let len = LEN_BASE[idx] as usize + br.bits(LEN_EXTRA[idx] as u32)? as usize;
+            let dsym = dist.decode(br)? as usize;
+            if dsym >= DIST_BASE.len() {
+                return Err(GzipError::Corrupt("invalid distance symbol"));
+            }
+            let d = DIST_BASE[dsym] as usize + br.bits(DIST_EXTRA[dsym] as u32)? as usize;
+            if d == 0 || d > out.len() {
+                return Err(GzipError::Corrupt("distance beyond window"));
+            }
+            let start = out.len() - d;
+            // Byte-by-byte: overlapping copies replicate recent output.
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+    }
+}
+
+/// Inflate a raw DEFLATE stream into `out`.
+fn inflate(br: &mut BitReader<'_>, out: &mut Vec<u8>) -> Result<(), GzipError> {
+    loop {
+        let bfinal = br.bits(1)?;
+        let btype = br.bits(2)?;
+        match btype {
+            0 => {
+                // Stored: byte-aligned LEN/NLEN + raw copy.
+                br.align_byte();
+                let len = br.byte()? as usize | ((br.byte()? as usize) << 8);
+                let nlen = br.byte()? as usize | ((br.byte()? as usize) << 8);
+                if len ^ nlen != 0xFFFF {
+                    return Err(GzipError::Corrupt("stored-block length check"));
+                }
+                for _ in 0..len {
+                    let b = br.byte()?;
+                    out.push(b);
+                }
+            }
+            1 => {
+                // Fixed Huffman tables (RFC 1951 §3.2.6).
+                let mut litlen_lens = [0u8; 288];
+                for (i, l) in litlen_lens.iter_mut().enumerate() {
+                    *l = match i {
+                        0..=143 => 8,
+                        144..=255 => 9,
+                        256..=279 => 7,
+                        _ => 8,
+                    };
+                }
+                let litlen = Huffman::build(&litlen_lens)?;
+                let dist = Huffman::build(&[5u8; 30])?;
+                inflate_block(br, out, &litlen, &dist)?;
+            }
+            2 => {
+                // Dynamic tables: code-length code, then the two codes.
+                let hlit = br.bits(5)? as usize + 257;
+                let hdist = br.bits(5)? as usize + 1;
+                let hclen = br.bits(4)? as usize + 4;
+                const ORDER: [usize; 19] =
+                    [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15];
+                let mut cl_lens = [0u8; 19];
+                for &slot in ORDER.iter().take(hclen) {
+                    cl_lens[slot] = br.bits(3)? as u8;
+                }
+                let cl = Huffman::build(&cl_lens)?;
+                let mut lens = vec![0u8; hlit + hdist];
+                let mut i = 0;
+                while i < lens.len() {
+                    let sym = cl.decode(br)?;
+                    match sym {
+                        0..=15 => {
+                            lens[i] = sym as u8;
+                            i += 1;
+                        }
+                        16 | 17 | 18 => {
+                            let (fill, rep) = match sym {
+                                16 => {
+                                    if i == 0 {
+                                        return Err(GzipError::Corrupt(
+                                            "length repeat with no previous length",
+                                        ));
+                                    }
+                                    (lens[i - 1], 3 + br.bits(2)? as usize)
+                                }
+                                17 => (0, 3 + br.bits(3)? as usize),
+                                _ => (0, 11 + br.bits(7)? as usize),
+                            };
+                            if i + rep > lens.len() {
+                                return Err(GzipError::Corrupt("too many code lengths"));
+                            }
+                            for slot in lens.iter_mut().skip(i).take(rep) {
+                                *slot = fill;
+                            }
+                            i += rep;
+                        }
+                        _ => return Err(GzipError::Corrupt("invalid code-length symbol")),
+                    }
+                }
+                if lens[256] == 0 {
+                    return Err(GzipError::Corrupt("missing end-of-block code"));
+                }
+                let litlen = Huffman::build(&lens[..hlit])?;
+                let dist = Huffman::build(&lens[hlit..])?;
+                inflate_block(br, out, &litlen, &dist)?;
+            }
+            _ => return Err(GzipError::Corrupt("reserved block type")),
+        }
+        if bfinal == 1 {
+            return Ok(());
+        }
+    }
+}
+
+/// Decompress a gzip file: one or more concatenated members (RFC 1952
+/// §2.2 — `cat a.gz b.gz`, pigz, and bgzip all produce multi-member
+/// files), each a header + DEFLATE body + CRC-32/ISIZE trailer. Both
+/// trailer fields are verified per member. The whole plaintext lands in
+/// one `Vec` (bounded by the inflated size; a streaming inflate is a
+/// ROADMAP follow-on for traces larger than memory).
+pub fn decompress(data: &[u8]) -> Result<Vec<u8>, GzipError> {
+    let mut out = Vec::with_capacity(data.len().saturating_mul(3));
+    let mut pos = 0usize;
+    loop {
+        pos = decompress_member(data, pos, &mut out)?;
+        if pos >= data.len() {
+            return Ok(out);
+        }
+        // Anything after a trailer must be another member (its magic is
+        // re-checked by the next iteration); trailing garbage errors.
+    }
+}
+
+/// Decompress the gzip member starting at `start`, appending its
+/// plaintext to `out`. Returns the offset just past the member's trailer.
+fn decompress_member(data: &[u8], start: usize, out: &mut Vec<u8>) -> Result<usize, GzipError> {
+    let data = &data[start..];
+    if data.len() < 2 {
+        return Err(GzipError::Truncated);
+    }
+    if data[0] != 0x1f || data[1] != 0x8b {
+        return Err(GzipError::BadMagic);
+    }
+    if data.len() < 10 {
+        return Err(GzipError::Truncated);
+    }
+    if data[2] != 8 {
+        return Err(GzipError::Unsupported("compression method is not DEFLATE"));
+    }
+    let flg = data[3];
+    // MTIME(4) + XFL + OS already covered by the 10-byte header.
+    let mut pos = 10usize;
+    if flg & 0x04 != 0 {
+        // FEXTRA: u16-le length + payload.
+        let lo = *data.get(pos).ok_or(GzipError::Truncated)? as usize;
+        let hi = *data.get(pos + 1).ok_or(GzipError::Truncated)? as usize;
+        pos += 2 + (lo | (hi << 8));
+    }
+    for flag in [0x08u8, 0x10] {
+        // FNAME / FCOMMENT: NUL-terminated strings.
+        if flg & flag != 0 {
+            loop {
+                let b = *data.get(pos).ok_or(GzipError::Truncated)?;
+                pos += 1;
+                if b == 0 {
+                    break;
+                }
+            }
+        }
+    }
+    if flg & 0x02 != 0 {
+        pos += 2; // FHCRC
+    }
+    if pos > data.len() {
+        return Err(GzipError::Truncated);
+    }
+    let member_out = out.len();
+    let mut br = BitReader::new(&data[pos..]);
+    inflate(&mut br, out)?;
+    // Trailer: CRC-32 then ISIZE (mod 2^32), both little-endian, starting
+    // at the next byte boundary (the reader never buffers a whole byte).
+    let trailer = &data[pos..];
+    if trailer.len() < br.pos + 8 {
+        return Err(GzipError::Truncated);
+    }
+    let t = &trailer[br.pos..br.pos + 8];
+    let crc = u32::from_le_bytes([t[0], t[1], t[2], t[3]]);
+    let isize_ = u32::from_le_bytes([t[4], t[5], t[6], t[7]]);
+    if crc32(&out[member_out..]) != crc {
+        return Err(GzipError::CrcMismatch);
+    }
+    if (out.len() - member_out) as u32 != isize_ {
+        return Err(GzipError::SizeMismatch);
+    }
+    Ok(start + pos + br.pos + 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A handcrafted gzip member: one stored block holding "hello".
+    fn hello_gz() -> Vec<u8> {
+        let mut v = vec![
+            0x1f, 0x8b, 0x08, 0x00, // magic, deflate, no flags
+            0x00, 0x00, 0x00, 0x00, // mtime = 0
+            0x00, 0x03, // xfl, os = unix
+            0x01, // bfinal=1, btype=00 (stored)
+            0x05, 0x00, 0xfa, 0xff, // LEN=5, NLEN=!5
+        ];
+        v.extend_from_slice(b"hello");
+        v.extend_from_slice(&0x3610_a686u32.to_le_bytes()); // crc32("hello")
+        v.extend_from_slice(&5u32.to_le_bytes()); // isize
+        v
+    }
+
+    #[test]
+    fn stored_block_roundtrip() {
+        assert_eq!(decompress(&hello_gz()).unwrap(), b"hello");
+    }
+
+    #[test]
+    fn multi_member_files_concatenate() {
+        // RFC 1952 §2.2: a gzip file is a *series* of members
+        // (`cat a.gz b.gz`, pigz, bgzip). All members must inflate, each
+        // with its own verified trailer.
+        let mut two = hello_gz();
+        two.extend_from_slice(&hello_gz());
+        assert_eq!(decompress(&two).unwrap(), b"hellohello");
+        // Trailing garbage after the last member is an error, not silence.
+        let mut garbage = hello_gz();
+        garbage.extend_from_slice(b"tail");
+        assert!(decompress(&garbage).is_err());
+    }
+
+    #[test]
+    fn real_deflate_fixture_roundtrip() {
+        // Produced by Python's gzip (dynamic-Huffman blocks) from the
+        // bundled Alibaba fixture; must inflate to the exact plain bytes.
+        let gz = include_bytes!("../../tests/fixtures/alibaba_mini.csv.gz");
+        let plain = include_bytes!("../../tests/fixtures/alibaba_mini.csv");
+        assert_eq!(decompress(gz).unwrap(), plain);
+    }
+
+    #[test]
+    fn crc_detects_payload_corruption() {
+        let mut gz = hello_gz();
+        let idx = gz.len() - 9; // last payload byte ("o")
+        gz[idx] ^= 0x20;
+        assert_eq!(decompress(&gz), Err(GzipError::CrcMismatch));
+    }
+
+    #[test]
+    fn truncation_and_magic_errors() {
+        assert_eq!(decompress(&[]), Err(GzipError::Truncated));
+        assert_eq!(decompress(&[0x1f, 0x8b, 0x08]), Err(GzipError::Truncated));
+        assert_eq!(decompress(b"plain,csv,data"), Err(GzipError::BadMagic));
+        let mut gz = hello_gz();
+        gz.truncate(gz.len() - 4);
+        assert_eq!(decompress(&gz), Err(GzipError::Truncated));
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"hello"), 0x3610_a686);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

@@ -1,7 +1,8 @@
 //! Foundation substrates built in-repo because the vendored dependency set
-//! has no serde/rand/clap equivalents: JSON, RNG, statistics, logging, and
-//! resource-unit newtypes.
+//! has no serde/rand/clap/flate2 equivalents: JSON, RNG, statistics,
+//! logging, gzip/DEFLATE decompression, and resource-unit newtypes.
 
+pub mod gzip;
 pub mod json;
 pub mod logging;
 pub mod rng;

@@ -89,6 +89,37 @@ fn fixtures_pass_strict_mode() {
 }
 
 #[test]
+fn gzipped_trace_matches_plain_import() {
+    // `--trace foo.csv.gz` inflates in memory and must import exactly as
+    // the plain file (real traces ship gzipped, e.g. batch_task.csv.gz).
+    let plain = load_fixture("alibaba_mini.csv", TraceFormat::Alibaba, ErrorMode::Strict);
+    let gz = load_fixture("alibaba_mini.csv.gz", TraceFormat::Alibaba, ErrorMode::Strict);
+    assert_eq!(format!("{:?}", plain.stats), format!("{:?}", gz.stats));
+    assert_eq!(plain.events.len(), gz.events.len());
+    assert_eq!(format!("{:?}", plain.events), format!("{:?}", gz.events));
+    // And the replay downstream of the import is byte-identical too.
+    let (r1, ev1, t1) = replay("alibaba_mini.csv", TraceFormat::Alibaba, 1.0, None);
+    let (r2, ev2, t2) = replay("alibaba_mini.csv.gz", TraceFormat::Alibaba, 1.0, None);
+    assert_eq!(format!("{r1:?}"), format!("{r2:?}"));
+    assert_eq!(ev1, ev2);
+    assert_eq!(t1, t2);
+}
+
+#[test]
+fn corrupt_gz_is_an_io_error_not_a_panic() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("lrsched-corrupt-{}.csv.gz", std::process::id()));
+    std::fs::write(&path, b"not actually gzip data").unwrap();
+    let opts = TraceOptions::default();
+    let err = trace::load(&path, &opts).unwrap_err();
+    let _ = std::fs::remove_file(&path);
+    assert!(
+        format!("{err}").contains("gzip"),
+        "gz decode failures must surface as trace I/O errors: {err}"
+    );
+}
+
+#[test]
 fn alibaba_replay_balances_accounting() {
     let (report, _, _) = replay("alibaba_mini.csv", TraceFormat::Alibaba, 1.0, None);
     assert_eq!(report.submitted, 53);
