@@ -19,6 +19,8 @@ Subcommands:
              window (e.g. `lrsched scale --churn --churn-crash-frac 0.05`),
              or replay a real cluster trace with --trace <csv>
              --trace-format {alibaba,azure} (see docs/SCALE.md)
+  gen-trace  write a synthetic Alibaba-dialect trace CSV (or .csv.gz) for
+             streaming-ingest benchmarks and the CI bounded-memory gate
   fig3       regenerate Fig. 3 (a-f): performance vs node count
   fig4       regenerate Fig. 4: download time vs bandwidth
   fig5       regenerate Fig. 5: accumulated download size
@@ -88,7 +90,7 @@ fn scale_spec() -> Vec<OptSpec> {
                    workload (disables --pods/--zipf/--duration-*/--arrival)",
             default: Some(""),
         },
-        OptSpec { name: "trace-format", help: "alibaba|azure (see docs/SCALE.md)", default: Some("alibaba") },
+        OptSpec { name: "trace-format", help: "alibaba|azure|borg (see docs/SCALE.md)", default: Some("alibaba") },
         OptSpec {
             name: "trace-speedup",
             help: "divide trace arrival offsets and durations by this factor",
@@ -96,13 +98,21 @@ fn scale_spec() -> Vec<OptSpec> {
         },
         OptSpec {
             name: "trace-limit",
-            help: "replay at most N trace events, in file order (0 = all)",
+            help: "ingest at most N trace events, in file order (0 = all); the \
+                   rest of the file is not read or inflated",
             default: Some("0"),
         },
         OptSpec {
             name: "trace-strict",
             help: "reject malformed/out-of-order/duplicate rows instead of repairing",
             default: None,
+        },
+        OptSpec {
+            name: "trace-reorder",
+            help: "lenient-mode reorder-buffer capacity in events (bounds \
+                   streaming-replay memory; disorder beyond it falls back to a \
+                   whole-trace sort)",
+            default: Some("65536"),
         },
         OptSpec { name: "retry-limit", help: "retries before a pod is unschedulable", default: Some("10") },
         OptSpec { name: "backoff", help: "scheduling-queue back-off (s)", default: Some("5") },
@@ -149,9 +159,49 @@ fn scale_spec() -> Vec<OptSpec> {
     ]
 }
 
+fn gen_trace_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "rows", help: "data rows to generate", default: Some("1000000") },
+        OptSpec { name: "seed", help: "generator RNG seed", default: Some("42") },
+        OptSpec {
+            name: "out",
+            help: "output path; a .gz suffix writes a stored-block gzip member \
+                   (no external gzip needed)",
+            default: Some(""),
+        },
+        OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
+    ]
+}
+
+/// `gen-trace`: deterministically generate a synthetic Alibaba-dialect
+/// trace — the input for `scale --trace` streaming-ingest benchmarks and
+/// the CI bounded-memory gate.
+fn run_gen_trace(rest: &[String]) -> Result<(), String> {
+    let args = cli::parse(rest, &gen_trace_spec())?;
+    apply_log_level(&args)?;
+    let rows = args.usize_or("rows", 1_000_000)?;
+    let seed = args.u64_or("seed", 42)?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| "--out is required (e.g. --out big.csv.gz)".to_string())?
+        .to_string();
+    let csv = lrsched::testing::fixtures::synthetic_alibaba_csv(rows, seed);
+    let bytes: Vec<u8> = if out.ends_with(".gz") {
+        lrsched::util::gzip::compress_stored(csv.as_bytes())
+    } else {
+        csv.into_bytes()
+    };
+    std::fs::write(&out, &bytes).map_err(|e| format!("{out}: {e}"))?;
+    println!("wrote {rows} Alibaba-dialect rows ({} bytes) to {out}", bytes.len());
+    Ok(())
+}
+
 fn run_scale(rest: &[String]) -> Result<(), String> {
     use lrsched::sched::NativeScorer;
-    use lrsched::sim::{trace, ErrorMode, Popularity, TraceFormat, TraceOptions};
+    use lrsched::sim::{
+        ArrivalSource, ErrorMode, Popularity, TraceErrorSlot, TraceFormat, TraceOptions,
+        TraceReplay, WorkloadSource,
+    };
 
     let args = cli::parse(rest, &scale_spec())?;
     apply_log_level(&args)?;
@@ -171,12 +221,22 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
     };
 
     // Workload: a real trace replay (--trace) or the synthetic Zipf
-    // generator. Both reduce to explicit (arrival-offset, pod) pairs.
-    let (registry, arrivals, horizon, trace_note) = match args.get("trace") {
+    // generator. Both are pull-based ArrivalSources: the engine holds one
+    // future arrival at a time, so ingestion memory does not grow with
+    // the workload length.
+    let mut trace_error_slot: Option<TraceErrorSlot> = None;
+    let (registry, source, n_pods, horizon, trace_note): (
+        Registry,
+        Box<dyn ArrivalSource>,
+        usize,
+        f64,
+        Option<String>,
+    ) = match args.get("trace") {
         Some(path) => {
             let fmt_name = args.str_or("trace-format", "alibaba");
-            let format = TraceFormat::parse(fmt_name)
-                .ok_or_else(|| format!("unknown trace format {fmt_name:?} (expected alibaba|azure)"))?;
+            let format = TraceFormat::parse(fmt_name).ok_or_else(|| {
+                format!("unknown trace format {fmt_name:?} (expected alibaba|azure|borg)")
+            })?;
             let speedup = args.f64_or("trace-speedup", 1.0)?;
             if speedup <= 0.0 {
                 return Err("--trace-speedup must be positive".to_string());
@@ -188,23 +248,41 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
                 speedup,
                 limit: if limit == 0 { None } else { Some(limit) },
                 seed,
+                reorder_cap: args.usize_or("trace-reorder", 65_536)?.max(1),
             };
-            let t = trace::load(std::path::Path::new(path), &opts).map_err(|e| e.to_string())?;
-            let registry = t.synthesize_registry();
-            let arrivals = t.arrivals();
-            let s = &t.stats;
+            let replay =
+                TraceReplay::open(std::path::Path::new(path), &opts).map_err(|e| e.to_string())?;
+            let registry = replay.synthesize_registry();
+            let s = replay.stats.clone();
             let note = format!(
                 "trace: {path} format={} events={} apps={} span={:.1}s speedup={speedup:.0}x \
-                 skipped={} duplicates={}{}",
+                 skipped={} duplicates={} filtered={} reorder_depth={}{}{}{}",
                 format.label(),
                 s.events,
                 s.apps,
                 s.span_secs,
                 s.skipped,
                 s.duplicates,
-                if s.resorted { " (resorted)" } else { "" },
+                s.filtered,
+                s.reorder_depth,
+                if s.resorted { " (reordered)" } else { "" },
+                if s.full_resort { " (full-sort fallback)" } else { "" },
+                if s.limit_hit {
+                    format!(" (limit hit, +{} truncated)", s.truncated_events)
+                } else {
+                    String::new()
+                },
             );
-            (registry, arrivals, s.span_secs.max(60.0), Some(note))
+            let events = s.events;
+            let source = replay.into_source();
+            trace_error_slot = Some(source.error_slot());
+            (
+                registry,
+                Box::new(source) as Box<dyn ArrivalSource>,
+                events,
+                s.span_secs.max(60.0),
+                Some(note),
+            )
         }
         None => {
             let registry = Registry::with_corpus();
@@ -215,16 +293,17 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
                 ..Default::default()
             };
             let dt = arrival.max(1e-6);
-            let arrivals = WorkloadGen::new(&registry, wl)
-                .trace(pods)
-                .into_iter()
-                .enumerate()
-                .map(|(i, p)| (i as f64 * dt, p))
-                .collect::<Vec<_>>();
-            (registry, arrivals, (pods as f64 * dt).max(60.0), None)
+            // Lazy: pods are generated as the engine pulls them.
+            let source = WorkloadSource::new(WorkloadGen::new(&registry, wl), dt, pods);
+            (
+                registry,
+                Box::new(source) as Box<dyn ArrivalSource>,
+                pods,
+                (pods as f64 * dt).max(60.0),
+                None,
+            )
         }
     };
-    let n_pods = arrivals.len();
 
     let mut cfg = SimConfig::default();
     cfg.scheduler = scheduler;
@@ -262,9 +341,23 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
         other => return Err(format!("unknown backend {other:?} (expected native|dense)")),
     }
     let wall = std::time::Instant::now();
-    let report = sim.run_arrivals(arrivals);
+    let report = sim.run_source(source);
     let wall = wall.elapsed().as_secs_f64();
     sim.state.check_invariants().map_err(|e| format!("invariant violated: {e}"))?;
+    if report.submitted != n_pods {
+        // A streaming source that hits an I/O or parse error mid-replay
+        // ends the stream early; surface the recorded error if there is
+        // one, and make the count mismatch loud either way.
+        let detail = trace_error_slot
+            .as_ref()
+            .and_then(|slot| slot.lock().ok().and_then(|mut e| e.take()))
+            .map(|e| format!(": {e}"))
+            .unwrap_or_else(|| " (was the trace file modified mid-replay?)".to_string());
+        return Err(format!(
+            "arrival stream ended early: submitted {} of {} expected pods{detail}",
+            report.submitted, n_pods
+        ));
+    }
 
     if let Some(note) = &trace_note {
         println!("{note}");
@@ -366,6 +459,14 @@ fn run() -> Result<(), String> {
                         &scale_spec()
                     )
                 ),
+                Some("gen-trace") => println!(
+                    "{}",
+                    cli::usage(
+                        "gen-trace",
+                        "Write a synthetic Alibaba-dialect trace CSV (or .csv.gz).",
+                        &gen_trace_spec()
+                    )
+                ),
                 Some(c @ ("fig3" | "fig4" | "fig5" | "table1")) => {
                     println!("{}", cli::usage(c, "Regenerate a paper experiment", &common_spec()))
                 }
@@ -374,6 +475,7 @@ fn run() -> Result<(), String> {
             Ok(())
         }
         "scale" => run_scale(&rest),
+        "gen-trace" => run_gen_trace(&rest),
         "simulate" => {
             let args = cli::parse(&rest, &simulate_spec())?;
             apply_log_level(&args)?;

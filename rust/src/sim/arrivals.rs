@@ -1,0 +1,148 @@
+//! The streaming arrival pipeline: every workload enters the engine
+//! through one pull-based interface.
+//!
+//! [`ArrivalSource`] is the spine of the constant-memory ingestion path:
+//! instead of materializing a whole trace as `Vec<(offset, Pod)>` and
+//! enqueuing every arrival up front (one heap entry per pod — gigabytes
+//! at multi-million-pod scale), [`crate::sim::Simulation::run_source`]
+//! pulls **one arrival at a time**, only when the virtual clock reaches
+//! it. Three producers implement the trait:
+//!
+//! - [`WorkloadSource`] — the synthetic Zipf/churn generator
+//!   ([`crate::sim::workload::WorkloadGen`]), made lazy: pods are built
+//!   at pull time instead of pre-materialized.
+//! - [`crate::sim::trace::TraceSource`] — the Alibaba/Azure/Borg trace
+//!   importers, streaming line-by-line over any reader (through the
+//!   streaming gzip decoder for `.csv.gz`) with a bounded reorder
+//!   buffer.
+//! - [`VecSource`] — the buffered compatibility adapter wrapping an
+//!   explicit `Vec<(offset, Pod)>`; it is what
+//!   [`crate::sim::Simulation::run_arrivals`] uses, and the reference
+//!   the differential tests hold the streaming path byte-identical to.
+//!
+//! **Contract:** offsets are seconds relative to replay start, must be
+//! finite, and must be non-decreasing across successive pulls — the
+//! engine schedules each arrival as it learns about it and cannot
+//! reorder the future. `VecSource` establishes the invariant by
+//! clamping negative offsets to zero and stable-sorting; the trace
+//! sources establish it with their reorder buffer; the workload source
+//! is monotone by construction.
+
+use super::workload::WorkloadGen;
+use crate::cluster::Pod;
+
+/// A pull-based producer of timed pod arrivals (see the module docs for
+/// the offset contract).
+pub trait ArrivalSource {
+    /// The next `(arrival-offset, pod)` pair, or `None` when the
+    /// workload is exhausted. Offsets are seconds from replay start,
+    /// finite and non-decreasing.
+    fn next_arrival(&mut self) -> Option<(f64, Pod)>;
+}
+
+/// Buffered adapter: replays an explicit `Vec<(offset, Pod)>` as an
+/// [`ArrivalSource`]. Negative offsets clamp to zero and the vector is
+/// stable-sorted by clamped offset, reproducing exactly the order the
+/// event heap would have popped the same arrivals in when they were all
+/// enqueued up front (equal offsets keep their vector order).
+pub struct VecSource {
+    /// Sorted arrivals, consumed front to back.
+    items: std::vec::IntoIter<(f64, Pod)>,
+}
+
+impl VecSource {
+    /// Wrap (and normalize) an explicit arrival list.
+    pub fn new(mut arrivals: Vec<(f64, Pod)>) -> VecSource {
+        for (off, _) in &mut arrivals {
+            *off = off.max(0.0);
+        }
+        // Stable: equal offsets keep the input order, matching the event
+        // queue's FIFO tie-break at equal (time, class).
+        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite arrival offsets"));
+        VecSource { items: arrivals.into_iter() }
+    }
+}
+
+impl ArrivalSource for VecSource {
+    fn next_arrival(&mut self) -> Option<(f64, Pod)> {
+        self.items.next()
+    }
+}
+
+/// Lazy synthetic workload: `count` pods from a [`WorkloadGen`], arriving
+/// every `dt` seconds. Pod `i` is generated when pulled (identical to
+/// `gen.trace(count)` pre-materialized — the generator is deterministic —
+/// but without holding `count` pods in memory).
+pub struct WorkloadSource {
+    gen: WorkloadGen,
+    dt: f64,
+    next: usize,
+    count: usize,
+}
+
+impl WorkloadSource {
+    /// Wrap `gen`, emitting `count` pods at a fixed `dt`-second cadence.
+    pub fn new(gen: WorkloadGen, dt: f64, count: usize) -> WorkloadSource {
+        assert!(dt.is_finite() && dt >= 0.0, "arrival cadence must be finite and non-negative");
+        WorkloadSource { gen, dt, next: 0, count }
+    }
+}
+
+impl ArrivalSource for WorkloadSource {
+    fn next_arrival(&mut self) -> Option<(f64, Pod)> {
+        if self.next >= self.count {
+            return None;
+        }
+        let i = self.next;
+        self.next += 1;
+        Some((i as f64 * self.dt, self.gen.next_pod()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{PodBuilder, Resources};
+    use crate::registry::Registry;
+    use crate::sim::workload::WorkloadConfig;
+
+    fn drain(src: &mut dyn ArrivalSource) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        while let Some((off, pod)) = src.next_arrival() {
+            out.push((off, pod.id.0));
+        }
+        out
+    }
+
+    #[test]
+    fn vec_source_clamps_and_stable_sorts() {
+        let mut b = PodBuilder::new();
+        let arrivals = vec![
+            (5.0, b.build("redis:7.2", Resources::ZERO)),   // id 0
+            (-1.0, b.build("redis:7.2", Resources::ZERO)),  // id 1 → clamps to 0
+            (0.0, b.build("redis:7.2", Resources::ZERO)),   // id 2, ties with id 1
+            (2.0, b.build("redis:7.2", Resources::ZERO)),   // id 3
+        ];
+        let mut src = VecSource::new(arrivals);
+        let order = drain(&mut src);
+        // Clamped-equal offsets keep vector order (1 before 2).
+        assert_eq!(order, vec![(0.0, 1), (0.0, 2), (2.0, 3), (5.0, 0)]);
+        assert!(src.next_arrival().is_none(), "exhausted source stays exhausted");
+    }
+
+    #[test]
+    fn workload_source_matches_materialized_trace() {
+        let reg = Registry::with_corpus();
+        let cfg = WorkloadConfig::default();
+        let expected = WorkloadGen::new(&reg, cfg.clone()).trace(12);
+        let mut src = WorkloadSource::new(WorkloadGen::new(&reg, cfg), 0.3, 12);
+        let mut n = 0;
+        while let Some((off, pod)) = src.next_arrival() {
+            assert_eq!(off, n as f64 * 0.3);
+            assert_eq!(pod.image, expected[n].image, "pod {n}");
+            assert_eq!(pod.requests, expected[n].requests, "pod {n}");
+            n += 1;
+        }
+        assert_eq!(n, 12);
+    }
+}

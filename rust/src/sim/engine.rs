@@ -17,6 +17,14 @@
 //!   pulls overlap — the load-test mode used by the concurrency tests and
 //!   the 100k-pod `scale` harness.
 //!
+//! Every workload enters through the **streaming arrival pipeline**
+//! ([`Simulation::run_source`]): the engine keeps at most one future
+//! arrival in the event queue and pulls the next from a pull-based
+//! [`ArrivalSource`] only when the clock reaches it, so ingestion memory
+//! is independent of workload length. `run_trace` and `run_arrivals` are
+//! buffered conveniences over the same loop (see
+//! `docs/ARCHITECTURE.md`, "Arrival pipeline").
+//!
 //! With `SimConfig::shards > 1` the engine additionally runs **sharded
 //! per-node event lanes** ([`crate::sim::shard`]): node-local events
 //! (pull completions, terminations, per-node GC checks) between two
@@ -26,6 +34,7 @@
 //! cycles fan their per-node filter/score/layer passes across the same
 //! worker pool. See `docs/ARCHITECTURE.md`, "Sharded event lanes".
 
+use super::arrivals::{ArrivalSource, VecSource};
 use super::bandwidth::LinkModel;
 use super::clock::Clock;
 use super::download::PullManager;
@@ -43,7 +52,7 @@ use crate::sched::rl::{RlParams, RlScheduler};
 use crate::sched::scoring::ScoringBackend;
 use crate::sched::{CycleContext, FrameworkConfig, LrScheduler, Unschedulable, WeightParams};
 use crate::util::units::{Bandwidth, Bytes};
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -421,9 +430,20 @@ pub struct Simulation {
     sched_queue: SchedulingQueue,
     /// Failed scheduling cycles per still-pending pod.
     retry_counts: HashMap<PodId, u32>,
-    /// Sequential-protocol pods not yet submitted (next arrives when the
-    /// current pod resolves: starts, wedges, or gives up).
-    seq_backlog: VecDeque<Pod>,
+    /// The active streaming arrival source (`run_source`): the engine
+    /// holds at most **one** future arrival in the event queue and pulls
+    /// the next from here when it pops (offset-timed runs) or when the
+    /// current pod resolves (the sequential protocol) — the
+    /// constant-memory half of the arrival pipeline.
+    arrival_source: Option<Box<dyn ArrivalSource>>,
+    /// Absolute virtual time the active source's offsets are measured
+    /// from (the clock at `run_source` entry).
+    arrivals_t0: f64,
+    /// Sequential-protocol chaining: when set (only by `run_trace` with
+    /// `inter_arrival_secs = None`), arrival offsets are ignored and the
+    /// next pod is pulled when the previous one resolves instead of when
+    /// its arrival event pops.
+    chain_arrivals: bool,
     /// Is a WatcherTick event currently scheduled?
     watcher_armed: bool,
     /// Terminal state per submitted pod (the accounting source of truth;
@@ -505,7 +525,9 @@ impl Simulation {
             queue: EventQueue::new(),
             sched_queue,
             retry_counts: HashMap::new(),
-            seq_backlog: VecDeque::new(),
+            arrival_source: None,
+            arrivals_t0: 0.0,
+            chain_arrivals: false,
             watcher_armed: false,
             outcomes: HashMap::new(),
             epochs: HashMap::new(),
@@ -603,6 +625,13 @@ impl Simulation {
                     let pid = self.state.submit_pod(pod);
                     self.submitted += 1;
                     self.events.record(t, pid, EventKind::Submitted);
+                    // Offset-timed runs pull the next arrival as soon as
+                    // this one pops — the queue holds at most one future
+                    // arrival at a time (sequential-protocol runs chain
+                    // on resolution instead; see `chain_next_arrival`).
+                    if !self.chain_arrivals {
+                        self.pump_arrival(t);
+                    }
                     self.sched_queue.push(pid);
                     self.drain_sched_queue();
                 }
@@ -1010,16 +1039,35 @@ impl Simulation {
         n
     }
 
+    /// Pull the next arrival from the streaming source (if one is armed)
+    /// and schedule its event. Offset-timed runs schedule at
+    /// `t0 + offset`; sequential-protocol chaining schedules at the
+    /// resolution time `now`. Sources emit non-decreasing offsets (the
+    /// [`ArrivalSource`] contract), so the scheduled time never precedes
+    /// the clock; the `max` guards a misbehaving source anyway.
+    fn pump_arrival(&mut self, now: f64) {
+        let next = match &mut self.arrival_source {
+            None => return,
+            Some(src) => src.next_arrival(),
+        };
+        if let Some((offset, pod)) = next {
+            let at = if self.chain_arrivals {
+                now
+            } else {
+                self.arrivals_t0 + offset.max(0.0)
+            };
+            self.queue.push(at.max(now), EventPayload::Arrival { pod });
+        }
+    }
+
     /// In the sequential protocol, the next pod arrives once the current
     /// one resolves (container started, pull wedged, or retries
     /// exhausted). A pod releases the next arrival exactly once: a crash
     /// re-resolution must not run arrivals ahead of the one-at-a-time
     /// protocol, and a mid-pull crash must not lose the chain.
     fn chain_next_arrival(&mut self, t: f64, resolved: PodId) {
-        if self.cfg.inter_arrival_secs.is_none() && self.chained.insert(resolved) {
-            if let Some(pod) = self.seq_backlog.pop_front() {
-                self.queue.push(t, EventPayload::Arrival { pod });
-            }
+        if self.chain_arrivals && self.chained.insert(resolved) {
+            self.pump_arrival(t);
         }
     }
 
@@ -1320,44 +1368,66 @@ impl Simulation {
         }
     }
 
-    /// Run a whole trace through the event queue. Timed mode enqueues all
-    /// arrivals up front; sequential mode chains each arrival to the
-    /// previous pod's resolution. Returns once every event — including
-    /// terminations, churn, and back-off releases due after the last pull
-    /// — fired.
+    /// Run a whole trace through the event queue. Timed mode replays the
+    /// pods at the fixed `inter_arrival_secs` cadence; sequential mode
+    /// chains each arrival to the previous pod's resolution. Both reduce
+    /// to a buffered [`VecSource`] driven through the streaming
+    /// [`Simulation::run_source`] loop. Returns once every event —
+    /// including terminations, churn, and back-off releases due after
+    /// the last pull — fired.
     pub fn run_trace(&mut self, pods: Vec<Pod>) -> SimReport {
-        let t0 = self.clock.now();
-        self.arm_watcher(t0);
-        self.inject_churn_trace(t0);
         match self.cfg.inter_arrival_secs {
             Some(dt) => {
-                for (i, pod) in pods.into_iter().enumerate() {
-                    self.queue.push(t0 + i as f64 * dt, EventPayload::Arrival { pod });
-                }
+                let arrivals: Vec<(f64, Pod)> =
+                    pods.into_iter().enumerate().map(|(i, p)| (i as f64 * dt, p)).collect();
+                self.run_source(Box::new(VecSource::new(arrivals)))
             }
             None => {
-                self.seq_backlog.extend(pods);
-                if let Some(pod) = self.seq_backlog.pop_front() {
-                    self.queue.push(t0, EventPayload::Arrival { pod });
-                }
+                // Offsets are ignored under chaining; 0.0 keeps VecSource's
+                // stable sort a no-op so submission order is preserved.
+                let arrivals: Vec<(f64, Pod)> = pods.into_iter().map(|p| (0.0, p)).collect();
+                self.chain_arrivals = true;
+                let report = self.run_source(Box::new(VecSource::new(arrivals)));
+                self.chain_arrivals = false;
+                report
             }
         }
-        self.drain_and_report()
     }
 
-    /// Replay explicit `(arrival-offset, pod)` pairs — the trace-replay
-    /// entry point ([`crate::sim::trace`]): each pod arrives at
-    /// `now + offset`, preserving a real trace's burstiness instead of the
-    /// fixed `inter_arrival_secs` cadence. Offsets must be finite;
-    /// negative offsets clamp to the current time.
+    /// Replay explicit `(arrival-offset, pod)` pairs — the buffered
+    /// trace-replay entry point ([`crate::sim::trace::Trace::arrivals`]):
+    /// each pod arrives at `now + offset`, preserving a real trace's
+    /// burstiness instead of the fixed `inter_arrival_secs` cadence.
+    /// Offsets must be finite; negative offsets clamp to the current
+    /// time. Equivalent to [`Simulation::run_source`] over a
+    /// [`VecSource`] — which is exactly what it does.
     pub fn run_arrivals(&mut self, arrivals: Vec<(f64, Pod)>) -> SimReport {
+        self.run_source(Box::new(VecSource::new(arrivals)))
+    }
+
+    /// Drive the engine from a pull-based [`ArrivalSource`] — the
+    /// constant-memory arrival loop: the queue holds at most one future
+    /// arrival, and popping it (or, under the sequential protocol,
+    /// resolving its pod) pulls the next from the source. Event order —
+    /// and therefore the report and the event log — is byte-identical to
+    /// enqueuing every arrival up front, because arrivals are the last
+    /// event class at any timestamp and sources emit non-decreasing
+    /// offsets. Returns once the source is exhausted and every event
+    /// fired. Source-side errors have no channel here: sources that can
+    /// fail mid-stream (e.g. [`crate::sim::trace::TraceSource`]) record
+    /// the error for the caller to check after the run.
+    pub fn run_source(&mut self, source: Box<dyn ArrivalSource>) -> SimReport {
         let t0 = self.clock.now();
         self.arm_watcher(t0);
         self.inject_churn_trace(t0);
-        for (offset, pod) in arrivals {
-            self.queue.push(t0 + offset.max(0.0), EventPayload::Arrival { pod });
-        }
-        self.drain_and_report()
+        self.arrivals_t0 = t0;
+        self.arrival_source = Some(source);
+        // Seed the chain with the first arrival; each pop/resolution
+        // pulls the next.
+        self.pump_arrival(t0);
+        let report = self.drain_and_report();
+        self.arrival_source = None;
+        report
     }
 
     /// Run the event loop to quiescence, take the final snapshot, and

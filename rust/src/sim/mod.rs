@@ -1,10 +1,14 @@
 //! Discrete-event edge-cluster simulator: virtual clock, per-node link
 //! model, layer-pull dedup, kubelet lifecycle (pull → install → start,
 //! optional image GC), workload generation, real-trace replay
-//! ([`trace`]), and metrics collection. `engine::Simulation` is the
-//! API-server facade that glues the scheduler to all of it. See
+//! ([`trace`]), and metrics collection. Every workload — synthetic or
+//! replayed — enters the engine through the pull-based
+//! [`arrivals::ArrivalSource`] pipeline (constant-memory ingestion; see
+//! `docs/ARCHITECTURE.md`, "Arrival pipeline"). `engine::Simulation` is
+//! the API-server facade that glues the scheduler to all of it. See
 //! `docs/ARCHITECTURE.md` for the event lifecycle and ordering contract.
 
+pub mod arrivals;
 pub mod bandwidth;
 pub mod clock;
 pub mod download;
@@ -17,6 +21,7 @@ pub mod shard;
 pub mod trace;
 pub mod workload;
 
+pub use arrivals::{ArrivalSource, VecSource, WorkloadSource};
 pub use bandwidth::LinkModel;
 pub use clock::Clock;
 pub use download::PullManager;
@@ -24,7 +29,10 @@ pub use engine::{SchedulerChoice, SimConfig, SimReport, Simulation};
 pub use events::{EventPayload, EventQueue};
 pub use metrics::{ClusterSnapshot, PodRecord};
 pub use shard::LanePool;
-pub use trace::{ErrorMode, Trace, TraceError, TraceEvent, TraceFormat, TraceOptions, TraceStats};
+pub use trace::{
+    ErrorMode, Trace, TraceError, TraceErrorSlot, TraceEvent, TraceFormat, TraceOptions,
+    TraceReplay, TraceSource, TraceStats,
+};
 pub use workload::{
     ChurnAction, ChurnConfig, ChurnEvent, ChurnModel, Popularity, WorkloadConfig, WorkloadGen,
 };

@@ -9,8 +9,12 @@
 //! Between two coordinator events the coordinator drains a **window** of
 //! node-local events from the global queue in (time, class, seq) order,
 //! routes each to the lane owning its node, and then advances all lanes
-//! in parallel on a [`LanePool`]. Lanes mutate only their own `&mut
-//! [Node]` slice and buffer every globally visible side effect (the
+//! in parallel on a [`LanePool`]. Arrivals stay coordinator-only: under
+//! the streaming pipeline the coordinator pulls the next pod from the
+//! run's `ArrivalSource` when an arrival event pops, so the lanes are
+//! oblivious to whether the workload is buffered or streamed. Lanes
+//! mutate only their own `&mut [Node]` slice and buffer every globally
+//! visible side effect (the
 //! crate-internal `LaneEffects`); the coordinator applies the buffers
 //! back in the original pop order, which makes the report and event log
 //! byte-identical to the sequential engine by construction. The

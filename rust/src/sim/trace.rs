@@ -4,49 +4,74 @@
 //! The paper validates LRScheduler on a real system; related work (e.g.
 //! TD3-Sched, the joint task-scheduling/image-caching line) grounds its
 //! evaluation on measured cluster traces. This module closes that gap for
-//! the `scale` harness with a three-stage pipeline:
+//! the `scale` harness with a **two-pass streaming pipeline** whose
+//! memory footprint is O(distinct apps + reorder buffer + one 64-bit
+//! duplicate-detection fingerprint per task id) — never the materialized
+//! event or pod list:
 //!
-//! 1. **Parse** — a streaming, line-by-line CSV importer (no full-file
-//!    buffering, so multi-million-row traces replay in bounded memory)
-//!    converts each row into the format-agnostic [`TraceEvent`]
-//!    intermediate representation. Two concrete formats are supported:
-//!    Alibaba cluster-trace `batch_task`-style CSV ([`TraceFormat::Alibaba`])
-//!    and Azure packing-trace-style CSV ([`TraceFormat::Azure`]).
-//! 2. **Synthesize** — public traces name tasks/VM types but carry no image
-//!    manifests, so [`Trace::synthesize_registry`] deterministically hashes
-//!    each app key into a layer stack (shared OS base + shared runtime
-//!    layers + unique app layers). Equal app keys always map to the same
-//!    image, so the trace's app-popularity skew becomes image-popularity
-//!    skew — exactly the signal layer-aware scheduling exploits.
-//! 3. **Replay** — [`Trace::arrivals`] builds `(arrival-offset, Pod)` pairs
-//!    that [`crate::sim::Simulation::run_arrivals`] pushes into the event
-//!    queue, preserving the trace's burstiness and heavy-tailed lifetimes.
-//!    [`TraceOptions::speedup`] compresses virtual time and
-//!    [`TraceOptions::limit`] truncates the trace so runs stay bounded.
+//! 1. **Scan** — a first streaming pass over the file (through the
+//!    streaming gzip decoder for `.csv.gz`) parses every row, validates
+//!    it (strict mode fails here, with line numbers), and keeps only
+//!    O(distinct-apps + distinct-tasks) state: the set of app keys for
+//!    registry synthesis, 64-bit task-id fingerprints for duplicate
+//!    detection, the earliest/latest timestamps (for `t=0` normalization
+//!    and the replay span), and a simulation of the bounded reorder
+//!    buffer that measures the trace's actual disorder
+//!    ([`TraceStats::reorder_depth`]).
+//! 2. **Replay** — a second streaming pass re-parses the file as a
+//!    pull-based [`TraceSource`] (an
+//!    [`crate::sim::arrivals::ArrivalSource`]): each accepted row becomes
+//!    a normalized [`TraceEvent`] and then a [`Pod`], emitted one at a
+//!    time as the engine's clock reaches it. In lenient mode a
+//!    **bounded reorder buffer** (a min-heap of at most
+//!    [`TraceOptions::reorder_cap`] + 1 events, keyed by `(time, row
+//!    order)`) repairs out-of-order timestamps exactly like the old
+//!    whole-trace stable re-sort did — byte-identically, because the
+//!    scan pass proves the trace's disorder fits the buffer, and falls
+//!    back to a buffered full sort ([`TraceStats::full_resort`]) when it
+//!    does not.
 //!
-//! Malformed input is handled per [`ErrorMode`]: `Strict` rejects the first
-//! bad row (with its line number), `Lenient` skips bad rows, drops
-//! duplicate task ids, and re-sorts out-of-order timestamps — every repair
-//! is counted in [`TraceStats`], never silent.
+//! Three concrete dialects are supported: Alibaba cluster-trace
+//! `batch_task` CSV ([`TraceFormat::Alibaba`]), Azure packing-trace CSV
+//! ([`TraceFormat::Azure`]), and Google cluster-data (Borg) task-events
+//! CSV ([`TraceFormat::Borg`]).
 //!
-//! See `docs/ARCHITECTURE.md` ("Trace replay") for the pipeline diagram and
-//! `docs/SCALE.md` for copy-pasteable CLI runs against the bundled
-//! fixtures under `rust/tests/fixtures/`.
+//! Public traces name tasks/VM types but carry no image manifests, so
+//! [`synthesize_image`] deterministically hashes each app key into a
+//! layer stack (shared OS base + shared runtime layers + unique app
+//! layers). Equal app keys always map to the same image, so the trace's
+//! app-popularity skew becomes image-popularity skew — exactly the
+//! signal layer-aware scheduling exploits.
+//!
+//! Malformed input is handled per [`ErrorMode`]: `Strict` rejects the
+//! first bad row (with its line number), `Lenient` skips bad rows, drops
+//! duplicate task ids, and repairs out-of-order timestamps — every
+//! repair is counted in [`TraceStats`], never silent.
+//! [`TraceOptions::limit`] **short-circuits ingestion**: once the limit
+//! is reached the file is not read (or inflated) any further.
+//!
+//! See `docs/ARCHITECTURE.md` ("Arrival pipeline") for the pipeline
+//! diagram and `docs/SCALE.md` for copy-pasteable CLI runs against the
+//! bundled fixtures under `rust/tests/fixtures/`.
 
+use super::arrivals::ArrivalSource;
 use crate::cluster::{Pod, PodBuilder, Resources};
 use crate::registry::hub::digest_for;
 use crate::registry::{ImageMetadata, LayerMetadata, Registry};
 use crate::util::rng::Pcg;
 use crate::util::units::{Bytes, MilliCpu};
-use std::collections::{BTreeSet, HashSet};
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeSet, BinaryHeap, HashSet};
 use std::fmt;
-use std::io::BufRead;
+use std::io::{BufRead, Seek, SeekFrom};
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 
 /// Reference edge-node shape used to de-normalize trace resource columns
 /// (Alibaba `plan_cpu`/`plan_mem` are percentages of a machine; Azure
-/// packing `core`/`memory` are fractions of a server). Matches the
-/// `scale` fleet built by `exp::common::scale_nodes`: 4 cores / 8 GB.
+/// packing `core`/`memory` and Borg `cpu_request`/`mem_request` are
+/// fractions of a server). Matches the `scale` fleet built by
+/// `exp::common::scale_nodes`: 4 cores / 8 GB.
 pub const REF_NODE_CORES: f64 = 4.0;
 /// Reference node memory in GB (see [`REF_NODE_CORES`]).
 pub const REF_NODE_MEM_GB: f64 = 8.0;
@@ -77,14 +102,28 @@ pub enum TraceFormat {
     /// times in fractional days, and `core`/`memory` as fractions of a
     /// server ([`REF_NODE_CORES`]/[`REF_NODE_MEM_GB`]).
     Azure,
+    /// Google cluster-data (Borg) `task_events` dialect: headerless rows
+    /// of `time,missing,job_id,task_index,machine_id,event_type,user,`
+    /// `sched_class,priority,cpu_request,mem_request[,disk,constraint]`
+    /// with times in **microseconds** and requests as fractions of a
+    /// machine. Only SUBMIT rows (`event_type` 0) become arrivals; the
+    /// other lifecycle rows (SCHEDULE/EVICT/FINISH/…) are valid input
+    /// but produce no pod and are counted in [`TraceStats::filtered`].
+    /// Durations are not reconstructed (they would require pairing
+    /// SUBMIT with later FINISH rows across the whole stream), so Borg
+    /// tasks replay as services; bound runs with `--trace-limit` or a
+    /// pre-cut window. The app key is `job_id` (tasks of a job share an
+    /// image, so job popularity carries the layer-sharing skew).
+    Borg,
 }
 
 impl TraceFormat {
-    /// Parse a CLI-style format name (`alibaba` | `azure`).
+    /// Parse a CLI-style format name (`alibaba` | `azure` | `borg`).
     pub fn parse(s: &str) -> Option<TraceFormat> {
         match s {
             "alibaba" => Some(TraceFormat::Alibaba),
             "azure" => Some(TraceFormat::Azure),
+            "borg" => Some(TraceFormat::Borg),
             _ => None,
         }
     }
@@ -94,6 +133,7 @@ impl TraceFormat {
         match self {
             TraceFormat::Alibaba => "alibaba",
             TraceFormat::Azure => "azure",
+            TraceFormat::Borg => "borg",
         }
     }
 }
@@ -104,9 +144,9 @@ pub enum ErrorMode {
     /// Fail on the first malformed row, duplicate task id, or
     /// out-of-order timestamp — with the offending line number.
     Strict,
-    /// Skip malformed rows and duplicate task ids, and re-sort
-    /// out-of-order timestamps; every repair is counted in
-    /// [`TraceStats`].
+    /// Skip malformed rows and duplicate task ids, and repair
+    /// out-of-order timestamps through the bounded reorder buffer;
+    /// every repair is counted in [`TraceStats`].
     Lenient,
 }
 
@@ -121,14 +161,24 @@ pub struct TraceOptions {
     /// divided by this factor (> 1 makes week-long traces replayable in
     /// bounded virtual time while preserving the workload's shape).
     pub speedup: f64,
-    /// Stop after this many parsed events (None = whole trace). The
-    /// limit truncates in *file order* while streaming — before any
-    /// lenient re-sort — so on an out-of-order trace the kept window is
-    /// the first N events of the file, not the N earliest timestamps
-    /// (the trade keeps multi-million-row imports one bounded pass).
+    /// Stop after this many parsed events (None = whole trace). The limit
+    /// **short-circuits ingestion**: once `n` events have been accepted
+    /// (in *file order*, before any lenient reorder) the underlying file
+    /// is not read — or gzip-inflated — any further.
+    /// [`TraceStats::limit_hit`] records the cut, and
+    /// [`TraceStats::truncated_events`] counts the instances dropped from
+    /// the row being expanded when it hit.
     pub limit: Option<usize>,
     /// Seed for the deterministic layer-composition synthesis.
     pub seed: u64,
+    /// Lenient-mode reorder-buffer capacity in events: out-of-order
+    /// timestamps are repaired by holding at most this many events in a
+    /// look-ahead min-heap. Traces whose disorder fits the buffer (the
+    /// scan pass checks, see [`TraceStats::reorder_depth`]) replay
+    /// byte-identically to a whole-trace stable sort; traces that
+    /// exceed it fall back to the buffered sort
+    /// ([`TraceStats::full_resort`]).
+    pub reorder_cap: usize,
 }
 
 impl Default for TraceOptions {
@@ -139,6 +189,7 @@ impl Default for TraceOptions {
             speedup: 1.0,
             limit: None,
             seed: 42,
+            reorder_cap: 65_536,
         }
     }
 }
@@ -170,7 +221,7 @@ pub struct TraceEvent {
 /// What went wrong while importing a trace.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TraceError {
-    /// I/O failure reading the trace.
+    /// I/O failure reading the trace (including gzip decode errors).
     Io(String),
     /// A row could not be parsed (strict mode only; lenient skips).
     Malformed {
@@ -179,7 +230,8 @@ pub enum TraceError {
         /// Human-readable parse failure.
         reason: String,
     },
-    /// Timestamps went backwards (strict mode only; lenient re-sorts).
+    /// Timestamps went backwards (strict mode only; lenient repairs
+    /// through the reorder buffer).
     OutOfOrder {
         /// 1-based line number of the first row that went back in time.
         line: usize,
@@ -194,6 +246,12 @@ pub enum TraceError {
     },
     /// The trace contained no usable rows.
     Empty,
+    /// The file extension names a compression format the importer cannot
+    /// inflate. Supported inputs are plain `.csv` and gzip `.csv.gz`.
+    UnsupportedCompression {
+        /// The rejected extension (lowercased, without the dot).
+        ext: String,
+    },
 }
 
 impl fmt::Display for TraceError {
@@ -210,6 +268,12 @@ impl fmt::Display for TraceError {
                 write!(f, "trace line {line}: duplicate task id {task:?} (strict mode)")
             }
             TraceError::Empty => write!(f, "trace contained no usable rows"),
+            TraceError::UnsupportedCompression { ext } => write!(
+                f,
+                "unsupported compressed trace format .{ext}: supported inputs are plain \
+                 .csv or gzip-compressed .csv.gz — decompress the archive (or re-compress \
+                 it with gzip) before replaying"
+            ),
         }
     }
 }
@@ -220,16 +284,43 @@ impl std::error::Error for TraceError {}
 /// dropped. Lenient-mode repairs are visible here, never silent.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct TraceStats {
-    /// Data rows seen (excluding blank/comment/header lines).
+    /// Data rows seen (excluding blank/comment/header lines). With
+    /// [`TraceOptions::limit`] this counts only the rows actually read
+    /// before ingestion short-circuited.
     pub rows: usize,
     /// Events emitted (after instance expansion and `limit` truncation).
     pub events: usize,
     /// Malformed rows skipped (lenient mode).
     pub skipped: usize,
-    /// Duplicate task ids dropped (lenient mode).
+    /// Duplicate task ids dropped (lenient mode). Duplicate detection
+    /// uses 64-bit FNV-1a fingerprints of the task id (8 bytes per task
+    /// instead of the id string), so a false positive needs a 64-bit
+    /// hash collision (odds ≈ n²/2⁶⁵).
     pub duplicates: usize,
-    /// Whether out-of-order timestamps were re-sorted (lenient mode).
+    /// Valid rows that produce no arrival (Borg non-SUBMIT lifecycle
+    /// rows).
+    pub filtered: usize,
+    /// Whether out-of-order timestamps were repaired (lenient mode) —
+    /// through the bounded reorder buffer, or the full-sort fallback
+    /// when [`TraceStats::full_resort`] is set.
     pub resorted: bool,
+    /// Peak reorder displacement measured by the scan pass: the largest
+    /// number of events the reorder buffer had to hold past their turn
+    /// (0 for a time-sorted trace). The replay pass is byte-identical to
+    /// a whole-trace stable sort whenever this fits
+    /// [`TraceOptions::reorder_cap`].
+    pub reorder_depth: usize,
+    /// The trace's disorder exceeded [`TraceOptions::reorder_cap`]: the
+    /// replay pass fell back to buffering and stable-sorting the whole
+    /// event stream (correct, but no longer constant-memory).
+    pub full_resort: bool,
+    /// Ingestion stopped at [`TraceOptions::limit`] without reading the
+    /// rest of the file.
+    pub limit_hit: bool,
+    /// Instances dropped from the row being expanded when the limit hit
+    /// (rows beyond the cut are never read, so they are not counted
+    /// anywhere).
+    pub truncated_events: usize,
     /// Replayed span in (speedup-scaled) seconds: offset of the last
     /// arrival.
     pub span_secs: f64,
@@ -237,7 +328,10 @@ pub struct TraceStats {
     pub apps: usize,
 }
 
-/// A parsed trace, ready to synthesize a registry and build arrivals.
+/// A parsed trace, fully materialized: the buffered compatibility layer
+/// over the streaming pipeline (`events` holds the whole normalized
+/// stream). The paper-scale fixtures and tests use it; multi-million-row
+/// replays should stream through [`TraceReplay`] instead.
 #[derive(Debug, Clone)]
 pub struct Trace {
     /// Normalized events, sorted by `submit_at`.
@@ -261,146 +355,640 @@ struct RawRow {
     instances: u64,
 }
 
-/// Parse a trace file from `path`. Files ending in `.gz` are gzip
-/// members (real cluster traces ship compressed — e.g. Alibaba's
-/// `batch_task.csv.gz`): they are decompressed in memory via the
-/// dependency-free [`crate::util::gzip`] decoder and then streamed
-/// line-by-line exactly like a plain file.
-pub fn load(path: &Path, opts: &TraceOptions) -> Result<Trace, TraceError> {
-    if path.extension().and_then(|e| e.to_str()) == Some("gz") {
-        let raw = std::fs::read(path)
-            .map_err(|e| TraceError::Io(format!("{}: {e}", path.display())))?;
-        let plain = crate::util::gzip::decompress(&raw)
-            .map_err(|e| TraceError::Io(format!("{}: {e}", path.display())))?;
-        return parse_reader(std::io::Cursor::new(plain), opts);
+// --- opening traces -------------------------------------------------------
+
+/// Reject compressed formats the importer cannot inflate, *before*
+/// feeding compressed bytes to the CSV parser.
+fn check_extension(path: &Path) -> Result<(), TraceError> {
+    if let Some(ext) = path.extension().and_then(|e| e.to_str()) {
+        let ext = ext.to_ascii_lowercase();
+        if matches!(ext.as_str(), "zst" | "zstd" | "xz" | "bz2" | "lz4" | "zip" | "7z") {
+            return Err(TraceError::UnsupportedCompression { ext });
+        }
     }
-    let file = std::fs::File::open(path)
-        .map_err(|e| TraceError::Io(format!("{}: {e}", path.display())))?;
-    parse_reader(std::io::BufReader::new(file), opts)
+    Ok(())
 }
 
-/// Parse a trace from any buffered reader, line by line (no full-file
-/// buffering). Blank lines and `#`-comments are skipped in both modes; a
-/// literal `task_name…` header on an Alibaba trace is tolerated.
-pub fn parse_reader<R: BufRead>(reader: R, opts: &TraceOptions) -> Result<Trace, TraceError> {
-    assert!(opts.speedup > 0.0, "trace speedup must be positive");
-    let mut stats = TraceStats::default();
-    let mut events: Vec<TraceEvent> = Vec::new();
-    let mut seen_tasks: HashSet<String> = HashSet::new();
-    // Azure column map, built from the header line.
-    let mut azure_cols: Option<AzureCols> = None;
-    let limit = opts.limit.unwrap_or(usize::MAX);
+/// Open `path` for one streaming pass. Files ending in `.gz` stream
+/// through the bounded-memory [`crate::util::gzip::GzDecoder`] (real
+/// cluster traces ship compressed — e.g. Alibaba's `batch_task.csv.gz`);
+/// everything else reads as plain text.
+fn open_reader(path: &Path) -> Result<Box<dyn BufRead>, TraceError> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| TraceError::Io(format!("{}: {e}", path.display())))?;
+    // Case-insensitive, matching `check_extension`: a `.GZ` trace must
+    // decompress, not feed compressed bytes to the CSV parser.
+    let is_gz = path
+        .extension()
+        .and_then(|e| e.to_str())
+        .is_some_and(|e| e.eq_ignore_ascii_case("gz"));
+    if is_gz {
+        Ok(Box::new(std::io::BufReader::new(crate::util::gzip::GzDecoder::new(file))))
+    } else {
+        Ok(Box::new(std::io::BufReader::new(file)))
+    }
+}
 
-    'lines: for (idx, line) in reader.lines().enumerate() {
-        let lineno = idx + 1;
-        let line = line.map_err(|e| TraceError::Io(e.to_string()))?;
-        let trimmed = line.trim();
-        if trimmed.is_empty() || trimmed.starts_with('#') {
-            continue;
+/// Parse a whole trace file into a buffered [`Trace`] (both passes of the
+/// streaming pipeline, collected). For replays that should stay
+/// constant-memory, use [`TraceReplay::open`] instead.
+pub fn load(path: &Path, opts: &TraceOptions) -> Result<Trace, TraceError> {
+    TraceReplay::open(path, opts)?.into_trace()
+}
+
+/// Parse a trace from any seekable buffered reader (the in-memory /
+/// test-harness entry point): the scan pass runs over the reader, the
+/// reader rewinds, and the replay pass collects into a buffered
+/// [`Trace`]. Blank lines and `#`-comments are skipped in both modes; a
+/// literal `task_name…` header on an Alibaba trace is tolerated.
+pub fn parse_reader<R: BufRead + Seek>(
+    mut reader: R,
+    opts: &TraceOptions,
+) -> Result<Trace, TraceError> {
+    let start = reader
+        .stream_position()
+        .map_err(|e| TraceError::Io(e.to_string()))?;
+    let summary = scan(&mut reader, opts)?;
+    reader
+        .seek(SeekFrom::Start(start))
+        .map_err(|e| TraceError::Io(e.to_string()))?;
+    let mut source = TraceSource::new(&mut reader, opts, &summary);
+    let mut events = Vec::with_capacity(summary.stats.events);
+    while let Some(ev) = source.next_event()? {
+        events.push(ev);
+    }
+    Ok(Trace { events, stats: summary.stats, seed: opts.seed })
+}
+
+/// A trace opened for constant-memory streaming replay: the scan pass has
+/// run (stats, app set, and normalization anchor are known), and the
+/// replay pass is ready to pull as an
+/// [`crate::sim::arrivals::ArrivalSource`].
+pub struct TraceReplay {
+    /// Importer bookkeeping from the scan pass (the replay pass makes
+    /// byte-identical decisions).
+    pub stats: TraceStats,
+    /// Distinct app keys, for registry synthesis.
+    apps: BTreeSet<String>,
+    /// Layer-synthesis seed carried from [`TraceOptions::seed`].
+    seed: u64,
+    source: TraceSource<Box<dyn BufRead>>,
+}
+
+impl TraceReplay {
+    /// Open `path` for streaming replay: validate the extension, run the
+    /// scan pass, and arm the replay pass (the file is opened twice; each
+    /// pass streams it once).
+    pub fn open(path: &Path, opts: &TraceOptions) -> Result<TraceReplay, TraceError> {
+        check_extension(path)?;
+        let summary = scan(open_reader(path)?, opts)?;
+        let source = TraceSource::new(open_reader(path)?, opts, &summary);
+        Ok(TraceReplay { stats: summary.stats, apps: summary.apps, seed: opts.seed, source })
+    }
+
+    /// Build a registry holding one synthesized image per distinct app
+    /// key (sorted, so registry construction is deterministic) — same
+    /// output as [`Trace::synthesize_registry`] on the buffered path.
+    pub fn synthesize_registry(&self) -> Registry {
+        let mut registry = Registry::new();
+        for app in &self.apps {
+            registry.push(synthesize_image(app, self.seed));
         }
-        match opts.format {
+        registry
+    }
+
+    /// Hand over the pull-based arrival source (consumes the replay).
+    pub fn into_source(self) -> TraceSource<Box<dyn BufRead>> {
+        self.source
+    }
+
+    /// Drain the replay pass into a buffered [`Trace`].
+    fn into_trace(mut self) -> Result<Trace, TraceError> {
+        let mut events = Vec::with_capacity(self.stats.events);
+        while let Some(ev) = self.source.next_event()? {
+            events.push(ev);
+        }
+        Ok(Trace { events, stats: self.stats, seed: self.seed })
+    }
+}
+
+// --- the shared row parser ------------------------------------------------
+
+/// Per-line parse/validate/dedup machinery shared verbatim by the scan
+/// and replay passes, so both make byte-identical decisions about every
+/// row.
+struct RowParser {
+    format: TraceFormat,
+    mode: ErrorMode,
+    stats: TraceStats,
+    /// Azure column map, built from the header line.
+    azure_cols: Option<AzureCols>,
+    /// 64-bit FNV-1a fingerprints of task ids seen (see
+    /// [`TraceStats::duplicates`] for the collision trade).
+    seen_tasks: HashSet<u64>,
+}
+
+impl RowParser {
+    fn new(opts: &TraceOptions) -> RowParser {
+        RowParser {
+            format: opts.format,
+            mode: opts.mode,
+            stats: TraceStats::default(),
+            azure_cols: None,
+            seen_tasks: HashSet::new(),
+        }
+    }
+
+    /// Process one source line. `Ok(None)` = no row from this line
+    /// (blank/comment/header, lenient skip, or a filtered Borg
+    /// lifecycle row).
+    fn push_line(&mut self, lineno: usize, raw: &str) -> Result<Option<RawRow>, TraceError> {
+        let trimmed = raw.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            return Ok(None);
+        }
+        match self.format {
             TraceFormat::Alibaba => {
                 // Tolerate a header on the first data line (the real
                 // trace has none; comment/blank lines may precede it).
                 // Matching the first two header column names keeps a
                 // task literally named `task_name…` from false-matching.
-                if stats.rows == 0 && trimmed.starts_with("task_name,instance_num") {
-                    continue;
+                if self.stats.rows == 0 && trimmed.starts_with("task_name,instance_num") {
+                    return Ok(None);
                 }
             }
             TraceFormat::Azure => {
-                if azure_cols.is_none() {
-                    azure_cols = Some(AzureCols::from_header(trimmed, lineno)?);
-                    continue;
+                if self.azure_cols.is_none() {
+                    self.azure_cols = Some(AzureCols::from_header(trimmed, lineno)?);
+                    return Ok(None);
                 }
             }
+            TraceFormat::Borg => {}
         }
-        stats.rows += 1;
-        let parsed = match opts.format {
+        self.stats.rows += 1;
+        let parsed = match self.format {
             TraceFormat::Alibaba => parse_alibaba_row(trimmed),
             TraceFormat::Azure => {
-                parse_azure_row(trimmed, azure_cols.as_ref().expect("header parsed"))
+                parse_azure_row(trimmed, self.azure_cols.as_ref().expect("header parsed"))
             }
+            TraceFormat::Borg => parse_borg_row(trimmed),
         };
         let row = match parsed {
-            Ok(row) => row,
-            Err(reason) => match opts.mode {
+            Ok(Some(row)) => row,
+            Ok(None) => {
+                // Valid lifecycle row that produces no arrival.
+                self.stats.filtered += 1;
+                return Ok(None);
+            }
+            Err(reason) => match self.mode {
                 ErrorMode::Strict => {
                     return Err(TraceError::Malformed { line: lineno, reason })
                 }
                 ErrorMode::Lenient => {
-                    stats.skipped += 1;
-                    continue;
+                    self.stats.skipped += 1;
+                    return Ok(None);
                 }
             },
         };
-        if !seen_tasks.insert(row.task_id.clone()) {
-            match opts.mode {
+        if !self.seen_tasks.insert(fnv64(&row.task_id)) {
+            match self.mode {
                 ErrorMode::Strict => {
                     return Err(TraceError::DuplicateTask { line: lineno, task: row.task_id })
                 }
                 ErrorMode::Lenient => {
-                    stats.duplicates += 1;
-                    continue;
+                    self.stats.duplicates += 1;
+                    return Ok(None);
                 }
             }
         }
-        for k in 0..row.instances {
-            if events.len() >= limit {
-                break 'lines;
-            }
-            let task_id = if row.instances == 1 {
-                row.task_id.clone()
-            } else {
-                format!("{}#{k}", row.task_id)
-            };
-            events.push(TraceEvent {
-                line: lineno,
-                submit_at: row.start, // absolute; normalized below
-                task_id,
-                app: row.app.clone(),
-                cpu_milli: row.cpu_milli,
-                mem_bytes: row.mem_bytes,
-                duration_secs: row.end.map(|e| e - row.start),
-            });
-        }
+        Ok(Some(row))
     }
-
-    if events.is_empty() {
-        return Err(TraceError::Empty);
-    }
-
-    // Order check on the raw timestamps (the trace's own order).
-    let ooo_line =
-        events.windows(2).find(|w| w[1].submit_at < w[0].submit_at).map(|w| w[1].line);
-    if let Some(line) = ooo_line {
-        match opts.mode {
-            ErrorMode::Strict => return Err(TraceError::OutOfOrder { line }),
-            ErrorMode::Lenient => {
-                stats.resorted = true;
-                // Stable: equal timestamps keep the trace's row order.
-                events.sort_by(|a, b| a.submit_at.partial_cmp(&b.submit_at).unwrap());
-            }
-        }
-    }
-
-    // Normalize: earliest arrival at t=0, then compress by `speedup`.
-    let t0 = events[0].submit_at;
-    for ev in &mut events {
-        ev.submit_at = (ev.submit_at - t0) / opts.speedup;
-        if let Some(d) = &mut ev.duration_secs {
-            *d /= opts.speedup;
-        }
-    }
-
-    stats.events = events.len();
-    stats.span_secs = events.last().map(|e| e.submit_at).unwrap_or(0.0);
-    stats.apps = events.iter().map(|e| e.app.as_str()).collect::<BTreeSet<_>>().len();
-    Ok(Trace { events, stats, seed: opts.seed })
 }
 
+/// Streams raw (absolute-time) [`TraceEvent`]s off a reader: pulls lines
+/// through the [`RowParser`], expands Alibaba `instance_num` rows, and
+/// enforces the event limit by **short-circuiting** — once the limit is
+/// reached no further line is read (or gzip-inflated).
+struct EventReader<B> {
+    lines: std::io::Lines<B>,
+    parser: RowParser,
+    lineno: usize,
+    /// Row mid-expansion: (row, next instance index, source line).
+    pending: Option<(RawRow, u64, usize)>,
+    emitted: usize,
+    limit: usize,
+    finished: bool,
+}
+
+impl<B: BufRead> EventReader<B> {
+    fn new(reader: B, opts: &TraceOptions) -> EventReader<B> {
+        EventReader {
+            lines: reader.lines(),
+            parser: RowParser::new(opts),
+            lineno: 0,
+            pending: None,
+            emitted: 0,
+            limit: opts.limit.unwrap_or(usize::MAX),
+            finished: false,
+        }
+    }
+
+    /// Next raw event (absolute trace timestamps; normalization happens
+    /// at the consumer edge so order checks see the trace's own times).
+    fn next_event(&mut self) -> Result<Option<TraceEvent>, TraceError> {
+        if self.finished {
+            return Ok(None);
+        }
+        loop {
+            if self.emitted >= self.limit {
+                // Limit short-circuit: stop reading. Count what the cut
+                // dropped from the current row; when the cut fell on a row
+                // boundary, probe ahead so `limit_hit` means "a data row
+                // (or unreadable input) was cut", not "the file also ended
+                // here". The probe skips trailing blank/comment lines and
+                // stops at the first data candidate (or read error), so a
+                // real cut stops it after one line; probed lines are never
+                // parsed, and both passes probe identically.
+                self.finished = true;
+                if let Some((row, k, _)) = self.pending.take() {
+                    self.parser.stats.truncated_events += (row.instances - k) as usize;
+                    self.parser.stats.limit_hit = true;
+                } else {
+                    while let Some(line) = self.lines.next() {
+                        match line {
+                            Err(_) => {
+                                // Unreadable tail: input existed past the
+                                // cut even if it cannot be decoded.
+                                self.parser.stats.limit_hit = true;
+                                break;
+                            }
+                            Ok(l) => {
+                                let t = l.trim();
+                                if !t.is_empty() && !t.starts_with('#') {
+                                    self.parser.stats.limit_hit = true;
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+                return Ok(None);
+            }
+            if let Some((row, k, line)) = self.pending.as_mut() {
+                let task_id = if row.instances == 1 {
+                    row.task_id.clone()
+                } else {
+                    format!("{}#{k}", row.task_id)
+                };
+                let ev = TraceEvent {
+                    line: *line,
+                    submit_at: row.start, // absolute; normalized downstream
+                    task_id,
+                    app: row.app.clone(),
+                    cpu_milli: row.cpu_milli,
+                    mem_bytes: row.mem_bytes,
+                    duration_secs: row.end.map(|e| e - row.start),
+                };
+                *k += 1;
+                if *k >= row.instances {
+                    self.pending = None;
+                }
+                self.emitted += 1;
+                self.parser.stats.events += 1;
+                return Ok(Some(ev));
+            }
+            match self.lines.next() {
+                None => {
+                    self.finished = true;
+                    return Ok(None);
+                }
+                Some(line) => {
+                    let line = line.map_err(|e| TraceError::Io(e.to_string()))?;
+                    self.lineno += 1;
+                    if let Some(row) = self.parser.push_line(self.lineno, &line)? {
+                        self.pending = Some((row, 0, self.lineno));
+                    }
+                }
+            }
+        }
+    }
+}
+
+// --- ordering keys --------------------------------------------------------
+
+/// Total-order key for the reorder buffer: `(raw time, parse order)`.
+/// Times are finite by construction (`parse_f64` rejects non-finite), so
+/// the order is total; the sequence tie-break makes heap emission exactly
+/// a *stable* sort by time.
+#[derive(Debug, Clone, Copy)]
+struct TimeKey {
+    t: f64,
+    seq: u64,
+}
+
+impl PartialEq for TimeKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for TimeKey {}
+
+impl PartialOrd for TimeKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TimeKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.t
+            .partial_cmp(&other.t)
+            .expect("trace timestamps are finite")
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// A buffered event in the replay pass's reorder heap.
+struct HeapEvent {
+    key: TimeKey,
+    ev: TraceEvent,
+}
+
+impl PartialEq for HeapEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+
+impl Eq for HeapEvent {}
+
+impl PartialOrd for HeapEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapEvent {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
+// --- pass 1: scan ---------------------------------------------------------
+
+/// What the scan pass learned about the trace.
+struct ScanSummary {
+    stats: TraceStats,
+    /// Earliest kept timestamp (the `t=0` normalization anchor).
+    t0: f64,
+    /// Distinct app keys, for registry synthesis.
+    apps: BTreeSet<String>,
+}
+
+/// Pass 1: stream the whole (limit-truncated) trace once, keeping only
+/// bounded state — strict-mode validation with line numbers, min/max
+/// timestamps, the app set, and a keys-only simulation of the bounded
+/// reorder buffer that measures the trace's disorder and decides whether
+/// the replay pass needs the full-sort fallback.
+fn scan<B: BufRead>(reader: B, opts: &TraceOptions) -> Result<ScanSummary, TraceError> {
+    assert!(opts.speedup > 0.0, "trace speedup must be positive");
+    let mut er = EventReader::new(reader, opts);
+    let mut apps: BTreeSet<String> = BTreeSet::new();
+    let mut min_t = f64::INFINITY;
+    let mut max_t = f64::NEG_INFINITY;
+    let mut prev_t = f64::NEG_INFINITY;
+    let mut inversion = false;
+    let mut full_resort = false;
+    // Keys-only reorder-buffer simulation (lenient mode): identical pop
+    // discipline to the replay pass, 16 bytes per buffered event.
+    let cap = opts.reorder_cap.max(1);
+    let mut heap: BinaryHeap<Reverse<TimeKey>> = BinaryHeap::new();
+    let mut seq: u64 = 0;
+    let mut emit_idx: u64 = 0;
+    let mut depth: u64 = 0;
+    let mut max_emitted: Option<TimeKey> = None;
+
+    while let Some(ev) = er.next_event()? {
+        let t = ev.submit_at; // raw absolute time
+        if t < prev_t {
+            match opts.mode {
+                ErrorMode::Strict => return Err(TraceError::OutOfOrder { line: ev.line }),
+                ErrorMode::Lenient => inversion = true,
+            }
+        }
+        prev_t = t;
+        min_t = min_t.min(t);
+        max_t = max_t.max(t);
+        if !apps.contains(ev.app.as_str()) {
+            apps.insert(ev.app.clone());
+        }
+        if opts.mode == ErrorMode::Lenient {
+            let key = TimeKey { t, seq };
+            if let Some(m) = &max_emitted {
+                if key < *m {
+                    // The bounded buffer already emitted something that
+                    // sorts after this event: bounded replay would not
+                    // match the stable full sort. Fall back.
+                    full_resort = true;
+                }
+            }
+            heap.push(Reverse(key));
+            if heap.len() > cap {
+                let popped = heap.pop().expect("heap non-empty").0;
+                depth = depth.max(popped.seq.saturating_sub(emit_idx));
+                emit_idx += 1;
+                let is_new_max = match &max_emitted {
+                    None => true,
+                    Some(m) => popped > *m,
+                };
+                if is_new_max {
+                    max_emitted = Some(popped);
+                }
+            }
+        }
+        seq += 1;
+    }
+    while let Some(Reverse(popped)) = heap.pop() {
+        depth = depth.max(popped.seq.saturating_sub(emit_idx));
+        emit_idx += 1;
+    }
+
+    let mut stats = std::mem::take(&mut er.parser.stats);
+    if stats.events == 0 {
+        return Err(TraceError::Empty);
+    }
+    stats.resorted = inversion;
+    stats.reorder_depth = depth as usize;
+    stats.full_resort = full_resort;
+    stats.apps = apps.len();
+    stats.span_secs = (max_t - min_t) / opts.speedup;
+    Ok(ScanSummary { stats, t0: min_t, apps })
+}
+
+// --- pass 2: the streaming arrival source ---------------------------------
+
+/// Normalize a raw event against the scan pass's anchor: earliest arrival
+/// at t = 0, then compress by `speedup` (same float operations as the
+/// historical buffered path, so offsets are bit-identical).
+fn normalize_event(mut ev: TraceEvent, t0: f64, speedup: f64) -> TraceEvent {
+    ev.submit_at = (ev.submit_at - t0) / speedup;
+    if let Some(d) = &mut ev.duration_secs {
+        *d /= speedup;
+    }
+    ev
+}
+
+/// Build the pod one normalized trace event replays as (shared by the
+/// streaming source and the buffered [`Trace::arrivals`], so both paths
+/// produce identical pods).
+fn pod_for_event(builder: &mut PodBuilder, ev: &TraceEvent) -> Pod {
+    let (name, tag) = image_name_for_app(&ev.app);
+    let mut pod = builder.build(
+        &format!("{name}:{tag}"),
+        Resources::new(MilliCpu(ev.cpu_milli), Bytes(ev.mem_bytes)),
+    );
+    if let Some(d) = ev.duration_secs {
+        pod = pod.with_duration(d);
+    }
+    pod
+}
+
+/// Pass 2: the pull-based streaming replay —
+/// [`crate::sim::arrivals::ArrivalSource`] over a trace reader. Lenient
+/// mode repairs out-of-order timestamps through a bounded min-heap
+/// ([`TraceOptions::reorder_cap`]); strict mode streams directly (the
+/// scan pass proved the trace ordered). When the scan pass flagged
+/// [`TraceStats::full_resort`], the source buffers and stable-sorts the
+/// whole stream instead — identical output, documented memory cost.
+///
+/// I/O or parse errors encountered mid-replay (e.g. the file changed
+/// between the passes, or late gzip corruption) end the stream; check
+/// [`TraceSource::take_error`] after draining, or hold on to
+/// [`TraceSource::error_slot`] when the source is handed to the engine
+/// by value.
+pub struct TraceSource<B: BufRead> {
+    reader: EventReader<B>,
+    mode: ErrorMode,
+    t0: f64,
+    speedup: f64,
+    cap: usize,
+    heap: BinaryHeap<Reverse<HeapEvent>>,
+    seq: u64,
+    input_done: bool,
+    full_resort: bool,
+    /// Whole-trace fallback: sorted events not yet emitted.
+    sorted: Option<std::vec::IntoIter<TraceEvent>>,
+    builder: PodBuilder,
+    /// Shared slot for a mid-replay error (see [`TraceErrorSlot`]).
+    failed: TraceErrorSlot,
+}
+
+/// Shared handle to a [`TraceSource`]'s mid-replay error: the
+/// [`crate::sim::arrivals::ArrivalSource`] pull interface has no error
+/// channel, so a source that fails mid-stream records the
+/// [`TraceError`] here and ends the stream. Callers that move the
+/// source into the engine keep a clone of the slot
+/// ([`TraceSource::error_slot`]) and inspect it after the run.
+pub type TraceErrorSlot = Arc<Mutex<Option<TraceError>>>;
+
+impl<B: BufRead> TraceSource<B> {
+    /// Arm the replay pass over `reader`, using the scan pass's summary
+    /// for the normalization anchor and the fallback decision.
+    fn new(reader: B, opts: &TraceOptions, summary: &ScanSummary) -> TraceSource<B> {
+        TraceSource {
+            reader: EventReader::new(reader, opts),
+            mode: opts.mode,
+            t0: summary.t0,
+            speedup: opts.speedup,
+            cap: opts.reorder_cap.max(1),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            input_done: false,
+            full_resort: summary.stats.full_resort,
+            sorted: None,
+            builder: PodBuilder::new(),
+            failed: Arc::new(Mutex::new(None)),
+        }
+    }
+
+    /// Next normalized event in replay order, or `None` at end of trace.
+    pub fn next_event(&mut self) -> Result<Option<TraceEvent>, TraceError> {
+        let (t0, speedup) = (self.t0, self.speedup);
+        if self.full_resort {
+            if self.sorted.is_none() {
+                let mut all = Vec::new();
+                while let Some(ev) = self.reader.next_event()? {
+                    all.push(ev);
+                }
+                // Stable: equal timestamps keep the trace's row order.
+                all.sort_by(|a, b| {
+                    a.submit_at.partial_cmp(&b.submit_at).expect("finite timestamps")
+                });
+                self.sorted = Some(all.into_iter());
+            }
+            let next = self.sorted.as_mut().expect("fallback built").next();
+            return Ok(next.map(|ev| normalize_event(ev, t0, speedup)));
+        }
+        if self.mode == ErrorMode::Strict {
+            // The scan pass rejected any disorder: stream straight through.
+            let next = self.reader.next_event()?;
+            return Ok(next.map(|ev| normalize_event(ev, t0, speedup)));
+        }
+        loop {
+            if !self.input_done && self.heap.len() <= self.cap {
+                match self.reader.next_event()? {
+                    None => self.input_done = true,
+                    Some(ev) => {
+                        let key = TimeKey { t: ev.submit_at, seq: self.seq };
+                        self.seq += 1;
+                        self.heap.push(Reverse(HeapEvent { key, ev }));
+                    }
+                }
+                continue;
+            }
+            let next = self.heap.pop();
+            return Ok(next.map(|Reverse(h)| normalize_event(h.ev, t0, speedup)));
+        }
+    }
+
+    /// The error that ended the stream early (if any) — set when a pull
+    /// through [`ArrivalSource::next_arrival`] hit an I/O or parse
+    /// failure it had no channel to report.
+    pub fn take_error(&mut self) -> Option<TraceError> {
+        self.failed.lock().expect("trace error slot poisoned").take()
+    }
+
+    /// A shared handle to the mid-replay error slot, for callers that
+    /// move the source into the engine (see [`TraceErrorSlot`]).
+    pub fn error_slot(&self) -> TraceErrorSlot {
+        Arc::clone(&self.failed)
+    }
+}
+
+impl<B: BufRead> ArrivalSource for TraceSource<B> {
+    fn next_arrival(&mut self) -> Option<(f64, Pod)> {
+        if self.failed.lock().expect("trace error slot poisoned").is_some() {
+            return None;
+        }
+        match self.next_event() {
+            Ok(Some(ev)) => {
+                let pod = pod_for_event(&mut self.builder, &ev);
+                Some((ev.submit_at, pod))
+            }
+            Ok(None) => None,
+            Err(e) => {
+                *self.failed.lock().expect("trace error slot poisoned") = Some(e);
+                None
+            }
+        }
+    }
+}
+
+// --- dialect row parsers --------------------------------------------------
+
 /// Split and validate one headerless Alibaba `batch_task` row.
-fn parse_alibaba_row(line: &str) -> Result<RawRow, String> {
+fn parse_alibaba_row(line: &str) -> Result<Option<RawRow>, String> {
     let cols: Vec<&str> = line.split(',').map(|c| c.trim()).collect();
     if cols.len() < 9 {
         return Err(format!("expected 9 columns, found {}", cols.len()));
@@ -436,7 +1024,7 @@ fn parse_alibaba_row(line: &str) -> Result<RawRow, String> {
     if plan_cpu < 0.0 || plan_mem < 0.0 {
         return Err("negative resource plan".to_string());
     }
-    Ok(RawRow {
+    Ok(Some(RawRow {
         task_id: format!("{task_name}@{job_name}"),
         app: task_name.to_string(),
         start,
@@ -445,7 +1033,7 @@ fn parse_alibaba_row(line: &str) -> Result<RawRow, String> {
         mem_bytes: ((plan_mem / 100.0 * REF_NODE_MEM_GB * 1e9).round() as u64)
             .max(MIN_MEM_BYTES),
         instances,
-    })
+    }))
 }
 
 /// Column indices resolved from an Azure-style header line.
@@ -488,7 +1076,7 @@ fn azure_field<'a>(fields: &[&'a str], i: usize, what: &str) -> Result<&'a str, 
 }
 
 /// Split and validate one Azure-style data row against the header map.
-fn parse_azure_row(line: &str, cols: &AzureCols) -> Result<RawRow, String> {
+fn parse_azure_row(line: &str, cols: &AzureCols) -> Result<Option<RawRow>, String> {
     let fields: Vec<&str> = line.split(',').map(|c| c.trim()).collect();
     if fields.len() < cols.width {
         return Err(format!(
@@ -526,7 +1114,7 @@ fn parse_azure_row(line: &str, cols: &AzureCols) -> Result<RawRow, String> {
     if core < 0.0 || mem < 0.0 {
         return Err("negative resource fraction".to_string());
     }
-    Ok(RawRow {
+    Ok(Some(RawRow {
         task_id: id.to_string(),
         app: if app.is_empty() { id.to_string() } else { app.to_string() },
         start,
@@ -534,7 +1122,58 @@ fn parse_azure_row(line: &str, cols: &AzureCols) -> Result<RawRow, String> {
         cpu_milli: ((core * REF_NODE_CORES * 1000.0).round() as u64).max(MIN_CPU_MILLI),
         mem_bytes: ((mem * REF_NODE_MEM_GB * 1e9).round() as u64).max(MIN_MEM_BYTES),
         instances: 1,
-    })
+    }))
+}
+
+/// Split and validate one headerless Google cluster-data (Borg)
+/// `task_events` row — see [`TraceFormat::Borg`] for the column map.
+/// Non-SUBMIT lifecycle rows are valid input but produce no arrival
+/// (`Ok(None)`, counted in [`TraceStats::filtered`]).
+fn parse_borg_row(line: &str) -> Result<Option<RawRow>, String> {
+    let cols: Vec<&str> = line.split(',').map(|c| c.trim()).collect();
+    if cols.len() < 11 {
+        return Err(format!("expected at least 11 columns, found {}", cols.len()));
+    }
+    let time_us = parse_f64(cols[0], "time")?;
+    if time_us < 0.0 {
+        return Err("negative timestamp".to_string());
+    }
+    let job = cols[2];
+    let task_index = cols[3];
+    if job.is_empty() || task_index.is_empty() {
+        return Err("empty job_id or task_index".to_string());
+    }
+    let event_type = cols[5]
+        .parse::<u32>()
+        .map_err(|_| format!("bad event_type {:?}", cols[5]))?;
+    if event_type != 0 {
+        // SCHEDULE/EVICT/FAIL/FINISH/KILL/…: lifecycle rows, not arrivals.
+        return Ok(None);
+    }
+    // Requests are fractions of the largest machine; empty cells happen
+    // in the public trace and floor to the minimum request.
+    let cpu = match cols[9] {
+        "" => 0.0,
+        s => parse_f64(s, "cpu_request")?,
+    };
+    let mem = match cols[10] {
+        "" => 0.0,
+        s => parse_f64(s, "mem_request")?,
+    };
+    if cpu < 0.0 || mem < 0.0 {
+        return Err("negative resource request".to_string());
+    }
+    Ok(Some(RawRow {
+        task_id: format!("{job}#{task_index}"),
+        app: job.to_string(),
+        start: time_us / 1e6,
+        // Lifetimes live in later FINISH rows; pairing them would need
+        // unbounded cross-stream state, so Borg tasks replay as services.
+        end: None,
+        cpu_milli: ((cpu * REF_NODE_CORES * 1000.0).round() as u64).max(MIN_CPU_MILLI),
+        mem_bytes: ((mem * REF_NODE_MEM_GB * 1e9).round() as u64).max(MIN_MEM_BYTES),
+        instances: 1,
+    }))
 }
 
 fn parse_f64(s: &str, what: &str) -> Result<f64, String> {
@@ -571,7 +1210,7 @@ const RUNTIME_POOL: &[(&str, f64)] = &[
 ];
 
 /// FNV-1a over the app key — the deterministic hash that anchors all
-/// per-app synthesis decisions.
+/// per-app synthesis decisions (and the task-id dedup fingerprints).
 fn fnv64(s: &str) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for b in s.bytes() {
@@ -638,22 +1277,13 @@ impl Trace {
 
     /// Build the `(arrival-offset, Pod)` pairs to feed
     /// [`crate::sim::Simulation::run_arrivals`]. Pod ids are assigned in
-    /// trace order by a fresh [`PodBuilder`].
+    /// trace order by a fresh [`PodBuilder`] — the same ids the
+    /// streaming [`TraceSource`] assigns when pulled in order.
     pub fn arrivals(&self) -> Vec<(f64, Pod)> {
         let mut builder = PodBuilder::new();
         self.events
             .iter()
-            .map(|ev| {
-                let (name, tag) = image_name_for_app(&ev.app);
-                let mut pod = builder.build(
-                    &format!("{name}:{tag}"),
-                    Resources::new(MilliCpu(ev.cpu_milli), Bytes(ev.mem_bytes)),
-                );
-                if let Some(d) = ev.duration_secs {
-                    pod = pod.with_duration(d);
-                }
-                (ev.submit_at, pod)
-            })
+            .map(|ev| (ev.submit_at, pod_for_event(&mut builder, ev)))
             .collect()
     }
 }
@@ -670,7 +1300,7 @@ task_m1,1,j_2,A,Terminated,110,,100,0.2
 ";
 
     fn parse_str(s: &str, opts: &TraceOptions) -> Result<Trace, TraceError> {
-        parse_reader(Cursor::new(s.as_bytes()), opts)
+        parse_reader(Cursor::new(s.as_bytes().to_vec()), opts)
     }
 
     #[test]
@@ -682,6 +1312,9 @@ task_m1,1,j_2,A,Terminated,110,,100,0.2
         assert_eq!(t.stats.events, 4);
         assert_eq!(t.stats.skipped, 0);
         assert_eq!(t.stats.apps, 2, "task_m1 recurs across jobs");
+        assert_eq!(t.stats.reorder_depth, 0, "fixture is time-sorted");
+        assert!(!t.stats.full_resort);
+        assert!(!t.stats.limit_hit);
         // Normalized to t=0.
         assert_eq!(t.events[0].submit_at, 0.0);
         assert_eq!(t.events[2].submit_at, 3.0);
@@ -709,10 +1342,35 @@ task_m1,1,j_2,A,Terminated,110,,100,0.2
     }
 
     #[test]
-    fn limit_truncates_mid_expansion() {
+    fn limit_truncates_mid_expansion_and_short_circuits() {
         let opts = TraceOptions { limit: Some(1), ..Default::default() };
         let t = parse_str(ALIBABA_OK, &opts).unwrap();
         assert_eq!(t.events.len(), 1);
+        assert!(t.stats.limit_hit, "the cut must be visible in stats");
+        assert_eq!(t.stats.truncated_events, 1, "row 1's second instance was dropped");
+        // Short-circuit: rows 2 and 3 were never read.
+        assert_eq!(t.stats.rows, 1);
+    }
+
+    #[test]
+    fn exact_limit_is_not_reported_as_a_cut() {
+        // ALIBABA_OK holds exactly 4 events: a limit of 4 truncates
+        // nothing, and the stats must say so (the EOF probe).
+        let opts = TraceOptions { limit: Some(4), ..Default::default() };
+        let t = parse_str(ALIBABA_OK, &opts).unwrap();
+        assert_eq!(t.events.len(), 4);
+        assert!(!t.stats.limit_hit, "limit == trace length: nothing was cut");
+        assert_eq!(t.stats.truncated_events, 0);
+        // Trailing blank/comment lines are not data: still not a cut.
+        let trailing = format!("{ALIBABA_OK}\n# trailing comment\n\n");
+        let t = parse_str(&trailing, &opts).unwrap();
+        assert!(!t.stats.limit_hit, "trailing comments are not truncated data");
+        // But a data row past the cut is: limit 3 stops before row 3.
+        let opts = TraceOptions { limit: Some(3), ..Default::default() };
+        let t = parse_str(ALIBABA_OK, &opts).unwrap();
+        assert_eq!(t.events.len(), 3);
+        assert!(t.stats.limit_hit, "row 3 was cut");
+        assert_eq!(t.stats.truncated_events, 0, "the cut fell on a row boundary");
     }
 
     #[test]
@@ -761,9 +1419,46 @@ task_b,1,j_1,A,Terminated,100,160,50,0.5
         ));
         let t = parse_str(ooo, &TraceOptions::default()).unwrap();
         assert!(t.stats.resorted);
+        assert_eq!(t.stats.reorder_depth, 1, "task_b was held one slot past its turn");
+        assert!(!t.stats.full_resort, "tiny disorder fits the default buffer");
         assert_eq!(t.events[0].app, "task_b");
         assert_eq!(t.events[0].submit_at, 0.0);
         assert_eq!(t.events[1].submit_at, 100.0);
+    }
+
+    #[test]
+    fn bounded_reorder_matches_full_sort() {
+        // A deterministically shuffled trace: bounded-buffer replay must
+        // equal the whole-trace stable sort for any sufficient cap, and
+        // the full-sort fallback must equal it for an insufficient cap.
+        let mut rng = Pcg::new(7, 3);
+        let mut rows: Vec<String> = (0..200)
+            .map(|i| format!("task_{i},1,j_{i},A,Terminated,{},{},50,0.5", 1000 + i, 2000 + i))
+            .collect();
+        // Local shuffles with displacement < 16.
+        for w in 0..(rows.len() / 8) {
+            let base = w * 8;
+            let a = base + rng.range(0, 8);
+            let b = base + rng.range(0, 8);
+            rows.swap(a, b);
+        }
+        let text = rows.join("\n");
+        let big = TraceOptions { reorder_cap: 100_000, ..Default::default() };
+        let reference = parse_str(&text, &big).unwrap();
+        assert!(!reference.stats.full_resort);
+
+        let bounded = TraceOptions { reorder_cap: 16, ..Default::default() };
+        let t = parse_str(&text, &bounded).unwrap();
+        assert!(!t.stats.full_resort, "depth {} must fit 16", t.stats.reorder_depth);
+        assert!(t.stats.reorder_depth <= 16);
+        assert_eq!(t.events, reference.events, "bounded buffer must equal the full sort");
+
+        let tiny = TraceOptions { reorder_cap: 1, ..Default::default() };
+        let t = parse_str(&text, &tiny).unwrap();
+        if t.stats.reorder_depth > 1 {
+            assert!(t.stats.full_resort, "overflowing the buffer must trigger the fallback");
+        }
+        assert_eq!(t.events, reference.events, "fallback must equal the full sort");
     }
 
     #[test]
@@ -791,6 +1486,29 @@ task_a,1,j_1,A,Terminated,120,180,50,0.5
             parse_str("# only a comment\n", &TraceOptions::default()),
             Err(TraceError::Empty)
         ));
+    }
+
+    #[test]
+    fn unsupported_compressed_extensions_are_rejected() {
+        // The check runs before any I/O, so no file needs to exist, and
+        // the message must point at the supported paths.
+        for name in ["trace.csv.zst", "trace.csv.xz", "trace.csv.bz2", "trace.ZST"] {
+            let err = load(Path::new(name), &TraceOptions::default()).unwrap_err();
+            match &err {
+                TraceError::UnsupportedCompression { .. } => {}
+                other => panic!("{name}: expected UnsupportedCompression, got {other:?}"),
+            }
+            let msg = err.to_string();
+            assert!(msg.contains(".csv.gz"), "{name}: message must name the gz path: {msg}");
+            assert!(msg.contains(".csv"), "{name}: message must name the plain path: {msg}");
+        }
+        // Plain .csv and .gz still route to real I/O (missing file).
+        for name in ["missing.csv", "missing.csv.gz"] {
+            assert!(matches!(
+                load(Path::new(name), &TraceOptions::default()),
+                Err(TraceError::Io(_))
+            ));
+        }
     }
 
     const AZURE_OK: &str = "\
@@ -887,6 +1605,77 @@ vm1,0.1,0.6,0.25,0.125
         assert!(matches!(parse_str(dup, &opts), Err(TraceError::DuplicateTask { .. })));
     }
 
+    const BORG_OK: &str = "\
+0,,6251,0,,0,u1,2,9,0.025,0.05,0.001,0
+1000000,,6251,1,,0,u1,2,9,0.025,0.05,0.001,0
+2000000,,6251,0,m1,1,u1,2,9,0.025,0.05,0.001,0
+3500000,,7000,0,,0,u2,0,1,0.5,0.25,0.002,0
+9000000,,6251,0,m1,4,u1,2,9,,,,
+";
+
+    #[test]
+    fn borg_happy_path() {
+        let opts = TraceOptions { format: TraceFormat::Borg, ..Default::default() };
+        let t = parse_str(BORG_OK, &opts).unwrap();
+        // 3 SUBMIT rows become arrivals; SCHEDULE + FINISH are filtered.
+        assert_eq!(t.stats.rows, 5);
+        assert_eq!(t.stats.events, 3);
+        assert_eq!(t.stats.filtered, 2);
+        assert_eq!(t.stats.apps, 2, "jobs 6251 and 7000");
+        // Microsecond times normalize to seconds from trace start.
+        assert_eq!(t.events[0].submit_at, 0.0);
+        assert_eq!(t.events[1].submit_at, 1.0);
+        assert_eq!(t.events[2].submit_at, 3.5);
+        // Fractions of the 4-core / 8 GB reference machine.
+        assert_eq!(t.events[0].cpu_milli, 100);
+        assert_eq!(t.events[0].mem_bytes, 400_000_000);
+        assert_eq!(t.events[2].cpu_milli, 2000);
+        // Borg rows carry no end time: tasks replay as services.
+        assert!(t.events.iter().all(|e| e.duration_secs.is_none()));
+        // Task ids pair job and index.
+        assert_eq!(t.events[0].task_id, "6251#0");
+        assert_eq!(t.events[1].task_id, "6251#1");
+    }
+
+    #[test]
+    fn borg_malformed_rows() {
+        for bad in [
+            "0,,6251,0,,0,u1,2,9,0.025",        // too few columns
+            "-5,,6251,0,,0,u1,2,9,0.025,0.05",  // negative time
+            "0,,,0,,0,u1,2,9,0.025,0.05",       // empty job id
+            "0,,6251,0,,x,u1,2,9,0.025,0.05",   // bad event_type
+            "0,,6251,0,,0,u1,2,9,-0.1,0.05",    // negative cpu
+        ] {
+            let strict = TraceOptions {
+                format: TraceFormat::Borg,
+                mode: ErrorMode::Strict,
+                ..Default::default()
+            };
+            assert!(
+                matches!(parse_str(bad, &strict), Err(TraceError::Malformed { .. })),
+                "{bad:?} should be malformed"
+            );
+        }
+        // Duplicate SUBMIT for the same (job, task) is a duplicate task.
+        let dup = "\
+0,,6251,0,,0,u1,2,9,0.025,0.05
+1000000,,6251,0,,0,u1,2,9,0.025,0.05
+";
+        let strict = TraceOptions {
+            format: TraceFormat::Borg,
+            mode: ErrorMode::Strict,
+            ..Default::default()
+        };
+        assert!(matches!(parse_str(dup, &strict), Err(TraceError::DuplicateTask { .. })));
+        let t = parse_str(
+            dup,
+            &TraceOptions { format: TraceFormat::Borg, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(t.stats.duplicates, 1);
+        assert_eq!(t.events.len(), 1);
+    }
+
     #[test]
     fn synthesis_is_deterministic_and_skew_preserving() {
         let a1 = synthesize_image("task_m1", 42);
@@ -930,6 +1719,32 @@ vm1,0.1,0.6,0.25,0.125
         assert_eq!(arrivals[0].1.image, arrivals[3].1.image);
         assert_ne!(arrivals[0].1.image, arrivals[2].1.image);
         assert_eq!(arrivals[2].1.duration_secs, Some(0.0), "zero-duration task");
+    }
+
+    #[test]
+    fn streaming_source_matches_buffered_arrivals() {
+        // The buffered Trace::arrivals and a pulled TraceSource must
+        // produce identical (offset, pod) streams — the unit-level core
+        // of the differential suite in tests/streaming_pipeline.rs.
+        let opts = TraceOptions::default();
+        let buffered = parse_str(ALIBABA_OK, &opts).unwrap().arrivals();
+        let mut reader = Cursor::new(ALIBABA_OK.as_bytes().to_vec());
+        let summary = scan(&mut reader, &opts).unwrap();
+        reader.set_position(0);
+        let mut source = TraceSource::new(&mut reader, &opts, &summary);
+        let mut streamed = Vec::new();
+        while let Some(pair) = source.next_arrival() {
+            streamed.push(pair);
+        }
+        assert!(source.take_error().is_none());
+        assert_eq!(streamed.len(), buffered.len());
+        for ((o1, p1), (o2, p2)) in buffered.iter().zip(&streamed) {
+            assert_eq!(o1, o2);
+            assert_eq!(p1.id, p2.id);
+            assert_eq!(p1.image, p2.image);
+            assert_eq!(p1.requests, p2.requests);
+            assert_eq!(p1.duration_secs, p2.duration_secs);
+        }
     }
 
     #[test]

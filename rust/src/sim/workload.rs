@@ -3,7 +3,11 @@
 //!
 //! Pods draw an image uniformly (or Zipf-weighted, the realistic variant)
 //! from the corpus, CPU requests uniform in [100m, 1000m], memory uniform
-//! in [100 MB, 1 GB]. Traces are reproducible from the seed.
+//! in [100 MB, 1 GB]. Traces are reproducible from the seed. For
+//! large-scale runs the generator is wrapped **lazily** by
+//! [`crate::sim::arrivals::WorkloadSource`] — pods are built one at a
+//! time as the engine pulls them, instead of pre-materializing a
+//! `Vec<Pod>` ([`WorkloadGen::trace`] remains the buffered convenience).
 //!
 //! Alongside pods, this module generates the *cluster-volatility* trace
 //! ([`ChurnModel`]): node joins, drains, crashes, and registry outage

@@ -37,6 +37,33 @@ pub fn random_cluster(rng: &mut Pcg, n: u32) -> ClusterState {
     s
 }
 
+/// Generate a synthetic Alibaba-`batch_task`-dialect CSV: Zipf app
+/// popularity over `apps` recurring task names, bursty exponential
+/// arrivals, heavy-tailed bounded durations, and occasional
+/// `instance_num` expansion — the shape the streaming trace importer
+/// must sustain at scale. Deterministic per `(rows, seed)`; shared by
+/// `bench_scale`, the `gen-trace` CLI subcommand, and the ingestion
+/// tests.
+pub fn synthetic_alibaba_csv(rows: usize, seed: u64) -> String {
+    let mut rng = Pcg::new(seed, 31);
+    let weights: Vec<f64> = (1..=40).map(|r| 1.0 / r as f64).collect();
+    let mut csv = String::with_capacity(rows * 48);
+    let mut start = 86_400.0;
+    for j in 0..rows {
+        let app = rng.weighted(&weights);
+        start += rng.exponential(0.3);
+        let dur = rng.exponential(60.0).min(300.0);
+        let instances = 1 + rng.range(0, 2);
+        let cpu = 20 + rng.range(0, 100);
+        let mem = 0.5 + rng.f64() * 4.0;
+        csv.push_str(&format!(
+            "task_m{app},{instances},j_{j},A,Terminated,{start:.3},{:.3},{cpu},{mem:.2}\n",
+            start + dur
+        ));
+    }
+    csv
+}
+
 /// A metadata cache filled from the corpus registry.
 pub fn corpus_cache() -> MetadataCache {
     let reg = Registry::with_corpus();

@@ -6,11 +6,27 @@
 //! pulling in `flate2` this module implements the inflate side of the
 //! format directly: a bit-level reader, canonical-Huffman decoding (the
 //! counting scheme from zlib's `puff`), all three block types, and the
-//! CRC-32/ISIZE trailer check. Decompression is one-shot into a `Vec` —
-//! the importer then streams lines from the buffer exactly as it does
-//! from a plain file.
+//! CRC-32/ISIZE trailer checks.
+//!
+//! Decompression is **streaming**: [`GzDecoder`] wraps any
+//! [`std::io::Read`] and implements `Read` itself, holding only a fixed
+//! 32 KiB sliding window (the DEFLATE back-reference horizon), an 8 KiB
+//! input buffer, and a small decode-ahead chunk — its memory footprint is
+//! independent of both the compressed and the inflated size, so traces
+//! larger than RAM stream straight through `BufRead::lines`.
+//! Multi-member files (`cat a.gz b.gz`, pigz, bgzip) are supported, and
+//! each member's CRC-32/ISIZE trailer is verified as the member
+//! completes. The one-shot [`decompress`] convenience collects a whole
+//! stream into a `Vec` for small inputs and tests.
+//!
+//! The write side is intentionally minimal: [`compress_stored`] emits a
+//! valid single-member gzip file of *stored* (uncompressed) DEFLATE
+//! blocks — enough for the bench/CI harnesses to generate multi-million
+//! row `.csv.gz` traces without an external `gzip` binary, and readable
+//! by any standards-compliant decoder.
 
 use std::fmt;
+use std::io::{self, Read};
 
 /// Why a gzip stream failed to decompress.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -45,42 +61,134 @@ impl fmt::Display for GzipError {
 
 impl std::error::Error for GzipError {}
 
-/// CRC-32 (IEEE 802.3, reflected, as gzip uses) of `data`.
-pub fn crc32(data: &[u8]) -> u32 {
-    let mut table = [0u32; 256];
-    for (i, slot) in table.iter_mut().enumerate() {
-        let mut c = i as u32;
-        for _ in 0..8 {
-            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
-        }
-        *slot = c;
-    }
-    let mut crc = 0xFFFF_FFFFu32;
-    for &b in data {
-        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
-    }
-    crc ^ 0xFFFF_FFFF
+/// Internal failure channel: inner-reader I/O errors propagate verbatim,
+/// format errors carry a [`GzipError`]. Converted to [`io::Error`] at the
+/// `Read` boundary (the `GzipError` stays reachable via
+/// [`io::Error::get_ref`] / `into_inner`).
+enum Fail {
+    Io(io::Error),
+    Gz(GzipError),
 }
 
-/// LSB-first bit reader over a byte slice.
-struct BitReader<'a> {
-    data: &'a [u8],
-    /// Next unread byte.
+impl From<GzipError> for Fail {
+    fn from(g: GzipError) -> Fail {
+        Fail::Gz(g)
+    }
+}
+
+impl From<Fail> for io::Error {
+    fn from(f: Fail) -> io::Error {
+        match f {
+            Fail::Io(e) => e,
+            Fail::Gz(g) => {
+                let kind = match g {
+                    GzipError::Truncated => io::ErrorKind::UnexpectedEof,
+                    _ => io::ErrorKind::InvalidData,
+                };
+                io::Error::new(kind, g)
+            }
+        }
+    }
+}
+
+/// Incremental CRC-32 (IEEE 802.3, reflected, as gzip uses).
+struct Crc32 {
+    table: [u32; 256],
+    state: u32,
+}
+
+impl Crc32 {
+    fn new() -> Crc32 {
+        let mut table = [0u32; 256];
+        for (i, slot) in table.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        Crc32 { table, state: 0xFFFF_FFFF }
+    }
+
+    fn reset(&mut self) {
+        self.state = 0xFFFF_FFFF;
+    }
+
+    fn update(&mut self, b: u8) {
+        self.state = self.table[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);
+    }
+
+    fn update_slice(&mut self, data: &[u8]) {
+        for &b in data {
+            self.update(b);
+        }
+    }
+
+    fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected, as gzip uses) of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = Crc32::new();
+    for &b in data {
+        crc.update(b);
+    }
+    crc.finish()
+}
+
+/// LSB-first bit reader over an inner [`Read`], with an 8 KiB refill
+/// buffer. EOF mid-read surfaces as [`GzipError::Truncated`].
+struct BitSource<R> {
+    inner: R,
+    buf: Vec<u8>,
     pos: usize,
+    len: usize,
     bitbuf: u32,
     bitcnt: u32,
 }
 
-impl<'a> BitReader<'a> {
-    fn new(data: &'a [u8]) -> BitReader<'a> {
-        BitReader { data, pos: 0, bitbuf: 0, bitcnt: 0 }
+impl<R: Read> BitSource<R> {
+    fn new(inner: R) -> BitSource<R> {
+        BitSource { inner, buf: vec![0u8; 8192], pos: 0, len: 0, bitbuf: 0, bitcnt: 0 }
+    }
+
+    /// Refill the input buffer; returns the bytes read (0 = inner EOF).
+    fn refill(&mut self) -> Result<usize, Fail> {
+        self.pos = 0;
+        self.len = 0;
+        loop {
+            match self.inner.read(&mut self.buf) {
+                Ok(n) => {
+                    self.len = n;
+                    return Ok(n);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(Fail::Io(e)),
+            }
+        }
+    }
+
+    /// Next raw input byte, or `None` at a clean inner EOF.
+    fn next_byte_opt(&mut self) -> Result<Option<u8>, Fail> {
+        if self.pos >= self.len && self.refill()? == 0 {
+            return Ok(None);
+        }
+        let b = self.buf[self.pos];
+        self.pos += 1;
+        Ok(Some(b))
+    }
+
+    /// Next raw input byte; EOF is [`GzipError::Truncated`].
+    fn need_byte(&mut self) -> Result<u8, Fail> {
+        self.next_byte_opt()?.ok_or(Fail::Gz(GzipError::Truncated))
     }
 
     /// Read `n <= 16` bits, LSB-first.
-    fn bits(&mut self, n: u32) -> Result<u32, GzipError> {
+    fn bits(&mut self, n: u32) -> Result<u32, Fail> {
         while self.bitcnt < n {
-            let byte = *self.data.get(self.pos).ok_or(GzipError::Truncated)? as u32;
-            self.pos += 1;
+            let byte = self.need_byte()? as u32;
             self.bitbuf |= byte << self.bitcnt;
             self.bitcnt += 8;
         }
@@ -90,19 +198,19 @@ impl<'a> BitReader<'a> {
         Ok(v)
     }
 
-    /// Discard the partial byte (stored blocks start byte-aligned). At
-    /// most 7 bits are ever buffered, so this never loses a whole byte.
+    /// Discard the partial byte (stored blocks and trailers start
+    /// byte-aligned). At most 7 bits are ever buffered after a `bits`
+    /// call, so this never loses a whole byte.
     fn align_byte(&mut self) {
+        debug_assert!(self.bitcnt < 8, "a whole byte was buffered");
         self.bitbuf = 0;
         self.bitcnt = 0;
     }
 
     /// Read one raw byte (caller must be byte-aligned).
-    fn byte(&mut self) -> Result<u8, GzipError> {
+    fn aligned_byte(&mut self) -> Result<u8, Fail> {
         debug_assert_eq!(self.bitcnt, 0, "byte read while unaligned");
-        let b = *self.data.get(self.pos).ok_or(GzipError::Truncated)?;
-        self.pos += 1;
-        Ok(b)
+        self.need_byte()
     }
 }
 
@@ -150,7 +258,7 @@ impl Huffman {
 
     /// Decode one symbol, one bit at a time (adequate for trace-sized
     /// inputs; a table-driven fast path can come later if profiles ask).
-    fn decode(&self, br: &mut BitReader<'_>) -> Result<u16, GzipError> {
+    fn decode<R: Read>(&self, br: &mut BitSource<R>) -> Result<u16, Fail> {
         let mut code: u32 = 0;
         let mut first: u32 = 0;
         let mut index: u32 = 0;
@@ -164,7 +272,7 @@ impl Huffman {
             first = (first + count) << 1;
             code <<= 1;
         }
-        Err(GzipError::Corrupt("invalid huffman code"))
+        Err(Fail::Gz(GzipError::Corrupt("invalid huffman code")))
     }
 }
 
@@ -184,61 +292,196 @@ const DIST_EXTRA: [u8; 30] = [
     13, 13,
 ];
 
-/// Decode one Huffman-coded block body into `out`.
-fn inflate_block(
-    br: &mut BitReader<'_>,
-    out: &mut Vec<u8>,
-    litlen: &Huffman,
-    dist: &Huffman,
-) -> Result<(), GzipError> {
-    loop {
-        let sym = litlen.decode(br)?;
-        if sym < 256 {
-            out.push(sym as u8);
-        } else if sym == 256 {
-            return Ok(());
-        } else {
-            let idx = (sym - 257) as usize;
-            if idx >= LEN_BASE.len() {
-                return Err(GzipError::Corrupt("invalid length symbol"));
-            }
-            let len = LEN_BASE[idx] as usize + br.bits(LEN_EXTRA[idx] as u32)? as usize;
-            let dsym = dist.decode(br)? as usize;
-            if dsym >= DIST_BASE.len() {
-                return Err(GzipError::Corrupt("invalid distance symbol"));
-            }
-            let d = DIST_BASE[dsym] as usize + br.bits(DIST_EXTRA[dsym] as u32)? as usize;
-            if d == 0 || d > out.len() {
-                return Err(GzipError::Corrupt("distance beyond window"));
-            }
-            let start = out.len() - d;
-            // Byte-by-byte: overlapping copies replicate recent output.
-            for k in 0..len {
-                let b = out[start + k];
-                out.push(b);
-            }
-        }
-    }
+/// DEFLATE sliding-window size: distances never reach further back.
+const WINDOW: usize = 32 * 1024;
+const WINDOW_MASK: usize = WINDOW - 1;
+/// Decode-ahead target per `step`: once this much output is pending the
+/// decoder yields to the caller, bounding the pending buffer at
+/// `OUT_TARGET + 258` (the longest match can overshoot by one copy).
+const OUT_TARGET: usize = 32 * 1024;
+
+/// Where the decode state machine stands between `read` calls.
+enum State {
+    /// Before a member header: expect EOF (if at least one member has
+    /// completed) or the next `1f 8b` magic.
+    Member,
+    /// Inside a member, before a block header.
+    BlockStart,
+    /// Copying a stored block's raw bytes.
+    Stored {
+        /// Bytes left in the block.
+        remaining: usize,
+        /// Was this the member's final block?
+        last: bool,
+    },
+    /// Decoding a fixed- or dynamic-Huffman block.
+    Compressed {
+        /// Literal/length code.
+        litlen: Huffman,
+        /// Distance code.
+        dist: Huffman,
+        /// Was this the member's final block?
+        last: bool,
+    },
+    /// Reading + verifying the member's CRC-32/ISIZE trailer.
+    Trailer,
+    /// Clean end of the final member.
+    Done,
+    /// A previous step failed; all further reads fail.
+    Poisoned,
 }
 
-/// Inflate a raw DEFLATE stream into `out`.
-fn inflate(br: &mut BitReader<'_>, out: &mut Vec<u8>) -> Result<(), GzipError> {
-    loop {
-        let bfinal = br.bits(1)?;
-        let btype = br.bits(2)?;
+/// Streaming gzip decoder over any [`Read`] — see the module docs for
+/// the memory-footprint guarantee. Trailing garbage after the final
+/// member is an error (it must be another member), matching
+/// [`decompress`].
+///
+/// ```
+/// use lrsched::util::gzip::{compress_stored, GzDecoder};
+/// use std::io::Read;
+/// let gz = compress_stored(b"hello streaming world");
+/// let mut out = Vec::new();
+/// GzDecoder::new(&gz[..]).read_to_end(&mut out).unwrap();
+/// assert_eq!(out, b"hello streaming world");
+/// ```
+pub struct GzDecoder<R> {
+    bits: BitSource<R>,
+    state: State,
+    /// Circular 32 KiB back-reference window.
+    window: Vec<u8>,
+    win_pos: usize,
+    win_len: usize,
+    /// Decoded bytes not yet handed to the caller.
+    out: Vec<u8>,
+    out_pos: usize,
+    crc: Crc32,
+    /// Current member's output length mod 2^32 (ISIZE semantics).
+    member_len: u32,
+    members_done: u64,
+}
+
+impl<R: Read> GzDecoder<R> {
+    /// Wrap `inner` (the raw `.gz` byte stream) in a streaming decoder.
+    pub fn new(inner: R) -> GzDecoder<R> {
+        GzDecoder {
+            bits: BitSource::new(inner),
+            state: State::Member,
+            window: vec![0u8; WINDOW],
+            win_pos: 0,
+            win_len: 0,
+            out: Vec::with_capacity(OUT_TARGET + 300),
+            out_pos: 0,
+            crc: Crc32::new(),
+            member_len: 0,
+            members_done: 0,
+        }
+    }
+
+    /// Gzip members fully decoded and trailer-verified so far.
+    pub fn members_done(&self) -> u64 {
+        self.members_done
+    }
+
+    /// Append one decoded byte to the pending output, the window, and the
+    /// member's CRC/length accumulators.
+    fn emit(&mut self, b: u8) {
+        self.out.push(b);
+        self.crc.update(b);
+        self.member_len = self.member_len.wrapping_add(1);
+        self.window[self.win_pos] = b;
+        self.win_pos = (self.win_pos + 1) & WINDOW_MASK;
+        if self.win_len < WINDOW {
+            self.win_len += 1;
+        }
+    }
+
+    /// Bulk [`GzDecoder::emit`]: one `extend` + batched CRC + at most two
+    /// window copies (wrap-around). `data.len()` must not exceed the
+    /// window — callers emit at most one input buffer per call. Stored
+    /// blocks take this path; later blocks in the same member may
+    /// back-reference the copied bytes, so the window must see them too.
+    fn emit_slice(&mut self, data: &[u8]) {
+        debug_assert!(data.len() <= WINDOW, "bulk emit larger than the window");
+        self.out.extend_from_slice(data);
+        self.crc.update_slice(data);
+        self.member_len = self.member_len.wrapping_add(data.len() as u32);
+        let n = data.len();
+        let first = n.min(WINDOW - self.win_pos);
+        self.window[self.win_pos..self.win_pos + first].copy_from_slice(&data[..first]);
+        if first < n {
+            self.window[..n - first].copy_from_slice(&data[first..]);
+        }
+        self.win_pos = (self.win_pos + n) & WINDOW_MASK;
+        self.win_len = (self.win_len + n).min(WINDOW);
+    }
+
+    /// Replay a back-reference of `len` bytes from `dist` back.
+    /// Byte-by-byte so overlapping copies replicate recent output.
+    fn copy_match(&mut self, dist: usize, len: usize) -> Result<(), Fail> {
+        if dist == 0 || dist > self.win_len {
+            return Err(Fail::Gz(GzipError::Corrupt("distance beyond window")));
+        }
+        let mut src = (self.win_pos + WINDOW - dist) & WINDOW_MASK;
+        for _ in 0..len {
+            let b = self.window[src];
+            src = (src + 1) & WINDOW_MASK;
+            self.emit(b);
+        }
+        Ok(())
+    }
+
+    /// How many decoded bytes await the caller.
+    fn pending(&self) -> usize {
+        self.out.len() - self.out_pos
+    }
+
+    /// Parse one member header (the magic has already been matched).
+    fn read_header_rest(&mut self) -> Result<(), Fail> {
+        if self.bits.need_byte()? != 8 {
+            return Err(Fail::Gz(GzipError::Unsupported("compression method is not DEFLATE")));
+        }
+        let flg = self.bits.need_byte()?;
+        for _ in 0..6 {
+            self.bits.need_byte()?; // MTIME(4) + XFL + OS
+        }
+        if flg & 0x04 != 0 {
+            // FEXTRA: u16-le length + payload.
+            let lo = self.bits.need_byte()? as usize;
+            let hi = self.bits.need_byte()? as usize;
+            for _ in 0..(lo | (hi << 8)) {
+                self.bits.need_byte()?;
+            }
+        }
+        for flag in [0x08u8, 0x10] {
+            // FNAME / FCOMMENT: NUL-terminated strings.
+            if flg & flag != 0 {
+                while self.bits.need_byte()? != 0 {}
+            }
+        }
+        if flg & 0x02 != 0 {
+            self.bits.need_byte()?; // FHCRC (2 bytes, not verified)
+            self.bits.need_byte()?;
+        }
+        Ok(())
+    }
+
+    /// Read a block header and build its tables (or set up the stored
+    /// copy). Returns the state the block body decodes under.
+    fn begin_block(&mut self) -> Result<State, Fail> {
+        let last = self.bits.bits(1)? == 1;
+        let btype = self.bits.bits(2)?;
         match btype {
             0 => {
                 // Stored: byte-aligned LEN/NLEN + raw copy.
-                br.align_byte();
-                let len = br.byte()? as usize | ((br.byte()? as usize) << 8);
-                let nlen = br.byte()? as usize | ((br.byte()? as usize) << 8);
+                self.bits.align_byte();
+                let len =
+                    self.bits.aligned_byte()? as usize | ((self.bits.aligned_byte()? as usize) << 8);
+                let nlen =
+                    self.bits.aligned_byte()? as usize | ((self.bits.aligned_byte()? as usize) << 8);
                 if len ^ nlen != 0xFFFF {
-                    return Err(GzipError::Corrupt("stored-block length check"));
+                    return Err(Fail::Gz(GzipError::Corrupt("stored-block length check")));
                 }
-                for _ in 0..len {
-                    let b = br.byte()?;
-                    out.push(b);
-                }
+                Ok(State::Stored { remaining: len, last })
             }
             1 => {
                 // Fixed Huffman tables (RFC 1951 §3.2.6).
@@ -253,24 +496,24 @@ fn inflate(br: &mut BitReader<'_>, out: &mut Vec<u8>) -> Result<(), GzipError> {
                 }
                 let litlen = Huffman::build(&litlen_lens)?;
                 let dist = Huffman::build(&[5u8; 30])?;
-                inflate_block(br, out, &litlen, &dist)?;
+                Ok(State::Compressed { litlen, dist, last })
             }
             2 => {
                 // Dynamic tables: code-length code, then the two codes.
-                let hlit = br.bits(5)? as usize + 257;
-                let hdist = br.bits(5)? as usize + 1;
-                let hclen = br.bits(4)? as usize + 4;
+                let hlit = self.bits.bits(5)? as usize + 257;
+                let hdist = self.bits.bits(5)? as usize + 1;
+                let hclen = self.bits.bits(4)? as usize + 4;
                 const ORDER: [usize; 19] =
                     [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15];
                 let mut cl_lens = [0u8; 19];
                 for &slot in ORDER.iter().take(hclen) {
-                    cl_lens[slot] = br.bits(3)? as u8;
+                    cl_lens[slot] = self.bits.bits(3)? as u8;
                 }
                 let cl = Huffman::build(&cl_lens)?;
                 let mut lens = vec![0u8; hlit + hdist];
                 let mut i = 0;
                 while i < lens.len() {
-                    let sym = cl.decode(br)?;
+                    let sym = cl.decode(&mut self.bits)?;
                     match sym {
                         0..=15 => {
                             lens[i] = sym as u8;
@@ -280,122 +523,247 @@ fn inflate(br: &mut BitReader<'_>, out: &mut Vec<u8>) -> Result<(), GzipError> {
                             let (fill, rep) = match sym {
                                 16 => {
                                     if i == 0 {
-                                        return Err(GzipError::Corrupt(
+                                        return Err(Fail::Gz(GzipError::Corrupt(
                                             "length repeat with no previous length",
-                                        ));
+                                        )));
                                     }
-                                    (lens[i - 1], 3 + br.bits(2)? as usize)
+                                    (lens[i - 1], 3 + self.bits.bits(2)? as usize)
                                 }
-                                17 => (0, 3 + br.bits(3)? as usize),
-                                _ => (0, 11 + br.bits(7)? as usize),
+                                17 => (0, 3 + self.bits.bits(3)? as usize),
+                                _ => (0, 11 + self.bits.bits(7)? as usize),
                             };
                             if i + rep > lens.len() {
-                                return Err(GzipError::Corrupt("too many code lengths"));
+                                return Err(Fail::Gz(GzipError::Corrupt("too many code lengths")));
                             }
                             for slot in lens.iter_mut().skip(i).take(rep) {
                                 *slot = fill;
                             }
                             i += rep;
                         }
-                        _ => return Err(GzipError::Corrupt("invalid code-length symbol")),
+                        _ => {
+                            return Err(Fail::Gz(GzipError::Corrupt(
+                                "invalid code-length symbol",
+                            )))
+                        }
                     }
                 }
                 if lens[256] == 0 {
-                    return Err(GzipError::Corrupt("missing end-of-block code"));
+                    return Err(Fail::Gz(GzipError::Corrupt("missing end-of-block code")));
                 }
                 let litlen = Huffman::build(&lens[..hlit])?;
                 let dist = Huffman::build(&lens[hlit..])?;
-                inflate_block(br, out, &litlen, &dist)?;
+                Ok(State::Compressed { litlen, dist, last })
             }
-            _ => return Err(GzipError::Corrupt("reserved block type")),
-        }
-        if bfinal == 1 {
-            return Ok(());
+            _ => Err(Fail::Gz(GzipError::Corrupt("reserved block type"))),
         }
     }
-}
 
-/// Decompress a gzip file: one or more concatenated members (RFC 1952
-/// §2.2 — `cat a.gz b.gz`, pigz, and bgzip all produce multi-member
-/// files), each a header + DEFLATE body + CRC-32/ISIZE trailer. Both
-/// trailer fields are verified per member. The whole plaintext lands in
-/// one `Vec` (bounded by the inflated size; a streaming inflate is a
-/// ROADMAP follow-on for traces larger than memory).
-pub fn decompress(data: &[u8]) -> Result<Vec<u8>, GzipError> {
-    let mut out = Vec::with_capacity(data.len().saturating_mul(3));
-    let mut pos = 0usize;
-    loop {
-        pos = decompress_member(data, pos, &mut out)?;
-        if pos >= data.len() {
-            return Ok(out);
-        }
-        // Anything after a trailer must be another member (its magic is
-        // re-checked by the next iteration); trailing garbage errors.
-    }
-}
-
-/// Decompress the gzip member starting at `start`, appending its
-/// plaintext to `out`. Returns the offset just past the member's trailer.
-fn decompress_member(data: &[u8], start: usize, out: &mut Vec<u8>) -> Result<usize, GzipError> {
-    let data = &data[start..];
-    if data.len() < 2 {
-        return Err(GzipError::Truncated);
-    }
-    if data[0] != 0x1f || data[1] != 0x8b {
-        return Err(GzipError::BadMagic);
-    }
-    if data.len() < 10 {
-        return Err(GzipError::Truncated);
-    }
-    if data[2] != 8 {
-        return Err(GzipError::Unsupported("compression method is not DEFLATE"));
-    }
-    let flg = data[3];
-    // MTIME(4) + XFL + OS already covered by the 10-byte header.
-    let mut pos = 10usize;
-    if flg & 0x04 != 0 {
-        // FEXTRA: u16-le length + payload.
-        let lo = *data.get(pos).ok_or(GzipError::Truncated)? as usize;
-        let hi = *data.get(pos + 1).ok_or(GzipError::Truncated)? as usize;
-        pos += 2 + (lo | (hi << 8));
-    }
-    for flag in [0x08u8, 0x10] {
-        // FNAME / FCOMMENT: NUL-terminated strings.
-        if flg & flag != 0 {
-            loop {
-                let b = *data.get(pos).ok_or(GzipError::Truncated)?;
-                pos += 1;
-                if b == 0 {
-                    break;
+    /// Advance the state machine: parse a header, decode up to
+    /// [`OUT_TARGET`] bytes of block body, or verify a trailer. Each call
+    /// makes progress; `read` loops until output is pending or the stream
+    /// is done.
+    fn step(&mut self) -> Result<(), Fail> {
+        let state = std::mem::replace(&mut self.state, State::Poisoned);
+        match state {
+            State::Member => {
+                match self.bits.next_byte_opt()? {
+                    None => {
+                        if self.members_done == 0 {
+                            // Empty input is a truncated stream, not EOF.
+                            return Err(Fail::Gz(GzipError::Truncated));
+                        }
+                        self.state = State::Done;
+                        return Ok(());
+                    }
+                    Some(b1) => {
+                        let b2 = match self.bits.next_byte_opt()? {
+                            None => return Err(Fail::Gz(GzipError::Truncated)),
+                            Some(b) => b,
+                        };
+                        if b1 != 0x1f || b2 != 0x8b {
+                            return Err(Fail::Gz(GzipError::BadMagic));
+                        }
+                    }
+                }
+                self.read_header_rest()?;
+                self.crc.reset();
+                self.member_len = 0;
+                // Each member is an independent DEFLATE stream: distances
+                // cannot reach past its start.
+                self.win_pos = 0;
+                self.win_len = 0;
+                self.state = State::BlockStart;
+            }
+            State::BlockStart => {
+                self.state = self.begin_block()?;
+            }
+            State::Stored { mut remaining, last } => {
+                // Bulk copy straight out of the input buffer (the body is
+                // byte-aligned raw data): one refill + one slice emit per
+                // buffered run instead of per-byte calls.
+                debug_assert_eq!(self.bits.bitcnt, 0, "stored body read while unaligned");
+                while remaining > 0 {
+                    if self.pending() >= OUT_TARGET {
+                        self.state = State::Stored { remaining, last };
+                        return Ok(());
+                    }
+                    if self.bits.pos >= self.bits.len && self.bits.refill()? == 0 {
+                        return Err(Fail::Gz(GzipError::Truncated));
+                    }
+                    let take = remaining.min(self.bits.len - self.bits.pos);
+                    let start = self.bits.pos;
+                    self.bits.pos += take;
+                    // Temporarily take the input buffer so `emit_slice`
+                    // can borrow self mutably (no extra copy; emit_slice
+                    // cannot fail, so the buffer is always restored).
+                    let buf = std::mem::take(&mut self.bits.buf);
+                    self.emit_slice(&buf[start..start + take]);
+                    self.bits.buf = buf;
+                    remaining -= take;
+                }
+                self.state = if last { State::Trailer } else { State::BlockStart };
+            }
+            State::Compressed { litlen, dist, last } => {
+                loop {
+                    if self.pending() >= OUT_TARGET {
+                        self.state = State::Compressed { litlen, dist, last };
+                        return Ok(());
+                    }
+                    let sym = litlen.decode(&mut self.bits)?;
+                    if sym < 256 {
+                        self.emit(sym as u8);
+                    } else if sym == 256 {
+                        self.state = if last { State::Trailer } else { State::BlockStart };
+                        return Ok(());
+                    } else {
+                        let idx = (sym - 257) as usize;
+                        if idx >= LEN_BASE.len() {
+                            return Err(Fail::Gz(GzipError::Corrupt("invalid length symbol")));
+                        }
+                        let len =
+                            LEN_BASE[idx] as usize + self.bits.bits(LEN_EXTRA[idx] as u32)? as usize;
+                        let dsym = dist.decode(&mut self.bits)? as usize;
+                        if dsym >= DIST_BASE.len() {
+                            return Err(Fail::Gz(GzipError::Corrupt("invalid distance symbol")));
+                        }
+                        let d = DIST_BASE[dsym] as usize
+                            + self.bits.bits(DIST_EXTRA[dsym] as u32)? as usize;
+                        self.copy_match(d, len)?;
+                    }
                 }
             }
+            State::Trailer => {
+                // CRC-32 then ISIZE (mod 2^32), little-endian, at the next
+                // byte boundary (at most 7 bits are dropped).
+                self.bits.align_byte();
+                let mut t = [0u8; 8];
+                for slot in &mut t {
+                    *slot = self.bits.aligned_byte()?;
+                }
+                let crc = u32::from_le_bytes([t[0], t[1], t[2], t[3]]);
+                let isize_ = u32::from_le_bytes([t[4], t[5], t[6], t[7]]);
+                if self.crc.finish() != crc {
+                    return Err(Fail::Gz(GzipError::CrcMismatch));
+                }
+                if self.member_len != isize_ {
+                    return Err(Fail::Gz(GzipError::SizeMismatch));
+                }
+                self.members_done += 1;
+                // Anything after a trailer must be another member (its
+                // magic is re-checked); trailing garbage errors.
+                self.state = State::Member;
+            }
+            State::Done => {
+                self.state = State::Done;
+            }
+            State::Poisoned => {
+                return Err(Fail::Gz(GzipError::Corrupt("read after a decode error")));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<R: Read> Read for GzDecoder<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        loop {
+            let avail = self.pending();
+            if avail > 0 {
+                let n = avail.min(buf.len());
+                buf[..n].copy_from_slice(&self.out[self.out_pos..self.out_pos + n]);
+                self.out_pos += n;
+                if self.out_pos == self.out.len() {
+                    self.out.clear();
+                    self.out_pos = 0;
+                }
+                return Ok(n);
+            }
+            if matches!(self.state, State::Done) {
+                return Ok(0);
+            }
+            self.step().map_err(io::Error::from)?;
         }
     }
-    if flg & 0x02 != 0 {
-        pos += 2; // FHCRC
+}
+
+/// Extract the [`GzipError`] a failed [`GzDecoder`] read carries (inner
+/// I/O errors map to [`GzipError::Truncated`] only when the kind says
+/// EOF; anything else is reported as corrupt).
+fn unwrap_gzip_err(e: io::Error) -> GzipError {
+    match e.into_inner().and_then(|b| b.downcast::<GzipError>().ok()) {
+        Some(g) => *g,
+        None => GzipError::Corrupt("i/o error reading gzip stream"),
     }
-    if pos > data.len() {
-        return Err(GzipError::Truncated);
+}
+
+/// Decompress a whole gzip file in memory: one or more concatenated
+/// members (RFC 1952 §2.2 — `cat a.gz b.gz`, pigz, and bgzip all produce
+/// multi-member files), each a header + DEFLATE body + CRC-32/ISIZE
+/// trailer, both trailer fields verified per member. This is the
+/// buffered convenience over the streaming [`GzDecoder`] — large traces
+/// should wrap the decoder directly instead of collecting a `Vec`.
+pub fn decompress(data: &[u8]) -> Result<Vec<u8>, GzipError> {
+    let mut dec = GzDecoder::new(data);
+    let mut out = Vec::with_capacity(data.len().saturating_mul(3));
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        match dec.read(&mut chunk) {
+            Ok(0) => return Ok(out),
+            Ok(n) => out.extend_from_slice(&chunk[..n]),
+            Err(e) => return Err(unwrap_gzip_err(e)),
+        }
     }
-    let member_out = out.len();
-    let mut br = BitReader::new(&data[pos..]);
-    inflate(&mut br, out)?;
-    // Trailer: CRC-32 then ISIZE (mod 2^32), both little-endian, starting
-    // at the next byte boundary (the reader never buffers a whole byte).
-    let trailer = &data[pos..];
-    if trailer.len() < br.pos + 8 {
-        return Err(GzipError::Truncated);
+}
+
+/// Emit `data` as a valid single-member gzip file of *stored*
+/// (uncompressed) DEFLATE blocks — no compression, ~0.008% framing
+/// overhead, readable by any decoder. The bench/CI harnesses use this to
+/// generate large `.csv.gz` traces without an external `gzip` binary;
+/// the output is deterministic (zeroed MTIME, OS = unknown).
+pub fn compress_stored(data: &[u8]) -> Vec<u8> {
+    // Header + one 5-byte block frame per 65 535-byte chunk + trailer.
+    let mut out = Vec::with_capacity(data.len() + data.len() / 65_535 * 5 + 32);
+    out.extend_from_slice(&[0x1f, 0x8b, 0x08, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xff]);
+    if data.is_empty() {
+        // A final stored block of length 0.
+        out.extend_from_slice(&[0x01, 0x00, 0x00, 0xff, 0xff]);
+    } else {
+        let mut chunks = data.chunks(65_535).peekable();
+        while let Some(chunk) = chunks.next() {
+            let last = chunks.peek().is_none();
+            out.push(if last { 0x01 } else { 0x00 });
+            let len = chunk.len() as u16;
+            out.extend_from_slice(&len.to_le_bytes());
+            out.extend_from_slice(&(!len).to_le_bytes());
+            out.extend_from_slice(chunk);
+        }
     }
-    let t = &trailer[br.pos..br.pos + 8];
-    let crc = u32::from_le_bytes([t[0], t[1], t[2], t[3]]);
-    let isize_ = u32::from_le_bytes([t[4], t[5], t[6], t[7]]);
-    if crc32(&out[member_out..]) != crc {
-        return Err(GzipError::CrcMismatch);
-    }
-    if (out.len() - member_out) as u32 != isize_ {
-        return Err(GzipError::SizeMismatch);
-    }
-    Ok(start + pos + br.pos + 8)
+    out.extend_from_slice(&crc32(data).to_le_bytes());
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    out
 }
 
 #[cfg(test)]
@@ -468,5 +836,109 @@ mod tests {
         assert_eq!(crc32(b""), 0);
         assert_eq!(crc32(b"hello"), 0x3610_a686);
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    // --- streaming-decoder tests ------------------------------------------
+
+    /// Drain a decoder through `read` calls capped at `chunk` bytes,
+    /// exercising mid-member suspension/resume.
+    fn read_chunked<R: Read>(mut dec: GzDecoder<R>, chunk: usize) -> io::Result<Vec<u8>> {
+        let mut out = Vec::new();
+        let mut buf = vec![0u8; chunk];
+        loop {
+            match dec.read(&mut buf)? {
+                0 => return Ok(out),
+                n => out.extend_from_slice(&buf[..n]),
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_chunked_reads_match_one_shot() {
+        let gz = include_bytes!("../../tests/fixtures/alibaba_mini.csv.gz");
+        let plain = include_bytes!("../../tests/fixtures/alibaba_mini.csv");
+        // 1-byte reads force suspension at every possible decode point.
+        for chunk in [1usize, 7, 4096] {
+            let out = read_chunked(GzDecoder::new(&gz[..]), chunk).unwrap();
+            assert_eq!(out, plain, "chunk size {chunk}");
+        }
+    }
+
+    /// A reader that hands out its data one byte per `read` call — the
+    /// worst-case inner source (mid-everything input boundaries).
+    struct OneByte<'a>(&'a [u8]);
+
+    impl Read for OneByte<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            match self.0.split_first() {
+                None => Ok(0),
+                Some((b, rest)) => {
+                    self.0 = rest;
+                    buf[0] = *b;
+                    Ok(1)
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_survives_one_byte_inner_reads() {
+        let gz = include_bytes!("../../tests/fixtures/alibaba_mini.csv.gz");
+        let plain = include_bytes!("../../tests/fixtures/alibaba_mini.csv");
+        let out = read_chunked(GzDecoder::new(OneByte(gz)), 513).unwrap();
+        assert_eq!(out, plain);
+    }
+
+    #[test]
+    fn streaming_multi_member_and_member_count() {
+        let mut three = hello_gz();
+        three.extend_from_slice(&compress_stored(b" world"));
+        three.extend_from_slice(&hello_gz());
+        let mut dec = GzDecoder::new(&three[..]);
+        let mut out = Vec::new();
+        dec.read_to_end(&mut out).unwrap();
+        assert_eq!(out, b"hello worldhello");
+        assert_eq!(dec.members_done(), 3);
+    }
+
+    #[test]
+    fn streaming_truncated_stream_is_unexpected_eof() {
+        let mut gz = hello_gz();
+        gz.truncate(gz.len() - 6); // inside the payload
+        let err = read_chunked(GzDecoder::new(&gz[..]), 64).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        assert_eq!(unwrap_gzip_err(err), GzipError::Truncated);
+    }
+
+    #[test]
+    fn streaming_crc_corruption_is_invalid_data() {
+        let mut gz = hello_gz();
+        let idx = gz.len() - 9;
+        gz[idx] ^= 0x20;
+        let err = read_chunked(GzDecoder::new(&gz[..]), 64).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert_eq!(unwrap_gzip_err(err), GzipError::CrcMismatch);
+    }
+
+    #[test]
+    fn compress_stored_roundtrips() {
+        // Empty, small, and > 64 KiB (multiple stored blocks; the payload
+        // also exercises window wrap-around on the decode side).
+        let big: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        for data in [&b""[..], &b"x"[..], &b"hello stored world"[..], &big[..]] {
+            let gz = compress_stored(data);
+            assert_eq!(decompress(&gz).unwrap(), data, "len {}", data.len());
+            // And through chunked streaming reads.
+            let out = read_chunked(GzDecoder::new(&gz[..]), 1000).unwrap();
+            assert_eq!(out, data);
+        }
+    }
+
+    #[test]
+    fn compress_stored_is_tamper_evident() {
+        let mut gz = compress_stored(b"abcdefgh");
+        let idx = gz.len() - 9; // last payload byte
+        gz[idx] ^= 0x01;
+        assert_eq!(decompress(&gz), Err(GzipError::CrcMismatch));
     }
 }

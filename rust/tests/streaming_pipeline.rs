@@ -1,0 +1,250 @@
+//! Differential tests for the streaming arrival pipeline (PR 5): the
+//! pull-based constant-memory path (`TraceReplay` → `TraceSource` →
+//! `Simulation::run_source`) must produce **byte-identical**
+//! `SimReport`/`EventLog` fingerprints to the buffered path
+//! (`trace::load` → `Trace::arrivals` → `Simulation::run_arrivals`) on
+//! the bundled fixtures — for both formats, both error modes, shard
+//! counts {1, 4}, gzipped and plain inputs, and under churn. Plus
+//! end-to-end coverage for the bounded reorder buffer and the
+//! `--trace-limit` ingestion short-circuit.
+
+use lrsched::exp::common;
+use lrsched::sim::{
+    trace, ChurnConfig, ErrorMode, SimConfig, Simulation, TraceFormat, TraceOptions, TraceReplay,
+};
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn sim_cfg(shards: usize, churn: Option<ChurnConfig>) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.inter_arrival_secs = Some(0.3); // timed mode; offsets are explicit
+    cfg.gc_enabled = true;
+    cfg.retry_limit = 10;
+    cfg.snapshot_every = 10;
+    cfg.shards = shards;
+    cfg.churn = churn;
+    cfg
+}
+
+/// The buffered reference: whole trace materialized, arrivals replayed
+/// through `run_arrivals`.
+fn buffered_fingerprint(
+    path: &Path,
+    opts: &TraceOptions,
+    shards: usize,
+    churn: Option<ChurnConfig>,
+) -> String {
+    let t = trace::load(path, opts).expect("fixture parses");
+    let registry = t.synthesize_registry();
+    let arrivals = t.arrivals();
+    let mut sim = Simulation::new(common::scale_nodes(8), registry, sim_cfg(shards, churn));
+    let report = sim.run_arrivals(arrivals);
+    sim.state.check_invariants().expect("cluster invariants");
+    assert!(report.accounting_balanced());
+    format!("{}\n{}", report.render(), sim.events.render())
+}
+
+/// The streaming path under test: scan pass + pull-based source through
+/// `run_source`, one arrival in memory at a time.
+fn streaming_fingerprint(
+    path: &Path,
+    opts: &TraceOptions,
+    shards: usize,
+    churn: Option<ChurnConfig>,
+) -> String {
+    let replay = TraceReplay::open(path, opts).expect("fixture parses");
+    let registry = replay.synthesize_registry();
+    let expected = replay.stats.events;
+    let mut sim = Simulation::new(common::scale_nodes(8), registry, sim_cfg(shards, churn));
+    let report = sim.run_source(Box::new(replay.into_source()));
+    sim.state.check_invariants().expect("cluster invariants");
+    assert_eq!(report.submitted, expected, "streaming source ended early");
+    assert!(report.accounting_balanced());
+    format!("{}\n{}", report.render(), sim.events.render())
+}
+
+#[test]
+fn streaming_matches_buffered_on_fixtures() {
+    // Both formats × both error modes × shards {1, 4}: the streaming
+    // pipeline must be byte-identical to the buffered path everywhere.
+    for (name, format) in [
+        ("alibaba_mini.csv", TraceFormat::Alibaba),
+        ("azure_mini.csv", TraceFormat::Azure),
+    ] {
+        for mode in [ErrorMode::Lenient, ErrorMode::Strict] {
+            let opts = TraceOptions { format, mode, ..Default::default() };
+            let path = fixture(name);
+            for shards in [1usize, 4] {
+                let buffered = buffered_fingerprint(&path, &opts, shards, None);
+                let streaming = streaming_fingerprint(&path, &opts, shards, None);
+                assert_eq!(
+                    buffered, streaming,
+                    "{name} {mode:?} shards={shards}: streaming diverged from buffered"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_matches_buffered_under_churn() {
+    let churn = || {
+        Some(ChurnConfig {
+            seed: 5,
+            horizon_secs: 600.0,
+            joins: 2,
+            drains: 1,
+            crash_fraction: 0.25,
+            outages: 1,
+            outage_secs: 30.0,
+            ..Default::default()
+        })
+    };
+    let opts = TraceOptions::default();
+    let path = fixture("alibaba_mini.csv");
+    for shards in [1usize, 4] {
+        let buffered = buffered_fingerprint(&path, &opts, shards, churn());
+        let streaming = streaming_fingerprint(&path, &opts, shards, churn());
+        assert_eq!(buffered, streaming, "churn shards={shards}: streaming diverged");
+    }
+}
+
+#[test]
+fn gzipped_streaming_replay_matches_plain() {
+    // .csv.gz streams through the bounded-memory GzDecoder; the whole
+    // replay must be byte-identical to the plain file.
+    let opts = TraceOptions::default();
+    let plain = streaming_fingerprint(&fixture("alibaba_mini.csv"), &opts, 1, None);
+    let gz = streaming_fingerprint(&fixture("alibaba_mini.csv.gz"), &opts, 1, None);
+    assert_eq!(plain, gz);
+}
+
+/// Write a deterministic out-of-order Alibaba-dialect trace: every
+/// quadruple of rows reversed (max displacement 3), over 10 recurring
+/// apps.
+fn write_shuffled_trace(path: &Path) {
+    let mut rows: Vec<String> = (0..120)
+        .map(|i| {
+            format!(
+                "task_{},1,j_{i},A,Terminated,{},{},50,0.5",
+                i % 10,
+                1000 + i,
+                1030 + i
+            )
+        })
+        .collect();
+    for block in rows.chunks_mut(4) {
+        block.reverse();
+    }
+    std::fs::write(path, rows.join("\n")).expect("write shuffled trace");
+}
+
+#[test]
+fn bounded_reorder_buffer_replays_identically() {
+    let path = std::env::temp_dir()
+        .join(format!("lrsched-shuffled-{}.csv", std::process::id()));
+    write_shuffled_trace(&path);
+
+    // Reference: effectively unbounded buffer.
+    let big = TraceOptions { reorder_cap: 100_000, ..Default::default() };
+    let reference = streaming_fingerprint(&path, &big, 1, None);
+
+    // Bounded buffer big enough for the displacement: byte-identical.
+    let bounded = TraceOptions { reorder_cap: 8, ..Default::default() };
+    let replay = TraceReplay::open(&path, &bounded).expect("parses");
+    assert!(replay.stats.resorted);
+    assert!(!replay.stats.full_resort, "displacement 3 must fit a cap of 8");
+    assert_eq!(replay.stats.reorder_depth, 3, "reversed quadruples displace by 3");
+    drop(replay);
+    assert_eq!(streaming_fingerprint(&path, &bounded, 1, None), reference);
+
+    // Cap too small for displacement 3: the scan pass must detect the
+    // overflow and fall back to the whole-trace sort — still
+    // byte-identical.
+    let tiny = TraceOptions { reorder_cap: 1, ..Default::default() };
+    let replay = TraceReplay::open(&path, &tiny).expect("parses");
+    assert!(replay.stats.full_resort, "cap 1 cannot hold displacement 3");
+    drop(replay);
+    assert_eq!(streaming_fingerprint(&path, &tiny, 1, None), reference);
+
+    // And the buffered path agrees with all of them.
+    assert_eq!(buffered_fingerprint(&path, &bounded, 1, None), reference);
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn trace_limit_short_circuits_ingestion() {
+    let opts = TraceOptions { limit: Some(10), ..Default::default() };
+    let replay = TraceReplay::open(&fixture("alibaba_mini.csv"), &opts).expect("parses");
+    assert_eq!(replay.stats.events, 10);
+    assert!(replay.stats.limit_hit, "the cut must be visible in stats");
+    // Short-circuit: the full fixture has 36 data rows; only the prefix
+    // needed for 10 events was read.
+    assert!(
+        replay.stats.rows < 36,
+        "ingestion read {} rows; it must stop at the limit",
+        replay.stats.rows
+    );
+    // The truncated replay still runs and balances.
+    let registry = replay.synthesize_registry();
+    let mut sim = Simulation::new(common::scale_nodes(4), registry, sim_cfg(1, None));
+    let report = sim.run_source(Box::new(replay.into_source()));
+    assert_eq!(report.submitted, 10);
+    assert!(report.accounting_balanced());
+    // And it matches the buffered limit semantics byte-for-byte.
+    let buffered = buffered_fingerprint(&fixture("alibaba_mini.csv"), &opts, 1, None);
+    let streaming = streaming_fingerprint(&fixture("alibaba_mini.csv"), &opts, 1, None);
+    assert_eq!(buffered, streaming);
+}
+
+#[test]
+fn uppercase_gz_extension_still_decompresses() {
+    // Extension handling is case-insensitive on both the reject list and
+    // the gzip route: a `.CSV.GZ` trace must inflate, not be fed as raw
+    // compressed bytes to the CSV parser.
+    let gz = std::fs::read(fixture("alibaba_mini.csv.gz")).expect("fixture exists");
+    let path = std::env::temp_dir()
+        .join(format!("LRSCHED-UPPER-{}.CSV.GZ", std::process::id()));
+    std::fs::write(&path, gz).expect("write uppercase fixture");
+    let replay = TraceReplay::open(&path, &TraceOptions::default())
+        .expect("uppercase .GZ must decompress");
+    assert_eq!(replay.stats.events, 53);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn borg_dialect_replays_end_to_end() {
+    // A small Borg task_events window: SUBMIT rows become service pods,
+    // lifecycle rows are filtered, and the replay balances. `--trace-limit`
+    // keeps it bounded despite services never terminating.
+    let path = std::env::temp_dir().join(format!("lrsched-borg-{}.csv", std::process::id()));
+    let mut rows = String::new();
+    for i in 0..30 {
+        // SUBMIT (type 0) + SCHEDULE (type 1) per task, jobs recur.
+        rows.push_str(&format!(
+            "{},,job{},{i},,0,u1,2,9,0.05,0.05,0.001,0\n",
+            i * 1_000_000,
+            i % 5
+        ));
+        rows.push_str(&format!(
+            "{},,job{},{i},m1,1,u1,2,9,0.05,0.05,0.001,0\n",
+            i * 1_000_000 + 500_000,
+            i % 5
+        ));
+    }
+    std::fs::write(&path, rows).expect("write borg trace");
+
+    let opts = TraceOptions { format: TraceFormat::Borg, ..Default::default() };
+    let replay = TraceReplay::open(&path, &opts).expect("borg trace parses");
+    assert_eq!(replay.stats.events, 30);
+    assert_eq!(replay.stats.filtered, 30, "SCHEDULE rows are filtered, not errors");
+    assert_eq!(replay.stats.apps, 5);
+    let buffered = buffered_fingerprint(&path, &opts, 1, None);
+    let streaming = streaming_fingerprint(&path, &opts, 1, None);
+    assert_eq!(buffered, streaming, "borg: streaming diverged from buffered");
+    let _ = std::fs::remove_file(&path);
+}
