@@ -76,6 +76,7 @@
 pub mod cli;
 pub mod cluster;
 pub mod exp;
+pub mod lint;
 pub mod runtime;
 pub mod sched;
 pub mod sim;

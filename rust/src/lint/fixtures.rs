@@ -1,0 +1,174 @@
+//! Embedded bad-snippet fixtures pinning each lint rule's behavior.
+//!
+//! Every rule must trip on exactly one embedded bad snippet and stay
+//! silent on the clean/annotated variants — so a rules-engine regression
+//! (a rule that stops firing, or one that starts over-firing) fails both
+//! `cargo test` and the CI `lrsched lint --self-test` step without
+//! needing a corpus of broken files on disk.
+
+use super::lint_source;
+
+/// One fixture: a pretend path (rule scoping is path-driven), a source
+/// snippet, and the exact rule ids expected, in order.
+struct Fixture {
+    name: &'static str,
+    path: &'static str,
+    src: &'static str,
+    expect: &'static [&'static str],
+}
+
+/// R1 trips: a hash map's key order escapes into a returned Vec.
+const R1_BAD: &str = r#"
+use std::collections::HashMap;
+fn report(pending: HashMap<u64, f64>) -> Vec<u64> {
+    let mut out = Vec::new();
+    for pid in pending.keys() {
+        out.push(*pid);
+    }
+    out
+}
+"#;
+
+/// R1 silent: the same site, collect-then-sorted and annotated.
+const R1_ANNOTATED: &str = r#"
+use std::collections::HashMap;
+fn report(pending: HashMap<u64, f64>) -> Vec<u64> {
+    // det: sorted(pid)
+    let mut out: Vec<u64> = pending.keys().copied().collect();
+    out.sort_unstable();
+    out
+}
+"#;
+
+/// R2 trips: wall-clock in scheduler code.
+const R2_BAD: &str = r#"
+use std::time::Instant;
+fn stamp() -> Instant {
+    Instant::now()
+}
+"#;
+
+/// R2 silent: a justified, reasoned allow.
+const R2_ALLOWED: &str = r#"
+fn level() -> Option<String> {
+    // det: allow(R2): stderr verbosity only, simulation state never reads it
+    std::env::var("LRSCHED_LOG").ok()
+}
+"#;
+
+/// R3 trips once: a SAFETY comment is present but the file is not on the
+/// unsafe allowlist.
+const R3_BAD_FILE: &str = r#"
+fn sneak(p: *const u8) -> u8 {
+    // SAFETY: p is valid for reads (caller contract).
+    unsafe { *p }
+}
+"#;
+
+/// R3 trips once: allowlisted file, but the SAFETY comment is missing.
+const R3_BAD_COMMENT: &str = r#"
+fn sneak(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+"#;
+
+/// R4 trips: a float accumulator captured by a `par_fill` closure.
+const R4_BAD: &str = r#"
+fn reduce(pool: &LanePool, xs: &mut [f64]) -> f64 {
+    let mut total = 0.0;
+    par_fill(pool, xs, &|_i, slot| {
+        total += *slot;
+    });
+    total
+}
+"#;
+
+/// R4 silent: accumulation into closure-local state, written back to a
+/// fixed slot — the deterministic fan-out idiom.
+const R4_CLEAN: &str = r#"
+fn fill(pool: &LanePool, xs: &mut [f64]) {
+    par_fill(pool, xs, &|_i, slot| {
+        let mut acc = 0.0;
+        for k in 0..4 {
+            acc += k as f64;
+        }
+        *slot = acc;
+    });
+}
+"#;
+
+/// R0 trips: an annotation that suppresses nothing.
+const R0_UNUSED: &str = r#"
+fn tidy() -> u32 {
+    // det: sorted(nothing)
+    1 + 1
+}
+"#;
+
+/// R0 trips: `det:` with an unparseable body.
+const R0_MALFORMED: &str = r#"
+fn tidy() -> u32 {
+    // det: because reasons
+    1 + 1
+}
+"#;
+
+/// Silent: ordered-map iteration, hash lookups, and a local accumulator
+/// outside any pool closure — the near-misses every rule must ignore.
+const CLEAN: &str = r#"
+use std::collections::{BTreeMap, HashMap};
+fn steady(m: &BTreeMap<u64, f64>, h: &HashMap<u64, f64>) -> f64 {
+    let mut total = 0.0;
+    for (_k, v) in m.iter() {
+        total += v;
+    }
+    total += h.get(&1).copied().unwrap_or(0.0);
+    total
+}
+"#;
+
+/// Silent: everything inside `#[cfg(test)]` is exempt from R1/R2/R4.
+const TEST_REGION: &str = r#"
+fn shipped() {}
+#[cfg(test)]
+mod tests {
+    use std::time::Instant;
+    #[test]
+    fn timing() {
+        let _ = Instant::now();
+    }
+}
+"#;
+
+const FIXTURES: &[Fixture] = &[
+    Fixture { name: "r1_bad", path: "sim/fixture.rs", src: R1_BAD, expect: &["R1"] },
+    Fixture { name: "r1_annotated", path: "sim/fixture.rs", src: R1_ANNOTATED, expect: &[] },
+    Fixture { name: "r2_bad", path: "sched/fixture.rs", src: R2_BAD, expect: &["R2"] },
+    Fixture { name: "r2_allowed", path: "util/fixture.rs", src: R2_ALLOWED, expect: &[] },
+    Fixture { name: "r3_bad_file", path: "sched/fixture.rs", src: R3_BAD_FILE, expect: &["R3"] },
+    Fixture { name: "r3_bad_comment", path: "sim/shard.rs", src: R3_BAD_COMMENT, expect: &["R3"] },
+    Fixture { name: "r4_bad", path: "sim/fixture.rs", src: R4_BAD, expect: &["R4"] },
+    Fixture { name: "r4_clean", path: "sim/fixture.rs", src: R4_CLEAN, expect: &[] },
+    Fixture { name: "r0_unused", path: "sim/fixture.rs", src: R0_UNUSED, expect: &["R0"] },
+    Fixture { name: "r0_malformed", path: "sim/fixture.rs", src: R0_MALFORMED, expect: &["R0"] },
+    Fixture { name: "clean", path: "sim/fixture.rs", src: CLEAN, expect: &[] },
+    Fixture { name: "test_region", path: "sim/fixture.rs", src: TEST_REGION, expect: &[] },
+];
+
+/// Run every embedded fixture through the rules engine and check that
+/// each trips exactly the expected rule ids (bad snippets exactly once,
+/// clean/annotated snippets not at all). Returns the first mismatch as
+/// an error. Wired into CI as `lrsched lint --self-test`.
+pub fn self_test() -> Result<(), String> {
+    for f in FIXTURES {
+        let got: Vec<&'static str> =
+            lint_source(f.path, f.path, f.src).iter().map(|d| d.rule).collect();
+        if got != f.expect {
+            return Err(format!(
+                "lint self-test {:?} ({}): expected rules {:?}, got {:?}",
+                f.name, f.path, f.expect, got
+            ));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,365 @@
+//! `detlint` — the in-repo determinism-contract analyzer behind
+//! `lrsched lint`.
+//!
+//! The whole value of this reproduction is that `--shards N` replay is
+//! byte-identical to sequential and that every repair/retry is
+//! deterministic and counted. That contract used to be enforced only by
+//! convention (hand-written "collect, then sort" comments) and
+//! after-the-fact differential tests; this module turns it into a build
+//! gate. It walks `rust/src/**`, lexes every file with the token-level
+//! lexer in [`crate::util::rustlex`], and enforces four rules:
+//!
+//! - **R1** — no `HashMap`/`HashSet` iteration-order escape (`.iter()`,
+//!   `.keys()`, `.values()`, `.drain()`, `for`-loops, …) in `sim/`,
+//!   `sched/`, `cluster/`, or `registry/` unless the site carries a
+//!   `// det: sorted(<key>)` annotation marking a collect-then-sort.
+//! - **R2** — no ambient nondeterminism (`Instant::now`, `SystemTime`,
+//!   `std::env`, OS RNG) outside `main.rs`, `testing/`, and benches.
+//! - **R3** — every `unsafe` carries a `SAFETY:` comment, and `unsafe`
+//!   stays confined to an allowlisted file set (currently
+//!   `sim/shard.rs` only).
+//! - **R4** — no accumulation into captured state inside closures handed
+//!   to `LanePool::run`/`par_fill`/`par_fill_rows`; reductions must
+//!   happen coordinator-side in node order so every float is
+//!   bit-identical regardless of worker scheduling.
+//!
+//! Suppressions use the `det:` annotation grammar (see
+//! `docs/ARCHITECTURE.md`, "Determinism contract"):
+//!
+//! ```text
+//! // det: sorted(<key>)           R1: collect-then-sort site, keyed <key>
+//! // det: allow(R<n>): <reason>   suppress rule n on the next code line
+//! ```
+//!
+//! An annotation that suppresses nothing is itself an error (**R0**), so
+//! suppressions cannot rot. Code from the first `#[cfg(test)]` to
+//! end-of-file is exempt from R1/R2/R4 (house style keeps test modules
+//! last); R3 applies everywhere, tests included.
+//!
+//! The rules are token-level heuristics, not a type checker: they can
+//! miss an iteration reached through a reference whose hash-typed origin
+//! is in another file, and they deliberately over-approximate in the
+//! other direction (e.g. any `std::env` access). Both directions are
+//! fine for a gate whose self-tests pin the exact behavior — see
+//! [`self_test`] and the embedded fixtures.
+
+mod fixtures;
+mod rules;
+
+pub use fixtures::self_test;
+
+use crate::util::json::Json;
+use crate::util::rustlex::{lex, Tok};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One lint finding: a determinism-contract violation (R1–R4) or a
+/// stale/malformed suppression (R0).
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Path of the offending file, as printed (root-joined).
+    pub file: String,
+    /// 1-based line of the offending token run.
+    pub line: u32,
+    /// Rule id: `R0` (annotation hygiene) through `R4`.
+    pub rule: &'static str,
+    /// The offending token run, compressed for display.
+    pub token: String,
+    /// Human-readable explanation with the expected fix.
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {} `{}` — {}", self.file, self.line, self.rule, self.token, self.message)
+    }
+}
+
+impl Diagnostic {
+    /// This diagnostic as a JSON object (for `lrsched lint --json`).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("file", Json::Str(self.file.clone()))
+            .set("line", Json::Int(i64::from(self.line)))
+            .set("rule", Json::Str(self.rule.to_string()))
+            .set("token", Json::Str(self.token.clone()))
+            .set("message", Json::Str(self.message.clone()));
+        o
+    }
+}
+
+/// Result of a full lint run: what was scanned and what was found.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Files scanned, in deterministic (sorted) walk order.
+    pub files: usize,
+    /// Findings across all files, in walk order then line order.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    /// Did the tree pass clean?
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// All findings as a JSON array (stable order).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.diagnostics.iter().map(Diagnostic::to_json).collect())
+    }
+}
+
+/// A parsed `det:` suppression annotation.
+struct Annotation {
+    /// Rule this annotation suppresses (`R1` for `sorted(…)`).
+    rule: &'static str,
+    /// The code line it targets (same line, or the next code line).
+    target: Option<u32>,
+    /// Line of the comment itself (for R0 reporting).
+    line: u32,
+    /// Did it suppress at least one diagnostic?
+    used: bool,
+}
+
+/// Per-file context shared by the rule passes.
+pub(crate) struct FileCtx<'a> {
+    /// Relative, `/`-separated path used for rule scoping.
+    pub rel: &'a str,
+    /// Code tokens (comments stripped).
+    pub code: Vec<&'a Tok>,
+    /// Comment tokens only (R3 `SAFETY:` + `det:` annotations live here).
+    pub comments: Vec<&'a Tok>,
+    /// Line of the first `#[cfg(test)]`; R1/R2/R4 skip lines ≥ this.
+    test_from_line: Option<u32>,
+}
+
+impl FileCtx<'_> {
+    /// Is `line` inside the trailing test region?
+    pub fn in_test(&self, line: u32) -> bool {
+        matches!(self.test_from_line, Some(t) if line >= t)
+    }
+}
+
+/// Diagnostic sink that routes each finding through the annotation table
+/// before recording it.
+pub(crate) struct Emitter<'a> {
+    file: String,
+    anns: &'a mut Vec<Annotation>,
+    diags: &'a mut Vec<Diagnostic>,
+}
+
+impl Emitter<'_> {
+    pub(crate) fn emit(&mut self, line: u32, rule: &'static str, token: &str, message: &str) {
+        for a in self.anns.iter_mut() {
+            if a.rule == rule && a.target == Some(line) {
+                a.used = true;
+                return;
+            }
+        }
+        self.diags.push(Diagnostic {
+            file: self.file.clone(),
+            line,
+            rule,
+            token: token.to_string(),
+            message: message.to_string(),
+        });
+    }
+}
+
+/// Parse the text after `det:` into `(rule, ok)`. Returns `None` for a
+/// malformed annotation.
+fn parse_annotation(spec: &str) -> Option<&'static str> {
+    let spec = spec.trim();
+    if let Some(rest) = spec.strip_prefix("sorted(") {
+        // `sorted(<key>)` — key must be non-empty, nothing after `)`.
+        if let Some(end) = rest.find(')') {
+            if end > 0 && rest[end + 1..].trim().is_empty() {
+                return Some("R1");
+            }
+        }
+        return None;
+    }
+    if let Some(rest) = spec.strip_prefix("allow(") {
+        // `allow(R<n>): <reason>` — reason must be non-empty.
+        let rule = match rest.as_bytes() {
+            [b'R', b'1', b')', b':', ..] => "R1",
+            [b'R', b'2', b')', b':', ..] => "R2",
+            [b'R', b'3', b')', b':', ..] => "R3",
+            [b'R', b'4', b')', b':', ..] => "R4",
+            _ => return None,
+        };
+        if rest[4..].trim().is_empty() {
+            return None;
+        }
+        return Some(rule);
+    }
+    None
+}
+
+/// Lint one file's source. `rel` is the path relative to the walked root
+/// (`/`-separated — it drives rule scoping); `display` is the path as it
+/// should appear in diagnostics.
+pub fn lint_source(rel: &str, display: &str, src: &str) -> Vec<Diagnostic> {
+    let toks = lex(src);
+    let code: Vec<&Tok> = toks.iter().filter(|t| t.is_code()).collect();
+    let comments: Vec<&Tok> = toks.iter().filter(|t| !t.is_code()).collect();
+    let mut diags: Vec<Diagnostic> = Vec::new();
+
+    // Test-region cutoff: first `#[cfg(test)]` in the code stream.
+    let mut test_from_line = None;
+    for w in code.windows(7) {
+        if w[0].text == "#"
+            && w[1].text == "["
+            && w[2].text == "cfg"
+            && w[3].text == "("
+            && w[4].text == "test"
+            && w[5].text == ")"
+            && w[6].text == "]"
+        {
+            test_from_line = Some(w[0].line);
+            break;
+        }
+    }
+
+    // Collect `det:` annotations and their target lines. An annotation
+    // is a plain `// det: …` line comment — `det:` first, so doc comments
+    // and prose that merely *mention* the grammar are not annotations.
+    let mut anns: Vec<Annotation> = Vec::new();
+    for c in &comments {
+        let Some(body) = c.text.strip_prefix("//") else { continue };
+        if body.starts_with('/') || body.starts_with('!') {
+            continue;
+        }
+        let Some(spec) = body.trim_start().strip_prefix("det:") else { continue };
+        let spec = spec.trim();
+        // Target: the same line when code precedes the comment on it,
+        // otherwise the next line holding a code token.
+        let target = if code.iter().any(|t| t.line == c.line) {
+            Some(c.line)
+        } else {
+            code.iter().map(|t| t.line).filter(|&l| l > c.line).min()
+        };
+        match parse_annotation(spec) {
+            Some(rule) => anns.push(Annotation { rule, target, line: c.line, used: false }),
+            None => diags.push(Diagnostic {
+                file: display.to_string(),
+                line: c.line,
+                rule: "R0",
+                token: "det:".to_string(),
+                message: format!("malformed det: annotation {spec:?}"),
+            }),
+        }
+    }
+
+    let ctx = FileCtx { rel, code, comments, test_from_line };
+    let mut em = Emitter { file: display.to_string(), anns: &mut anns, diags: &mut diags };
+    rules::r1_hash_order(&ctx, &mut em);
+    rules::r2_ambient(&ctx, &mut em);
+    rules::r3_unsafe(&ctx, &mut em);
+    rules::r4_pool_accumulation(&ctx, &mut em);
+
+    // Stale suppressions are errors themselves.
+    for a in &anns {
+        if !a.used {
+            diags.push(Diagnostic {
+                file: display.to_string(),
+                line: a.line,
+                rule: "R0",
+                token: "det:".to_string(),
+                message: "unused det: annotation (nothing suppressed)".to_string(),
+            });
+        }
+    }
+    diags
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted at every level —
+/// the lint's own output order must not depend on directory-entry order.
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+        entries.push(entry.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (normally `rust/src`). Diagnostics
+/// come back in deterministic (sorted-walk, then line) order.
+pub fn run(root: &Path) -> Result<LintReport, String> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    let mut report = LintReport::default();
+    for f in &files {
+        let rel: String = f
+            .strip_prefix(root)
+            .map_err(|e| e.to_string())?
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let display = f.display().to_string();
+        let src = std::fs::read_to_string(f).map_err(|e| format!("{}: {e}", f.display()))?;
+        report.diagnostics.extend(lint_source(&rel, &display, &src));
+        report.files += 1;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixtures_pass_self_test() {
+        self_test().unwrap();
+    }
+
+    #[test]
+    fn repo_is_lint_clean() {
+        // The determinism contract gates the crate's own source: every
+        // hash-order iteration is sorted or justified, ambient
+        // nondeterminism stays in main/testing, unsafe stays in the pool.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let report = run(&root).unwrap();
+        assert!(report.files > 50, "walk found too few files: {}", report.files);
+        let rendered: Vec<String> =
+            report.diagnostics.iter().map(|d| d.to_string()).collect();
+        assert!(report.clean(), "lint findings in the repo:\n{}", rendered.join("\n"));
+    }
+
+    #[test]
+    fn annotation_grammar() {
+        assert_eq!(parse_annotation("sorted(pid)"), Some("R1"));
+        assert_eq!(parse_annotation("allow(R2): reads only a log gate"), Some("R2"));
+        assert_eq!(parse_annotation("sorted()"), None);
+        assert_eq!(parse_annotation("allow(R2):"), None);
+        assert_eq!(parse_annotation("allow(R9): nope"), None);
+        assert_eq!(parse_annotation("because reasons"), None);
+    }
+
+    #[test]
+    fn diagnostics_render_file_line_rule() {
+        let d = Diagnostic {
+            file: "src/sim/engine.rs".to_string(),
+            line: 7,
+            rule: "R1",
+            token: "m.keys()".to_string(),
+            message: "hash-order iteration escapes".to_string(),
+        };
+        let s = d.to_string();
+        assert!(s.starts_with("src/sim/engine.rs:7: R1"));
+        let j = d.to_json();
+        assert_eq!(j.get("line").and_then(|v| v.as_i64()), Some(7));
+        assert_eq!(j.get("rule").and_then(|v| v.as_str()), Some("R1"));
+    }
+}

@@ -1,0 +1,375 @@
+//! The four determinism-contract rule passes. Each is a token-sequence
+//! matcher over one file's code stream — see the module docs in
+//! [`crate::lint`] for the contract each rule enforces and the fixtures
+//! in `fixtures.rs` for the exact behavior pinned by self-tests.
+
+use super::{Emitter, FileCtx};
+use crate::util::rustlex::{Tok, TokKind};
+use std::collections::BTreeSet;
+
+/// Iteration methods whose visit order on a hash collection is
+/// nondeterministic across runs/platforms.
+const HASH_ITERS: &[&str] = &[
+    "iter", "iter_mut", "keys", "values", "values_mut", "drain", "into_iter", "retain",
+    "retain_mut",
+];
+
+/// Directories R1 scopes to: everywhere the event stream, scheduling
+/// decisions, or report contents are produced.
+const R1_DIRS: &[&str] = &["sim/", "sched/", "cluster/", "registry/"];
+
+/// Identifiers that reach for ambient nondeterminism directly.
+const AMBIENT_IDENTS: &[&str] =
+    &["SystemTime", "thread_rng", "from_entropy", "RandomState", "getrandom"];
+
+/// Files allowed to contain `unsafe` (the lane-pool internals only).
+const UNSAFE_ALLOWED: &[&str] = &["sim/shard.rs"];
+
+/// Compound-assignment operators R4 treats as accumulation.
+const ACC_OPS: &[&str] = &["+=", "-=", "*=", "/="];
+
+const R1_MSG: &str = "hash-order iteration escapes; collect-then-sort and annotate \
+                      `// det: sorted(<key>)`, or use BTreeMap";
+
+/// Index of the token closing the bracket opened at `code[i]` (clamped
+/// to the last token when unclosed — the lint never panics on bad input).
+fn match_close(code: &[&Tok], i: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0i32;
+    let mut j = i;
+    while j < code.len() {
+        if code[j].text == open {
+            depth += 1;
+        } else if code[j].text == close {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+        j += 1;
+    }
+    code.len() - 1
+}
+
+/// **R1** — hash-order escape: iteration over a `HashMap`/`HashSet` in
+/// the event/scheduling/report paths. Two passes: collect identifiers
+/// declared hash-typed in this file, then flag iteration sites on them.
+pub(crate) fn r1_hash_order(ctx: &FileCtx<'_>, em: &mut Emitter<'_>) {
+    if !R1_DIRS.iter().any(|d| ctx.rel.starts_with(d)) {
+        return;
+    }
+    let code = &ctx.code;
+    let n = code.len();
+
+    // Pass A: names declared `: [&|mut|std::collections::]Hash{Map,Set}`
+    // or initialized from `Hash{Map,Set}::…`.
+    let mut tracked: BTreeSet<&str> = BTreeSet::new();
+    let allowed_mid = ["std", "collections", "::", "&", "mut"];
+    for i in 0..n {
+        let t = code[i];
+        if t.kind == TokKind::Ident && i + 2 < n && code[i + 1].text == ":" {
+            let mut j = i + 2;
+            let mut hops = 0;
+            while j < n && hops < 6 {
+                let tx = code[j].text.as_str();
+                if tx == "HashMap" || tx == "HashSet" {
+                    tracked.insert(t.text.as_str());
+                    break;
+                }
+                if !allowed_mid.contains(&tx) {
+                    break;
+                }
+                j += 1;
+                hops += 1;
+            }
+        }
+        if t.text == "let" {
+            let mut j = i + 1;
+            if j < n && code[j].text == "mut" {
+                j += 1;
+            }
+            if j + 1 < n && code[j].kind == TokKind::Ident && code[j + 1].text == "=" {
+                let name = code[j].text.as_str();
+                let hi = (j + 10).min(n.saturating_sub(1));
+                for k in (j + 2)..hi {
+                    let tx = code[k].text.as_str();
+                    if (tx == "HashMap" || tx == "HashSet") && code[k + 1].text == "::" {
+                        tracked.insert(name);
+                        break;
+                    }
+                    if tx == ";" {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    // Pass B: flag iteration sites on tracked names.
+    for i in 0..n {
+        let t = code[i];
+        if ctx.in_test(t.line) {
+            continue;
+        }
+        // ident . m (
+        if t.kind == TokKind::Ident
+            && tracked.contains(t.text.as_str())
+            && i + 3 < n
+            && code[i + 1].text == "."
+            && HASH_ITERS.contains(&code[i + 2].text.as_str())
+            && code[i + 3].text == "("
+        {
+            let token = format!("{}.{}()", t.text, code[i + 2].text);
+            em.emit(code[i + 2].line, "R1", &token, R1_MSG);
+        }
+        // for … in [&][mut][self .] ident {
+        if t.text == "for" {
+            let mut depth = 0i32;
+            let mut j = i + 1;
+            while j < n {
+                let tx = code[j].text.as_str();
+                if tx == "(" || tx == "[" || tx == "{" {
+                    depth += 1;
+                } else if tx == ")" || tx == "]" || tx == "}" {
+                    depth -= 1;
+                } else if tx == "in" && depth == 0 {
+                    break;
+                }
+                j += 1;
+            }
+            if j >= n {
+                continue;
+            }
+            j += 1;
+            if j < n && code[j].text == "&" {
+                j += 1;
+            }
+            if j < n && code[j].text == "mut" {
+                j += 1;
+            }
+            if j + 1 < n && code[j].text == "self" && code[j + 1].text == "." {
+                j += 2;
+            }
+            if j + 1 < n
+                && code[j].kind == TokKind::Ident
+                && tracked.contains(code[j].text.as_str())
+                && code[j + 1].text == "{"
+            {
+                let token = format!("for _ in {}", code[j].text);
+                em.emit(code[j].line, "R1", &token, R1_MSG);
+            }
+        }
+    }
+}
+
+/// **R2** — ambient nondeterminism: wall clocks, the process
+/// environment, and OS randomness must stay in `main.rs`, `testing/`,
+/// and benches; simulation results may depend only on seeds and inputs.
+pub(crate) fn r2_ambient(ctx: &FileCtx<'_>, em: &mut Emitter<'_>) {
+    if ctx.rel == "main.rs" || ctx.rel.starts_with("testing/") {
+        return;
+    }
+    let code = &ctx.code;
+    let n = code.len();
+    for i in 0..n {
+        let t = code[i];
+        if ctx.in_test(t.line) {
+            continue;
+        }
+        if t.text == "Instant" && i + 2 < n && code[i + 1].text == "::" && code[i + 2].text == "now"
+        {
+            em.emit(t.line, "R2", "Instant::now", "ambient wall-clock in simulation code");
+        } else if t.text == "std" && i + 2 < n && code[i + 1].text == "::" && code[i + 2].text == "env"
+        {
+            em.emit(t.line, "R2", "std::env", "ambient environment access in simulation code");
+        } else if t.kind == TokKind::Ident && AMBIENT_IDENTS.contains(&t.text.as_str()) {
+            em.emit(t.line, "R2", &t.text, "ambient nondeterminism source in simulation code");
+        }
+    }
+}
+
+/// **R3** — unsafe hygiene: every `unsafe` block/impl carries a
+/// `SAFETY:` comment within the preceding 12 lines, and `unsafe` stays
+/// confined to the allowlisted pool internals. Applies everywhere,
+/// tests included.
+pub(crate) fn r3_unsafe(ctx: &FileCtx<'_>, em: &mut Emitter<'_>) {
+    for t in &ctx.code {
+        if t.text != "unsafe" {
+            continue;
+        }
+        if !UNSAFE_ALLOWED.iter().any(|sfx| ctx.rel.ends_with(sfx)) {
+            let msg = format!(
+                "unsafe outside the allowlisted files ({})",
+                UNSAFE_ALLOWED.join(", ")
+            );
+            em.emit(t.line, "R3", "unsafe", &msg);
+        }
+        let has_safety = ctx
+            .comments
+            .iter()
+            .any(|c| c.text.contains("SAFETY:") && c.line + 12 >= t.line && c.line <= t.line);
+        if !has_safety {
+            em.emit(
+                t.line,
+                "R3",
+                "unsafe",
+                "unsafe without a SAFETY: comment in the preceding 12 lines",
+            );
+        }
+    }
+}
+
+/// **R4** — no accumulation into captured state inside closures handed
+/// to the lane pool (`par_fill`, `par_fill_rows`, `*pool.run`): chunk
+/// claim order is scheduling-dependent, so `captured += x` inside a
+/// worker closure is order-sensitive (float addition does not commute
+/// bitwise). Reductions belong coordinator-side, in node order.
+pub(crate) fn r4_pool_accumulation(ctx: &FileCtx<'_>, em: &mut Emitter<'_>) {
+    if ctx.rel.starts_with("testing/") {
+        return;
+    }
+    let code = &ctx.code;
+    let n = code.len();
+
+    // Call heads: the `(` opening a pool fan-out call.
+    let mut heads: Vec<usize> = Vec::new();
+    for i in 0..n {
+        let t = code[i];
+        if ctx.in_test(t.line) {
+            continue;
+        }
+        if t.kind == TokKind::Ident
+            && (t.text == "par_fill" || t.text == "par_fill_rows")
+            && i + 1 < n
+            && code[i + 1].text == "("
+        {
+            heads.push(i + 1);
+        }
+        if t.text == "run"
+            && i >= 2
+            && code[i - 1].text == "."
+            && code[i - 2].kind == TokKind::Ident
+            && code[i - 2].text.ends_with("pool")
+            && i + 1 < n
+            && code[i + 1].text == "("
+        {
+            heads.push(i + 1);
+        }
+    }
+
+    for &h in &heads {
+        let end = match_close(code, h, "(", ")");
+        let mut j = h + 1;
+        while j < end {
+            let tx = code[j].text.as_str();
+            let opens_closure = (tx == "|" || tx == "||")
+                && matches!(code[j - 1].text.as_str(), "&" | "(" | ",");
+            if opens_closure {
+                // Closure parameter names are locally bound.
+                let mut locals: BTreeSet<&str> = BTreeSet::new();
+                let body_start = if tx == "||" {
+                    j + 1
+                } else {
+                    let mut k = j + 1;
+                    while k < end && code[k].text != "|" {
+                        if code[k].kind == TokKind::Ident {
+                            locals.insert(code[k].text.as_str());
+                        }
+                        k += 1;
+                    }
+                    k + 1
+                };
+                // Body extent: a brace block, or an expression up to the
+                // next top-level `,`/`)`.
+                let body_end = if body_start < end && code[body_start].text == "{" {
+                    match_close(code, body_start, "{", "}")
+                } else {
+                    let mut k = body_start;
+                    let mut depth = 0i32;
+                    while k < end {
+                        let t2 = code[k].text.as_str();
+                        if t2 == "(" || t2 == "[" || t2 == "{" {
+                            depth += 1;
+                        } else if t2 == ")" || t2 == "]" || t2 == "}" {
+                            depth -= 1;
+                        } else if t2 == "," && depth == 0 {
+                            break;
+                        }
+                        k += 1;
+                    }
+                    k
+                };
+                // `let` and `for` bindings inside the body are local too.
+                for k in body_start..body_end {
+                    if code[k].text == "let" {
+                        let mut m = k + 1;
+                        while m < body_end && code[m].text != "=" && code[m].text != ";" {
+                            if code[m].kind == TokKind::Ident && code[m].text != "mut" {
+                                locals.insert(code[m].text.as_str());
+                            }
+                            m += 1;
+                        }
+                    }
+                    if code[k].text == "for" {
+                        let mut m = k + 1;
+                        while m < body_end && code[m].text != "in" {
+                            if code[m].kind == TokKind::Ident && code[m].text != "mut" {
+                                locals.insert(code[m].text.as_str());
+                            }
+                            m += 1;
+                        }
+                    }
+                }
+                // Flag compound assignment whose LHS root is captured.
+                for k in body_start..body_end {
+                    if !ACC_OPS.contains(&code[k].text.as_str()) {
+                        continue;
+                    }
+                    let mut m = k as i64 - 1;
+                    let mut root: Option<&Tok> = None;
+                    while m >= body_start as i64 {
+                        let tm = code[m as usize];
+                        let t2 = tm.text.as_str();
+                        if tm.kind == TokKind::Ident || t2 == "self" {
+                            root = Some(tm);
+                            m -= 1;
+                        } else if t2 == "." || t2 == "*" {
+                            m -= 1;
+                        } else if t2 == "]" || t2 == ")" {
+                            // Skip the bracket group backwards.
+                            let open = if t2 == "]" { "[" } else { "(" };
+                            let mut depth = 0i32;
+                            while m >= body_start as i64 {
+                                if code[m as usize].text == t2 {
+                                    depth += 1;
+                                } else if code[m as usize].text == open {
+                                    depth -= 1;
+                                    if depth == 0 {
+                                        break;
+                                    }
+                                }
+                                m -= 1;
+                            }
+                            m -= 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    let Some(r) = root else { continue };
+                    if locals.contains(r.text.as_str()) {
+                        continue;
+                    }
+                    let token = format!("{} .. {}", r.text, code[k].text);
+                    em.emit(
+                        code[k].line,
+                        "R4",
+                        &token,
+                        "accumulation into captured state inside a pool closure; \
+                         reduce coordinator-side in node order",
+                    );
+                }
+                j = body_end;
+            }
+            j += 1;
+        }
+    }
+}

@@ -27,6 +27,8 @@ Subcommands:
   table1     regenerate Table I: per-container size/time/STD
   export     write figure/table data as JSON/CSV for external plotting
   registry   show the synthetic registry catalog and layer sharing
+  lint       statically check the crate source against the determinism
+             contract (R1-R4; see docs/ARCHITECTURE.md)
   help       this text (or `help <subcommand>`)";
 
 fn common_spec() -> Vec<OptSpec> {
@@ -171,6 +173,64 @@ fn gen_trace_spec() -> Vec<OptSpec> {
         },
         OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
     ]
+}
+
+fn lint_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec {
+            name: "root",
+            help: "source tree to walk (defaults to rust/src, or src/ when \
+                   invoked from inside rust/)",
+            default: Some(""),
+        },
+        OptSpec { name: "json", help: "print diagnostics as a JSON array", default: None },
+        OptSpec {
+            name: "self-test",
+            help: "run the embedded rule fixtures instead of walking a tree",
+            default: None,
+        },
+        OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
+    ]
+}
+
+/// `lint`: walk the crate source and enforce the determinism contract
+/// (R1 hash-order escape, R2 ambient nondeterminism, R3 unsafe hygiene,
+/// R4 pool-closure accumulation). Exit 2 with `file:line` diagnostics on
+/// any violation or stale suppression.
+fn run_lint(rest: &[String]) -> Result<(), String> {
+    let args = cli::parse(rest, &lint_spec())?;
+    apply_log_level(&args)?;
+    if args.flag("self-test") {
+        lrsched::lint::self_test()?;
+        println!("lint self-test: every rule fixture trips exactly as pinned");
+        return Ok(());
+    }
+    let root = match args.get("root") {
+        Some(r) if !r.is_empty() => std::path::PathBuf::from(r),
+        // Resolve the crate source whether invoked from the repo root or
+        // from inside rust/.
+        _ if std::path::Path::new("rust/src").is_dir() => std::path::PathBuf::from("rust/src"),
+        _ => std::path::PathBuf::from("src"),
+    };
+    let report = lrsched::lint::run(&root)?;
+    if args.flag("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        for d in &report.diagnostics {
+            println!("{d}");
+        }
+    }
+    if !report.clean() {
+        return Err(format!(
+            "lint: {} violation(s) across {} files",
+            report.diagnostics.len(),
+            report.files
+        ));
+    }
+    if !args.flag("json") {
+        println!("lint: {} files clean under the determinism contract (R1-R4)", report.files);
+    }
+    Ok(())
 }
 
 /// `gen-trace`: deterministically generate a synthetic Alibaba-dialect
@@ -467,6 +527,18 @@ fn run() -> Result<(), String> {
                         &gen_trace_spec()
                     )
                 ),
+                Some("lint") => println!(
+                    "{}",
+                    cli::usage(
+                        "lint",
+                        "Check the crate source against the determinism contract.\n\
+                         R1 hash-order escape, R2 ambient nondeterminism, R3 unsafe\n\
+                         hygiene, R4 pool-closure accumulation; suppressions use\n\
+                         `// det: sorted(<key>)` / `// det: allow(R<n>): <reason>`\n\
+                         (see docs/ARCHITECTURE.md, \"Determinism contract\").",
+                        &lint_spec()
+                    )
+                ),
                 Some(c @ ("fig3" | "fig4" | "fig5" | "table1")) => {
                     println!("{}", cli::usage(c, "Regenerate a paper experiment", &common_spec()))
                 }
@@ -476,6 +548,7 @@ fn run() -> Result<(), String> {
         }
         "scale" => run_scale(&rest),
         "gen-trace" => run_gen_trace(&rest),
+        "lint" => run_lint(&rest),
         "simulate" => {
             let args = cli::parse(&rest, &simulate_spec())?;
             apply_log_level(&args)?;

@@ -52,7 +52,7 @@ use crate::sched::rl::{RlParams, RlScheduler};
 use crate::sched::scoring::ScoringBackend;
 use crate::sched::{CycleContext, FrameworkConfig, LrScheduler, Unschedulable, WeightParams};
 use crate::util::units::{Bandwidth, Bytes};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -396,6 +396,8 @@ impl Window {
 static CACHE_PATH_SEQ: AtomicU64 = AtomicU64::new(0);
 
 fn unique_cache_path() -> String {
+    // det: allow(R2): cache *location* only — simulation state never
+    // depends on the path, and the per-process sequence keeps it unique.
     std::env::temp_dir()
         .join(format!(
             "lrsched-sim-cache-{}-{}.json",
@@ -447,8 +449,9 @@ pub struct Simulation {
     /// Is a WatcherTick event currently scheduled?
     watcher_armed: bool,
     /// Terminal state per submitted pod (the accounting source of truth;
-    /// a crash reverts a pod to `Lost` until it re-resolves).
-    outcomes: HashMap<PodId, PodOutcome>,
+    /// a crash reverts a pod to `Lost` until it re-resolves). Ordered so
+    /// the report tally iterates in pod order, not hash order.
+    outcomes: BTreeMap<PodId, PodOutcome>,
     /// Termination-timer epoch per pod: bumped when a crash loses the
     /// instance, so a stale `PodTermination` cannot kill the rebound one.
     epochs: HashMap<PodId, u64>,
@@ -529,7 +532,7 @@ impl Simulation {
             arrivals_t0: 0.0,
             chain_arrivals: false,
             watcher_armed: false,
-            outcomes: HashMap::new(),
+            outcomes: BTreeMap::new(),
             epochs: HashMap::new(),
             retry_grace: std::collections::HashSet::new(),
             chained: std::collections::HashSet::new(),
@@ -1003,6 +1006,7 @@ impl Simulation {
         // and zero-byte cache hits don't touch the registry, matching
         // the bind-during-outage exemption in `try_schedule`.
         let mut stalled: Vec<(PodId, NodeId, f64)> = Vec::new();
+        // det: sorted(pid)
         for (pid, p) in self.pending.iter_mut() {
             if p.plan.bytes > Bytes::ZERO && p.plan.finish > t {
                 p.plan.finish += extra;

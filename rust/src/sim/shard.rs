@@ -159,9 +159,12 @@ impl LanePool {
                     // Jobs arrive back-to-back on the scheduling hot path
                     // (several fan-outs per cycle); spin briefly before
                     // blocking so a futex sleep/wake does not dominate
-                    // small jobs.
+                    // small jobs. Miri interprets every spin iteration, so
+                    // keep the budget tiny there (behavior is identical —
+                    // the loop just falls through to the blocking recv).
+                    let spin = if cfg!(miri) { 50 } else { 20_000 };
                     let mut msg = None;
-                    for _ in 0..20_000 {
+                    for _ in 0..spin {
                         match rx.try_recv() {
                             Ok(m) => {
                                 msg = Some(m);
@@ -577,6 +580,30 @@ mod tests {
                 panic!("boom");
             }
         });
+    }
+
+    #[test]
+    fn stale_jobs_are_dropped_without_touching_the_closure() {
+        // The TaskRef lifetime-erasure contract, exercised end to end:
+        // with a single chunk the calling thread usually claims it before
+        // any worker wakes, so the workers' copies of the `Job` go stale
+        // the moment `run` returns — and each later wake-up must discard
+        // them through the failed `i < n_chunks` claim without ever
+        // dereferencing the (now dangling) task pointer. Every round
+        // re-borrows a fresh stack local, so a stale dereference reads
+        // freed memory; this test runs under Miri in CI, which flags
+        // exactly that as UB.
+        let pool = LanePool::new(4);
+        let rounds = if cfg!(miri) { 25 } else { 2_000 };
+        for round in 0..rounds {
+            let local = vec![round; 8];
+            let hits = AtomicUsize::new(0);
+            pool.run(1, &|i| {
+                assert_eq!(local[i], round);
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(hits.load(Ordering::SeqCst), 1, "chunk ran exactly once");
+        }
     }
 
     #[test]

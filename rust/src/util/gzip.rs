@@ -923,8 +923,11 @@ mod tests {
     #[test]
     fn compress_stored_roundtrips() {
         // Empty, small, and > 64 KiB (multiple stored blocks; the payload
-        // also exercises window wrap-around on the decode side).
-        let big: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        // also exercises window wrap-around on the decode side). Under
+        // Miri the payload shrinks — still past the 65 535-byte stored
+        // block cap, so the multi-block path runs, just interpretably so.
+        let big_len: u32 = if cfg!(miri) { 70_000 } else { 200_000 };
+        let big: Vec<u8> = (0..big_len).map(|i| (i % 251) as u8).collect();
         for data in [&b""[..], &b"x"[..], &b"hello stored world"[..], &big[..]] {
             let gz = compress_stored(data);
             assert_eq!(decompress(&gz).unwrap(), data, "len {}", data.len());

@@ -39,6 +39,8 @@ pub fn level() -> Level {
 
 /// Initialize from `LRSCHED_LOG` if set (error|warn|info|debug|trace).
 pub fn init_from_env() {
+    // det: allow(R2): stderr verbosity gate only — simulation state never
+    // reads the level, so output bytes stay identical at any setting.
     if let Ok(v) = std::env::var("LRSCHED_LOG") {
         if let Some(l) = parse_level(&v) {
             set_level(l);

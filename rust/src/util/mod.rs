@@ -1,10 +1,12 @@
 //! Foundation substrates built in-repo because the vendored dependency set
 //! has no serde/rand/clap/flate2 equivalents: JSON, RNG, statistics,
-//! logging, gzip/DEFLATE decompression, and resource-unit newtypes.
+//! logging, gzip/DEFLATE decompression, a Rust token lexer (for the
+//! `lint` determinism checker), and resource-unit newtypes.
 
 pub mod gzip;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod rustlex;
 pub mod stats;
 pub mod units;

@@ -1,0 +1,371 @@
+//! Token-level Rust lexer for the in-repo determinism lint (`detlint`).
+//!
+//! Hand-written in the house style of the gzip inflate: no dependencies,
+//! a single forward scan, and exhaustive unit tests. It is *not* a full
+//! Rust parser — it produces a flat token stream that is exactly
+//! comment-, string-, lifetime-, and raw-string-aware, which is all the
+//! lint rules in [`crate::lint`] need: they pattern-match short token
+//! sequences (`Instant :: now`, `ident . keys (`) and must never be
+//! fooled by the same characters appearing inside a comment or a string
+//! literal.
+//!
+//! Fidelity notes (deliberate simplifications, safe for linting):
+//! - Multi-char operators are joined by maximal munch over a fixed table
+//!   (`::`, `+=`, `..=`, …); everything else is a single-char punct.
+//! - `'a'` vs `'a` is disambiguated by the closing quote; escaped char
+//!   literals (`'\n'`, `'\u{1F600}'`) are consumed as one token.
+//! - Line numbers are 1-based and survive `\`-newline string
+//!   continuations, multi-line raw strings, and nested block comments.
+
+/// Token classification — just enough structure for rule matching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`for`, `unsafe`, `HashMap`, …).
+    Ident,
+    /// Numeric literal (integer or float, any base, with suffixes).
+    Num,
+    /// String literal: `"…"`, `r"…"`, `r#"…"#`, `b"…"`, and combinations.
+    Str,
+    /// Character or byte literal: `'x'`, `'\n'`, `b'x'`.
+    Char,
+    /// Lifetime: `'a`, `'static`, `'_`.
+    Lifetime,
+    /// Punctuation / operator (joined for the fixed multi-char table).
+    Punct,
+    /// Line (`//…`) or block (`/*…*/`, nested) comment, docs included.
+    Comment,
+}
+
+/// One lexed token with its 1-based starting line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// What kind of token this is.
+    pub kind: TokKind,
+    /// The exact source text of the token.
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: u32,
+}
+
+impl Tok {
+    /// Is this a code token (anything but a comment)?
+    pub fn is_code(&self) -> bool {
+        self.kind != TokKind::Comment
+    }
+}
+
+/// Multi-char operators, longest first (maximal munch).
+const JOINED: &[&str] = &[
+    "<<=", ">>=", "..=", "...", "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=",
+    "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>", "..",
+];
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into a flat token stream. Never fails: unterminated strings
+/// or comments extend to end-of-input (the lint runs on work-in-progress
+/// files, so hard errors would be worse than a best-effort tail).
+pub fn lex(src: &str) -> Vec<Tok> {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    let text = |lo: usize, hi: usize| -> String { cs[lo..hi.min(n)].iter().collect() };
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc `///` and `//!`).
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let lo = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Comment, text: text(lo, i), line });
+            continue;
+        }
+        // Block comment, nested.
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let (lo, start_line) = (i, line);
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Comment, text: text(lo, i), line: start_line });
+            continue;
+        }
+        // Raw strings: r"…", r#"…"#, br"…", rb"…" (any hash depth).
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            if (cs[j] == 'b' && j + 1 < n && cs[j + 1] == 'r')
+                || (cs[j] == 'r' && j + 1 < n && cs[j + 1] == 'b')
+            {
+                j += 2;
+            } else if cs[j] == 'r' {
+                j += 1;
+            } else {
+                j = usize::MAX; // plain `b` handled by the string branch below
+            }
+            if j != usize::MAX {
+                let mut hashes = 0usize;
+                while j < n && cs[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && cs[j] == '"' {
+                    let (lo, start_line) = (i, line);
+                    j += 1;
+                    // Scan for `"` followed by `hashes` hashes.
+                    'scan: while j < n {
+                        if cs[j] == '\n' {
+                            line += 1;
+                        } else if cs[j] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && j + 1 + k < n && cs[j + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                j += 1 + hashes;
+                                break 'scan;
+                            }
+                        }
+                        j += 1;
+                    }
+                    toks.push(Tok { kind: TokKind::Str, text: text(lo, j), line: start_line });
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        // Strings, including `b"…"`.
+        if c == '"' || (c == 'b' && i + 1 < n && cs[i + 1] == '"') {
+            let (lo, start_line) = (i, line);
+            i += if c == 'b' { 2 } else { 1 };
+            while i < n {
+                if cs[i] == '\\' {
+                    // `\<newline>` line continuations still advance lines.
+                    if i + 1 < n && cs[i + 1] == '\n' {
+                        line += 1;
+                    }
+                    i += 2;
+                } else if cs[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Str, text: text(lo, i), line: start_line });
+            continue;
+        }
+        // Lifetime vs char literal (and byte chars b'x').
+        if c == '\'' || (c == 'b' && i + 1 < n && cs[i + 1] == '\'') {
+            let lo = i;
+            if c == 'b' {
+                i += 1; // consume the `b`; fall through as a char literal
+            }
+            // Escaped char: '\…' up to the closing quote (skip the
+            // escaped character itself so `'\''` closes correctly).
+            if i + 1 < n && cs[i + 1] == '\\' {
+                let mut j = i + 3;
+                while j < n && cs[j] != '\'' {
+                    j += 1;
+                }
+                toks.push(Tok { kind: TokKind::Char, text: text(lo, j + 1), line });
+                i = (j + 1).min(n);
+                continue;
+            }
+            // 'x' is a char iff a closing quote follows one character.
+            if cs[lo] == '\'' && i + 2 < n && cs[i + 2] == '\'' && cs[i + 1] != '\'' {
+                toks.push(Tok { kind: TokKind::Char, text: text(lo, i + 3), line });
+                i += 3;
+                continue;
+            }
+            if cs[lo] == 'b' && i + 2 < n && cs[i + 2] == '\'' {
+                toks.push(Tok { kind: TokKind::Char, text: text(lo, i + 3), line });
+                i += 3;
+                continue;
+            }
+            // Otherwise a lifetime: '<ident>.
+            let mut j = i + 1;
+            while j < n && is_ident_cont(cs[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Lifetime, text: text(lo, j), line });
+            i = j;
+            continue;
+        }
+        // Numbers (coarse: consumes suffixes; float part via `.digit`).
+        if c.is_ascii_digit() {
+            let lo = i;
+            while i < n && (cs[i].is_alphanumeric() || cs[i] == '_') {
+                i += 1;
+            }
+            if i + 1 < n && cs[i] == '.' && cs[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n
+                    && (cs[i].is_alphanumeric()
+                        || cs[i] == '_'
+                        || ((cs[i] == '+' || cs[i] == '-')
+                            && (cs[i - 1] == 'e' || cs[i - 1] == 'E')))
+                {
+                    i += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Num, text: text(lo, i), line });
+            continue;
+        }
+        // Identifiers and keywords.
+        if is_ident_start(c) {
+            let lo = i;
+            while i < n && is_ident_cont(cs[i]) {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: text(lo, i), line });
+            continue;
+        }
+        // Joined punctuation, maximal munch.
+        let mut matched = false;
+        for op in JOINED {
+            let oc: Vec<char> = op.chars().collect();
+            if i + oc.len() <= n && cs[i..i + oc.len()] == oc[..] {
+                toks.push(Tok { kind: TokKind::Punct, text: (*op).to_string(), line });
+                i += oc.len();
+                matched = true;
+                break;
+            }
+        }
+        if !matched {
+            toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+            i += 1;
+        }
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_keywords_and_puncts() {
+        let t = kinds("for x in &map { x += 1; }");
+        let texts: Vec<&str> = t.iter().map(|(_, s)| s.as_str()).collect();
+        assert_eq!(texts, vec!["for", "x", "in", "&", "map", "{", "x", "+=", "1", ";", "}"]);
+        assert_eq!(t[0].0, TokKind::Ident);
+        assert_eq!(t[7].0, TokKind::Punct); // joined `+=`
+    }
+
+    #[test]
+    fn comments_swallow_code_lookalikes() {
+        let t = lex("a // Instant::now() in a comment\nb /* unsafe { /* nested */ } */ c");
+        let code: Vec<&str> =
+            t.iter().filter(|t| t.is_code()).map(|t| t.text.as_str()).collect();
+        assert_eq!(code, vec!["a", "b", "c"]);
+        // The block comment keeps its full (nested) text.
+        assert!(t.iter().any(|t| t.kind == TokKind::Comment && t.text.contains("nested")));
+    }
+
+    #[test]
+    fn strings_hide_tokens_and_count_lines() {
+        let t = lex("let s = \"for x in map.keys() {\"; done");
+        let code: Vec<&str> =
+            t.iter().filter(|t| t.is_code()).map(|t| t.text.as_str()).collect();
+        assert_eq!(code, vec!["let", "s", "=", "\"for x in map.keys() {\"", ";", "done"]);
+        // `\`-newline continuation: `done` is on line 2 of the source.
+        let t = lex("let s = \"a\\\nb\"; done");
+        let done = t.iter().find(|t| t.text == "done").unwrap();
+        assert_eq!(done.line, 2);
+        // A real newline inside a string also advances the count.
+        let t = lex("let s = \"a\nb\"; done");
+        assert_eq!(t.iter().find(|t| t.text == "done").unwrap().line, 2);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let t = lex(r###"let s = r#"quote " inside"#; x"###);
+        let s = t.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert!(s.text.contains("quote"));
+        assert!(t.iter().any(|t| t.text == "x"));
+        let t = lex("let b = br\"bytes\"; y");
+        assert!(t.iter().any(|t| t.kind == TokKind::Str && t.text == "br\"bytes\""));
+        assert!(t.iter().any(|t| t.text == "y"));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let t = kinds("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(t.iter().any(|(k, s)| *k == TokKind::Lifetime && s == "'a"));
+        assert!(t.iter().any(|(k, s)| *k == TokKind::Char && s == "'x'"));
+        let t = kinds(r"let c = '\n'; let u = '\u{1F600}'; let b = b'x';");
+        assert_eq!(t.iter().filter(|(k, _)| *k == TokKind::Char).count(), 3);
+    }
+
+    #[test]
+    fn numbers_including_floats() {
+        let t = kinds("1.5e-9 + 0x_ff - 42u64 .. 1.0");
+        let nums: Vec<&str> = t
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Num)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1.5e-9", "0x_ff", "42u64", "1.0"]);
+        // `1..2` stays an integer, `..`, integer — not a float.
+        let t = kinds("1..2");
+        let texts: Vec<&str> = t.iter().map(|(_, s)| s.as_str()).collect();
+        assert_eq!(texts, vec!["1", "..", "2"]);
+    }
+
+    #[test]
+    fn line_numbers_survive_everything() {
+        let src = "line1\n/* a\nb\nc */\nline5 \"x\ny\" line6_on_6\n'z' last";
+        let t = lex(src);
+        assert_eq!(t.iter().find(|t| t.text == "line1").unwrap().line, 1);
+        assert_eq!(t.iter().find(|t| t.text == "line5").unwrap().line, 5);
+        assert_eq!(t.iter().find(|t| t.text == "line6_on_6").unwrap().line, 6);
+        assert_eq!(t.iter().find(|t| t.text == "last").unwrap().line, 7);
+    }
+
+    #[test]
+    fn unterminated_input_does_not_panic() {
+        lex("let s = \"open");
+        lex("/* open");
+        lex("r#\"open");
+        lex("'");
+    }
+}
