@@ -8,6 +8,11 @@
 //! - the same trace under **churn** (node joins/drains, a 5% crash rate,
 //!   and a registry outage window) — volatility bookkeeping must keep
 //!   event throughput within 1.5× of the static-cluster baseline;
+//! - the same trace with the **peer swarm** on (125 MB/s LAN, seeder
+//!   cap 4 — the `scale --p2p` defaults) vs the pure-registry run:
+//!   deployment cost (WAN GB) and total startup seconds side by side;
+//!   the swarm must cut WAN bytes strictly, stay accounting-balanced,
+//!   and never exceed the seeder cap;
 //! - trace import + replay throughput on a synthetic Alibaba CSV;
 //! - **streaming ingest**: a generated `.csv.gz` (1M rows under
 //!   `LRSCHED_BENCH_FULL=1`, 100k otherwise) through the constant-memory
@@ -153,7 +158,7 @@ fn main() {
     // --- event-engine scale run ------------------------------------------
     let full = std::env::var("LRSCHED_BENCH_FULL").is_ok();
     let pods = if full { 100_000 } else { 20_000 };
-    let engine_run = |churn: Option<ChurnConfig>| {
+    let engine_run = |churn: Option<ChurnConfig>, p2p: Option<(f64, usize)>| {
         let registry = Registry::with_corpus();
         let trace = WorkloadGen::new(
             &registry,
@@ -172,6 +177,10 @@ fn main() {
         cfg.retry_limit = 10;
         cfg.snapshot_every = 1000;
         cfg.churn = churn;
+        if let Some((lan_mbps, cap)) = p2p {
+            cfg.p2p_lan_mbps = Some(lan_mbps);
+            cfg.p2p_seeder_cap = cap;
+        }
         let mut sim = Simulation::new(common::scale_nodes(64), registry, cfg)
             .with_backend(Box::new(NativeScorer));
         let t0 = Instant::now();
@@ -182,7 +191,7 @@ fn main() {
         (report, wall, virtual_secs, events)
     };
 
-    let (report, wall, virtual_secs, events) = engine_run(None);
+    let (report, wall, virtual_secs, events) = engine_run(None, None);
     println!(
         "event engine: {pods} pods / 64 nodes in {wall:.2}s wall ({:.0} pods/s), \
          virtual {virtual_secs:.0}s, events {events}",
@@ -224,7 +233,7 @@ fn main() {
         outage_secs: 60.0,
         ..Default::default()
     };
-    let (creport, cwall, cvirtual, cevents) = engine_run(Some(churn.clone()));
+    let (creport, cwall, cvirtual, cevents) = engine_run(Some(churn.clone()), None);
     println!(
         "churn engine: {pods} pods / 64 nodes in {cwall:.2}s wall ({:.0} pods/s), \
          virtual {cvirtual:.0}s, events {cevents}",
@@ -251,6 +260,47 @@ fn main() {
     modes.push(Mode {
         name: "engine_churn",
         value: cevents as f64 / cwall.max(1e-9),
+        unit: "events/sec",
+        higher_is_better: true,
+    });
+
+    // --- p2p swarm mode: peer-sourced pulls vs pure registry -------------
+    // Same trace as the pure-registry engine run above, with the swarm on
+    // at the `scale --p2p` defaults. Deployment cost = WAN bytes billed to
+    // the registry; startup = total download seconds across all pods.
+    let (lan_mbps, seeder_cap) = (125.0, 4usize);
+    let (preport, pwall, pvirtual, pevents) = engine_run(None, Some((lan_mbps, seeder_cap)));
+    println!(
+        "p2p engine: {pods} pods / 64 nodes in {pwall:.2}s wall ({:.0} pods/s), \
+         virtual {pvirtual:.0}s, events {pevents}",
+        pods as f64 / pwall.max(1e-9),
+    );
+    println!(
+        "  wan={:.1} GB vs registry-only {:.1} GB, p2p={:.1} GB, peak_uploads={} (cap {}), \
+         startup {:.0}s total vs registry-only {:.0}s",
+        preport.total_download().as_gb(),
+        report.total_download().as_gb(),
+        preport.total_p2p().as_gb(),
+        preport.peak_peer_uploads,
+        seeder_cap,
+        preport.total_download_secs(),
+        report.total_download_secs(),
+    );
+    assert!(preport.accounting_balanced(), "p2p run dropped events");
+    assert!(
+        preport.total_download() < report.total_download(),
+        "the swarm must cut WAN bytes vs pure registry: {:.1} vs {:.1} GB",
+        preport.total_download().as_gb(),
+        report.total_download().as_gb()
+    );
+    assert!(
+        preport.peak_peer_uploads <= seeder_cap,
+        "seeder served {} concurrent uploads (cap {seeder_cap})",
+        preport.peak_peer_uploads
+    );
+    modes.push(Mode {
+        name: "engine_p2p",
+        value: pevents as f64 / pwall.max(1e-9),
         unit: "events/sec",
         higher_is_better: true,
     });

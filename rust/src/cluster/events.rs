@@ -37,6 +37,17 @@ pub enum EventKind {
         /// Number of new layers.
         layers: usize,
     },
+    /// Part of a pull is served by peer edge nodes over the LAN instead
+    /// of the WAN registry link (P2P layer sharing; emitted right after
+    /// `PullStarted` when any layer found a seeder).
+    PeerFetch {
+        /// Downloading node.
+        node: NodeId,
+        /// Bytes fetched from peers.
+        bytes: Bytes,
+        /// Number of peer-served layers.
+        layers: usize,
+    },
     /// All layers present; container starting.
     PullFinished {
         /// Pulling node.

@@ -17,6 +17,8 @@ pub fn report_to_json(rep: &SimReport) -> Json {
         .set("failed_pulls", Json::Int(rep.failed_pulls as i64))
         .set("retries", Json::Int(rep.retries as i64))
         .set("total_download_mb", Json::Num(rep.total_download().as_mb()))
+        .set("total_p2p_mb", Json::Num(rep.total_p2p().as_mb()))
+        .set("peak_peer_uploads", Json::Int(rep.peak_peer_uploads as i64))
         .set("total_download_secs", Json::Num(rep.total_download_secs()))
         .set("final_std", Json::Num(rep.final_std()))
         .set("omega1_used", Json::Int(rep.omega1_used as i64))

@@ -137,6 +137,23 @@ fn scale_spec() -> Vec<OptSpec> {
         },
         OptSpec { name: "no-gc", help: "disable kubelet image GC", default: None },
         OptSpec {
+            name: "p2p",
+            help: "enable peer-swarm layer sharing: missing layers cached on \
+                   Ready peers transfer over the LAN instead of the registry WAN",
+            default: None,
+        },
+        OptSpec {
+            name: "p2p-lan",
+            help: "peer layer-transfer LAN bandwidth MB/s (with --p2p)",
+            default: Some("125"),
+        },
+        OptSpec {
+            name: "p2p-seeder-cap",
+            help: "max concurrent uploads one seeder serves; saturated layers \
+                   fall back to the registry (with --p2p)",
+            default: Some("4"),
+        },
+        OptSpec {
             name: "churn",
             help: "enable cluster volatility: node joins/drains/crashes + a registry \
                    outage window (e.g. `lrsched scale --churn`)",
@@ -374,6 +391,10 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
     cfg.snapshot_every = args.usize_or("snapshot-every", 1000)?.max(1);
     cfg.wake_on_capacity = !args.flag("no-wake");
     cfg.shards = args.usize_or("shards", 1)?.max(1);
+    if args.flag("p2p") {
+        cfg.p2p_lan_mbps = Some(args.f64_or("p2p-lan", 125.0)?);
+        cfg.p2p_seeder_cap = args.usize_or("p2p-seeder-cap", 4)?.max(1);
+    }
     if args.flag("churn") {
         // Spread volatility across the arrival window of the whole trace.
         cfg.churn = Some(lrsched::sim::ChurnConfig {
@@ -389,6 +410,7 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
     }
 
     let churn_enabled = cfg.churn.is_some();
+    let p2p_cap = cfg.p2p_lan_mbps.map(|_| cfg.p2p_seeder_cap);
     let shards = cfg.shards;
     let mut sim = Simulation::new(common::scale_nodes(nodes), registry, cfg);
     let backend = args.str_or("backend", "native");
@@ -466,6 +488,14 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
         report.final_std(),
         report.snapshots.len()
     );
+    if let Some(cap) = p2p_cap {
+        println!(
+            "p2p: peer total={:.1} GB peak seeder uploads={} (cap {})",
+            report.total_p2p().as_gb(),
+            report.peak_peer_uploads,
+            cap
+        );
+    }
     if !report.accounting_balanced() {
         return Err(format!(
             "dropped events: completed {} + failed {} + unschedulable {} + lost {} != submitted {}",
@@ -513,6 +543,8 @@ fn run() -> Result<(), String> {
                            joins/drains/crashes and a registry outage window)\n\
                            lrsched scale --churn --shards 4   (sharded per-node\n\
                            event lanes; report byte-identical to --shards 1)\n\
+                           lrsched scale --p2p   (peer-swarm layer sharing:\n\
+                           LAN fetches from peers instead of WAN re-pulls)\n\
                            lrsched scale --trace tests/fixtures/alibaba_mini.csv \\\n\
                              --trace-format alibaba --trace-speedup 10\n\
                          See docs/SCALE.md for the full flag reference.",

@@ -1,10 +1,21 @@
-//! Link model between the registry and each edge node.
+//! Topology ledger: per-edge bandwidth bookings between the registry and
+//! each edge node, and between nodes on the LAN.
 //!
 //! The paper's model is T = C_c^n(t) / b_n (§III-B): each node has its own
-//! downlink; pulls on one node serialize (Docker pulls a layer stream), and
-//! pulls on different nodes proceed independently. An optional registry
+//! WAN downlink; pulls on one node serialize (Docker pulls a layer stream),
+//! and pulls on different nodes proceed independently. An optional registry
 //! uplink cap models a constrained private registry shared by all nodes —
 //! an ablation the paper's future work hints at.
+//!
+//! The LAN side models EdgePier-style peer layer sharing: each node also
+//! has a LAN port on which *its own* peer fetches serialize (the downloader
+//! edge), and each seeder holds one upload slot per concurrent peer
+//! transfer it serves (the seeder edge). The engine caps concurrent upload
+//! slots per seeder (`SimConfig::p2p_seeder_cap`); planners consult
+//! [`LinkModel::active_uploads`] before picking a seeder. LAN bookings are
+//! deliberately *not* shifted by [`LinkModel::stall_in_flight`] — peer
+//! transfers never touch the registry, so registry outages don't stall
+//! them.
 
 use crate::util::units::{Bandwidth, Bytes};
 
@@ -23,6 +34,19 @@ pub struct LinkModel {
     /// ([`LinkModel::release_node`]) instead of leaving a phantom booking
     /// later pulls queue behind.
     uplink_bookings: Vec<(usize, f64)>,
+    /// Time each node's LAN port becomes free (downloader side of a peer
+    /// fetch; independent of the WAN downlink above).
+    lan_free_at: Vec<f64>,
+    /// Per-transfer upload-slot bookings, `(seeder, downloader, finish)`
+    /// — the seeder side of a peer fetch. Concurrency-counted (a seeder
+    /// serves up to the engine's cap at once), not serialized. Tracking
+    /// the downloader lets a crash on *either* end release the slot
+    /// ([`LinkModel::release_node`]) instead of pinning the seeder's
+    /// capacity under a dead transfer.
+    peer_uploads: Vec<(usize, usize, f64)>,
+    /// Highest concurrent upload count ever observed on any seeder —
+    /// the test hook for the "never serves more than the cap" criterion.
+    peak_uploads: usize,
 }
 
 impl LinkModel {
@@ -34,6 +58,9 @@ impl LinkModel {
             node_free_at: vec![0.0; n],
             registry_uplink: None,
             uplink_bookings: Vec::new(),
+            lan_free_at: vec![0.0; n],
+            peer_uploads: Vec::new(),
+            peak_uploads: 0,
         }
     }
 
@@ -56,6 +83,7 @@ impl LinkModel {
     pub fn add_node(&mut self, bw: Bandwidth) {
         self.node_bw.push(bw);
         self.node_free_at.push(0.0);
+        self.lan_free_at.push(0.0);
     }
 
     /// Number of registered node links.
@@ -92,13 +120,20 @@ impl LinkModel {
         }
     }
 
-    /// A node crashed: drop its uplink bookings, so its dead in-flight
-    /// transfer stops occupying the shared registry uplink. Transfers
-    /// already planned keep their (pessimistic) times — history is not
-    /// rewritten — but every pull planned after the crash sees the uplink
-    /// back at baseline.
+    /// A node crashed: drop every piece of its link state — uplink
+    /// bookings, the WAN downlink busy time, the LAN port busy time, and
+    /// any upload slots it was seeding — so nothing dead keeps occupying
+    /// shared capacity and a future *rejoin* of the slot can't inherit
+    /// phantom busy time. Transfers already planned keep their
+    /// (pessimistic) times — history is not rewritten — but every pull
+    /// planned after the crash sees full capacity. Clearing the free-at
+    /// clocks to 0 also makes [`LinkModel::stall_in_flight`] a no-op for
+    /// the dead node (nothing is "busy past now" anymore).
     pub fn release_node(&mut self, node: usize) {
         self.uplink_bookings.retain(|&(n, _)| n != node);
+        self.node_free_at[node] = 0.0;
+        self.lan_free_at[node] = 0.0;
+        self.peer_uploads.retain(|&(s, d, _)| s != node && d != node);
     }
 
     /// Schedule a transfer of `bytes` to `node` starting no earlier than
@@ -120,6 +155,48 @@ impl LinkModel {
             self.uplink_bookings.push((node, finish));
         }
         (start, finish)
+    }
+
+    // --- LAN edges (peer swarm) ------------------------------------------
+
+    /// Upload slots `seeder` is serving at `now` (bookings still in
+    /// flight). Planners compare this against the per-seeder cap before
+    /// selecting the node as a source.
+    pub fn active_uploads(&self, seeder: usize, now: f64) -> usize {
+        self.peer_uploads.iter().filter(|&&(s, _, f)| s == seeder && f > now).count()
+    }
+
+    /// Schedule a peer layer transfer of `bytes` from `seeder` to
+    /// `downloader` over the LAN at `lan_bw`, starting no earlier than
+    /// `now`; returns `(start, finish)` and books both edges: the
+    /// downloader's LAN port serializes (like the WAN downlink), and the
+    /// seeder gains one upload slot until `finish`.
+    pub fn schedule_peer_transfer(
+        &mut self,
+        downloader: usize,
+        seeder: usize,
+        bytes: Bytes,
+        lan_bw: Bandwidth,
+        now: f64,
+    ) -> (f64, f64) {
+        let start = now.max(self.lan_free_at[downloader]);
+        let finish = start + lan_bw.transfer_secs(bytes);
+        self.lan_free_at[downloader] = finish;
+        // Prune settled slots so the ledger stays O(in-flight).
+        self.peer_uploads.retain(|&(_, _, f)| f > now);
+        self.peer_uploads.push((seeder, downloader, finish));
+        let active = self.active_uploads(seeder, now);
+        if active > self.peak_uploads {
+            self.peak_uploads = active;
+        }
+        (start, finish)
+    }
+
+    /// Highest concurrent upload count ever booked on any single seeder —
+    /// with a per-seeder cap of C this must never exceed C (asserted by
+    /// the swarm test suite).
+    pub fn peak_peer_uploads(&self) -> usize {
+        self.peak_uploads
     }
 }
 
@@ -211,5 +288,87 @@ mod tests {
         assert_eq!(s0, 15.0);
         let (s1, _) = lm.schedule_transfer(1, Bytes::from_mb(10.0), 2.0);
         assert_eq!(s1, 2.0);
+    }
+
+    #[test]
+    fn release_clears_node_link_state() {
+        // Regression: release_node used to drop only the uplink bookings,
+        // leaving node_free_at busy forever — a rejoin of the slot would
+        // inherit phantom busy time, and stall_in_flight kept shifting the
+        // dead node's booking on every outage.
+        let mut lm = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 2]);
+        lm.schedule_transfer(0, Bytes::from_mb(1000.0), 0.0); // busy until 100
+        lm.release_node(0);
+        // A stall after the crash must not resurrect the dead booking.
+        lm.stall_in_flight(5.0, 30.0);
+        let (s0, f0) = lm.schedule_transfer(0, Bytes::from_mb(10.0), 6.0);
+        assert_eq!((s0, f0), (6.0, 7.0), "link at baseline after the crash");
+    }
+
+    #[test]
+    fn release_clears_lan_and_upload_slots() {
+        let lan = Bandwidth::from_mbps(100.0);
+        let mut lm = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 3]);
+        // Node 0 downloads from seeder 1; node 1 also seeds node 2.
+        lm.schedule_peer_transfer(0, 1, Bytes::from_mb(1000.0), lan, 0.0);
+        lm.schedule_peer_transfer(2, 1, Bytes::from_mb(1000.0), lan, 0.0);
+        assert_eq!(lm.active_uploads(1, 1.0), 2);
+        lm.release_node(1);
+        assert_eq!(lm.active_uploads(1, 1.0), 0, "crashed seeder frees its slots");
+        lm.release_node(0);
+        let (s, _) = lm.schedule_peer_transfer(0, 2, Bytes::from_mb(10.0), lan, 1.0);
+        assert_eq!(s, 1.0, "crashed downloader's LAN port is free again");
+        // That fetch booked a slot on seeder 2; the downloader crashing
+        // mid-transfer must release it (no phantom slot pinning the
+        // seeder's capacity until the dead transfer's original finish).
+        assert_eq!(lm.active_uploads(2, 1.05), 1);
+        lm.release_node(0);
+        assert_eq!(lm.active_uploads(2, 1.05), 0, "dead downloader frees the slot");
+    }
+
+    #[test]
+    fn peer_transfers_serialize_on_downloader_lan_port() {
+        let lan = Bandwidth::from_mbps(100.0);
+        let mut lm = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 3]);
+        let (s0, f0) = lm.schedule_peer_transfer(0, 1, Bytes::from_mb(200.0), lan, 0.0);
+        assert_eq!((s0, f0), (0.0, 2.0));
+        // Same downloader, different seeder: queues on the LAN port.
+        let (s1, f1) = lm.schedule_peer_transfer(0, 2, Bytes::from_mb(100.0), lan, 1.0);
+        assert_eq!((s1, f1), (2.0, 3.0));
+        // Different downloader: independent port.
+        let (s2, _) = lm.schedule_peer_transfer(2, 1, Bytes::from_mb(100.0), lan, 1.0);
+        assert_eq!(s2, 1.0);
+    }
+
+    #[test]
+    fn peer_lan_is_independent_of_wan_downlink() {
+        let lan = Bandwidth::from_mbps(100.0);
+        let mut lm = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 2]);
+        lm.schedule_transfer(0, Bytes::from_mb(100.0), 0.0); // WAN busy until 10
+        let (s, _) = lm.schedule_peer_transfer(0, 1, Bytes::from_mb(100.0), lan, 0.0);
+        assert_eq!(s, 0.0, "LAN port does not queue behind the WAN downlink");
+    }
+
+    #[test]
+    fn upload_slots_count_concurrency_and_expire() {
+        let lan = Bandwidth::from_mbps(100.0);
+        let mut lm = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 4]);
+        lm.schedule_peer_transfer(0, 3, Bytes::from_mb(100.0), lan, 0.0); // until 1
+        lm.schedule_peer_transfer(1, 3, Bytes::from_mb(200.0), lan, 0.0); // until 2
+        lm.schedule_peer_transfer(2, 3, Bytes::from_mb(300.0), lan, 0.0); // until 3
+        assert_eq!(lm.active_uploads(3, 0.5), 3);
+        assert_eq!(lm.active_uploads(3, 1.5), 2, "finished uploads free their slot");
+        assert_eq!(lm.active_uploads(3, 3.5), 0);
+        assert_eq!(lm.peak_peer_uploads(), 3);
+    }
+
+    #[test]
+    fn outage_stall_leaves_lan_bookings_alone() {
+        let lan = Bandwidth::from_mbps(100.0);
+        let mut lm = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 2]);
+        lm.schedule_peer_transfer(0, 1, Bytes::from_mb(500.0), lan, 0.0); // until 5
+        lm.stall_in_flight(1.0, 30.0);
+        let (s, _) = lm.schedule_peer_transfer(0, 1, Bytes::from_mb(100.0), lan, 1.0);
+        assert_eq!(s, 5.0, "peer transfers are exempt from registry outages");
     }
 }

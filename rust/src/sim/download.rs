@@ -25,15 +25,24 @@ pub struct PullPlan {
 }
 
 /// Tracks in-flight layer pulls per node.
+///
+/// WAN (registry) and LAN (peer-fetch) arrivals live in separate maps:
+/// both dedupe same-node follower pulls ([`PullManager::split_wait`]), but
+/// only the WAN map shifts on a registry outage — peer fetches never touch
+/// the registry and must stay exempt from its stalls.
 #[derive(Debug, Clone, Default)]
 pub struct PullManager {
     in_flight: Vec<HashMap<LayerId, f64>>,
+    peer_in_flight: Vec<HashMap<LayerId, f64>>,
 }
 
 impl PullManager {
     /// A manager for an `n_nodes` fleet with nothing in flight.
     pub fn new(n_nodes: usize) -> PullManager {
-        PullManager { in_flight: vec![HashMap::new(); n_nodes] }
+        PullManager {
+            in_flight: vec![HashMap::new(); n_nodes],
+            peer_in_flight: vec![HashMap::new(); n_nodes],
+        }
     }
 
     /// Plan a pull of `missing` layers to `node` starting at `now`.
@@ -67,9 +76,39 @@ impl PullManager {
         PullPlan { bytes, start, finish, ready_at: finish.max(wait_on_inflight), new_layers }
     }
 
+    /// Split `missing` into layers with no in-flight arrival to `node`
+    /// (from either the registry or a peer) and the latest finish among
+    /// the in-flight ones — the wait a follower pull must observe. The
+    /// p2p path calls this *before* planning sources so an in-flight peer
+    /// fetch is never double-booked as a second transfer.
+    pub fn split_wait(&self, node: usize, missing: &[LayerId], now: f64) -> (Vec<LayerId>, f64) {
+        let mut fresh = Vec::new();
+        let mut wait = now;
+        for &l in missing {
+            if let Some(&finish) = self.in_flight[node].get(&l) {
+                wait = wait.max(finish);
+            } else if let Some(&finish) = self.peer_in_flight[node].get(&l) {
+                wait = wait.max(finish);
+            } else {
+                fresh.push(l);
+            }
+        }
+        (fresh, wait)
+    }
+
+    /// Record a booked peer fetch of `layer` to `node` landing at
+    /// `finish`, so same-node followers wait on it instead of
+    /// re-downloading.
+    pub fn note_peer(&mut self, node: usize, layer: LayerId, finish: f64) {
+        self.peer_in_flight[node].insert(layer, finish);
+    }
+
     /// Drop bookkeeping for pulls completed by `now`.
     pub fn gc(&mut self, now: f64) {
         for m in &mut self.in_flight {
+            m.retain(|_, &mut finish| finish > now);
+        }
+        for m in &mut self.peer_in_flight {
             m.retain(|_, &mut finish| finish > now);
         }
     }
@@ -77,12 +116,15 @@ impl PullManager {
     /// Register a node that joined the cluster mid-run (no pulls yet).
     pub fn add_node(&mut self) {
         self.in_flight.push(HashMap::new());
+        self.peer_in_flight.push(HashMap::new());
     }
 
-    /// Forget a crashed node's in-flight pulls: the layers never arrive,
-    /// and no future pod can wait on them (the node is down).
+    /// Forget a crashed node's in-flight pulls — WAN and peer alike: the
+    /// layers never arrive, and no future pod can wait on them (the node
+    /// is down).
     pub fn clear_node(&mut self, node: usize) {
         self.in_flight[node].clear();
+        self.peer_in_flight[node].clear();
     }
 
     /// Delay the in-flight finishes of specific `layers` on `node` — used
@@ -97,8 +139,10 @@ impl PullManager {
         }
     }
 
-    /// Registry outage: push every in-flight layer's finish time past the
-    /// stall so peers waiting on those layers observe the delayed arrival.
+    /// Registry outage: push every in-flight *WAN* layer's finish time
+    /// past the stall so followers waiting on those layers observe the
+    /// delayed arrival. Peer fetches (`peer_in_flight`) are untouched —
+    /// LAN transfers don't depend on the registry.
     pub fn stall_in_flight(&mut self, now: f64, extra: f64) {
         for m in &mut self.in_flight {
             for finish in m.values_mut() {
@@ -109,9 +153,9 @@ impl PullManager {
         }
     }
 
-    /// Layers currently in flight to `node`.
+    /// Layers currently in flight to `node` (WAN and peer).
     pub fn in_flight_count(&self, node: usize) -> usize {
-        self.in_flight[node].len()
+        self.in_flight[node].len() + self.peer_in_flight[node].len()
     }
 }
 
@@ -217,6 +261,38 @@ mod tests {
         pulls.gc(0.5);
         assert_eq!(pulls.in_flight_count(0), 1);
         pulls.gc(1.0);
+        assert_eq!(pulls.in_flight_count(0), 0);
+    }
+
+    #[test]
+    fn split_wait_dedupes_against_both_maps() {
+        let (interner, mut links, mut pulls) = setup();
+        pulls.plan(0, &[LayerId(0)], &interner, &mut links, 0.0); // WAN, finish 1.0
+        pulls.note_peer(0, LayerId(1), 4.0); // peer fetch landing at 4.0
+        let (fresh, wait) =
+            pulls.split_wait(0, &[LayerId(0), LayerId(1), LayerId(2)], 0.5);
+        assert_eq!(fresh, vec![LayerId(2)], "in-flight layers are not fresh");
+        assert_eq!(wait, 4.0, "waits on the latest in-flight arrival");
+        // Nothing in flight → everything fresh, wait = now.
+        let (fresh, wait) = pulls.split_wait(1, &[LayerId(0)], 2.0);
+        assert_eq!((fresh.len(), wait), (1, 2.0));
+    }
+
+    #[test]
+    fn peer_entries_survive_outage_stalls() {
+        let (interner, mut links, mut pulls) = setup();
+        pulls.plan(0, &[LayerId(0)], &interner, &mut links, 0.0); // WAN, finish 1.0
+        pulls.note_peer(0, LayerId(1), 2.0);
+        pulls.stall_in_flight(0.5, 10.0);
+        let (_, wan_wait) = pulls.split_wait(0, &[LayerId(0)], 0.5);
+        assert_eq!(wan_wait, 11.0, "WAN arrival shifts by the stall");
+        let (_, peer_wait) = pulls.split_wait(0, &[LayerId(1)], 0.5);
+        assert_eq!(peer_wait, 2.0, "peer arrival is exempt from the stall");
+        // GC and crash-clear cover the peer map too.
+        pulls.gc(3.0);
+        assert_eq!(pulls.split_wait(0, &[LayerId(1)], 3.0).0.len(), 1);
+        pulls.note_peer(0, LayerId(1), 9.0);
+        pulls.clear_node(0);
         assert_eq!(pulls.in_flight_count(0), 0);
     }
 }

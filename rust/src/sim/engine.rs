@@ -41,6 +41,7 @@ use super::download::PullManager;
 use super::events::{EventPayload, EventQueue};
 use super::kubelet::{self, ImageLayerStore, PendingStart};
 use super::metrics::{self, ClusterSnapshot, PodRecord};
+use super::p2p::{Swarm, SwarmIndex};
 use super::shard::{lane_bounds, lane_of, GcParams, LaneEffects, LaneItem, LaneOutcome, LanePool, LaneTask, Shard};
 use super::workload::{ChurnAction, ChurnConfig, ChurnModel};
 use crate::cluster::{
@@ -114,6 +115,9 @@ pub struct SimConfig {
     /// layers cached on peer edge nodes transfer at this LAN bandwidth
     /// instead of being re-downloaded from the registry.
     pub p2p_lan_mbps: Option<f64>,
+    /// Max concurrent uploads one peer seeder serves (P2P mode): a layer
+    /// whose every Ready holder is at the cap falls back to the registry.
+    pub p2p_seeder_cap: usize,
     /// Registry watcher poll interval (paper §V-1 default: 10 s).
     pub watcher_interval_secs: f64,
     /// Retries granted to an unschedulable pod after its first failed
@@ -158,6 +162,7 @@ impl Default for SimConfig {
             gc_high_pct: 0.85,
             gc_low_pct: 0.70,
             p2p_lan_mbps: None,
+            p2p_seeder_cap: 4,
             watcher_interval_secs: crate::registry::watcher::DEFAULT_POLL_SECS,
             retry_limit: 3,
             retry_backoff_secs: 5.0,
@@ -213,6 +218,9 @@ pub struct SimReport {
     pub resubmitted: u64,
     /// In-flight pulls stalled by registry outage windows.
     pub pulls_stalled: u64,
+    /// Most concurrent uploads any single peer seeder served (0 without
+    /// P2P sharing; never exceeds `SimConfig::p2p_seeder_cap`).
+    pub peak_peer_uploads: usize,
     /// Parked pods released early by capacity-driven wake-ups
     /// (`QueueingHint` analog) instead of their back-off timer.
     pub wakeups: u64,
@@ -236,6 +244,12 @@ impl SimReport {
     /// Total WAN bytes pulled across all placements (the paper's cost).
     pub fn total_download(&self) -> Bytes {
         self.records.iter().map(|r| r.download).sum()
+    }
+
+    /// Total bytes fetched from peer edge nodes over the LAN (0 without
+    /// P2P sharing).
+    pub fn total_p2p(&self) -> Bytes {
+        self.records.iter().map(|r| r.p2p).sum()
     }
 
     /// Sum of per-placement download times (Table I's time column).
@@ -278,8 +292,9 @@ impl SimReport {
         let _ = writeln!(
             s,
             "scheduler={} submitted={} started={} failed_pulls={} unschedulable={} \
-             lost_to_crash={} retries={} resubmitted={} pulls_stalled={} wakeups={} \
-             nodes_joined={} nodes_drained={} nodes_crashed={} omega1={} omega2={} omega_mid={}",
+             lost_to_crash={} retries={} resubmitted={} pulls_stalled={} peak_uploads={} \
+             wakeups={} nodes_joined={} nodes_drained={} nodes_crashed={} omega1={} omega2={} \
+             omega_mid={}",
             self.scheduler,
             self.submitted,
             self.started,
@@ -289,6 +304,7 @@ impl SimReport {
             self.retries,
             self.resubmitted,
             self.pulls_stalled,
+            self.peak_peer_uploads,
             self.wakeups,
             self.nodes_joined,
             self.nodes_drained,
@@ -465,6 +481,12 @@ pub struct Simulation {
     chained: std::collections::HashSet<PodId>,
     /// Registry unreachable until this virtual time (0 = reachable).
     outage_until: f64,
+    /// Layer → holders index for peer-swarm planning. Maintained at every
+    /// inventory-mutation site (marking is cheap and bounded) but synced
+    /// only when a P2P plan needs it. Coordinator-only state: the sharded
+    /// lanes never touch it, so source plans — and therefore reports —
+    /// are byte-identical at every shard count.
+    swarm: SwarmIndex,
     /// Worker pool for sharded event lanes and scheduling fan-outs
     /// (None when `SimConfig::shards <= 1`).
     pool: Option<LanePool>,
@@ -537,6 +559,7 @@ impl Simulation {
             retry_grace: std::collections::HashSet::new(),
             chained: std::collections::HashSet::new(),
             outage_until: 0.0,
+            swarm: SwarmIndex::new(),
             pool: if cfg.shards > 1 { Some(LanePool::new(cfg.shards)) } else { None },
             events: EventLog::new(),
             records: Vec::new(),
@@ -566,6 +589,12 @@ impl Simulation {
     /// Total events ever queued (observability for the scale harness).
     pub fn events_queued(&self) -> u64 {
         self.queue.pushed_total
+    }
+
+    /// Most concurrent uploads any single peer seeder has served so far
+    /// (0 without P2P sharing) — the seeder-cap observability hook.
+    pub fn peak_peer_uploads(&self) -> usize {
+        self.links.peak_peer_uploads()
     }
 
     // --- event loop -------------------------------------------------------
@@ -899,6 +928,15 @@ impl Simulation {
                 Some(e) => e,
                 None => continue, // slot routed but produced no effects
             };
+            // A lane that installed or evicted layers changed its node's
+            // inventory; the coordinator owns the swarm index, so the
+            // dirty mark happens here, at the merge barrier — before any
+            // later scheduling cycle can plan against stale holders.
+            if eff.remember.is_some()
+                || eff.log.iter().any(|(_, _, k)| matches!(k, EventKind::Evicted { .. }))
+            {
+                self.swarm.mark_dirty(eff.node);
+            }
             for (at, pod, kind) in eff.log {
                 self.events.record(at, pod, kind);
             }
@@ -946,6 +984,7 @@ impl Simulation {
         self.state.add_node(node);
         self.links.add_node(bw);
         self.pulls.add_node();
+        self.swarm.mark_dirty(id);
         self.nodes_joined += 1;
         self.events.record(t, NODE_SCOPE, EventKind::NodeJoined { node: id });
         if self.wake_parked() > 0 {
@@ -969,6 +1008,8 @@ impl Simulation {
         // instead of queuing behind a phantom transfer.
         self.links.release_node(node.0 as usize);
         self.pulls.clear_node(node.0 as usize);
+        // The wiped layer cache must vanish from the swarm's holder lists.
+        self.swarm.mark_dirty(node);
         self.events
             .record(t, NODE_SCOPE, EventKind::NodeCrashed { node, lost_pods: lost.len() });
         for pid in lost {
@@ -1166,6 +1207,14 @@ impl Simulation {
         );
         self.state.bind(pid, decision.node).expect("bind after schedule");
 
+        if self.cfg.p2p_lan_mbps.is_some() {
+            self.swarm.sync(&self.state);
+        }
+        let swarm_view = self.cfg.p2p_lan_mbps.map(|mbps| Swarm {
+            index: &self.swarm,
+            lan_bw: Bandwidth::from_mbps(mbps),
+            seeder_cap: self.cfg.p2p_seeder_cap,
+        });
         let mut pending = kubelet::begin_pull(
             &self.state,
             &mut self.pulls,
@@ -1175,7 +1224,7 @@ impl Simulation {
             decision.node,
             &pod.image,
             &required,
-            self.cfg.p2p_lan_mbps.map(Bandwidth::from_mbps),
+            swarm_view.as_ref(),
         );
         self.events.record(
             now,
@@ -1186,6 +1235,17 @@ impl Simulation {
                 layers: pending.plan.new_layers.len(),
             },
         );
+        if pending.p2p_bytes > Bytes::ZERO {
+            self.events.record(
+                now,
+                pid,
+                EventKind::PeerFetch {
+                    node: decision.node,
+                    bytes: pending.p2p_bytes,
+                    layers: pending.p2p_layers,
+                },
+            );
+        }
         if self.outage_until > now && pending.plan.bytes > Bytes::ZERO {
             // WAN transfer begun during a registry outage: it cannot move
             // bytes until the window closes. Shift the transfer finish,
@@ -1271,6 +1331,7 @@ impl Simulation {
             let target = Bytes((disk * (1.0 - self.cfg.gc_low_pct)) as u64);
             let freed = kubelet::gc_images(&mut self.state, &self.images, node, target);
             if freed > Bytes::ZERO {
+                self.swarm.mark_dirty(node);
                 self.events.record(
                     now,
                     NODE_SCOPE, // node-level event
@@ -1294,6 +1355,7 @@ impl Simulation {
             if need > self.state.node(p.node).disk_free() {
                 let freed = kubelet::gc_images(&mut self.state, &self.images, p.node, need);
                 if freed > Bytes::ZERO {
+                    self.swarm.mark_dirty(p.node);
                     self.events.record(
                         now,
                         p.pod,
@@ -1304,6 +1366,8 @@ impl Simulation {
         }
         match kubelet::complete_pull(&mut self.state, &p) {
             Ok(_) => {
+                // The node now advertises the freshly installed layers.
+                self.swarm.mark_dirty(p.node);
                 self.images.remember(&p.image, &p.layers);
                 self.outcomes.insert(p.pod, PodOutcome::Started);
                 self.events.record(
@@ -1480,6 +1544,7 @@ impl Simulation {
             retries: self.retries,
             resubmitted: self.resubmitted,
             pulls_stalled: self.pulls_stalled,
+            peak_peer_uploads: self.links.peak_peer_uploads(),
             wakeups: self.wakeups,
             nodes_joined: self.nodes_joined,
             nodes_drained: self.nodes_drained,

@@ -7,6 +7,7 @@
 
 use super::download::{PullManager, PullPlan};
 use super::bandwidth::LinkModel;
+use super::p2p::Swarm;
 use crate::cluster::{ClusterState, Node, NodeId, Pod, PodId};
 use crate::registry::{ImageRef, LayerInterner, LayerSet};
 use crate::util::units::Bytes;
@@ -29,6 +30,8 @@ pub struct PendingStart {
     pub wan_bytes: Bytes,
     /// Bytes fetched from peer edge nodes over the LAN (§VII extension).
     pub p2p_bytes: Bytes,
+    /// Number of layers served by peer seeders.
+    pub p2p_layers: usize,
 }
 
 /// Image → layer-set store so GC can resolve an image's layers without
@@ -69,9 +72,16 @@ impl ImageLayerStore {
     }
 }
 
-/// Begin the pull for a freshly bound pod. With `p2p_lan` set, layers
+/// Begin the pull for a freshly bound pod. With a [`Swarm`] view, layers
 /// cached on peer edge nodes transfer over the LAN instead of the WAN
-/// registry link (cloud-edge collaborative layer sharing, paper §VII).
+/// registry link (cloud-edge collaborative layer sharing, paper §VII):
+/// the missing set is first deduped against every in-flight arrival on
+/// this node (WAN *and* peer), the fresh layers are split between peer
+/// seeders and the registry by [`super::p2p::plan_sources`] (which books
+/// the LAN edges), and only the registry share goes through
+/// [`PullManager::plan`] — a pull whose layers are all peer-served books
+/// **nothing** on the WAN link, leaving `plan.bytes` zero, which is what
+/// exempts it from registry-outage stalls in the engine.
 pub fn begin_pull(
     state: &ClusterState,
     pulls: &mut PullManager,
@@ -81,35 +91,45 @@ pub fn begin_pull(
     node: NodeId,
     image: &ImageRef,
     required: &LayerSet,
-    p2p_lan: Option<crate::util::units::Bandwidth>,
+    p2p: Option<&Swarm<'_>>,
 ) -> PendingStart {
     let missing = state.missing_layers(node, required);
-    let (wan_layers, wan_bytes, p2p_bytes, lan_secs) = match p2p_lan {
+    let (pending_plan, wan_bytes, p2p_bytes, p2p_layers) = match p2p {
         None => {
             let bytes: Bytes = missing.iter().map(|&l| state.interner.size(l)).sum();
-            (missing, bytes, Bytes::ZERO, 0.0)
+            let plan = pulls.plan(node.0 as usize, &missing, &state.interner, links, now);
+            (plan, bytes, Bytes::ZERO, 0)
         }
-        Some(lan_bw) => {
-            let sources = super::p2p::plan_sources(state, node, &missing);
-            let lan_secs = lan_bw.transfer_secs(sources.peer_bytes);
-            (
-                sources.registry_layers,
-                sources.registry_bytes,
-                sources.peer_bytes,
-                lan_secs,
-            )
+        Some(swarm) => {
+            let (fresh, wait) = pulls.split_wait(node.0 as usize, &missing, now);
+            let sources = super::p2p::plan_sources(
+                state,
+                swarm.index,
+                links,
+                swarm.lan_bw,
+                swarm.seeder_cap,
+                node,
+                &fresh,
+                now,
+            );
+            let mut plan =
+                pulls.plan(node.0 as usize, &sources.registry_layers, &state.interner, links, now);
+            for &(l, _, finish) in &sources.peer_layers {
+                pulls.note_peer(node.0 as usize, l, finish);
+            }
+            plan.ready_at = plan.ready_at.max(wait).max(sources.peer_finish);
+            (plan, sources.registry_bytes, sources.peer_bytes, sources.peer_layers.len())
         }
     };
-    let mut plan = pulls.plan(node.0 as usize, &wan_layers, &state.interner, links, now);
-    plan.ready_at = plan.ready_at.max(now + lan_secs);
     PendingStart {
         pod,
         node,
         image: image.clone(),
         layers: required.clone(),
-        plan,
+        plan: pending_plan,
         wan_bytes,
         p2p_bytes,
+        p2p_layers,
     }
 }
 
@@ -279,6 +299,58 @@ mod tests {
         );
         assert_eq!(pending.plan.bytes, Bytes::ZERO);
         assert_eq!(pending.plan.ready_at, 5.0);
+    }
+
+    #[test]
+    fn peer_only_pull_never_touches_the_wan_link() {
+        // Regression: the old p2p path always called PullManager::plan on
+        // the (possibly empty) WAN share and never booked the LAN at all.
+        use crate::sim::p2p::{Swarm, SwarmIndex};
+        let mut state = ClusterState::new();
+        for i in 0..2 {
+            state.add_node(Node::new(
+                NodeId(i),
+                &format!("n{i}"),
+                Resources::cores_gb(4.0, 4.0),
+                Bytes::from_gb(30.0),
+                Bandwidth::from_mbps(10.0),
+            ));
+        }
+        let corpus = hub::corpus();
+        let redis = corpus.iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
+        let (_, layers) = state.intern_image(redis);
+        state.install_image(NodeId(1), &redis.image_ref(), &layers).unwrap();
+        let mut index = SwarmIndex::new();
+        index.mark_dirty(NodeId(1));
+        index.sync(&state);
+        let swarm = Swarm { index: &index, lan_bw: Bandwidth::from_mbps(100.0), seeder_cap: 4 };
+        let mut pulls = PullManager::new(2);
+        let mut links = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 2]);
+
+        let pending = begin_pull(
+            &state, &mut pulls, &mut links, 0.0,
+            PodId(0), NodeId(0), &redis.image_ref(), &layers, Some(&swarm),
+        );
+        assert_eq!(pending.wan_bytes, Bytes::ZERO);
+        assert_eq!(pending.p2p_bytes, redis.total_size);
+        assert_eq!(pending.plan.bytes, Bytes::ZERO, "no WAN transfer planned");
+        assert!(pending.plan.new_layers.is_empty());
+        // 64.4 MB over the 100 MB/s LAN → ready 6.44s / 10 = 0.644s.
+        assert!((pending.plan.ready_at - redis.total_size.as_mb() / 100.0).abs() < 1e-6);
+        // The WAN downlink was never booked: a registry pull starts now.
+        let (s, _) = links.schedule_transfer(0, Bytes::from_mb(10.0), 0.1);
+        assert_eq!(s, 0.1, "WAN link untouched by the peer-only pull");
+        assert_eq!(links.peak_peer_uploads(), redis.layers.len().min(4));
+
+        // A same-node follower waits on the in-flight peer fetches instead
+        // of re-planning them.
+        let follow = begin_pull(
+            &state, &mut pulls, &mut links, 0.1,
+            PodId(1), NodeId(0), &redis.image_ref(), &layers, Some(&swarm),
+        );
+        assert_eq!(follow.p2p_bytes, Bytes::ZERO);
+        assert_eq!(follow.wan_bytes, Bytes::ZERO);
+        assert_eq!(follow.plan.ready_at, pending.plan.ready_at);
     }
 
     #[test]

@@ -28,6 +28,7 @@ pub use download::PullManager;
 pub use engine::{SchedulerChoice, SimConfig, SimReport, Simulation};
 pub use events::{EventPayload, EventQueue};
 pub use metrics::{ClusterSnapshot, PodRecord};
+pub use p2p::{plan_sources, SourcePlan, Swarm, SwarmIndex};
 pub use shard::LanePool;
 pub use trace::{
     ErrorMode, Trace, TraceError, TraceErrorSlot, TraceEvent, TraceFormat, TraceOptions,

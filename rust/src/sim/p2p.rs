@@ -1,16 +1,130 @@
-//! Cloud-edge collaborative layer sharing — the paper's §VII future-work
-//! item: "explore cloud-edge collaborative layer sharing to reduce
-//! container startup time by transferring layers from other edge nodes."
+//! Peer-swarm layer sharing — the paper's §VII future-work item: "explore
+//! cloud-edge collaborative layer sharing to reduce container startup time
+//! by transferring layers from other edge nodes" (EdgePier-style).
 //!
 //! When a missing layer is already cached on a *peer* edge node, the
 //! kubelet fetches it over the LAN (typically 10–100× faster than the WAN
 //! link to the registry) instead of pulling from the registry. The WAN
 //! download cost — the paper's headline metric — drops to only the layers
-//! no edge node holds.
+//! no edge node holds, and a registry outage becomes survivable whenever
+//! the swarm holds every missing layer.
+//!
+//! Two pieces:
+//! - [`SwarmIndex`]: a deterministic layer → holders index, kept in sync
+//!   with node layer inventories through the `layers_version` counter each
+//!   node bumps on membership change. The engine marks nodes dirty when
+//!   their inventory may have changed (pull completed, GC evicted, crash,
+//!   join) and [`SwarmIndex::sync`] re-diffs only those — replacing the
+//!   old O(nodes × missing) full-cluster scan per pull.
+//! - [`plan_sources`]: partitions a pull's missing layers between the
+//!   registry (WAN) and peer seeders (LAN), picking for each layer the
+//!   least-loaded Ready holder under the per-seeder concurrent-upload cap
+//!   (ties by node id), and *booking* every peer fetch on both the
+//!   downloader's and the seeder's LAN edges as it selects — so later
+//!   layers in the same plan see the load they themselves created, and a
+//!   saturated swarm falls back to the registry naturally.
 
 use crate::cluster::{ClusterState, NodeId};
-use crate::registry::LayerId;
-use crate::util::units::Bytes;
+use crate::registry::{LayerId, LayerSet};
+use crate::sim::bandwidth::LinkModel;
+use crate::util::units::{Bandwidth, Bytes};
+
+/// Deterministic layer → holders index over the fleet's layer caches.
+///
+/// Holder lists are kept sorted by node id, and per-node snapshots are
+/// diffed lazily against `Node::layers_version` — syncing is cheap when
+/// nothing changed and O(changed layers) when something did. All state is
+/// coordinator-side: the sharded engine's lanes never touch it, so plans
+/// (and therefore reports) are byte-identical at every shard count.
+#[derive(Debug, Clone, Default)]
+pub struct SwarmIndex {
+    /// Holder node ids per dense layer id, each list sorted ascending.
+    holders: Vec<Vec<NodeId>>,
+    /// Per-node `(layers_version, layer snapshot)` as of the last sync.
+    indexed: Vec<(u64, LayerSet)>,
+    /// Nodes whose inventory may have drifted since their last sync.
+    dirty: Vec<u32>,
+}
+
+impl SwarmIndex {
+    /// An empty index (every node cold).
+    pub fn new() -> SwarmIndex {
+        SwarmIndex::default()
+    }
+
+    /// Record that `node`'s layer inventory may have changed (pull
+    /// completed, GC evicted, crash wiped, node joined). Cheap and
+    /// idempotent; the actual diff happens in [`SwarmIndex::sync`].
+    pub fn mark_dirty(&mut self, node: NodeId) {
+        if !self.dirty.contains(&node.0) {
+            self.dirty.push(node.0);
+        }
+    }
+
+    /// Re-index every dirty node whose `layers_version` actually moved,
+    /// diffing its snapshot against the live layer set. Sorted-position
+    /// insertion keeps each holder list ordered by node id regardless of
+    /// the order dirty nodes are processed in — the index is a pure
+    /// function of the fleet's inventories.
+    pub fn sync(&mut self, state: &ClusterState) {
+        // Nodes added since the last sync (joins, or the initial
+        // population on the first call) are implicitly dirty.
+        for i in self.indexed.len()..state.node_count() {
+            self.mark_dirty(NodeId(i as u32));
+        }
+        if self.dirty.is_empty() {
+            return;
+        }
+        let dirty = std::mem::take(&mut self.dirty);
+        for id in dirty {
+            let idx = id as usize;
+            if idx >= state.node_count() {
+                continue;
+            }
+            if self.indexed.len() <= idx {
+                self.indexed.resize(idx + 1, (0, LayerSet::new()));
+            }
+            let node = state.node(NodeId(id));
+            let (seen_version, snapshot) = &self.indexed[idx];
+            if *seen_version == node.layers_version && snapshot.len() == node.layers.len() {
+                continue;
+            }
+            for l in node.layers.difference_ids(snapshot) {
+                let slot = l.0 as usize;
+                if self.holders.len() <= slot {
+                    self.holders.resize(slot + 1, Vec::new());
+                }
+                let list = &mut self.holders[slot];
+                if let Err(pos) = list.binary_search(&NodeId(id)) {
+                    list.insert(pos, NodeId(id));
+                }
+            }
+            for l in snapshot.difference_ids(&node.layers) {
+                if let Some(list) = self.holders.get_mut(l.0 as usize) {
+                    list.retain(|&n| n != NodeId(id));
+                }
+            }
+            self.indexed[idx] = (node.layers_version, node.layers.clone());
+        }
+    }
+
+    /// Nodes currently advertising `layer`, ascending by node id.
+    pub fn holders(&self, layer: LayerId) -> &[NodeId] {
+        self.holders.get(layer.0 as usize).map(Vec::as_slice).unwrap_or(&[])
+    }
+}
+
+/// Borrowed view of the peer swarm the kubelet consults when planning a
+/// pull — the holder index plus the engine's LAN/cap knobs.
+#[derive(Debug)]
+pub struct Swarm<'a> {
+    /// The layer → holders index (synced by the engine before planning).
+    pub index: &'a SwarmIndex,
+    /// LAN bandwidth peer fetches transfer at.
+    pub lan_bw: Bandwidth,
+    /// Max concurrent uploads a single seeder serves.
+    pub seeder_cap: usize,
+}
 
 /// Partition of a node's missing layers by best available source.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -19,31 +133,67 @@ pub struct SourcePlan {
     pub registry_layers: Vec<LayerId>,
     /// Total bytes of the registry-served layers.
     pub registry_bytes: Bytes,
-    /// Layers available from a peer edge node (LAN), with the peer chosen.
-    pub peer_layers: Vec<(LayerId, NodeId)>,
+    /// Peer-served layers: `(layer, seeder, LAN transfer finish time)`.
+    pub peer_layers: Vec<(LayerId, NodeId, f64)>,
     /// Total bytes served by peers.
     pub peer_bytes: Bytes,
+    /// Time the last peer fetch lands (0 when nothing is peer-served).
+    pub peer_finish: f64,
 }
 
-/// Decide, per missing layer, whether a peer edge node can serve it.
-/// Peers are chosen by lowest node id among holders (deterministic); a
-/// smarter policy (least-loaded peer) plugs in here.
-pub fn plan_sources(state: &ClusterState, target: NodeId, missing: &[LayerId]) -> SourcePlan {
+/// Decide, per missing layer, whether a peer edge node can serve it, and
+/// book every chosen peer fetch on the topology ledger.
+///
+/// Seeder choice per layer: among the layer's holders, skip the target
+/// itself, non-Ready nodes (a Draining node is about to leave — it must
+/// never be the sole source), and seeders already at `seeder_cap`
+/// concurrent uploads; of the rest take the least-loaded, ties broken by
+/// lowest node id (holder lists are id-sorted and the comparison is
+/// strict). Layers with no eligible seeder fall back to the registry.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_sources(
+    state: &ClusterState,
+    index: &SwarmIndex,
+    links: &mut LinkModel,
+    lan_bw: Bandwidth,
+    seeder_cap: usize,
+    target: NodeId,
+    missing: &[LayerId],
+    now: f64,
+) -> SourcePlan {
     let mut plan = SourcePlan::default();
     for &l in missing {
-        let peer = state
-            .nodes()
-            .iter()
-            .find(|n| n.id != target && n.layers.contains(l))
-            .map(|n| n.id);
-        match peer {
-            Some(p) => {
-                plan.peer_layers.push((l, p));
-                plan.peer_bytes += state.interner.size(l);
+        let mut best: Option<(usize, NodeId)> = None;
+        for &holder in index.holders(l) {
+            if holder == target || !state.node(holder).is_schedulable() {
+                continue;
+            }
+            let load = links.active_uploads(holder.0 as usize, now);
+            if load >= seeder_cap {
+                continue;
+            }
+            // Strict `<` + id-ascending iteration = ties go to the lowest id.
+            if best.map_or(true, |(b, _)| load < b) {
+                best = Some((load, holder));
+            }
+        }
+        let size = state.interner.size(l);
+        match best {
+            Some((_, seeder)) => {
+                let (_, finish) = links.schedule_peer_transfer(
+                    target.0 as usize,
+                    seeder.0 as usize,
+                    size,
+                    lan_bw,
+                    now,
+                );
+                plan.peer_layers.push((l, seeder, finish));
+                plan.peer_bytes += size;
+                plan.peer_finish = plan.peer_finish.max(finish);
             }
             None => {
                 plan.registry_layers.push(l);
-                plan.registry_bytes += state.interner.size(l);
+                plan.registry_bytes += size;
             }
         }
     }
@@ -57,9 +207,15 @@ mod tests {
     use crate::registry::hub;
     use crate::util::units::Bandwidth;
 
-    fn cluster() -> ClusterState {
+    const CAP: usize = 4;
+
+    fn lan() -> Bandwidth {
+        Bandwidth::from_mbps(100.0)
+    }
+
+    fn cluster(n: u32) -> ClusterState {
         let mut s = ClusterState::new();
-        for i in 0..3 {
+        for i in 0..n {
             s.add_node(Node::new(
                 NodeId(i),
                 &format!("n{i}"),
@@ -71,48 +227,200 @@ mod tests {
         s
     }
 
+    fn synced_index(state: &ClusterState) -> SwarmIndex {
+        let mut ix = SwarmIndex::new();
+        for n in state.nodes() {
+            ix.mark_dirty(n.id);
+        }
+        ix.sync(state);
+        ix
+    }
+
+    fn plan(
+        state: &ClusterState,
+        ix: &SwarmIndex,
+        links: &mut LinkModel,
+        target: NodeId,
+        missing: &[LayerId],
+    ) -> SourcePlan {
+        plan_sources(state, ix, links, lan(), CAP, target, missing, 0.0)
+    }
+
+    fn links_for(state: &ClusterState) -> LinkModel {
+        LinkModel::new(vec![Bandwidth::from_mbps(10.0); state.node_count()])
+    }
+
     #[test]
     fn peers_serve_cached_layers() {
-        let mut state = cluster();
+        let mut state = cluster(3);
         let corpus = hub::corpus();
         let wp = corpus.iter().find(|m| m.name == "wordpress" && m.tag == "6.4").unwrap();
         let httpd = corpus.iter().find(|m| m.name == "httpd").unwrap();
         let (_, wp_layers) = state.intern_image(wp);
         let (_, httpd_layers) = state.intern_image(httpd);
         state.install_image(NodeId(1), &wp.image_ref(), &wp_layers).unwrap();
+        let ix = synced_index(&state);
+        let mut links = links_for(&state);
 
         // httpd on node 0: debian+ca-certs+apache come from node 1 (LAN),
         // the unique httpd layer from the registry.
         let missing = state.missing_layers(NodeId(0), &httpd_layers);
-        let plan = plan_sources(&state, NodeId(0), &missing);
-        assert_eq!(plan.peer_layers.len(), 3);
-        assert!(plan.peer_layers.iter().all(|(_, p)| *p == NodeId(1)));
-        assert_eq!(plan.registry_layers.len(), 1);
-        assert_eq!(plan.registry_bytes + plan.peer_bytes, httpd.total_size);
+        let p = plan(&state, &ix, &mut links, NodeId(0), &missing);
+        assert_eq!(p.peer_layers.len(), 3);
+        assert!(p.peer_layers.iter().all(|&(_, s, _)| s == NodeId(1)));
+        assert_eq!(p.registry_layers.len(), 1);
+        assert_eq!(p.registry_bytes + p.peer_bytes, httpd.total_size);
+        assert!(p.peer_finish > 0.0, "peer fetches land at a booked time");
     }
 
     #[test]
     fn cold_cluster_is_all_registry() {
-        let mut state = cluster();
+        let mut state = cluster(3);
         let corpus = hub::corpus();
         let redis = corpus.iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
         let (ids, layers) = state.intern_image(redis);
-        let plan = plan_sources(&state, NodeId(0), &ids);
-        assert!(plan.peer_layers.is_empty());
-        assert_eq!(plan.registry_bytes, layers.total_bytes(&state.interner));
+        let ix = synced_index(&state);
+        let mut links = links_for(&state);
+        let p = plan(&state, &ix, &mut links, NodeId(0), &ids);
+        assert!(p.peer_layers.is_empty());
+        assert_eq!(p.registry_bytes, layers.total_bytes(&state.interner));
+        assert_eq!(p.peer_finish, 0.0);
     }
 
     #[test]
     fn own_cache_never_counts_as_peer() {
-        let mut state = cluster();
+        let mut state = cluster(3);
         let corpus = hub::corpus();
         let redis = corpus.iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
         let (ids, layers) = state.intern_image(redis);
         state.install_image(NodeId(0), &redis.image_ref(), &layers).unwrap();
-        // Nothing missing on node 0 anyway; force the question for node 1.
-        let plan = plan_sources(&state, NodeId(1), &ids);
-        assert_eq!(plan.peer_layers.len(), ids.len());
-        // And node 0 asking about its own layers: missing is empty.
+        let ix = synced_index(&state);
+        let mut links = links_for(&state);
+        // Node 1 pulls: node 0 serves everything.
+        let p = plan(&state, &ix, &mut links, NodeId(1), &ids);
+        assert_eq!(p.peer_layers.len(), ids.len());
+        // Node 0 asking about its own layers: missing is empty anyway, and
+        // the planner never offers a node its own cache.
         assert!(state.missing_layers(NodeId(0), &layers).is_empty());
+        let own = plan(&state, &ix, &mut links, NodeId(0), &ids);
+        assert!(own.peer_layers.is_empty(), "sole holder is the target itself");
+    }
+
+    #[test]
+    fn draining_node_is_never_a_source() {
+        // Regression: plan_sources used to ignore NodeStatus entirely, so
+        // a Draining (cordoned, about to leave) node could be chosen as
+        // the sole source of a layer.
+        let mut state = cluster(3);
+        let corpus = hub::corpus();
+        let redis = corpus.iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
+        let (ids, layers) = state.intern_image(redis);
+        state.install_image(NodeId(1), &redis.image_ref(), &layers).unwrap();
+        state.drain_node(NodeId(1));
+        let ix = synced_index(&state);
+        let mut links = links_for(&state);
+        let p = plan(&state, &ix, &mut links, NodeId(0), &ids);
+        assert!(p.peer_layers.is_empty(), "draining holder must be skipped");
+        assert_eq!(p.registry_layers.len(), ids.len());
+    }
+
+    #[test]
+    fn least_loaded_ready_holder_wins_ties_by_id() {
+        let mut state = cluster(4);
+        let corpus = hub::corpus();
+        let redis = corpus.iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
+        let (ids, layers) = state.intern_image(redis);
+        for n in [1, 2, 3] {
+            state.install_image(NodeId(n), &redis.image_ref(), &layers).unwrap();
+        }
+        let ix = synced_index(&state);
+        let mut links = links_for(&state);
+        // Equal load everywhere: lowest id (node 1) takes the first layer
+        // — and every later layer too, because seeder load is counted in
+        // *concurrent uploads at plan time* and the bookings all start now.
+        let p = plan(&state, &ix, &mut links, NodeId(0), &ids[..1]);
+        assert_eq!(p.peer_layers[0].1, NodeId(1));
+        // Pre-load node 1 with `CAP` uploads: it saturates, node 2 wins.
+        for _ in 0..CAP {
+            links.schedule_peer_transfer(3, 1, Bytes::from_mb(1000.0), lan(), 0.0);
+        }
+        let p = plan(&state, &ix, &mut links, NodeId(0), &ids[..1]);
+        assert_eq!(p.peer_layers[0].1, NodeId(2), "saturated seeder is skipped");
+    }
+
+    #[test]
+    fn saturated_swarm_falls_back_to_registry() {
+        let mut state = cluster(3);
+        let corpus = hub::corpus();
+        let redis = corpus.iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
+        let (ids, layers) = state.intern_image(redis);
+        state.install_image(NodeId(1), &redis.image_ref(), &layers).unwrap();
+        let ix = synced_index(&state);
+        let mut links = links_for(&state);
+        // Cap 1, and one layer already books the only seeder: the rest of
+        // the image must come from the registry.
+        let p = plan_sources(&state, &ix, &mut links, lan(), 1, NodeId(0), &ids, 0.0);
+        assert_eq!(p.peer_layers.len(), 1);
+        assert_eq!(p.registry_layers.len(), ids.len() - 1);
+        assert!(links.peak_peer_uploads() <= 1);
+    }
+
+    #[test]
+    fn index_follows_install_evict_and_crash() {
+        let mut state = cluster(3);
+        let corpus = hub::corpus();
+        let redis = corpus.iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
+        let (ids, layers) = state.intern_image(redis);
+        let mut ix = synced_index(&state);
+        assert!(ix.holders(ids[0]).is_empty());
+
+        state.install_image(NodeId(1), &redis.image_ref(), &layers).unwrap();
+        state.install_image(NodeId(2), &redis.image_ref(), &layers).unwrap();
+        ix.mark_dirty(NodeId(1));
+        ix.mark_dirty(NodeId(2));
+        ix.sync(&state);
+        assert_eq!(ix.holders(ids[0]), &[NodeId(1), NodeId(2)]);
+
+        // Eviction drops the holder.
+        state.evict_layers(NodeId(1), &ids);
+        ix.mark_dirty(NodeId(1));
+        ix.sync(&state);
+        assert_eq!(ix.holders(ids[0]), &[NodeId(2)]);
+
+        // A crash wipes the inventory; the dead node must vanish from
+        // every holder list.
+        state.crash_node(NodeId(2));
+        ix.mark_dirty(NodeId(2));
+        ix.sync(&state);
+        assert!(ix.holders(ids[0]).is_empty());
+    }
+
+    #[test]
+    fn sync_is_lazy_and_order_independent() {
+        let mut state = cluster(3);
+        let corpus = hub::corpus();
+        let redis = corpus.iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
+        let nginx = corpus.iter().find(|m| m.name == "nginx").unwrap();
+        let (rids, rlayers) = state.intern_image(redis);
+        let (_, nlayers) = state.intern_image(nginx);
+        state.install_image(NodeId(2), &redis.image_ref(), &rlayers).unwrap();
+        state.install_image(NodeId(1), &nginx.image_ref(), &nlayers).unwrap();
+
+        // Dirty order {2,1} vs {1,2} must index identically (sorted lists).
+        let mut a = SwarmIndex::new();
+        a.mark_dirty(NodeId(2));
+        a.mark_dirty(NodeId(1));
+        a.sync(&state);
+        let mut b = SwarmIndex::new();
+        b.mark_dirty(NodeId(1));
+        b.mark_dirty(NodeId(2));
+        b.sync(&state);
+        for &l in &rids {
+            assert_eq!(a.holders(l), b.holders(l));
+        }
+        // Re-sync with an unchanged version is a no-op (snapshot intact).
+        a.mark_dirty(NodeId(2));
+        a.sync(&state);
+        assert_eq!(a.holders(rids[0]), &[NodeId(2)]);
     }
 }

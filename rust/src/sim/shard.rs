@@ -366,6 +366,9 @@ pub(crate) enum LaneOutcome {
 /// coordinator to apply in pop order at the window barrier.
 pub(crate) struct LaneEffects {
     pub slot: usize,
+    /// Node the task ran against (the coordinator re-marks it in the
+    /// swarm index when the effects show an inventory change).
+    pub node: NodeId,
     /// Event-log records, in the exact order the sequential engine emits.
     pub log: Vec<(f64, PodId, EventKind)>,
     /// Terminal-outcome update for one pod.
@@ -416,8 +419,14 @@ impl<'a> Shard<'a> {
         let effects = &mut self.effects;
         let items = std::mem::take(&mut self.items);
         for item in items {
+            let task_node = match &item.task {
+                LaneTask::Pull { p } => p.node,
+                LaneTask::Term { node, .. } => *node,
+                LaneTask::Sweep { node, .. } => *node,
+            };
             let mut eff = LaneEffects {
                 slot: item.slot,
+                node: task_node,
                 log: Vec::new(),
                 outcome: None,
                 remember: None,
@@ -676,6 +685,7 @@ mod tests {
             },
             wan_bytes: redis.total_size,
             p2p_bytes: Bytes::ZERO,
+            p2p_layers: 0,
         };
 
         let images = ImageLayerStore::new();

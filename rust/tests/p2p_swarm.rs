@@ -1,0 +1,288 @@
+//! Differential tests for the peer-swarm pull source (P2P layer sharing):
+//! swarm-on vs swarm-off accounting identity on the same workload, with
+//! strictly lower WAN bytes when the swarm is on; byte-identical
+//! report/event-log fingerprints across shard counts {1, 4} and repeated
+//! runs under churn; seeder-cap saturation forcing registry fallback
+//! (and the cap invariant: no seeder ever serves more than C concurrent
+//! uploads); a crash mid-seed on either end of a peer transfer releasing
+//! its bookings; and a registry-outage run that completes via peers
+//! without a single stalled pull.
+
+use lrsched::cluster::{EventKind, Node, NodeId, Pod, PodBuilder, PodId, Resources};
+use lrsched::registry::{hub, Registry};
+use lrsched::sim::{
+    ChurnConfig, EventPayload, SimConfig, SimReport, Simulation, WorkloadConfig, WorkloadGen,
+};
+use lrsched::util::units::{Bandwidth, Bytes};
+
+fn nodes(n: u32) -> Vec<Node> {
+    (0..n)
+        .map(|i| {
+            Node::new(
+                NodeId(i),
+                &format!("edge{:02}", i + 1),
+                Resources::cores_gb(4.0, 8.0),
+                Bytes::from_gb(64.0),
+                Bandwidth::from_mbps(10.0),
+            )
+        })
+        .collect()
+}
+
+/// Everything observable about a run: the full report plus the audit log.
+fn fingerprint(report: &SimReport, sim: &Simulation) -> String {
+    format!("{}\n---\n{}", report.render(), sim.events.render())
+}
+
+/// Run a seeded random workload, optionally with the swarm on.
+fn run_workload(
+    seed: u64,
+    n_pods: usize,
+    n_nodes: u32,
+    p2p: Option<(f64, usize)>,
+    shards: usize,
+    churn: Option<ChurnConfig>,
+) -> (SimReport, String) {
+    let registry = Registry::with_corpus();
+    let wl = WorkloadConfig { seed, duration_range: Some((20.0, 200.0)), ..Default::default() };
+    let trace = WorkloadGen::new(&registry, wl).trace(n_pods);
+    let mut cfg = SimConfig::default();
+    cfg.inter_arrival_secs = Some(0.5);
+    cfg.gc_enabled = true;
+    cfg.retry_limit = 10;
+    cfg.snapshot_every = 10;
+    cfg.shards = shards;
+    cfg.churn = churn;
+    if let Some((lan, cap)) = p2p {
+        cfg.p2p_lan_mbps = Some(lan);
+        cfg.p2p_seeder_cap = cap;
+    }
+    let mut sim = Simulation::new(nodes(n_nodes), registry, cfg);
+    let report = sim.run_trace(trace);
+    sim.state.check_invariants().expect("cluster invariants");
+    let fp = fingerprint(&report, &sim);
+    (report, fp)
+}
+
+#[test]
+fn swarm_lowers_wan_bytes_and_keeps_accounting() {
+    let (off, _) = run_workload(11, 60, 6, None, 1, None);
+    let (on, _) = run_workload(11, 60, 6, Some((125.0, 4)), 1, None);
+    assert!(off.accounting_balanced(), "swarm-off run dropped pods");
+    assert!(on.accounting_balanced(), "swarm-on run dropped pods");
+    assert_eq!(off.submitted, on.submitted);
+    // Without the swarm nothing moves over the LAN — and the peak-upload
+    // counter stays at its resting zero.
+    assert_eq!(off.total_p2p(), Bytes::ZERO);
+    assert_eq!(off.peak_peer_uploads, 0);
+    // With the swarm, repeat images are served by peers: real LAN traffic,
+    // strictly less WAN traffic, and the cap invariant holds.
+    assert!(on.total_p2p() > Bytes::ZERO, "no layer was ever peer-served");
+    assert!(
+        on.total_download() < off.total_download(),
+        "swarm-on WAN bytes ({}) not strictly below swarm-off ({})",
+        on.total_download(),
+        off.total_download()
+    );
+    assert!(on.peak_peer_uploads >= 1);
+    assert!(
+        on.peak_peer_uploads <= 4,
+        "seeder served {} concurrent uploads, cap is 4",
+        on.peak_peer_uploads
+    );
+}
+
+#[test]
+fn swarm_runs_are_byte_identical_across_shards_and_repeats() {
+    let churn = || {
+        Some(ChurnConfig {
+            seed: 9,
+            horizon_secs: 120.0,
+            joins: 2,
+            drains: 1,
+            crash_fraction: 0.2,
+            outages: 1,
+            outage_secs: 20.0,
+            ..Default::default()
+        })
+    };
+    let p2p = Some((125.0, 4));
+    let (seq, fp_seq) = run_workload(23, 80, 8, p2p, 1, churn());
+    let (par, fp_par) = run_workload(23, 80, 8, p2p, 4, churn());
+    let (_, fp_par_again) = run_workload(23, 80, 8, p2p, 4, churn());
+    assert!(seq.accounting_balanced() && par.accounting_balanced());
+    assert!(seq.total_p2p() > Bytes::ZERO, "scenario never exercised the swarm");
+    assert!(
+        fp_seq == fp_par,
+        "4-shard swarm run diverged from sequential; first differing line: {:?}",
+        fp_seq.lines().zip(fp_par.lines()).find(|(a, b)| a != b)
+    );
+    assert!(fp_par == fp_par_again, "4-shard swarm run not reproducible");
+}
+
+/// Three identical 3.9-core wordpress pods, one per node, arriving 30 s
+/// apart so the first install completes before the second pull plans.
+fn saturation_run(cap: usize) -> SimReport {
+    let reg = Registry::with_corpus();
+    let mut b = PodBuilder::new();
+    let pods: Vec<Pod> = (0..3)
+        .map(|_| b.build("wordpress:6.4", Resources::cores_gb(3.9, 1.0)).with_duration(600.0))
+        .collect();
+    let mut cfg = SimConfig::default();
+    cfg.inter_arrival_secs = Some(30.0);
+    cfg.p2p_lan_mbps = Some(1.0); // slow LAN: seeds stay busy for minutes
+    cfg.p2p_seeder_cap = cap;
+    let mut sim = Simulation::new(nodes(4), reg, cfg);
+    let report = sim.run_trace(pods);
+    sim.state.check_invariants().expect("cluster invariants");
+    report
+}
+
+#[test]
+fn saturated_seeder_cap_forces_registry_fallback() {
+    // Cap 1: the sole seeder saturates after one layer; the rest of the
+    // image — and the whole third pull — fall back to the registry.
+    let tight = saturation_run(1);
+    assert!(tight.accounting_balanced());
+    assert_eq!(
+        tight.peak_peer_uploads, 1,
+        "a cap of 1 must never let a seeder serve concurrent uploads"
+    );
+    assert!(tight.total_p2p() > Bytes::ZERO, "the first layer is peer-served");
+
+    // Cap 6: the whole second image rides the LAN instead.
+    let wide = saturation_run(6);
+    assert!(wide.accounting_balanced());
+    assert!(wide.peak_peer_uploads > 1);
+    assert!(wide.peak_peer_uploads <= 6, "cap invariant: {} > 6", wide.peak_peer_uploads);
+    assert!(
+        wide.total_p2p() > tight.total_p2p(),
+        "a wider cap must shift more bytes onto the LAN"
+    );
+    assert!(
+        wide.total_download() < tight.total_download(),
+        "registry fallback must show up as extra WAN bytes under the tight cap"
+    );
+}
+
+/// Two wordpress pods on a 1 MB/s LAN (a multi-minute seed window): the
+/// first binds node 0 and seeds, the second binds node 1 at t=40 and
+/// fetches from it; `crash` takes down a node at `crash_at`, squarely
+/// mid-transfer.
+fn crash_mid_seed_run(cap: usize, crash: NodeId, crash_at: f64) -> (SimReport, Simulation) {
+    let reg = Registry::with_corpus();
+    let mut b = PodBuilder::new();
+    let pods: Vec<Pod> = (0..2)
+        .map(|_| b.build("wordpress:6.4", Resources::cores_gb(3.9, 1.0)).with_duration(600.0))
+        .collect();
+    let mut cfg = SimConfig::default();
+    cfg.inter_arrival_secs = Some(40.0);
+    cfg.retry_limit = 20;
+    cfg.p2p_lan_mbps = Some(1.0);
+    cfg.p2p_seeder_cap = cap;
+    let mut sim = Simulation::new(nodes(3), reg, cfg);
+    sim.inject_event(crash_at, EventPayload::NodeCrash { node: crash });
+    let report = sim.run_trace(pods);
+    sim.state.check_invariants().expect("cluster invariants");
+    (report, sim)
+}
+
+#[test]
+fn seeder_crash_mid_seed_removes_it_from_the_swarm() {
+    // Pod 0 binds node 0 (idle-cluster tie-break) and seeds; pod 1 binds
+    // node 1 at t=40 and peer-fetches the whole image (cap 6 covers all
+    // six layers). Node 0 crashes at t=100, mid-seed.
+    let wp = hub::corpus().into_iter().find(|m| m.name == "wordpress" && m.tag == "6.4").unwrap();
+    let (report, sim) = crash_mid_seed_run(6, NodeId(0), 100.0);
+    assert_eq!(report.nodes_crashed, 1);
+    assert_eq!(report.resubmitted, 1, "the seeder's own pod is lost and resubmitted");
+    assert!(report.accounting_balanced());
+    assert_eq!(report.records.len(), 3, "two first binds plus one rebind");
+    // Pod 1's fetch was booked before the crash: the in-flight transfer
+    // completes (40 s arrival + 243 MB at 1 MB/s), it does not restart.
+    let b_started = sim
+        .events
+        .all()
+        .iter()
+        .find(|e| e.pod == PodId(1) && matches!(e.kind, EventKind::Started { .. }))
+        .map(|e| e.at)
+        .expect("pod 1 started");
+    assert!(
+        (b_started - (40.0 + wp.total_size.as_mb())).abs() < 1e-6,
+        "peer fetch must run to its booked finish, got {b_started}"
+    );
+    // The rebind of the lost pod plans *after* the crash: the dead node
+    // must be gone from every holder list, so the pull is pure WAN.
+    let rebind = report.records.last().unwrap();
+    assert_eq!(rebind.pod, PodId(0));
+    assert_eq!(rebind.p2p, Bytes::ZERO, "crashed seeder still advertised in the swarm");
+    assert_eq!(rebind.download, wp.total_size);
+}
+
+#[test]
+fn downloader_crash_mid_seed_releases_the_upload_slot() {
+    // Cap 1: at t=40 pod 1 peer-fetches one layer (the 49 MB base, the
+    // cap admits nothing more) with the seeder slot booked until t=89.
+    // The *downloader* (node 1) crashes at t=70, mid-transfer.
+    let (report, _) = crash_mid_seed_run(1, NodeId(1), 70.0);
+    assert_eq!(report.nodes_crashed, 1);
+    assert_eq!(report.resubmitted, 1, "the downloader's pod resubmits");
+    assert!(report.accounting_balanced());
+    assert_eq!(report.peak_peer_uploads, 1, "cap 1 held throughout");
+    // The rebind plans at t=70 while the dead fetch's original booking ran
+    // to t=89. If the crash failed to release that slot, the sole seeder
+    // would look saturated and the rebind would be pure WAN.
+    let rebind = report.records.last().unwrap();
+    assert_eq!(rebind.pod, PodId(1));
+    assert!(
+        rebind.p2p > Bytes::ZERO,
+        "dead downloader's booking still pinning the seeder's only slot"
+    );
+}
+
+#[test]
+fn registry_outage_is_survivable_when_peers_hold_the_layers() {
+    // Pod 0 pulls redis over the WAN at t=0 (done by ~6.4 s) and fills
+    // node 0. The registry goes dark from t=30 to t=300. Pod 1 arrives at
+    // t=60 needing the same image on another node.
+    let run = |p2p: bool| {
+        let reg = Registry::with_corpus();
+        let mut b = PodBuilder::new();
+        let pods: Vec<Pod> = (0..2)
+            .map(|_| b.build("redis:7.2", Resources::cores_gb(3.9, 1.0)).with_duration(600.0))
+            .collect();
+        let mut cfg = SimConfig::default();
+        cfg.inter_arrival_secs = Some(60.0);
+        if p2p {
+            cfg.p2p_lan_mbps = Some(100.0);
+        }
+        let mut sim = Simulation::new(nodes(2), reg, cfg);
+        sim.inject_event(30.0, EventPayload::RegistryOutageStart { until: 300.0 });
+        let report = sim.run_trace(pods);
+        sim.state.check_invariants().expect("cluster invariants");
+        let started = sim
+            .events
+            .all()
+            .iter()
+            .find(|e| e.pod == PodId(1) && matches!(e.kind, EventKind::Started { .. }))
+            .map(|e| e.at)
+            .expect("pod 1 started");
+        (report, started)
+    };
+    let (swarm, started_swarm) = run(true);
+    let (registry_only, started_registry) = run(false);
+    assert!(swarm.accounting_balanced() && registry_only.accounting_balanced());
+    // Registry-only: the pull planned during the outage stalls until the
+    // window closes.
+    assert_eq!(registry_only.pulls_stalled, 1);
+    assert!(started_registry >= 300.0, "stalled pull cannot finish mid-outage");
+    // Swarm: every missing layer has a Ready holder, the fetch is
+    // LAN-only, and the outage is invisible to it.
+    assert_eq!(swarm.pulls_stalled, 0, "peer-only pull must not stall");
+    assert!(
+        started_swarm < 70.0,
+        "peer-served pod must start right after arrival, got {started_swarm}"
+    );
+    assert_eq!(swarm.records[1].download, Bytes::ZERO, "no WAN bytes during the outage");
+    assert!(swarm.records[1].p2p > Bytes::ZERO);
+}
