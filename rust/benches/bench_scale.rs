@@ -23,7 +23,11 @@
 //!   `shards ∈ {1, 4}` — the reports must be byte-identical, and under
 //!   `LRSCHED_BENCH_STRICT=1` with ≥4 hardware threads the 4-lane run
 //!   must be ≥2× the single-lane engine-event throughput (the PR 4
-//!   acceptance criterion, enforced by the CI bench job).
+//!   acceptance criterion, enforced by the CI bench job);
+//! - **cache policies** (`engine_cache_*`): a Zipf-skewed trace on a
+//!   disk-starved 16-node fleet (2 GB disks, so image GC churns) once
+//!   per `--cache-policy`, recording cache hit rate and deployment cost
+//!   (WAN GB) for each eviction order side by side.
 //!
 //! Run: `cargo bench --bench bench_scale`
 //!
@@ -41,8 +45,8 @@ use lrsched::sched::lrscheduler::build_inputs;
 use lrsched::sched::scoring::ScoreArena;
 use lrsched::sched::{default_framework, CycleContext, NativeScorer, ScoringBackend, WeightParams};
 use lrsched::sim::{
-    trace, ArrivalSource, ChurnConfig, Popularity, SchedulerChoice, SimConfig, SimReport,
-    Simulation, TraceOptions, TraceReplay, WorkloadConfig, WorkloadGen,
+    trace, ArrivalSource, CachePolicyChoice, ChurnConfig, Popularity, SchedulerChoice, SimConfig,
+    SimReport, Simulation, TraceOptions, TraceReplay, WorkloadConfig, WorkloadGen,
 };
 use lrsched::testing::bench::{bench, header};
 use lrsched::testing::fixtures;
@@ -496,6 +500,77 @@ fn main() {
         unit: "events/sec",
         higher_is_better: true,
     });
+
+    // --- cache-policy mode: hit rate + deployment GB per policy ----------
+    // Disk-starved fleet (2 GB/node — a handful of corpus images) so
+    // kubelet GC churns constantly: the eviction order is what separates
+    // the policies on a skewed workload.
+    let cache_pods = if full { 20_000 } else { 4_000 };
+    let cache_run = |policy: CachePolicyChoice| -> SimReport {
+        let registry = Registry::with_corpus();
+        let trace = WorkloadGen::new(
+            &registry,
+            WorkloadConfig {
+                seed: 42,
+                popularity: Popularity::Zipf(1.3),
+                duration_range: Some((5.0, 60.0)),
+                ..Default::default()
+            },
+        )
+        .trace(cache_pods);
+        let mut cfg = SimConfig::default();
+        cfg.scheduler = SchedulerChoice::LR;
+        cfg.inter_arrival_secs = Some(0.5);
+        cfg.gc_enabled = true;
+        cfg.retry_limit = 10;
+        cfg.snapshot_every = 1000;
+        cfg.cache_policy = policy;
+        let mut sim = Simulation::new(common::scale_nodes_with_disk(16, 2.0), registry, cfg)
+            .with_backend(Box::new(NativeScorer));
+        let report = sim.run_trace(trace);
+        sim.state.check_invariants().expect("invariants");
+        assert!(report.accounting_balanced(), "cache-policy run dropped events");
+        report
+    };
+    for policy in CachePolicyChoice::all() {
+        let rep = cache_run(policy);
+        println!(
+            "cache policy {}: hit_rate={:.3} wan={:.1} GB evicted={:.1} GB prefetched={:.1} GB",
+            policy.label(),
+            rep.cache_hit_rate,
+            rep.total_download().as_gb(),
+            rep.evicted_bytes.as_gb(),
+            rep.prefetched_bytes.as_gb(),
+        );
+        // Mode names must be static for the JSON gate.
+        let (hit_name, wan_name): (&'static str, &'static str) = match policy {
+            CachePolicyChoice::PressureSweep => {
+                ("engine_cache_pressure_hit", "engine_cache_pressure_wan")
+            }
+            CachePolicyChoice::Lru => ("engine_cache_lru_hit", "engine_cache_lru_wan"),
+            CachePolicyChoice::Popularity => {
+                ("engine_cache_popularity_hit", "engine_cache_popularity_wan")
+            }
+            CachePolicyChoice::ScorerKeepSet => {
+                ("engine_cache_scorer_hit", "engine_cache_scorer_wan")
+            }
+            CachePolicyChoice::Prefetch => {
+                ("engine_cache_prefetch_hit", "engine_cache_prefetch_wan")
+            }
+        };
+        modes.push(Mode {
+            name: hit_name,
+            value: rep.cache_hit_rate,
+            unit: "fraction",
+            higher_is_better: true,
+        });
+        modes.push(Mode {
+            name: wan_name,
+            value: rep.total_download().as_gb(),
+            unit: "GB",
+            higher_is_better: false,
+        });
+    }
 
     // --- JSON report + regression gate -----------------------------------
     if let Some(path) = args.get("json") {

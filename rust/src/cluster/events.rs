@@ -67,6 +67,16 @@ pub enum EventKind {
         /// Bytes freed.
         bytes: Bytes,
     },
+    /// Layers warmed onto a node at bind time by the prefetch-on-intent
+    /// cache policy (node-scoped; no pod pull is charged for them).
+    Prefetched {
+        /// Node the layers were warmed onto.
+        node: NodeId,
+        /// Bytes installed ahead of need.
+        bytes: Bytes,
+        /// Number of layers installed.
+        layers: usize,
+    },
     /// A node joined the cluster (empty layer cache).
     NodeJoined {
         /// The new node.

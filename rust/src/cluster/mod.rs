@@ -9,7 +9,7 @@ pub mod resources;
 pub mod state;
 
 pub use events::{Event, EventKind, EventLog, NODE_SCOPE};
-pub use node::{Node, NodeId, NodeStatus, Taint};
+pub use node::{LayerUse, Node, NodeId, NodeStatus, Taint};
 pub use pod::{Pod, PodBuilder, PodId};
 pub use resources::Resources;
-pub use state::{evict_layers_on, install_image_on, ClusterState, StateError};
+pub use state::{evict_layers_on, install_image_on, prefetch_layers_on, ClusterState, StateError};

@@ -5,7 +5,7 @@
 
 use super::pod::PodId;
 use super::resources::Resources;
-use crate::registry::{ImageRef, LayerSet};
+use crate::registry::{ImageRef, LayerId, LayerSet};
 use crate::util::units::{Bandwidth, Bytes};
 use std::collections::BTreeMap;
 
@@ -39,6 +39,22 @@ pub struct Taint {
     /// (PreferNoSchedule) — both exist in Kubernetes and the paper's plugin
     /// list includes the scoring form.
     pub hard: bool,
+}
+
+/// Per-layer use metadata the pluggable cache policies read
+/// (`sim/cache.rs`): LRU timestamps and decayed popularity weights,
+/// maintained by the engine at bind/install time and pruned on eviction.
+/// The fixed `PressureSweep` policy never reads it, so maintaining it is
+/// invisible to the pre-policy byte-identity fingerprints.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LayerUse {
+    /// Virtual time the layer was last required by a pod bind or install.
+    pub last_use: f64,
+    /// Arrival-frequency popularity weight as of `pop_at` (decay it to
+    /// the read time with [`crate::sim::cache::decayed`]).
+    pub popularity: f64,
+    /// Virtual time `popularity` was last bumped.
+    pub pop_at: f64,
 }
 
 /// An edge node.
@@ -80,6 +96,9 @@ pub struct Node {
     pub layers_version: u64,
     /// Bytes of disk consumed by local layers.
     pub disk_used: Bytes,
+    /// Per-layer use metadata for the pluggable cache policies
+    /// (`sim/cache.rs`): a `BTreeMap` so every walk is in layer-id order.
+    pub cache_meta: BTreeMap<LayerId, LayerUse>,
 }
 
 impl Node {
@@ -102,6 +121,7 @@ impl Node {
             layers: LayerSet::new(),
             layers_version: 0,
             disk_used: Bytes::ZERO,
+            cache_meta: BTreeMap::new(),
         }
     }
 
@@ -163,6 +183,23 @@ impl Node {
     pub fn release(&mut self, pod: PodId, requests: Resources) {
         self.used = self.used.saturating_sub(&requests);
         self.pods.retain(|&p| p != pod);
+    }
+
+    /// Record a demand for `layer` at virtual time `now` (a pod that needs
+    /// it was bound here): decays the popularity weight to `now`, bumps it
+    /// by one arrival, and refreshes the LRU timestamp. `decay` is the
+    /// popularity time constant in seconds (`--cache-decay`).
+    pub fn touch_layer(&mut self, layer: LayerId, now: f64, decay: f64) {
+        let u = self.cache_meta.entry(layer).or_default();
+        u.popularity = crate::sim::cache::decayed(u.popularity, u.pop_at, now, decay) + 1.0;
+        u.pop_at = now;
+        u.last_use = now;
+    }
+
+    /// Refresh only the LRU timestamp for `layer` (layer install/prefetch
+    /// completed at virtual time `now`).
+    pub fn touch_layer_install(&mut self, layer: LayerId, now: f64) {
+        self.cache_meta.entry(layer).or_default().last_use = now;
     }
 }
 

@@ -95,6 +95,7 @@ pub fn evict_layers_on(node: &mut Node, interner: &LayerInterner, layers: &[Laye
     for &l in layers {
         if node.layers.contains(l) {
             node.layers.remove(l);
+            node.cache_meta.remove(&l);
             removed_any = true;
             freed += interner.size(l);
         }
@@ -104,6 +105,41 @@ pub fn evict_layers_on(node: &mut Node, interner: &LayerInterner, layers: &[Laye
     }
     node.disk_used = node.disk_used.saturating_sub(freed);
     freed
+}
+
+/// Warm individual `layers` onto one node ahead of any pull (the
+/// prefetch-on-intent cache policy): installs the ones that are absent
+/// *and* fit the remaining disk, charges disk, bumps the layer version,
+/// and stamps the LRU metadata at `now`. Unlike [`install_image_on`]
+/// there is no image record — prefetched layers not later claimed by an
+/// installed image are *orphans*, reclaimable by the prefetch policy's
+/// GC sweep (`sim/kubelet.rs`). Returns (bytes added, layers added).
+pub fn prefetch_layers_on(
+    node: &mut Node,
+    interner: &LayerInterner,
+    layers: &[LayerId],
+    now: f64,
+) -> (Bytes, usize) {
+    let mut added = Bytes::ZERO;
+    let mut count = 0usize;
+    for &l in layers {
+        if node.layers.contains(l) {
+            continue;
+        }
+        let size = interner.size(l);
+        if size > node.disk_free() {
+            continue;
+        }
+        node.layers.insert(l);
+        node.disk_used += size;
+        node.touch_layer_install(l, now);
+        added += size;
+        count += 1;
+    }
+    if count > 0 {
+        node.layers_version += 1;
+    }
+    (added, count)
 }
 
 impl ClusterState {
@@ -174,6 +210,7 @@ impl ClusterState {
         node.layers_version += 1;
         node.images.clear();
         node.disk_used = Bytes::ZERO;
+        node.cache_meta.clear();
         lost
     }
 
@@ -315,6 +352,13 @@ impl ClusterState {
     /// event lanes use directly.)
     pub fn evict_layers(&mut self, node_id: NodeId, layers: &[LayerId]) -> Bytes {
         evict_layers_on(&mut self.nodes[node_id.0 as usize], &self.interner, layers)
+    }
+
+    /// Warm individual layers onto a node ahead of any pull (prefetch-on-
+    /// intent cache policy). Returns (bytes added, layers added); see
+    /// [`prefetch_layers_on`].
+    pub fn prefetch_layers(&mut self, node_id: NodeId, layers: &[LayerId], now: f64) -> (Bytes, usize) {
+        prefetch_layers_on(&mut self.nodes[node_id.0 as usize], &self.interner, layers, now)
     }
 
     /// Drop an image record from a node (its unique layers should be passed

@@ -43,13 +43,20 @@ pub fn paper_nodes(n: usize) -> Vec<Node> {
 /// testbed (the `scale` CLI subcommand and `bench_scale`): 4-core / 8 GB
 /// workers with 64 GB disks and fast downlinks.
 pub fn scale_nodes(n: usize) -> Vec<Node> {
+    scale_nodes_with_disk(n, 64.0)
+}
+
+/// [`scale_nodes`] with a configurable per-node disk (`scale --disk-gb`):
+/// disk-starved fleets put kubelet image GC — and with it the pluggable
+/// cache policies — on the hot path.
+pub fn scale_nodes_with_disk(n: usize, disk_gb: f64) -> Vec<Node> {
     (0..n)
         .map(|i| {
             Node::new(
                 NodeId(i as u32),
                 &format!("edge{:03}", i + 1),
                 Resources::cores_gb(4.0, 8.0),
-                Bytes::from_gb(64.0),
+                Bytes::from_gb(disk_gb),
                 Bandwidth::from_mbps(100.0),
             )
         })

@@ -24,6 +24,9 @@ pub fn report_to_json(rep: &SimReport) -> Json {
         .set("omega1_used", Json::Int(rep.omega1_used as i64))
         .set("omega2_used", Json::Int(rep.omega2_used as i64))
         .set("omega_mid_used", Json::Int(rep.omega_mid_used as i64))
+        .set("cache_hit_rate", Json::Num(rep.cache_hit_rate))
+        .set("evicted_mb", Json::Num(rep.evicted_bytes.as_mb()))
+        .set("prefetched_mb", Json::Num(rep.prefetched_bytes.as_mb()))
         .set(
             "records",
             Json::Arr(

@@ -76,6 +76,12 @@ fn scale_spec() -> Vec<OptSpec> {
         OptSpec { name: "seed", help: "workload RNG seed", default: Some("42") },
         OptSpec { name: "pods", help: "number of pods in the trace", default: Some("100000") },
         OptSpec { name: "nodes", help: "edge node count", default: Some("64") },
+        OptSpec {
+            name: "disk-gb",
+            help: "per-node disk capacity in GB (small disks put image GC \
+                   and the cache policies on the hot path)",
+            default: Some("64"),
+        },
         OptSpec { name: "scheduler", help: "default|layer|lr|rl", default: Some("lr") },
         OptSpec {
             name: "backend",
@@ -173,6 +179,23 @@ fn scale_spec() -> Vec<OptSpec> {
             name: "no-wake",
             help: "disable capacity-driven wake-ups (fixed back-off timers only)",
             default: None,
+        },
+        OptSpec {
+            name: "cache-policy",
+            help: "pressure|lru|popularity|scorer|prefetch (kubelet image-GC \
+                   eviction/prefetch policy; see docs/SCALE.md)",
+            default: Some("pressure"),
+        },
+        OptSpec {
+            name: "cache-decay",
+            help: "popularity half-life time constant in seconds (lru/popularity/\
+                   prefetch recency decay)",
+            default: Some("300"),
+        },
+        OptSpec {
+            name: "cache-prefetch-mb",
+            help: "per-intent prefetch budget in MB (with --cache-policy prefetch)",
+            default: Some("256"),
         },
         OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
     ]
@@ -391,6 +414,13 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
     cfg.snapshot_every = args.usize_or("snapshot-every", 1000)?.max(1);
     cfg.wake_on_capacity = !args.flag("no-wake");
     cfg.shards = args.usize_or("shards", 1)?.max(1);
+    let policy_name = args.str_or("cache-policy", "pressure");
+    cfg.cache_policy = lrsched::sim::CachePolicyChoice::parse(policy_name).ok_or_else(|| {
+        format!("unknown cache policy {policy_name:?} (expected pressure|lru|popularity|scorer|prefetch)")
+    })?;
+    cfg.cache_decay_secs = args.f64_or("cache-decay", 300.0)?;
+    cfg.cache_prefetch_bytes =
+        lrsched::util::units::Bytes::from_mb(args.f64_or("cache-prefetch-mb", 256.0)?);
     if args.flag("p2p") {
         cfg.p2p_lan_mbps = Some(args.f64_or("p2p-lan", 125.0)?);
         cfg.p2p_seeder_cap = args.usize_or("p2p-seeder-cap", 4)?.max(1);
@@ -412,7 +442,12 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
     let churn_enabled = cfg.churn.is_some();
     let p2p_cap = cfg.p2p_lan_mbps.map(|_| cfg.p2p_seeder_cap);
     let shards = cfg.shards;
-    let mut sim = Simulation::new(common::scale_nodes(nodes), registry, cfg);
+    let cache_policy = cfg.cache_policy;
+    let disk_gb = args.f64_or("disk-gb", 64.0)?;
+    if disk_gb <= 0.0 {
+        return Err("--disk-gb must be positive".to_string());
+    }
+    let mut sim = Simulation::new(common::scale_nodes_with_disk(nodes, disk_gb), registry, cfg);
     let backend = args.str_or("backend", "native");
     match backend {
         "native" => {}
@@ -496,6 +531,13 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
             cap
         );
     }
+    println!(
+        "cache: policy={} hit_rate={:.3} evicted={:.1} MB prefetched={:.1} MB",
+        cache_policy.label(),
+        report.cache_hit_rate,
+        report.evicted_bytes.as_mb(),
+        report.prefetched_bytes.as_mb()
+    );
     if !report.accounting_balanced() {
         return Err(format!(
             "dropped events: completed {} + failed {} + unschedulable {} + lost {} != submitted {}",
@@ -545,6 +587,8 @@ fn run() -> Result<(), String> {
                            event lanes; report byte-identical to --shards 1)\n\
                            lrsched scale --p2p   (peer-swarm layer sharing:\n\
                            LAN fetches from peers instead of WAN re-pulls)\n\
+                           lrsched scale --cache-policy lru   (recency-based\n\
+                           image GC; also popularity|scorer|prefetch)\n\
                            lrsched scale --trace tests/fixtures/alibaba_mini.csv \\\n\
                              --trace-format alibaba --trace-speedup 10\n\
                          See docs/SCALE.md for the full flag reference.",

@@ -62,6 +62,19 @@ pub fn score_for_sets(
     layer_sharing_score(local, total)
 }
 
+/// Keep-set hook for the scorer-informed cache policy: how much of an
+/// image's layer set is shared with the layers the node would retain if
+/// this image were evicted. Low score = shares little with the keep set =
+/// cheap to evict (re-uses Eq. 3's byte-overlap ratio, so the eviction
+/// order agrees with the scheduler's own notion of layer value).
+pub fn keep_set_score(
+    layers: &crate::registry::LayerSet,
+    kept: &crate::registry::LayerSet,
+    interner: &LayerInterner,
+) -> f64 {
+    score_for_sets(layers, kept, interner)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

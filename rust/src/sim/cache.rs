@@ -1,0 +1,398 @@
+//! Pluggable image-cache eviction policies for kubelet GC.
+//!
+//! The kubelet's disk-pressure sweep (`sim/kubelet.rs`) historically had
+//! exactly one victim rule: evict the first cached image, in insertion
+//! order, that no running or pulling pod needs. This module makes that
+//! rule one of several [`CachePolicy`] implementations, selected per run
+//! via `scale --cache-policy`:
+//!
+//! - [`CachePolicyChoice::PressureSweep`] — the original insertion-order
+//!   sweep, byte-identical to the pre-policy engine (the default);
+//! - [`CachePolicyChoice::Lru`] — evict the image whose layers were used
+//!   least recently (timestamps stamped at bind and install time);
+//! - [`CachePolicyChoice::Popularity`] — evict the image whose layers
+//!   have the lowest arrival-frequency-decayed popularity;
+//! - [`CachePolicyChoice::ScorerKeepSet`] — evict the image the
+//!   layer-score plugin values least against the node's retained layers
+//!   ([`crate::sched::layer_score::keep_set_score`]);
+//! - [`CachePolicyChoice::Prefetch`] — sweep like `PressureSweep`, but
+//!   the engine additionally warms popular layers onto the chosen node at
+//!   bind time, and GC may reclaim those orphaned prefetched layers.
+//!
+//! Every policy is a pure function of per-node state — the node's cached
+//! images, its [`crate::cluster::LayerUse`] metadata (a `BTreeMap`, so
+//! iteration order is the layer-id order), and the event's virtual time —
+//! so the sharded engine's lanes reach the same eviction decisions as the
+//! sequential engine and every report stays byte-identical across
+//! `--shards {1,N}` (see `docs/ARCHITECTURE.md` § "Cache policies").
+//!
+//! Tie-breaking is part of the contract: when two candidate images score
+//! equally, the victim is the one whose **lowest layer id** is smallest,
+//! then the earliest-installed (insertion index). The unit tests below
+//! pin that order.
+
+use crate::cluster::LayerUse;
+use crate::registry::{LayerId, LayerInterner, LayerSet};
+use std::collections::BTreeMap;
+
+/// Which cache policy a run uses (the `scale --cache-policy` flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CachePolicyChoice {
+    /// The original fixed sweep: first insertion-ordered unused image.
+    PressureSweep,
+    /// Least-recently-used image first (max `last_use` over its layers).
+    Lru,
+    /// Least-popular image first (decayed arrival-frequency weights).
+    Popularity,
+    /// Image the layer-score plugin values least against the keep set.
+    ScorerKeepSet,
+    /// `PressureSweep` eviction + bind-time layer prefetch + orphan sweep.
+    Prefetch,
+}
+
+impl Default for CachePolicyChoice {
+    fn default() -> CachePolicyChoice {
+        CachePolicyChoice::PressureSweep
+    }
+}
+
+impl CachePolicyChoice {
+    /// Parse a `--cache-policy` flag value.
+    pub fn parse(s: &str) -> Option<CachePolicyChoice> {
+        match s {
+            "pressure" => Some(CachePolicyChoice::PressureSweep),
+            "lru" => Some(CachePolicyChoice::Lru),
+            "popularity" => Some(CachePolicyChoice::Popularity),
+            "scorer" => Some(CachePolicyChoice::ScorerKeepSet),
+            "prefetch" => Some(CachePolicyChoice::Prefetch),
+            _ => None,
+        }
+    }
+
+    /// The flag spelling (what [`CachePolicyChoice::parse`] accepts).
+    pub fn label(self) -> &'static str {
+        match self {
+            CachePolicyChoice::PressureSweep => "pressure",
+            CachePolicyChoice::Lru => "lru",
+            CachePolicyChoice::Popularity => "popularity",
+            CachePolicyChoice::ScorerKeepSet => "scorer",
+            CachePolicyChoice::Prefetch => "prefetch",
+        }
+    }
+
+    /// The policy implementation (stateless — all state is per-node).
+    pub fn policy(self) -> &'static dyn CachePolicy {
+        match self {
+            CachePolicyChoice::PressureSweep => &PressureSweep,
+            CachePolicyChoice::Lru => &Lru,
+            CachePolicyChoice::Popularity => &Popularity,
+            CachePolicyChoice::ScorerKeepSet => &ScorerKeepSet,
+            CachePolicyChoice::Prefetch => &Prefetch,
+        }
+    }
+
+    /// Every selectable policy, in flag order (for tests and benches).
+    pub fn all() -> [CachePolicyChoice; 5] {
+        [
+            CachePolicyChoice::PressureSweep,
+            CachePolicyChoice::Lru,
+            CachePolicyChoice::Popularity,
+            CachePolicyChoice::ScorerKeepSet,
+            CachePolicyChoice::Prefetch,
+        ]
+    }
+}
+
+/// Everything a policy may look at when scoring one eviction candidate.
+///
+/// One `VictimCtx` describes one cached image on one node at one event
+/// time; [`select_victim`] scores every candidate and applies the
+/// documented tie-break.
+pub struct VictimCtx<'a> {
+    /// The candidate image's layer set (empty if the image is unknown).
+    pub layers: &'a LayerSet,
+    /// Union of the layers of every *other* image cached on the node —
+    /// the keep set the scorer-informed policy protects.
+    pub others: &'a LayerSet,
+    /// The node's per-layer use metadata ([`crate::cluster::Node::cache_meta`]).
+    pub meta: &'a BTreeMap<LayerId, LayerUse>,
+    /// Shared layer interner (for sizes).
+    pub interner: &'a LayerInterner,
+    /// Virtual time of the GC event.
+    pub now: f64,
+    /// Popularity decay constant in seconds (`--cache-decay`).
+    pub decay: f64,
+}
+
+/// A deterministic eviction policy: scores candidates, lowest goes first.
+///
+/// Implementations must be pure functions of the [`VictimCtx`] — no
+/// interior state, no ambient time — so lanes and the sequential engine
+/// agree byte-for-byte.
+pub trait CachePolicy {
+    /// The policy's flag name (diagnostics).
+    fn name(&self) -> &'static str;
+
+    /// Score one eviction candidate; the candidate with the **lowest**
+    /// score is evicted first. `None` means "no preference": a policy
+    /// that returns `None` for every candidate keeps the original
+    /// insertion-order sweep. A policy must be consistent — either score
+    /// every candidate or none.
+    fn victim_score(&self, ctx: &VictimCtx<'_>) -> Option<f64>;
+
+    /// Whether GC may additionally reclaim *orphan* layers — layers on
+    /// the node that belong to no cached and no in-use image (only the
+    /// prefetch policy creates such layers).
+    fn sweeps_orphans(&self) -> bool {
+        false
+    }
+}
+
+/// The pre-policy behavior: first insertion-ordered unused image.
+pub struct PressureSweep;
+
+impl CachePolicy for PressureSweep {
+    fn name(&self) -> &'static str {
+        "pressure"
+    }
+
+    fn victim_score(&self, _ctx: &VictimCtx<'_>) -> Option<f64> {
+        None
+    }
+}
+
+/// Least-recently-used: an image is as fresh as its freshest layer.
+pub struct Lru;
+
+impl CachePolicy for Lru {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn victim_score(&self, ctx: &VictimCtx<'_>) -> Option<f64> {
+        // Layers with no metadata were never touched — treat as time 0,
+        // i.e. the coldest possible.
+        let mut last = 0.0f64;
+        for l in ctx.layers.iter() {
+            if let Some(u) = ctx.meta.get(&l) {
+                if u.last_use > last {
+                    last = u.last_use;
+                }
+            }
+        }
+        Some(last)
+    }
+}
+
+/// Arrival-frequency popularity, exponentially decayed at `--cache-decay`.
+pub struct Popularity;
+
+impl CachePolicy for Popularity {
+    fn name(&self) -> &'static str {
+        "popularity"
+    }
+
+    fn victim_score(&self, ctx: &VictimCtx<'_>) -> Option<f64> {
+        let mut score = 0.0f64;
+        for l in ctx.layers.iter() {
+            if let Some(u) = ctx.meta.get(&l) {
+                score += decayed(u.popularity, u.pop_at, ctx.now, ctx.decay);
+            }
+        }
+        Some(score)
+    }
+}
+
+/// Protect what the layer-score plugin values: candidates sharing little
+/// with the node's retained layers score low and are evicted first.
+pub struct ScorerKeepSet;
+
+impl CachePolicy for ScorerKeepSet {
+    fn name(&self) -> &'static str {
+        "scorer"
+    }
+
+    fn victim_score(&self, ctx: &VictimCtx<'_>) -> Option<f64> {
+        Some(crate::sched::layer_score::keep_set_score(ctx.layers, ctx.others, ctx.interner))
+    }
+}
+
+/// Bind-time prefetch: eviction stays the insertion-order sweep, but GC
+/// may reclaim orphaned prefetched layers under pressure.
+pub struct Prefetch;
+
+impl CachePolicy for Prefetch {
+    fn name(&self) -> &'static str {
+        "prefetch"
+    }
+
+    fn victim_score(&self, _ctx: &VictimCtx<'_>) -> Option<f64> {
+        None
+    }
+
+    fn sweeps_orphans(&self) -> bool {
+        true
+    }
+}
+
+/// A popularity weight decayed from `at` to `now` with time constant
+/// `decay` (seconds). Used both when scoring and when bumping weights so
+/// every reader sees the same value regardless of when it last wrote.
+pub fn decayed(weight: f64, at: f64, now: f64, decay: f64) -> f64 {
+    let dt = (now - at).max(0.0);
+    weight * (-dt / decay.max(1e-9)).exp()
+}
+
+/// Pick the eviction victim among `candidates` (one [`VictimCtx`] per
+/// cached-but-unused image, in the node's image insertion order).
+///
+/// Returns the index of the victim, or `None` when there are no
+/// candidates. If the policy declines to score (every score `None` —
+/// `PressureSweep`/`Prefetch`), the first candidate wins, reproducing the
+/// pre-policy insertion-order sweep exactly. Otherwise the lowest score
+/// wins; ties break on the candidate's lowest layer id, then on insertion
+/// order. The tie-break is deterministic and part of the policy contract
+/// (pinned by the unit tests below).
+pub fn select_victim(policy: &dyn CachePolicy, candidates: &[VictimCtx<'_>]) -> Option<usize> {
+    if candidates.is_empty() {
+        return None;
+    }
+    let scores: Vec<Option<f64>> = candidates.iter().map(|c| policy.victim_score(c)).collect();
+    if scores.iter().all(|s| s.is_none()) {
+        return Some(0);
+    }
+    let mut best: Option<(f64, LayerId, usize)> = None;
+    for (i, c) in candidates.iter().enumerate() {
+        let s = scores[i].unwrap_or(0.0);
+        let min_layer = c.layers.iter().next().unwrap_or(LayerId(u32::MAX));
+        let better = match best {
+            None => true,
+            Some((bs, bl, bi)) => {
+                s < bs || (s == bs && (min_layer < bl || (min_layer == bl && i < bi)))
+            }
+        };
+        if better {
+            best = Some((s, min_layer, i));
+        }
+    }
+    best.map(|(_, _, i)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(ids: &[u32]) -> LayerSet {
+        LayerSet::from_ids(&ids.iter().map(|&i| LayerId(i)).collect::<Vec<_>>())
+    }
+
+    fn meta_with(entries: &[(u32, f64, f64)]) -> BTreeMap<LayerId, LayerUse> {
+        entries
+            .iter()
+            .map(|&(id, last, pop)| {
+                (LayerId(id), LayerUse { last_use: last, popularity: pop, pop_at: 0.0 })
+            })
+            .collect()
+    }
+
+    fn ctxs<'a>(
+        sets: &'a [LayerSet],
+        others: &'a LayerSet,
+        meta: &'a BTreeMap<LayerId, LayerUse>,
+        interner: &'a LayerInterner,
+    ) -> Vec<VictimCtx<'a>> {
+        sets.iter()
+            .map(|layers| VictimCtx { layers, others, meta, interner, now: 0.0, decay: 300.0 })
+            .collect()
+    }
+
+    #[test]
+    fn pressure_sweep_takes_the_first_candidate() {
+        let interner = LayerInterner::new();
+        let sets = vec![set(&[5]), set(&[1]), set(&[3])];
+        let others = LayerSet::new();
+        let meta = BTreeMap::new();
+        let c = ctxs(&sets, &others, &meta, &interner);
+        assert_eq!(select_victim(&PressureSweep, &c), Some(0));
+        assert_eq!(select_victim(&Prefetch, &c), Some(0));
+        assert_eq!(select_victim(&PressureSweep, &[]), None);
+    }
+
+    #[test]
+    fn lru_evicts_the_stalest_image() {
+        let interner = LayerInterner::new();
+        let sets = vec![set(&[0]), set(&[1]), set(&[2])];
+        let others = LayerSet::new();
+        let meta = meta_with(&[(0, 30.0, 0.0), (1, 10.0, 0.0), (2, 20.0, 0.0)]);
+        let c = ctxs(&sets, &others, &meta, &interner);
+        assert_eq!(select_victim(&Lru, &c), Some(1), "layer 1 was used least recently");
+    }
+
+    #[test]
+    fn equal_lru_timestamps_break_on_lowest_layer_id() {
+        let interner = LayerInterner::new();
+        // Insertion order deliberately puts the higher layer ids first:
+        // the documented tie-break is lowest layer id, not position.
+        let sets = vec![set(&[7, 9]), set(&[2, 8]), set(&[4])];
+        let others = LayerSet::new();
+        let meta = meta_with(&[
+            (7, 50.0, 0.0),
+            (9, 50.0, 0.0),
+            (2, 50.0, 0.0),
+            (8, 50.0, 0.0),
+            (4, 50.0, 0.0),
+        ]);
+        let c = ctxs(&sets, &others, &meta, &interner);
+        assert_eq!(
+            select_victim(&Lru, &c),
+            Some(1),
+            "all timestamps equal: the image containing layer id 2 must go first"
+        );
+    }
+
+    #[test]
+    fn equal_popularity_breaks_on_lowest_layer_id_then_insertion() {
+        let interner = LayerInterner::new();
+        let sets = vec![set(&[6]), set(&[3]), set(&[3, 6])];
+        let others = LayerSet::new();
+        // Every layer equally popular, never decayed (pop_at == now == 0).
+        let meta = meta_with(&[(3, 0.0, 1.0), (6, 0.0, 1.0)]);
+        let c = ctxs(&sets, &others, &meta, &interner);
+        // Candidates 0 and 1 both score 1.0; candidate 2 scores 2.0.
+        // Between 0 and 1 the lowest layer id (3) wins.
+        assert_eq!(select_victim(&Popularity, &c), Some(1));
+        // With identical layer sets the insertion index decides.
+        let sets = vec![set(&[3]), set(&[3])];
+        let c = ctxs(&sets, &others, &meta, &interner);
+        assert_eq!(select_victim(&Popularity, &c), Some(0));
+    }
+
+    #[test]
+    fn popularity_decay_fades_old_hits() {
+        let w = 8.0;
+        assert_eq!(decayed(w, 0.0, 0.0, 300.0), 8.0);
+        let later = decayed(w, 0.0, 300.0, 300.0);
+        assert!((later - 8.0 / std::f64::consts::E).abs() < 1e-9);
+        // Clock can never run the weight *up*.
+        assert_eq!(decayed(w, 100.0, 50.0, 300.0), 8.0);
+    }
+
+    #[test]
+    fn untouched_layers_are_coldest_under_lru() {
+        let interner = LayerInterner::new();
+        let sets = vec![set(&[0]), set(&[1])];
+        let others = LayerSet::new();
+        let meta = meta_with(&[(0, 5.0, 0.0)]);
+        let c = ctxs(&sets, &others, &meta, &interner);
+        assert_eq!(select_victim(&Lru, &c), Some(1), "no metadata reads as never used");
+    }
+
+    #[test]
+    fn choice_parses_every_label() {
+        for choice in CachePolicyChoice::all() {
+            assert_eq!(CachePolicyChoice::parse(choice.label()), Some(choice));
+        }
+        assert_eq!(CachePolicyChoice::parse("fifo"), None);
+        assert_eq!(CachePolicyChoice::default(), CachePolicyChoice::PressureSweep);
+    }
+}

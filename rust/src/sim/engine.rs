@@ -36,6 +36,7 @@
 
 use super::arrivals::{ArrivalSource, VecSource};
 use super::bandwidth::LinkModel;
+use super::cache::{self, CachePolicyChoice};
 use super::clock::Clock;
 use super::download::PullManager;
 use super::events::{EventPayload, EventQueue};
@@ -47,7 +48,7 @@ use super::workload::{ChurnAction, ChurnConfig, ChurnModel};
 use crate::cluster::{
     ClusterState, EventKind, EventLog, Node, NodeId, Pod, PodId, Resources, NODE_SCOPE,
 };
-use crate::registry::{MetadataCache, Registry, Watcher};
+use crate::registry::{LayerId, LayerSet, MetadataCache, Registry, Watcher};
 use crate::sched::queue::{ParkCure, SchedulingQueue};
 use crate::sched::rl::{RlParams, RlScheduler};
 use crate::sched::scoring::ScoringBackend;
@@ -147,6 +148,15 @@ pub struct SimConfig {
     /// byte-identical report and event log (`docs/ARCHITECTURE.md`,
     /// "Sharded event lanes").
     pub shards: usize,
+    /// Kubelet image-GC eviction/prefetch policy ([`crate::sim::cache`]).
+    /// The default `PressureSweep` reproduces the pre-policy engine
+    /// byte-for-byte (it never reads the per-layer use metadata).
+    pub cache_policy: CachePolicyChoice,
+    /// Half-life-style decay window (seconds) for the time-aware cache
+    /// policies (popularity weighting, prefetch heat).
+    pub cache_decay_secs: f64,
+    /// Per-bind byte budget for the prefetch-on-intent cache policy.
+    pub cache_prefetch_bytes: Bytes,
 }
 
 impl Default for SimConfig {
@@ -170,6 +180,9 @@ impl Default for SimConfig {
             churn: None,
             wake_on_capacity: true,
             shards: 1,
+            cache_policy: CachePolicyChoice::PressureSweep,
+            cache_decay_secs: 300.0,
+            cache_prefetch_bytes: Bytes::from_mb(256.0),
         }
     }
 }
@@ -238,6 +251,14 @@ pub struct SimReport {
     pub omega_mid_used: u64,
     /// ω chosen per decision, in bind order (Fig. 3f).
     pub omega_trace: Vec<f64>,
+    /// Fraction of required image bytes served from the local layer cache
+    /// across all placements (0.0 when nothing was required).
+    pub cache_hit_rate: f64,
+    /// Total bytes evicted by kubelet image GC over the run.
+    pub evicted_bytes: Bytes,
+    /// Total bytes installed ahead of need by the prefetch-on-intent
+    /// cache policy (0 under every other policy).
+    pub prefetched_bytes: Bytes,
 }
 
 impl SimReport {
@@ -294,7 +315,7 @@ impl SimReport {
             "scheduler={} submitted={} started={} failed_pulls={} unschedulable={} \
              lost_to_crash={} retries={} resubmitted={} pulls_stalled={} peak_uploads={} \
              wakeups={} nodes_joined={} nodes_drained={} nodes_crashed={} omega1={} omega2={} \
-             omega_mid={}",
+             omega_mid={} cache_hit_rate={:?} evicted_mb={:?} prefetched_mb={:?}",
             self.scheduler,
             self.submitted,
             self.started,
@@ -312,6 +333,9 @@ impl SimReport {
             self.omega1_used,
             self.omega2_used,
             self.omega_mid_used,
+            self.cache_hit_rate,
+            self.evicted_bytes.as_mb(),
+            self.prefetched_bytes.as_mb(),
         );
         for r in &self.records {
             let _ = writeln!(
@@ -490,6 +514,16 @@ pub struct Simulation {
     /// Worker pool for sharded event lanes and scheduling fan-outs
     /// (None when `SimConfig::shards <= 1`).
     pool: Option<LanePool>,
+    /// Required-layer bytes served from the local cache so far (the hit
+    /// side of `SimReport::cache_hit_rate`).
+    cache_hit_bytes: Bytes,
+    /// Total required-layer bytes across all placements so far.
+    cache_required_bytes: Bytes,
+    /// Decayed per-layer demand observed at bind time — the prefetch
+    /// policy's heat map. Coordinator-only state (updated inside the
+    /// scheduling cycle), so it is shard-count-independent by
+    /// construction; empty under every other policy.
+    layer_heat: BTreeMap<LayerId, (f64, f64)>,
     /// Audit log of everything that happened.
     pub events: EventLog,
     /// Placement records (mirrored into the report).
@@ -561,6 +595,9 @@ impl Simulation {
             outage_until: 0.0,
             swarm: SwarmIndex::new(),
             pool: if cfg.shards > 1 { Some(LanePool::new(cfg.shards)) } else { None },
+            cache_hit_bytes: Bytes::ZERO,
+            cache_required_bytes: Bytes::ZERO,
+            layer_heat: BTreeMap::new(),
             events: EventLog::new(),
             records: Vec::new(),
             snapshots: Vec::new(),
@@ -896,6 +933,8 @@ impl Simulation {
             enabled: self.cfg.gc_enabled,
             high: self.cfg.gc_high_pct,
             low: self.cfg.gc_low_pct,
+            policy: self.cfg.cache_policy,
+            decay: self.cfg.cache_decay_secs,
         };
         let mut slot_effects: Vec<Option<LaneEffects>> = Vec::new();
         slot_effects.resize_with(w.n_slots, || None);
@@ -1207,6 +1246,26 @@ impl Simulation {
         );
         self.state.bind(pid, decision.node).expect("bind after schedule");
 
+        // Per-layer use metadata: stamp demand for the required layers on
+        // the chosen node. Maintained under every policy (the default
+        // PressureSweep simply never reads it, keeping its behaviour
+        // byte-identical to the pre-policy engine).
+        {
+            let decay = self.cfg.cache_decay_secs;
+            let node = self.state.node_mut(decision.node);
+            for l in required.iter() {
+                node.touch_layer(l, now, decay);
+            }
+        }
+        if self.cfg.cache_policy == CachePolicyChoice::Prefetch {
+            let decay = self.cfg.cache_decay_secs;
+            for l in required.iter() {
+                let e = self.layer_heat.entry(l).or_insert((0.0, 0.0));
+                e.0 = cache::decayed(e.0, e.1, now, decay) + 1.0;
+                e.1 = now;
+            }
+        }
+
         if self.cfg.p2p_lan_mbps.is_some() {
             self.swarm.sync(&self.state);
         }
@@ -1271,6 +1330,16 @@ impl Simulation {
         self.pending.insert(pid, pending);
         self.queue.push(ready_at, EventPayload::PullComplete { pod: pid });
 
+        // Cache-hit accounting: the required bytes not transferred (WAN or
+        // peer LAN) were already local on the chosen node.
+        let total_required = required.total_bytes(&self.state.interner);
+        self.cache_required_bytes += total_required;
+        self.cache_hit_bytes +=
+            total_required.saturating_sub(wan_bytes).saturating_sub(p2p_bytes);
+        if self.cfg.cache_policy == CachePolicyChoice::Prefetch {
+            self.prefetch_on_intent(now, decision.node, &required, wan_bytes + p2p_bytes);
+        }
+
         let std_after = metrics::cluster_std(&self.state);
         if let SchedImpl::Rl(s) = &mut self.scheduler {
             // Online reward: the paper's two objectives as one scalar.
@@ -1292,6 +1361,63 @@ impl Simulation {
         let every = self.cfg.snapshot_every.max(1);
         if self.records.len() % every == 0 {
             self.snapshots.push(metrics::snapshot(&self.state, now));
+        }
+    }
+
+    /// Prefetch-on-intent: at bind time, warm the hottest globally
+    /// demanded layers (decayed bind-frequency from `layer_heat`) onto the
+    /// chosen node, up to the configured byte budget and the disk headroom
+    /// left after the bound pod's own pending install. Runs on the
+    /// coordinator inside the scheduling cycle, so it is byte-identical at
+    /// every shard count by construction.
+    fn prefetch_on_intent(
+        &mut self,
+        now: f64,
+        node: NodeId,
+        required: &LayerSet,
+        pending_bytes: Bytes,
+    ) {
+        let decay = self.cfg.cache_decay_secs;
+        let n = self.state.node(node);
+        let headroom = n.disk_free().saturating_sub(pending_bytes);
+        let mut budget = self.cfg.cache_prefetch_bytes;
+        if headroom < budget {
+            budget = headroom;
+        }
+        if budget == Bytes::ZERO {
+            return;
+        }
+        // Hottest first; the layer id breaks ties so the order is total.
+        let mut hot: Vec<(LayerId, f64)> = self
+            .layer_heat
+            .iter()
+            .filter(|(l, _)| !required.contains(**l) && !n.layers.contains(**l))
+            .map(|(l, &(w, at))| (*l, cache::decayed(w, at, now, decay)))
+            .filter(|(_, h)| *h > 1e-12)
+            .collect();
+        hot.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        });
+        let mut picked: Vec<LayerId> = Vec::new();
+        let mut cost = Bytes::ZERO;
+        for (l, _) in hot {
+            let size = self.state.interner.size(l);
+            if size == Bytes::ZERO || cost + size > budget {
+                continue;
+            }
+            cost += size;
+            picked.push(l);
+        }
+        if picked.is_empty() {
+            return;
+        }
+        let (bytes, count) = self.state.prefetch_layers(node, &picked, now);
+        if count > 0 {
+            self.swarm.mark_dirty(node);
+            self.events
+                .record(now, NODE_SCOPE, EventKind::Prefetched { node, bytes, layers: count });
         }
     }
 
@@ -1329,7 +1455,15 @@ impl Simulation {
         if disk > 0.0 && used / disk > self.cfg.gc_high_pct {
             // Free down to the low-threshold usage.
             let target = Bytes((disk * (1.0 - self.cfg.gc_low_pct)) as u64);
-            let freed = kubelet::gc_images(&mut self.state, &self.images, node, target);
+            let freed = kubelet::gc_images(
+                &mut self.state,
+                &self.images,
+                node,
+                target,
+                self.cfg.cache_policy,
+                self.cfg.cache_decay_secs,
+                now,
+            );
             if freed > Bytes::ZERO {
                 self.swarm.mark_dirty(node);
                 self.events.record(
@@ -1353,7 +1487,15 @@ impl Simulation {
                 &self.state.interner,
             );
             if need > self.state.node(p.node).disk_free() {
-                let freed = kubelet::gc_images(&mut self.state, &self.images, p.node, need);
+                let freed = kubelet::gc_images(
+                    &mut self.state,
+                    &self.images,
+                    p.node,
+                    need,
+                    self.cfg.cache_policy,
+                    self.cfg.cache_decay_secs,
+                    now,
+                );
                 if freed > Bytes::ZERO {
                     self.swarm.mark_dirty(p.node);
                     self.events.record(
@@ -1368,6 +1510,12 @@ impl Simulation {
             Ok(_) => {
                 // The node now advertises the freshly installed layers.
                 self.swarm.mark_dirty(p.node);
+                {
+                    let node = self.state.node_mut(p.node);
+                    for l in p.layers.iter() {
+                        node.touch_layer_install(l, now);
+                    }
+                }
                 self.images.remember(&p.image, &p.layers);
                 self.outcomes.insert(p.pod, PodOutcome::Started);
                 self.events.record(
@@ -1532,6 +1680,21 @@ impl Simulation {
                 PodOutcome::Lost => lost += 1,
             }
         }
+        // Byte totals come from the single merged event log, so sequential
+        // and sharded runs tally eviction/prefetch identically.
+        let (mut evicted, mut prefetched) = (Bytes::ZERO, Bytes::ZERO);
+        for e in self.events.all() {
+            match e.kind {
+                EventKind::Evicted { bytes, .. } => evicted += bytes,
+                EventKind::Prefetched { bytes, .. } => prefetched += bytes,
+                _ => {}
+            }
+        }
+        let cache_hit_rate = if self.cache_required_bytes == Bytes::ZERO {
+            0.0
+        } else {
+            self.cache_hit_bytes.0 as f64 / self.cache_required_bytes.0 as f64
+        };
         SimReport {
             scheduler: self.cfg.scheduler.label(),
             records: self.records.clone(),
@@ -1553,6 +1716,9 @@ impl Simulation {
             omega2_used: w2,
             omega_mid_used: wmid,
             omega_trace: trace,
+            cache_hit_rate,
+            evicted_bytes: evicted,
+            prefetched_bytes: prefetched,
         }
     }
 }

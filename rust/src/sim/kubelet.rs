@@ -5,11 +5,12 @@
 //! (the paper's Fig. 3d counts deployable containers *without* eviction,
 //! so GC is off by default and exercised by the failure-injection tests).
 
+use super::cache::{self, CachePolicyChoice, VictimCtx};
 use super::download::{PullManager, PullPlan};
 use super::bandwidth::LinkModel;
 use super::p2p::Swarm;
 use crate::cluster::{ClusterState, Node, NodeId, Pod, PodId};
-use crate::registry::{ImageRef, LayerInterner, LayerSet};
+use crate::registry::{ImageRef, LayerId, LayerInterner, LayerSet};
 use crate::util::units::Bytes;
 use std::collections::{BTreeMap, HashMap};
 
@@ -186,15 +187,25 @@ impl ImageLayersSource for OverlayImages<'_> {
 /// out so the sharded engine's lanes (which own `&mut Node` slices and a
 /// read view of the pod table) evict exactly as the sequential engine
 /// does. Evicts images (and their now-unreferenced layers) that no
-/// running pod uses, oldest-first, until `free_target` bytes are free.
-/// Returns bytes freed.
+/// running pod uses until `free_target` bytes are free; the victim order
+/// is the [`CachePolicyChoice`]'s (`policy`): the default `PressureSweep`
+/// keeps the original oldest-first insertion order, the others score
+/// candidates against the node's [`crate::cluster::LayerUse`] metadata at
+/// virtual time `now` (`decay` is the popularity time constant). Under
+/// the prefetch policy a final pass reclaims *orphan* layers — layers
+/// referenced by no cached image and no in-use image (only prefetching
+/// creates those), lowest layer id first. Returns bytes freed.
 pub fn gc_images_node(
     node: &mut Node,
     pods: &BTreeMap<PodId, Pod>,
     interner: &LayerInterner,
     images: &dyn ImageLayersSource,
     free_target: Bytes,
+    policy: CachePolicyChoice,
+    decay: f64,
+    now: f64,
 ) -> Bytes {
+    let pol = policy.policy();
     let mut freed = Bytes::ZERO;
     loop {
         if node.disk_free() >= free_target {
@@ -207,12 +218,54 @@ pub fn gc_images_node(
             .filter_map(|p| pods.get(p))
             .map(|p| p.image.clone())
             .collect();
-        // Oldest cached image not in use (images Vec is insertion-ordered).
-        let victim = node.images.iter().find(|img| !in_use.contains(img)).cloned();
-        let victim = match victim {
-            Some(v) => v,
-            None => break, // everything in use; cannot free more
+        // Eviction candidates: cached images not in use, in insertion
+        // order (the PressureSweep order, and the tie-break of last
+        // resort for every other policy).
+        let candidates: Vec<ImageRef> =
+            node.images.iter().filter(|img| !in_use.contains(img)).cloned().collect();
+        if candidates.is_empty() {
+            break; // everything in use; cannot free more
+        }
+        let empty = LayerSet::new();
+        let sets: Vec<&LayerSet> =
+            candidates.iter().map(|img| images.layers_of(img).unwrap_or(&empty)).collect();
+        // The keep set per candidate (union of every *other* cached
+        // image's layers) is only consulted by the scorer-informed
+        // policy; skip the quadratic build otherwise.
+        let others: Vec<LayerSet> = if policy == CachePolicyChoice::ScorerKeepSet {
+            candidates
+                .iter()
+                .map(|victim| {
+                    let mut keep = LayerSet::new();
+                    for other in &node.images {
+                        if other == victim {
+                            continue;
+                        }
+                        if let Some(set) = images.layers_of(other) {
+                            keep.union_with(set);
+                        }
+                    }
+                    keep
+                })
+                .collect()
+        } else {
+            vec![LayerSet::new(); candidates.len()]
         };
+        let ctxs: Vec<VictimCtx<'_>> = (0..candidates.len())
+            .map(|i| VictimCtx {
+                layers: sets[i],
+                others: &others[i],
+                meta: &node.cache_meta,
+                interner,
+                now,
+                decay,
+            })
+            .collect();
+        let victim = match cache::select_victim(pol, &ctxs) {
+            Some(i) => candidates[i].clone(),
+            None => break,
+        };
+        drop(ctxs);
         // Layers of the victim that are not shared with any other cached
         // image on this node, resolved through the per-simulation image
         // store (the node only tracks the union of its layers).
@@ -231,20 +284,49 @@ pub fn gc_images_node(
         }
         node.images.retain(|i| i != &victim);
     }
+    if pol.sweeps_orphans() && node.disk_free() < free_target {
+        // Orphan pass: prefetched layers never claimed by an installed
+        // image (and not part of any in-use image, which may still be
+        // mid-pull) are reclaimable, lowest layer id first.
+        let mut covered = LayerSet::new();
+        for img in &node.images {
+            if let Some(set) = images.layers_of(img) {
+                covered.union_with(set);
+            }
+        }
+        for p in &node.pods {
+            if let Some(pod) = pods.get(p) {
+                if let Some(set) = images.layers_of(&pod.image) {
+                    covered.union_with(set);
+                }
+            }
+        }
+        let orphans: Vec<LayerId> = node.layers.difference_ids(&covered);
+        for l in orphans {
+            if node.disk_free() >= free_target {
+                break;
+            }
+            freed += crate::cluster::evict_layers_on(node, interner, &[l]);
+        }
+    }
     freed
 }
 
 /// Image GC: evict images (and their now-unreferenced layers) that no
-/// running pod uses, oldest-first, until `free_target` bytes are free.
-/// Returns bytes freed. (Delegates to [`gc_images_node`].)
+/// running pod uses, in the `policy`'s victim order, until `free_target`
+/// bytes are free. Returns bytes freed. (Delegates to
+/// [`gc_images_node`].)
 pub fn gc_images(
     state: &mut ClusterState,
     images: &ImageLayerStore,
     node: NodeId,
     free_target: Bytes,
+    policy: CachePolicyChoice,
+    decay: f64,
+    now: f64,
 ) -> Bytes {
     let (nodes, pods, interner) = state.lane_split();
-    gc_images_node(&mut nodes[node.0 as usize], pods, interner, images, free_target)
+    gc_images_node(&mut nodes[node.0 as usize], pods, interner, images, free_target, policy, decay, now)
 }
 
 #[cfg(test)]
@@ -388,7 +470,15 @@ mod tests {
         state.bind(pid, NodeId(0)).unwrap();
 
         let before = state.node(NodeId(0)).disk_used;
-        let freed = gc_images(&mut state, &images, NodeId(0), Bytes::from_gb(1.0));
+        let freed = gc_images(
+            &mut state,
+            &images,
+            NodeId(0),
+            Bytes::from_gb(1.0),
+            CachePolicyChoice::PressureSweep,
+            300.0,
+            0.0,
+        );
         assert!(freed > Bytes::ZERO);
         assert!(state.node(NodeId(0)).disk_used < before);
         assert!(!state.node(NodeId(0)).has_image(&redis.image_ref()));

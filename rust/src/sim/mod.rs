@@ -10,6 +10,7 @@
 
 pub mod arrivals;
 pub mod bandwidth;
+pub mod cache;
 pub mod clock;
 pub mod download;
 pub mod engine;
@@ -23,6 +24,7 @@ pub mod workload;
 
 pub use arrivals::{ArrivalSource, VecSource, WorkloadSource};
 pub use bandwidth::LinkModel;
+pub use cache::{CachePolicy, CachePolicyChoice};
 pub use clock::Clock;
 pub use download::PullManager;
 pub use engine::{SchedulerChoice, SimConfig, SimReport, Simulation};

@@ -33,6 +33,7 @@
 //! absorbed by idle workers without affecting outputs (claiming order
 //! never changes where a chunk's results land).
 
+use super::cache::CachePolicyChoice;
 use super::kubelet::{self, ImageLayerStore, OverlayImages, PendingStart};
 use crate::cluster::{install_image_on, EventKind, Node, Pod, PodId, Resources, NODE_SCOPE};
 use crate::cluster::NodeId;
@@ -330,6 +331,10 @@ pub(crate) struct GcParams {
     pub enabled: bool,
     pub high: f64,
     pub low: f64,
+    /// Eviction policy driving victim selection inside the kubelet GC.
+    pub policy: CachePolicyChoice,
+    /// Popularity half-life knob forwarded to time-aware policies.
+    pub decay: f64,
 }
 
 /// One node-local unit of work routed to a lane by the coordinator.
@@ -446,6 +451,9 @@ impl<'a> Shard<'a> {
                                 interner,
                                 &view,
                                 need,
+                                gc.policy,
+                                gc.decay,
+                                now,
                             );
                             if freed > Bytes::ZERO {
                                 eff.log.push((
@@ -459,6 +467,9 @@ impl<'a> Shard<'a> {
                     match install_image_on(&mut nodes[nidx], interner, &p.image, &p.layers) {
                         Ok(_) => {
                             overlay.push((p.image.clone(), p.layers.clone()));
+                            for l in p.layers.iter() {
+                                nodes[nidx].touch_layer_install(l, now);
+                            }
                             eff.remember = Some((p.image, p.layers));
                             eff.outcome = Some((p.pod, LaneOutcome::Started));
                             eff.log.push((
@@ -497,8 +508,9 @@ impl<'a> Shard<'a> {
                         if disk > 0.0 && used / disk > gc.high {
                             let target = Bytes((disk * (1.0 - gc.low)) as u64);
                             let view = OverlayImages::new(images, overlay);
-                            let freed =
-                                kubelet::gc_images_node(n, pods, interner, &view, target);
+                            let freed = kubelet::gc_images_node(
+                                n, pods, interner, &view, target, gc.policy, gc.decay, t,
+                            );
                             if freed > Bytes::ZERO {
                                 eff.log.push((
                                     t,
@@ -689,7 +701,13 @@ mod tests {
         };
 
         let images = ImageLayerStore::new();
-        let gc = GcParams { enabled: true, high: 0.85, low: 0.70 };
+        let gc = GcParams {
+            enabled: true,
+            high: 0.85,
+            low: 0.70,
+            policy: CachePolicyChoice::PressureSweep,
+            decay: 300.0,
+        };
         let (nodes, pods, interner) = state.lane_split();
         let mut shard = Shard::new(
             0,

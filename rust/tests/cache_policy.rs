@@ -1,0 +1,330 @@
+//! Differential suite for the pluggable image-cache policies:
+//!
+//! * the default `PressureSweep` policy must evict **exactly** like the
+//!   pre-policy engine — the reference below is a verbatim copy of the
+//!   old `gc_images_node` loop, and randomized scenarios must agree on
+//!   freed bytes, surviving images, surviving layers, and disk usage;
+//! * every policy must be byte-identical across shard counts and across
+//!   repeats under churn + the peer swarm;
+//! * the terminal-outcome accounting identity (`completed + failed_pulls
+//!   + unschedulable + lost_to_crash == submitted`) must hold under
+//!   every policy;
+//! * the recency (LRU) and popularity policies must strictly beat the
+//!   fixed pressure sweep on cache hit rate for a Zipf-skewed workload;
+//! * the prefetch-on-intent policy must actually warm layers without
+//!   breaking the cluster invariants.
+
+use lrsched::cluster::{evict_layers_on, ClusterState, Node, NodeId, PodBuilder, Resources};
+use lrsched::registry::{hub, ImageRef, LayerInterner, LayerSet, Registry};
+use lrsched::sim::kubelet::{gc_images, ImageLayerStore};
+use lrsched::sim::{
+    CachePolicyChoice, ChurnConfig, Popularity, SimConfig, SimReport, Simulation, WorkloadConfig,
+    WorkloadGen,
+};
+use lrsched::prop_assert;
+use lrsched::testing::prop::{check, PropConfig};
+use lrsched::util::units::{Bandwidth, Bytes};
+
+/// A fleet of disk-starved edge nodes (2 GB — a handful of corpus images)
+/// so kubelet GC actually churns the cache.
+fn small_disk_nodes(n: u32) -> Vec<Node> {
+    (0..n)
+        .map(|i| {
+            Node::new(
+                NodeId(i),
+                &format!("edge{:02}", i + 1),
+                Resources::cores_gb(4.0, 8.0),
+                Bytes::from_gb(2.0),
+                Bandwidth::from_mbps(10.0),
+            )
+        })
+        .collect()
+}
+
+/// Everything observable about a run: the full report plus the audit log.
+fn fingerprint(report: &SimReport, sim: &Simulation) -> String {
+    format!("{}\n---\n{}", report.render(), sim.events.render())
+}
+
+// ---------------------------------------------------------------------------
+// PressureSweep vs. the pre-policy engine
+// ---------------------------------------------------------------------------
+
+/// Verbatim copy of the pre-policy `gc_images_node` eviction loop
+/// (oldest-first insertion-order sweep), parameterized on the in-use
+/// image list it derived from the pod table. The default `PressureSweep`
+/// policy must reproduce it bit-for-bit on any node state.
+fn reference_pressure_sweep(
+    node: &mut Node,
+    in_use: &[ImageRef],
+    interner: &LayerInterner,
+    images: &ImageLayerStore,
+    free_target: Bytes,
+) -> Bytes {
+    let mut freed = Bytes::ZERO;
+    loop {
+        if node.disk_free() >= free_target {
+            break;
+        }
+        // Oldest cached image not in use (images Vec is insertion-ordered).
+        let victim = node.images.iter().find(|img| !in_use.contains(img)).cloned();
+        let victim = match victim {
+            Some(v) => v,
+            None => break, // everything in use; cannot free more
+        };
+        let mut shared_with_others = LayerSet::new();
+        for other in node.images.clone() {
+            if other == victim {
+                continue;
+            }
+            if let Some(set) = images.layers(&other) {
+                shared_with_others.union_with(set);
+            }
+        }
+        if let Some(victim_layers) = images.layers(&victim) {
+            let unique: Vec<_> = victim_layers.difference_ids(&shared_with_others);
+            freed += evict_layers_on(node, interner, &unique);
+        }
+        node.images.retain(|i| i != &victim);
+    }
+    freed
+}
+
+#[test]
+fn pressure_sweep_matches_the_pre_policy_reference() {
+    let cases = PropConfig::default();
+    let cases = PropConfig { cases: cases.cases.clamp(24, 96), ..cases };
+    check(cases, |rng, _| {
+        // A random cached-image scenario on one disk-starved node: random
+        // install order, random in-use subset, random use metadata (which
+        // PressureSweep must ignore), random free target.
+        let mut state = ClusterState::new();
+        state.add_node(Node::new(
+            NodeId(0),
+            "edge01",
+            Resources::cores_gb(8.0, 16.0),
+            Bytes::from_mb(rng.f64_range(600.0, 3000.0)),
+            Bandwidth::from_mbps(10.0),
+        ));
+        let corpus = hub::corpus();
+        let mut images = ImageLayerStore::new();
+        let mut installed: Vec<usize> = Vec::new();
+        for _ in 0..rng.range(2, corpus.len()) {
+            let idx = rng.range(0, corpus.len());
+            let m = &corpus[idx];
+            let (_, layers) = state.intern_image(m);
+            if state.install_image(NodeId(0), &m.image_ref(), &layers).is_ok() {
+                images.remember(&m.image_ref(), &layers);
+                if !installed.contains(&idx) {
+                    installed.push(idx);
+                }
+                // Scribble use metadata; the sweep must never read it.
+                let t = rng.f64_range(0.0, 500.0);
+                for l in layers.iter() {
+                    state.node_mut(NodeId(0)).touch_layer(l, t, 300.0);
+                }
+            }
+        }
+        let mut builder = PodBuilder::new();
+        let mut in_use: Vec<ImageRef> = Vec::new();
+        for &idx in &installed {
+            if rng.chance(0.4) {
+                let m = &corpus[idx];
+                let pod = builder
+                    .build(&format!("{}:{}", m.name, m.tag), Resources::cores_gb(0.1, 0.1));
+                let pid = state.submit_pod(pod);
+                state.bind(pid, NodeId(0)).unwrap();
+                in_use.push(m.image_ref());
+            }
+        }
+        let free_target = Bytes::from_mb(rng.f64_range(0.0, 2500.0));
+
+        let mut ref_node = state.node(NodeId(0)).clone();
+        let ref_freed =
+            reference_pressure_sweep(&mut ref_node, &in_use, &state.interner, &images, free_target);
+        let freed = gc_images(
+            &mut state,
+            &images,
+            NodeId(0),
+            free_target,
+            CachePolicyChoice::PressureSweep,
+            rng.f64_range(1.0, 600.0), // decay must be irrelevant
+            rng.f64_range(0.0, 1000.0), // and so must `now`
+        );
+
+        let node = state.node(NodeId(0));
+        prop_assert!(
+            freed == ref_freed,
+            "freed bytes diverged from the pre-policy sweep: {} vs {} MB",
+            freed.as_mb(),
+            ref_freed.as_mb()
+        );
+        prop_assert!(node.images == ref_node.images, "surviving image list diverged");
+        prop_assert!(
+            node.layers.iter().collect::<Vec<_>>() == ref_node.layers.iter().collect::<Vec<_>>(),
+            "surviving layer set diverged"
+        );
+        prop_assert!(
+            node.disk_used == ref_node.disk_used,
+            "disk accounting diverged: {} vs {} MB",
+            node.disk_used.as_mb(),
+            ref_node.disk_used.as_mb()
+        );
+        state.check_invariants().expect("cluster invariants");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level byte-identity
+// ---------------------------------------------------------------------------
+
+/// A 90-pod skewed workload on six disk-starved nodes with GC, the peer
+/// swarm, and churn (a join, a drain, a crash, and a registry outage) all
+/// on — the adversarial scenario every policy must survive unchanged
+/// across shard counts and repeats. `policy: None` leaves the config at
+/// its default (which must be `PressureSweep`).
+fn churny_run(policy: Option<CachePolicyChoice>, shards: usize) -> (SimReport, String) {
+    let registry = Registry::with_corpus();
+    let wl = WorkloadConfig {
+        seed: 61,
+        popularity: Popularity::Zipf(1.2),
+        duration_range: Some((15.0, 120.0)),
+        ..Default::default()
+    };
+    let trace = WorkloadGen::new(&registry, wl).trace(90);
+    let mut cfg = SimConfig::default();
+    cfg.inter_arrival_secs = Some(0.4);
+    cfg.gc_enabled = true;
+    cfg.retry_limit = 10;
+    cfg.snapshot_every = 10;
+    cfg.shards = shards;
+    cfg.p2p_lan_mbps = Some(125.0);
+    cfg.p2p_seeder_cap = 4;
+    cfg.churn = Some(ChurnConfig {
+        seed: 5,
+        horizon_secs: 100.0,
+        joins: 1,
+        drains: 1,
+        crash_fraction: 0.2,
+        outages: 1,
+        outage_secs: 15.0,
+        ..Default::default()
+    });
+    if let Some(p) = policy {
+        cfg.cache_policy = p;
+    }
+    let mut sim = Simulation::new(small_disk_nodes(6), registry, cfg);
+    let report = sim.run_trace(trace);
+    sim.state.check_invariants().expect("cluster invariants");
+    let fp = fingerprint(&report, &sim);
+    (report, fp)
+}
+
+#[test]
+fn default_config_runs_the_pressure_sweep_policy() {
+    assert_eq!(SimConfig::default().cache_policy, CachePolicyChoice::PressureSweep);
+    let (_, implicit) = churny_run(None, 1);
+    let (_, explicit) = churny_run(Some(CachePolicyChoice::PressureSweep), 1);
+    assert!(
+        implicit.contains("Evicted"),
+        "the anchor scenario must exercise GC eviction to be meaningful"
+    );
+    assert!(
+        implicit == explicit,
+        "an untouched SimConfig must behave exactly like explicit PressureSweep"
+    );
+}
+
+#[test]
+fn every_policy_is_byte_identical_across_shards_and_repeats() {
+    for policy in CachePolicyChoice::all() {
+        let (report, seq) = churny_run(Some(policy), 1);
+        let (_, par) = churny_run(Some(policy), 4);
+        let (_, par2) = churny_run(Some(policy), 4);
+        assert!(
+            report.accounting_balanced(),
+            "accounting identity violated under {policy:?}"
+        );
+        assert!(
+            seq == par,
+            "shards=4 diverged from sequential under {policy:?}\nfirst differing line: {:?}",
+            seq.lines().zip(par.lines()).find(|(a, b)| a != b),
+        );
+        assert!(par == par2, "sharded run not reproducible under {policy:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hit-rate differential on a skewed workload
+// ---------------------------------------------------------------------------
+
+/// A Zipf-1.5 workload (a few images dominate arrivals) with short pod
+/// lifetimes on disk-starved nodes: the cache churns constantly, so the
+/// eviction order is what decides how many required bytes are already
+/// local at bind time.
+fn zipf_run(policy: CachePolicyChoice) -> SimReport {
+    let registry = Registry::with_corpus();
+    let wl = WorkloadConfig {
+        seed: 99,
+        popularity: Popularity::Zipf(1.5),
+        duration_range: Some((5.0, 30.0)),
+        ..Default::default()
+    };
+    let trace = WorkloadGen::new(&registry, wl).trace(600);
+    let mut cfg = SimConfig::default();
+    cfg.inter_arrival_secs = Some(0.5);
+    cfg.gc_enabled = true;
+    cfg.retry_limit = 10;
+    cfg.snapshot_every = 50;
+    cfg.cache_policy = policy;
+    let mut sim = Simulation::new(small_disk_nodes(6), registry, cfg);
+    let report = sim.run_trace(trace);
+    sim.state.check_invariants().expect("cluster invariants");
+    assert!(report.accounting_balanced(), "accounting identity violated under {policy:?}");
+    report
+}
+
+#[test]
+fn recency_and_popularity_beat_the_fixed_sweep_on_skewed_workloads() {
+    let sweep = zipf_run(CachePolicyChoice::PressureSweep);
+    assert!(
+        sweep.evicted_bytes > Bytes::ZERO,
+        "the scenario must actually evict for the policies to differ"
+    );
+    let lru = zipf_run(CachePolicyChoice::Lru);
+    let pop = zipf_run(CachePolicyChoice::Popularity);
+    assert!(
+        lru.cache_hit_rate > sweep.cache_hit_rate,
+        "LRU hit rate {:.4} must strictly beat the pressure sweep's {:.4}",
+        lru.cache_hit_rate,
+        sweep.cache_hit_rate
+    );
+    assert!(
+        pop.cache_hit_rate > sweep.cache_hit_rate,
+        "popularity hit rate {:.4} must strictly beat the pressure sweep's {:.4}",
+        pop.cache_hit_rate,
+        sweep.cache_hit_rate
+    );
+}
+
+#[test]
+fn prefetch_policy_warms_layers_and_stays_consistent() {
+    let report = zipf_run(CachePolicyChoice::Prefetch);
+    assert!(
+        report.prefetched_bytes > Bytes::ZERO,
+        "prefetch-on-intent never fired on a skewed workload"
+    );
+    assert!(
+        (0.0..=1.0).contains(&report.cache_hit_rate),
+        "hit rate {} out of range",
+        report.cache_hit_rate
+    );
+}
+
+#[test]
+fn scorer_keep_set_policy_runs_clean_on_skewed_workloads() {
+    let report = zipf_run(CachePolicyChoice::ScorerKeepSet);
+    assert!(report.evicted_bytes > Bytes::ZERO, "scorer policy never evicted");
+    assert!((0.0..=1.0).contains(&report.cache_hit_rate));
+}

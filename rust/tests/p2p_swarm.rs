@@ -5,8 +5,9 @@
 //! runs under churn; seeder-cap saturation forcing registry fallback
 //! (and the cap invariant: no seeder ever serves more than C concurrent
 //! uploads); a crash mid-seed on either end of a peer transfer releasing
-//! its bookings; and a registry-outage run that completes via peers
-//! without a single stalled pull.
+//! its bookings; a registry-outage run that completes via peers
+//! without a single stalled pull; and GC eviction on the last seeder
+//! dropping the layers from the swarm index (registry fallback).
 
 use lrsched::cluster::{EventKind, Node, NodeId, Pod, PodBuilder, PodId, Resources};
 use lrsched::registry::{hub, Registry};
@@ -285,4 +286,50 @@ fn registry_outage_is_survivable_when_peers_hold_the_layers() {
     );
     assert_eq!(swarm.records[1].download, Bytes::ZERO, "no WAN bytes during the outage");
     assert!(swarm.records[1].p2p > Bytes::ZERO);
+}
+
+#[test]
+fn evicting_the_last_seeder_drops_its_layers_from_the_swarm_index() {
+    // Cache-policy GC can evict an image from the only node seeding it;
+    // the swarm index must stop advertising those layers so the next
+    // pull plan falls back to the registry instead of booking a transfer
+    // from a node that no longer holds the bytes.
+    use lrsched::cluster::ClusterState;
+    use lrsched::sim::{plan_sources, LinkModel, SwarmIndex};
+
+    let mut state = ClusterState::new();
+    for n in nodes(2) {
+        state.add_node(n);
+    }
+    let redis = hub::corpus().into_iter().find(|m| m.name == "redis" && m.tag == "7.2").unwrap();
+    let (ids, layers) = state.intern_image(&redis);
+    state.install_image(NodeId(1), &redis.image_ref(), &layers).unwrap();
+    let mut ix = SwarmIndex::new();
+    ix.sync(&state);
+
+    // Seeded: every missing layer rides the LAN.
+    let mut links = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 2]);
+    let plan = plan_sources(
+        &state, &ix, &mut links, Bandwidth::from_mbps(125.0), 16, NodeId(0), &ids, 0.0,
+    );
+    assert_eq!(plan.peer_layers.len(), ids.len(), "warm seeder must serve every layer");
+    assert_eq!(plan.registry_bytes, Bytes::ZERO);
+
+    // GC evicts the image from its last seeder; the kubelet marks the
+    // node dirty exactly as the engine's eviction path does.
+    state.remove_image(NodeId(1), &redis.image_ref());
+    state.evict_layers(NodeId(1), &ids);
+    ix.mark_dirty(NodeId(1));
+    ix.sync(&state);
+
+    let mut links = LinkModel::new(vec![Bandwidth::from_mbps(10.0); 2]);
+    let plan = plan_sources(
+        &state, &ix, &mut links, Bandwidth::from_mbps(125.0), 16, NodeId(0), &ids, 0.0,
+    );
+    assert!(
+        plan.peer_layers.is_empty(),
+        "evicted layers still advertised by the drained seeder"
+    );
+    assert_eq!(plan.peer_bytes, Bytes::ZERO);
+    assert_eq!(plan.registry_bytes, redis.total_size, "plan must fall back to the registry");
 }

@@ -516,6 +516,90 @@ fn json_roundtrips_random_documents() {
 }
 
 #[test]
+fn gc_never_evicts_in_use_layers_under_any_policy() {
+    // Whatever the cache policy picks as victims, a layer required by an
+    // image of a bound (running or still-pulling) pod must survive GC,
+    // and disk usage must respect capacity (Eq. 6) afterwards.
+    use lrsched::cluster::{ClusterState, Node};
+    use lrsched::sim::kubelet::{gc_images, ImageLayerStore};
+    use lrsched::sim::CachePolicyChoice;
+    use lrsched::util::units::Bandwidth;
+
+    check(PropConfig { cases: 48, ..Default::default() }, |rng, _| {
+        let policies = CachePolicyChoice::all();
+        let policy = policies[rng.range(0, policies.len())];
+        let mut state = ClusterState::new();
+        state.add_node(Node::new(
+            NodeId(0),
+            "edge01",
+            Resources::cores_gb(8.0, 16.0),
+            Bytes::from_mb(rng.f64_range(600.0, 3000.0)),
+            Bandwidth::from_mbps(10.0),
+        ));
+        let corpus = hub::corpus();
+        let mut images = ImageLayerStore::new();
+        let mut installed: Vec<usize> = Vec::new();
+        for _ in 0..rng.range(2, corpus.len()) {
+            let idx = rng.range(0, corpus.len());
+            let m = &corpus[idx];
+            let (_, layers) = state.intern_image(m);
+            if state.install_image(NodeId(0), &m.image_ref(), &layers).is_ok() {
+                images.remember(&m.image_ref(), &layers);
+                if !installed.contains(&idx) {
+                    installed.push(idx);
+                }
+                let t = rng.f64_range(0.0, 500.0);
+                for l in layers.iter() {
+                    state.node_mut(NodeId(0)).touch_layer(l, t, 300.0);
+                }
+            }
+        }
+        // Bind a random subset: their layers become untouchable.
+        let mut builder = PodBuilder::new();
+        let mut protected = LayerSet::new();
+        let mut in_use: Vec<usize> = Vec::new();
+        for &idx in &installed {
+            if rng.chance(0.4) {
+                let m = &corpus[idx];
+                let pod = builder
+                    .build(&format!("{}:{}", m.name, m.tag), Resources::cores_gb(0.1, 0.1));
+                let pid = state.submit_pod(pod);
+                state.bind(pid, NodeId(0)).unwrap();
+                let (_, layers) = state.intern_image(m);
+                protected.union_with(&layers);
+                in_use.push(idx);
+            }
+        }
+        let free_target = Bytes::from_mb(rng.f64_range(0.0, 3000.0));
+        gc_images(
+            &mut state,
+            &images,
+            NodeId(0),
+            free_target,
+            policy,
+            rng.f64_range(1.0, 600.0),
+            rng.f64_range(0.0, 1000.0),
+        );
+        let node = state.node(NodeId(0));
+        for l in protected.iter() {
+            prop_assert!(
+                node.layers.contains(l),
+                "{policy:?} evicted layer {l:?} required by a bound pod"
+            );
+        }
+        for &idx in &in_use {
+            prop_assert!(
+                node.has_image(&corpus[idx].image_ref()),
+                "{policy:?} evicted an image a bound pod is using"
+            );
+        }
+        prop_assert!(node.disk_used <= node.disk, "GC left disk over capacity");
+        state.check_invariants()?;
+        Ok(())
+    });
+}
+
+#[test]
 fn bind_unbind_sequences_keep_state_consistent() {
     check(PropConfig { cases: 24, ..Default::default() }, |rng, _| {
         let mut state = fixtures::uniform_cluster(rng.range(1, 5) as u32);
