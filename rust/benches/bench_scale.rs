@@ -44,9 +44,10 @@ use lrsched::registry::{hub, Registry};
 use lrsched::sched::lrscheduler::build_inputs;
 use lrsched::sched::scoring::ScoreArena;
 use lrsched::sched::{default_framework, CycleContext, NativeScorer, ScoringBackend, WeightParams};
+use lrsched::serve::Session;
 use lrsched::sim::{
-    trace, ArrivalSource, CachePolicyChoice, ChurnConfig, Popularity, SchedulerChoice, SimConfig,
-    SimReport, Simulation, TraceOptions, TraceReplay, WorkloadConfig, WorkloadGen,
+    trace, ArrivalSource, CachePolicyChoice, ChurnConfig, ErrorMode, Popularity, SchedulerChoice,
+    SimConfig, SimReport, Simulation, TraceOptions, TraceReplay, WorkloadConfig, WorkloadGen,
 };
 use lrsched::testing::bench::{bench, header};
 use lrsched::testing::fixtures;
@@ -571,6 +572,73 @@ fn main() {
             higher_is_better: false,
         });
     }
+
+    // --- serve mode: online decision latency on a 10k-node fleet ---------
+    // The `lrsched serve` hot path: one pod event in through
+    // Session::submit_pod, one decision line out, on a fleet two orders
+    // of magnitude past the paper's testbed. Reports sustained
+    // decisions/sec plus per-decision p50/p99 wall latency — the numbers
+    // docs/SERVE.md quotes as the sizing guidance.
+    let serve_nodes = 10_000;
+    let serve_pods = if full { 10_000 } else { 2_000 };
+    let registry = Registry::with_corpus();
+    let serve_trace = WorkloadGen::new(
+        &registry,
+        WorkloadConfig {
+            seed: 42,
+            popularity: Popularity::Zipf(1.1),
+            duration_range: Some((30.0, 300.0)),
+            ..Default::default()
+        },
+    )
+    .trace(serve_pods);
+    let mut cfg = SimConfig::default();
+    cfg.scheduler = SchedulerChoice::LR;
+    cfg.inter_arrival_secs = Some(0.3);
+    cfg.gc_enabled = true;
+    cfg.retry_limit = 10;
+    cfg.snapshot_every = 1000;
+    let mut serve_sim = Simulation::new(common::scale_nodes(serve_nodes), registry, cfg)
+        .with_backend(Box::new(NativeScorer));
+    let wall0 = Instant::now();
+    let mut session = Session::new(
+        &mut serve_sim,
+        ErrorMode::Strict,
+        Box::new(move || wall0.elapsed().as_micros() as u64),
+    );
+    let mut out: Vec<String> = Vec::with_capacity(serve_pods + 1);
+    let mut lat_us: Vec<u64> = Vec::with_capacity(serve_pods);
+    let t0 = Instant::now();
+    for (i, pod) in serve_trace.into_iter().enumerate() {
+        let s = Instant::now();
+        session.submit_pod(i as f64 * 0.3, pod, &mut out);
+        lat_us.push(s.elapsed().as_micros() as u64);
+    }
+    let sreport = session.finish(&mut out);
+    let serve_wall = t0.elapsed().as_secs_f64();
+    let decisions = session.stats.decisions;
+    assert!(sreport.accounting_balanced(), "serve run dropped events");
+    assert_eq!(out.len(), decisions + 1, "decision lines + one summary");
+    assert!(
+        decisions >= serve_pods / 2,
+        "a 10k-node fleet should bind most of {serve_pods} pods, got {decisions} decisions"
+    );
+    lat_us.sort_unstable();
+    let pct = |p: usize| lat_us[(lat_us.len() * p / 100).min(lat_us.len() - 1)];
+    let (p50, p99) = (pct(50), pct(99));
+    println!(
+        "serve engine: {serve_pods} pod events / {serve_nodes} nodes in {serve_wall:.2}s wall \
+         ({:.0} decisions/s), decision latency p50={p50} µs p99={p99} µs",
+        decisions as f64 / serve_wall.max(1e-9),
+    );
+    modes.push(Mode {
+        name: "serve_decisions",
+        value: decisions as f64 / serve_wall.max(1e-9),
+        unit: "decisions/sec",
+        higher_is_better: true,
+    });
+    modes.push(Mode { name: "serve_p50_us", value: p50 as f64, unit: "us", higher_is_better: false });
+    modes.push(Mode { name: "serve_p99_us", value: p99 as f64, unit: "us", higher_is_better: false });
 
     // --- JSON report + regression gate -----------------------------------
     if let Some(path) = args.get("json") {

@@ -137,6 +137,304 @@ pub fn usage(cmd: &str, about: &str, spec: &[OptSpec]) -> String {
     s
 }
 
+/// The option specs for every `lrsched` subcommand, library-resident so
+/// the docs-drift gate (`rust/tests/docs_complete.rs`) can enumerate the
+/// real flag surface instead of a hand-maintained list. `main.rs` builds
+/// its parsers and usage text from these; adding a flag here without
+/// documenting it in `docs/SCALE.md` or `docs/SERVE.md` fails CI.
+pub mod specs {
+    use super::OptSpec;
+
+    /// Options shared by the paper-experiment subcommands
+    /// (`fig3`/`fig4`/`fig5`/`table1`, and the base of `simulate`).
+    pub fn common() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "seed", help: "workload RNG seed", default: Some("42") },
+            OptSpec { name: "pods", help: "number of pods in the trace", default: Some("20") },
+            OptSpec { name: "nodes", help: "worker node count (1-5)", default: Some("4") },
+            OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
+        ]
+    }
+
+    /// `lrsched simulate` options.
+    pub fn simulate() -> Vec<OptSpec> {
+        let mut s = common();
+        s.push(OptSpec {
+            name: "scheduler",
+            help: "default|layer|lr|rl",
+            default: Some("lr"),
+        });
+        s.push(OptSpec {
+            name: "backend",
+            help: "native|xla (xla loads artifacts/ via PJRT)",
+            default: Some("native"),
+        });
+        s.push(OptSpec {
+            name: "bandwidth",
+            help: "per-node bandwidth MB/s",
+            default: Some("10"),
+        });
+        s.push(OptSpec {
+            name: "arrival",
+            help: "seconds between arrivals (0 = sequential)",
+            default: Some("0"),
+        });
+        s.push(OptSpec { name: "gc", help: "enable kubelet image GC", default: None });
+        s.push(OptSpec {
+            name: "p2p-lan",
+            help: "peer layer-transfer LAN bandwidth MB/s (0 = off)",
+            default: Some("0"),
+        });
+        s
+    }
+
+    /// `lrsched scale` options.
+    pub fn scale() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "seed", help: "workload RNG seed", default: Some("42") },
+            OptSpec { name: "pods", help: "number of pods in the trace", default: Some("100000") },
+            OptSpec { name: "nodes", help: "edge node count", default: Some("64") },
+            OptSpec {
+                name: "disk-gb",
+                help: "per-node disk capacity in GB (small disks put image GC \
+                       and the cache policies on the hot path)",
+                default: Some("64"),
+            },
+            OptSpec { name: "scheduler", help: "default|layer|lr|rl", default: Some("lr") },
+            OptSpec {
+                name: "backend",
+                help: "native|dense (dense drives the reused-arena scoring path)",
+                default: Some("native"),
+            },
+            OptSpec { name: "arrival", help: "seconds between arrivals", default: Some("0.3") },
+            OptSpec { name: "duration-min", help: "min pod lifetime (s)", default: Some("30") },
+            OptSpec { name: "duration-max", help: "max pod lifetime (s)", default: Some("300") },
+            OptSpec {
+                name: "zipf",
+                help: "image-popularity Zipf exponent (0 = uniform)",
+                default: Some("1.1"),
+            },
+            OptSpec {
+                name: "trace",
+                help: "replay a real cluster-trace CSV instead of the synthetic Zipf \
+                       workload (disables --pods/--zipf/--duration-*/--arrival)",
+                default: Some(""),
+            },
+            OptSpec {
+                name: "trace-format",
+                help: "alibaba|azure|borg (see docs/SCALE.md)",
+                default: Some("alibaba"),
+            },
+            OptSpec {
+                name: "trace-speedup",
+                help: "divide trace arrival offsets and durations by this factor",
+                default: Some("1"),
+            },
+            OptSpec {
+                name: "trace-limit",
+                help: "ingest at most N trace events, in file order (0 = all); the \
+                       rest of the file is not read or inflated",
+                default: Some("0"),
+            },
+            OptSpec {
+                name: "trace-strict",
+                help: "reject malformed/out-of-order/duplicate rows instead of repairing",
+                default: None,
+            },
+            OptSpec {
+                name: "trace-reorder",
+                help: "lenient-mode reorder-buffer capacity in events (bounds \
+                       streaming-replay memory; disorder beyond it falls back to a \
+                       whole-trace sort)",
+                default: Some("65536"),
+            },
+            OptSpec {
+                name: "retry-limit",
+                help: "retries before a pod is unschedulable",
+                default: Some("10"),
+            },
+            OptSpec { name: "backoff", help: "scheduling-queue back-off (s)", default: Some("5") },
+            OptSpec {
+                name: "snapshot-every",
+                help: "snapshot cadence (placements)",
+                default: Some("1000"),
+            },
+            OptSpec {
+                name: "shards",
+                help: "per-node event lanes (N worker threads; report is \
+                       byte-identical for every N)",
+                default: Some("1"),
+            },
+            OptSpec {
+                name: "report-out",
+                help: "write the full report fingerprint to this file",
+                default: Some(""),
+            },
+            OptSpec {
+                name: "events-out",
+                help: "write the event log (one line per record) to this file",
+                default: Some(""),
+            },
+            OptSpec { name: "no-gc", help: "disable kubelet image GC", default: None },
+            OptSpec {
+                name: "p2p",
+                help: "enable peer-swarm layer sharing: missing layers cached on \
+                       Ready peers transfer over the LAN instead of the registry WAN",
+                default: None,
+            },
+            OptSpec {
+                name: "p2p-lan",
+                help: "peer layer-transfer LAN bandwidth MB/s (with --p2p)",
+                default: Some("125"),
+            },
+            OptSpec {
+                name: "p2p-seeder-cap",
+                help: "max concurrent uploads one seeder serves; saturated layers \
+                       fall back to the registry (with --p2p)",
+                default: Some("4"),
+            },
+            OptSpec {
+                name: "churn",
+                help: "enable cluster volatility: node joins/drains/crashes + a registry \
+                       outage window (e.g. `lrsched scale --churn`)",
+                default: None,
+            },
+            OptSpec {
+                name: "churn-seed",
+                help: "churn RNG seed (defaults to --seed)",
+                default: Some(""),
+            },
+            OptSpec { name: "churn-joins", help: "nodes joining mid-trace", default: Some("3") },
+            OptSpec { name: "churn-drains", help: "nodes drained mid-trace", default: Some("2") },
+            OptSpec {
+                name: "churn-crash-frac",
+                help: "fraction of the initial fleet that crashes",
+                default: Some("0.05"),
+            },
+            OptSpec { name: "churn-outages", help: "registry outage windows", default: Some("1") },
+            OptSpec {
+                name: "churn-outage-secs",
+                help: "outage window length (s)",
+                default: Some("60"),
+            },
+            OptSpec {
+                name: "no-wake",
+                help: "disable capacity-driven wake-ups (fixed back-off timers only)",
+                default: None,
+            },
+            OptSpec {
+                name: "cache-policy",
+                help: "pressure|lru|popularity|scorer|prefetch (kubelet image-GC \
+                       eviction/prefetch policy; see docs/SCALE.md)",
+                default: Some("pressure"),
+            },
+            OptSpec {
+                name: "cache-decay",
+                help: "popularity half-life time constant in seconds (lru/popularity/\
+                       prefetch recency decay)",
+                default: Some("300"),
+            },
+            OptSpec {
+                name: "cache-prefetch-mb",
+                help: "per-intent prefetch budget in MB (with --cache-policy prefetch)",
+                default: Some("256"),
+            },
+            OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
+        ]
+    }
+
+    /// `lrsched serve` options (`docs/SERVE.md` is the operator's guide).
+    pub fn serve() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "nodes", help: "edge node count for the live fleet", default: Some("8") },
+            OptSpec { name: "disk-gb", help: "per-node disk capacity in GB", default: Some("64") },
+            OptSpec { name: "scheduler", help: "default|layer|lr|rl", default: Some("lr") },
+            OptSpec {
+                name: "seed",
+                help: "registry-synthesis seed for --shadow replays",
+                default: Some("42"),
+            },
+            OptSpec {
+                name: "retry-limit",
+                help: "retries before a pod is unschedulable",
+                default: Some("10"),
+            },
+            OptSpec { name: "backoff", help: "scheduling-queue back-off (s)", default: Some("5") },
+            OptSpec { name: "no-gc", help: "disable kubelet image GC", default: None },
+            OptSpec {
+                name: "strict",
+                help: "abort on the first malformed or out-of-order line with its line \
+                       number (default: skip it, count it, emit an error object)",
+                default: None,
+            },
+            OptSpec {
+                name: "listen",
+                help: "serve the protocol over HTTP on this localhost address \
+                       (e.g. 127.0.0.1:7473) instead of stdin",
+                default: Some(""),
+            },
+            OptSpec {
+                name: "shadow",
+                help: "replay this trace CSV through the serve path and verify the \
+                       decision stream is byte-identical to the batch `scale --trace` \
+                       replay",
+                default: Some(""),
+            },
+            OptSpec {
+                name: "trace-format",
+                help: "alibaba|azure|borg (with --shadow)",
+                default: Some("alibaba"),
+            },
+            OptSpec {
+                name: "trace-speedup",
+                help: "divide trace arrival offsets and durations by this factor \
+                       (with --shadow)",
+                default: Some("1"),
+            },
+            OptSpec {
+                name: "trace-limit",
+                help: "ingest at most N trace events (0 = all; with --shadow)",
+                default: Some("0"),
+            },
+            OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
+        ]
+    }
+
+    /// `lrsched gen-trace` options.
+    pub fn gen_trace() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "rows", help: "data rows to generate", default: Some("1000000") },
+            OptSpec { name: "seed", help: "generator RNG seed", default: Some("42") },
+            OptSpec {
+                name: "out",
+                help: "output path; a .gz suffix writes a stored-block gzip member \
+                       (no external gzip needed)",
+                default: Some(""),
+            },
+            OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
+        ]
+    }
+
+    /// `lrsched lint` options.
+    pub fn lint() -> Vec<OptSpec> {
+        vec![
+            OptSpec {
+                name: "root",
+                help: "source tree to walk (defaults to rust/src, or src/ when \
+                       invoked from inside rust/)",
+                default: Some(""),
+            },
+            OptSpec { name: "json", help: "print diagnostics as a JSON array", default: None },
+            OptSpec {
+                name: "self-test",
+                help: "run the embedded rule fixtures instead of walking a tree",
+                default: None,
+            },
+            OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
+        ]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -3,7 +3,7 @@
 //! drivers compute so they can be re-rendered with any toolchain.
 
 use super::{fig3::Fig3, fig4::Fig4, fig5::Fig5, table1::Table1};
-use crate::sim::SimReport;
+use crate::sim::{DecisionDetail, SimReport};
 use crate::util::json::Json;
 
 /// A full simulation report as JSON (per-pod records + totals).
@@ -48,6 +48,76 @@ pub fn report_to_json(rep: &SimReport) -> Json {
                     .collect(),
             ),
         );
+    o
+}
+
+/// One `lrsched serve` binding decision as the NDJSON object the
+/// protocol emits (`docs/SERVE.md`, "Decision lines"). Keys serialize in
+/// sorted order ([`Json::Obj`] is a `BTreeMap`) and floats use the
+/// shortest round-trip form, so the same [`DecisionDetail`] always
+/// renders to the same bytes — the property the `--shadow` differential
+/// and the CI golden diff rest on. `latency_us` is the only field not
+/// derived from the deterministic engine; shadow runs pin it to 0.
+pub fn decision_to_json(d: &DecisionDetail, latency_us: u64) -> Json {
+    let mut o = Json::obj();
+    o.set("type", Json::Str("decision".into()))
+        .set("t", Json::Num(d.at))
+        .set("pod", Json::Int(d.pod.0 as i64))
+        .set("pod_name", Json::Str(d.pod_name.clone()))
+        .set("image", Json::Str(d.image.clone()))
+        .set("node", Json::Str(d.node_name.clone()))
+        .set("node_id", Json::Int(d.node.0 as i64))
+        .set("final_score", Json::Num(d.final_score))
+        .set("layer_score", Json::Num(d.layer_score))
+        .set("k8s_score", Json::Num(d.k8s_score))
+        .set("omega", Json::Num(d.omega))
+        .set(
+            "breakdown",
+            Json::Arr(
+                d.breakdown
+                    .iter()
+                    .map(|(plugin, score)| {
+                        let mut e = Json::obj();
+                        e.set("plugin", Json::Str((*plugin).to_string()))
+                            .set("score", Json::Num(*score));
+                        e
+                    })
+                    .collect(),
+            ),
+        )
+        .set("wan_bytes", Json::Int(d.wan_bytes.0 as i64))
+        .set("p2p_bytes", Json::Int(d.p2p_bytes.0 as i64))
+        .set("est_secs", Json::Num(d.est_secs))
+        .set("latency_us", Json::Int(latency_us as i64));
+    o
+}
+
+/// The end-of-session summary line `lrsched serve` emits after EOF or a
+/// `shutdown` event (`docs/SERVE.md`, "Summary line"). `decisions` and
+/// `skipped_lines` come from the session codec (the report cannot know
+/// how many protocol lines were dropped in lenient mode); everything
+/// else is the same accounting the `scale` harness prints.
+pub fn serve_summary_to_json(
+    rep: &SimReport,
+    decisions: usize,
+    skipped_lines: usize,
+    virtual_secs: f64,
+) -> Json {
+    let mut o = Json::obj();
+    o.set("type", Json::Str("summary".into()))
+        .set("submitted", Json::Int(rep.submitted as i64))
+        .set("started", Json::Int(rep.started as i64))
+        .set("failed_pulls", Json::Int(rep.failed_pulls as i64))
+        .set("unschedulable", Json::Int(rep.unschedulable as i64))
+        .set("lost_to_crash", Json::Int(rep.lost_to_crash as i64))
+        .set("retries", Json::Int(rep.retries as i64))
+        .set("wakeups", Json::Int(rep.wakeups as i64))
+        .set("decisions", Json::Int(decisions as i64))
+        .set("skipped_lines", Json::Int(skipped_lines as i64))
+        .set("wan_bytes", Json::Int(rep.total_download().0 as i64))
+        .set("p2p_bytes", Json::Int(rep.total_p2p().0 as i64))
+        .set("cache_hit_rate", Json::Num(rep.cache_hit_rate))
+        .set("virtual_secs", Json::Num(virtual_secs));
     o
 }
 

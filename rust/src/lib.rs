@@ -70,6 +70,41 @@
 //!
 //! To replay a *real* cluster trace instead of the synthetic generator,
 //! see [`sim::trace`] and `docs/SCALE.md`.
+//!
+//! ## Quickstart: an online `serve` session
+//!
+//! The same engine as a decision service: open a [`serve::Session`] over
+//! a fresh simulation, feed it protocol lines, and read back one NDJSON
+//! decision per pod — `lrsched serve` wraps exactly this loop, and
+//! `docs/SERVE.md` documents the wire protocol field by field:
+//!
+//! ```
+//! use lrsched::exp::common;
+//! use lrsched::registry::Registry;
+//! use lrsched::serve::Session;
+//! use lrsched::sim::{ErrorMode, SimConfig, Simulation};
+//!
+//! let mut cfg = SimConfig::default();
+//! cfg.inter_arrival_secs = Some(0.3); // timed-arrival protocol, like `scale`
+//! let mut sim = Simulation::new(common::scale_nodes(4), Registry::with_corpus(), cfg);
+//! // The wall clock is injected (determinism contract R2): tests pin
+//! // `latency_us` to 0, the CLI passes an `Instant`-based counter.
+//! let mut session = Session::new(&mut sim, ErrorMode::Strict, Box::new(|| 0_u64));
+//!
+//! let (mut out, mut diag) = (Vec::new(), Vec::new());
+//! let line = r#"{"event":"pod","t":0.0,"image":"nginx:1.25","cpu_milli":500,"mem_mb":512}"#;
+//! let shutdown = session.handle_line(line, 1, &mut out, &mut diag).unwrap();
+//! assert!(!shutdown);
+//! assert_eq!(out.len(), 1, "one decision line per pod event");
+//! assert!(out[0].contains("\"type\":\"decision\""));
+//! assert!(out[0].contains("\"breakdown\""));
+//!
+//! // EOF: drain to quiescence and append the summary line.
+//! let report = session.finish(&mut out);
+//! assert_eq!(report.submitted, 1);
+//! assert!(report.accounting_balanced());
+//! assert!(out.last().unwrap().contains("\"type\":\"summary\""));
+//! ```
 
 #![warn(missing_docs)]
 
@@ -79,6 +114,7 @@ pub mod exp;
 pub mod lint;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod testing;
 pub mod registry;

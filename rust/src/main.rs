@@ -2,7 +2,7 @@
 //! experiment harnesses that regenerate every figure/table of the paper's
 //! evaluation, plus registry inspection and a one-shot scoring tool.
 
-use lrsched::cli::{self, OptSpec};
+use lrsched::cli::{self, specs, OptSpec};
 use lrsched::exp::{common, fig3, fig4, fig5, table1};
 use lrsched::registry::Registry;
 use lrsched::runtime::XlaScorer;
@@ -19,6 +19,11 @@ Subcommands:
              window (e.g. `lrsched scale --churn --churn-crash-frac 0.05`),
              or replay a real cluster trace with --trace <csv>
              --trace-format {alibaba,azure} (see docs/SCALE.md)
+  serve      online decision service: pod/node lifecycle events as NDJSON
+             over stdin (or --listen <addr> for HTTP) in, one binding
+             decision per pod out; --shadow <csv> replays a trace through
+             the serve path and verifies byte-identity with `scale
+             --trace` (see docs/SERVE.md)
   gen-trace  write a synthetic Alibaba-dialect trace CSV (or .csv.gz) for
              streaming-ingest benchmarks and the CI bounded-memory gate
   fig3       regenerate Fig. 3 (a-f): performance vs node count
@@ -31,214 +36,12 @@ Subcommands:
              contract (R1-R4; see docs/ARCHITECTURE.md)
   help       this text (or `help <subcommand>`)";
 
-fn common_spec() -> Vec<OptSpec> {
-    vec![
-        OptSpec { name: "seed", help: "workload RNG seed", default: Some("42") },
-        OptSpec { name: "pods", help: "number of pods in the trace", default: Some("20") },
-        OptSpec { name: "nodes", help: "worker node count (1-5)", default: Some("4") },
-        OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
-    ]
-}
-
-fn simulate_spec() -> Vec<OptSpec> {
-    let mut s = common_spec();
-    s.push(OptSpec {
-        name: "scheduler",
-        help: "default|layer|lr|rl",
-        default: Some("lr"),
-    });
-    s.push(OptSpec {
-        name: "backend",
-        help: "native|xla (xla loads artifacts/ via PJRT)",
-        default: Some("native"),
-    });
-    s.push(OptSpec {
-        name: "bandwidth",
-        help: "per-node bandwidth MB/s",
-        default: Some("10"),
-    });
-    s.push(OptSpec {
-        name: "arrival",
-        help: "seconds between arrivals (0 = sequential)",
-        default: Some("0"),
-    });
-    s.push(OptSpec { name: "gc", help: "enable kubelet image GC", default: None });
-    s.push(OptSpec {
-        name: "p2p-lan",
-        help: "peer layer-transfer LAN bandwidth MB/s (0 = off)",
-        default: Some("0"),
-    });
-    s
-}
-
-fn scale_spec() -> Vec<OptSpec> {
-    vec![
-        OptSpec { name: "seed", help: "workload RNG seed", default: Some("42") },
-        OptSpec { name: "pods", help: "number of pods in the trace", default: Some("100000") },
-        OptSpec { name: "nodes", help: "edge node count", default: Some("64") },
-        OptSpec {
-            name: "disk-gb",
-            help: "per-node disk capacity in GB (small disks put image GC \
-                   and the cache policies on the hot path)",
-            default: Some("64"),
-        },
-        OptSpec { name: "scheduler", help: "default|layer|lr|rl", default: Some("lr") },
-        OptSpec {
-            name: "backend",
-            help: "native|dense (dense drives the reused-arena scoring path)",
-            default: Some("native"),
-        },
-        OptSpec { name: "arrival", help: "seconds between arrivals", default: Some("0.3") },
-        OptSpec { name: "duration-min", help: "min pod lifetime (s)", default: Some("30") },
-        OptSpec { name: "duration-max", help: "max pod lifetime (s)", default: Some("300") },
-        OptSpec { name: "zipf", help: "image-popularity Zipf exponent (0 = uniform)", default: Some("1.1") },
-        OptSpec {
-            name: "trace",
-            help: "replay a real cluster-trace CSV instead of the synthetic Zipf \
-                   workload (disables --pods/--zipf/--duration-*/--arrival)",
-            default: Some(""),
-        },
-        OptSpec { name: "trace-format", help: "alibaba|azure|borg (see docs/SCALE.md)", default: Some("alibaba") },
-        OptSpec {
-            name: "trace-speedup",
-            help: "divide trace arrival offsets and durations by this factor",
-            default: Some("1"),
-        },
-        OptSpec {
-            name: "trace-limit",
-            help: "ingest at most N trace events, in file order (0 = all); the \
-                   rest of the file is not read or inflated",
-            default: Some("0"),
-        },
-        OptSpec {
-            name: "trace-strict",
-            help: "reject malformed/out-of-order/duplicate rows instead of repairing",
-            default: None,
-        },
-        OptSpec {
-            name: "trace-reorder",
-            help: "lenient-mode reorder-buffer capacity in events (bounds \
-                   streaming-replay memory; disorder beyond it falls back to a \
-                   whole-trace sort)",
-            default: Some("65536"),
-        },
-        OptSpec { name: "retry-limit", help: "retries before a pod is unschedulable", default: Some("10") },
-        OptSpec { name: "backoff", help: "scheduling-queue back-off (s)", default: Some("5") },
-        OptSpec { name: "snapshot-every", help: "snapshot cadence (placements)", default: Some("1000") },
-        OptSpec {
-            name: "shards",
-            help: "per-node event lanes (N worker threads; report is \
-                   byte-identical for every N)",
-            default: Some("1"),
-        },
-        OptSpec {
-            name: "report-out",
-            help: "write the full report fingerprint to this file",
-            default: Some(""),
-        },
-        OptSpec {
-            name: "events-out",
-            help: "write the event log (one line per record) to this file",
-            default: Some(""),
-        },
-        OptSpec { name: "no-gc", help: "disable kubelet image GC", default: None },
-        OptSpec {
-            name: "p2p",
-            help: "enable peer-swarm layer sharing: missing layers cached on \
-                   Ready peers transfer over the LAN instead of the registry WAN",
-            default: None,
-        },
-        OptSpec {
-            name: "p2p-lan",
-            help: "peer layer-transfer LAN bandwidth MB/s (with --p2p)",
-            default: Some("125"),
-        },
-        OptSpec {
-            name: "p2p-seeder-cap",
-            help: "max concurrent uploads one seeder serves; saturated layers \
-                   fall back to the registry (with --p2p)",
-            default: Some("4"),
-        },
-        OptSpec {
-            name: "churn",
-            help: "enable cluster volatility: node joins/drains/crashes + a registry \
-                   outage window (e.g. `lrsched scale --churn`)",
-            default: None,
-        },
-        OptSpec { name: "churn-seed", help: "churn RNG seed (defaults to --seed)", default: Some("") },
-        OptSpec { name: "churn-joins", help: "nodes joining mid-trace", default: Some("3") },
-        OptSpec { name: "churn-drains", help: "nodes drained mid-trace", default: Some("2") },
-        OptSpec {
-            name: "churn-crash-frac",
-            help: "fraction of the initial fleet that crashes",
-            default: Some("0.05"),
-        },
-        OptSpec { name: "churn-outages", help: "registry outage windows", default: Some("1") },
-        OptSpec { name: "churn-outage-secs", help: "outage window length (s)", default: Some("60") },
-        OptSpec {
-            name: "no-wake",
-            help: "disable capacity-driven wake-ups (fixed back-off timers only)",
-            default: None,
-        },
-        OptSpec {
-            name: "cache-policy",
-            help: "pressure|lru|popularity|scorer|prefetch (kubelet image-GC \
-                   eviction/prefetch policy; see docs/SCALE.md)",
-            default: Some("pressure"),
-        },
-        OptSpec {
-            name: "cache-decay",
-            help: "popularity half-life time constant in seconds (lru/popularity/\
-                   prefetch recency decay)",
-            default: Some("300"),
-        },
-        OptSpec {
-            name: "cache-prefetch-mb",
-            help: "per-intent prefetch budget in MB (with --cache-policy prefetch)",
-            default: Some("256"),
-        },
-        OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
-    ]
-}
-
-fn gen_trace_spec() -> Vec<OptSpec> {
-    vec![
-        OptSpec { name: "rows", help: "data rows to generate", default: Some("1000000") },
-        OptSpec { name: "seed", help: "generator RNG seed", default: Some("42") },
-        OptSpec {
-            name: "out",
-            help: "output path; a .gz suffix writes a stored-block gzip member \
-                   (no external gzip needed)",
-            default: Some(""),
-        },
-        OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
-    ]
-}
-
-fn lint_spec() -> Vec<OptSpec> {
-    vec![
-        OptSpec {
-            name: "root",
-            help: "source tree to walk (defaults to rust/src, or src/ when \
-                   invoked from inside rust/)",
-            default: Some(""),
-        },
-        OptSpec { name: "json", help: "print diagnostics as a JSON array", default: None },
-        OptSpec {
-            name: "self-test",
-            help: "run the embedded rule fixtures instead of walking a tree",
-            default: None,
-        },
-        OptSpec { name: "log-level", help: "error|warn|info|debug|trace", default: Some("info") },
-    ]
-}
-
 /// `lint`: walk the crate source and enforce the determinism contract
 /// (R1 hash-order escape, R2 ambient nondeterminism, R3 unsafe hygiene,
 /// R4 pool-closure accumulation). Exit 2 with `file:line` diagnostics on
 /// any violation or stale suppression.
 fn run_lint(rest: &[String]) -> Result<(), String> {
-    let args = cli::parse(rest, &lint_spec())?;
+    let args = cli::parse(rest, &specs::lint())?;
     apply_log_level(&args)?;
     if args.flag("self-test") {
         lrsched::lint::self_test()?;
@@ -277,7 +80,7 @@ fn run_lint(rest: &[String]) -> Result<(), String> {
 /// trace — the input for `scale --trace` streaming-ingest benchmarks and
 /// the CI bounded-memory gate.
 fn run_gen_trace(rest: &[String]) -> Result<(), String> {
-    let args = cli::parse(rest, &gen_trace_spec())?;
+    let args = cli::parse(rest, &specs::gen_trace())?;
     apply_log_level(&args)?;
     let rows = args.usize_or("rows", 1_000_000)?;
     let seed = args.u64_or("seed", 42)?;
@@ -303,7 +106,7 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
         TraceReplay, WorkloadSource,
     };
 
-    let args = cli::parse(rest, &scale_spec())?;
+    let args = cli::parse(rest, &specs::scale())?;
     apply_log_level(&args)?;
     let seed = args.u64_or("seed", 42)?;
     let pods = args.usize_or("pods", 100_000)?;
@@ -560,6 +363,136 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `serve`: the online decision service (`docs/SERVE.md`). Reads NDJSON
+/// pod/node lifecycle events from stdin (or HTTP with `--listen`),
+/// writes one NDJSON binding decision per pod to stdout and diagnostics
+/// to stderr; `--shadow <trace>` replays a trace through the serve path
+/// and verifies the decision stream is byte-identical to the batch
+/// `scale --trace` replay.
+fn run_serve(rest: &[String]) -> Result<(), String> {
+    use lrsched::serve::{run_http, run_shadow, Session};
+    use lrsched::sim::{ErrorMode, TraceFormat, TraceOptions};
+    use std::io::{BufRead, Write};
+
+    let args = cli::parse(rest, &specs::serve())?;
+    apply_log_level(&args)?;
+    let nodes = args.usize_or("nodes", 8)?;
+    if nodes == 0 {
+        return Err("--nodes must be positive".to_string());
+    }
+    let disk_gb = args.f64_or("disk-gb", 64.0)?;
+    if disk_gb <= 0.0 {
+        return Err("--disk-gb must be positive".to_string());
+    }
+    let scheduler = match args.str_or("scheduler", "lr") {
+        "default" => SchedulerChoice::Default,
+        "layer" => SchedulerChoice::Layer,
+        "lr" => SchedulerChoice::LR,
+        "rl" => SchedulerChoice::Rl,
+        other => return Err(format!("unknown scheduler {other:?}")),
+    };
+    let mode = if args.flag("strict") { ErrorMode::Strict } else { ErrorMode::Lenient };
+
+    // The engine config matches `scale --trace`'s defaults exactly —
+    // that equality is what makes --shadow's byte-identity check (and
+    // the CI golden diff) meaningful. Timed-arrival protocol, snapshot
+    // cadence 1000, single event lane.
+    let mut cfg = SimConfig::default();
+    cfg.scheduler = scheduler;
+    cfg.inter_arrival_secs = Some(0.3);
+    cfg.gc_enabled = !args.flag("no-gc");
+    cfg.retry_limit = args.get_parsed::<u32>("retry-limit")?.unwrap_or(10);
+    cfg.retry_backoff_secs = args.f64_or("backoff", 5.0)?;
+    cfg.snapshot_every = 1000;
+
+    if let Some(path) = args.get("shadow") {
+        let fmt_name = args.str_or("trace-format", "alibaba");
+        let format = TraceFormat::parse(fmt_name).ok_or_else(|| {
+            format!("unknown trace format {fmt_name:?} (expected alibaba|azure|borg)")
+        })?;
+        let speedup = args.f64_or("trace-speedup", 1.0)?;
+        if speedup <= 0.0 {
+            return Err("--trace-speedup must be positive".to_string());
+        }
+        let limit = args.usize_or("trace-limit", 0)?;
+        let opts = TraceOptions {
+            format,
+            mode,
+            speedup,
+            limit: if limit == 0 { None } else { Some(limit) },
+            seed: args.u64_or("seed", 42)?,
+            reorder_cap: 65_536,
+        };
+        let lines = run_shadow(std::path::Path::new(path), &opts, nodes, disk_gb, &cfg)?;
+        let stdout = std::io::stdout();
+        let mut w = stdout.lock();
+        for line in &lines {
+            writeln!(w, "{line}").map_err(|e| e.to_string())?;
+        }
+        w.flush().map_err(|e| e.to_string())?;
+        eprintln!(
+            "shadow: {} decision(s) byte-identical to the batch `scale --trace` replay",
+            lines.len().saturating_sub(1)
+        );
+        return Ok(());
+    }
+
+    let mut sim =
+        Simulation::new(common::scale_nodes_with_disk(nodes, disk_gb), Registry::with_corpus(), cfg);
+    let wall = std::time::Instant::now();
+    let mut session =
+        Session::new(&mut sim, mode, Box::new(move || wall.elapsed().as_micros() as u64));
+
+    if let Some(addr) = args.get("listen") {
+        let summary = run_http(addr, &mut session)?;
+        println!("{summary}");
+        return Ok(());
+    }
+
+    // stdin session: one event per line in, decisions to stdout as they
+    // happen, diagnostics to stderr. EOF (or a shutdown event) drains
+    // the engine and emits the summary line.
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut w = stdout.lock();
+    let mut lineno = 0usize;
+    let mut shutdown = false;
+    for line in stdin.lock().lines() {
+        let line = line.map_err(|e| format!("stdin: {e}"))?;
+        lineno += 1;
+        let mut out = Vec::new();
+        let mut diag = Vec::new();
+        let done = session.handle_line(&line, lineno, &mut out, &mut diag).map_err(|e| {
+            format!("protocol error: {e} (lenient mode would skip and count it)")
+        })?;
+        for d in &out {
+            writeln!(w, "{d}").map_err(|e| e.to_string())?;
+        }
+        if !out.is_empty() {
+            w.flush().map_err(|e| e.to_string())?;
+        }
+        for d in &diag {
+            eprintln!("{d}");
+        }
+        if done {
+            shutdown = true;
+            break;
+        }
+    }
+    let mut tail = Vec::new();
+    session.finish(&mut tail);
+    for d in &tail {
+        writeln!(w, "{d}").map_err(|e| e.to_string())?;
+    }
+    w.flush().map_err(|e| e.to_string())?;
+    lrsched::log_debug!(
+        "serve: session closed ({}, {} line(s) read)",
+        if shutdown { "shutdown event" } else { "EOF" },
+        lineno
+    );
+    Ok(())
+}
+
 fn run() -> Result<(), String> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     logging::init_from_env();
@@ -574,7 +507,7 @@ fn run() -> Result<(), String> {
     match cmd {
         "help" | "--help" | "-h" => {
             match rest.first().map(|s| s.as_str()) {
-                Some("simulate") => println!("{}", cli::usage("simulate", "Run the simulator", &simulate_spec())),
+                Some("simulate") => println!("{}", cli::usage("simulate", "Run the simulator", &specs::simulate())),
                 Some("scale") => println!(
                     "{}",
                     cli::usage(
@@ -592,7 +525,26 @@ fn run() -> Result<(), String> {
                            lrsched scale --trace tests/fixtures/alibaba_mini.csv \\\n\
                              --trace-format alibaba --trace-speedup 10\n\
                          See docs/SCALE.md for the full flag reference.",
-                        &scale_spec()
+                        &specs::scale()
+                    )
+                ),
+                Some("serve") => println!(
+                    "{}",
+                    cli::usage(
+                        "serve",
+                        "Online decision service: NDJSON pod/node lifecycle events in,\n\
+                         one NDJSON binding decision per pod out (chosen node,\n\
+                         per-plugin score breakdown, WAN/P2P pull bytes, decision\n\
+                         latency in µs).\n\
+                         Examples:\n\
+                           lrsched serve < events.ndjson   (stdin session)\n\
+                           lrsched serve --listen 127.0.0.1:7473   (HTTP; POST\n\
+                           NDJSON to /v1/events, GET /healthz)\n\
+                           lrsched serve --shadow tests/fixtures/alibaba_mini.csv\n\
+                           (differential: serve decisions must be byte-identical\n\
+                           to the batch `scale --trace` replay)\n\
+                         See docs/SERVE.md for the full protocol reference.",
+                        &specs::serve()
                     )
                 ),
                 Some("gen-trace") => println!(
@@ -600,7 +552,7 @@ fn run() -> Result<(), String> {
                     cli::usage(
                         "gen-trace",
                         "Write a synthetic Alibaba-dialect trace CSV (or .csv.gz).",
-                        &gen_trace_spec()
+                        &specs::gen_trace()
                     )
                 ),
                 Some("lint") => println!(
@@ -612,21 +564,22 @@ fn run() -> Result<(), String> {
                          hygiene, R4 pool-closure accumulation; suppressions use\n\
                          `// det: sorted(<key>)` / `// det: allow(R<n>): <reason>`\n\
                          (see docs/ARCHITECTURE.md, \"Determinism contract\").",
-                        &lint_spec()
+                        &specs::lint()
                     )
                 ),
                 Some(c @ ("fig3" | "fig4" | "fig5" | "table1")) => {
-                    println!("{}", cli::usage(c, "Regenerate a paper experiment", &common_spec()))
+                    println!("{}", cli::usage(c, "Regenerate a paper experiment", &specs::common()))
                 }
                 _ => println!("{ABOUT}"),
             }
             Ok(())
         }
         "scale" => run_scale(&rest),
+        "serve" => run_serve(&rest),
         "gen-trace" => run_gen_trace(&rest),
         "lint" => run_lint(&rest),
         "simulate" => {
-            let args = cli::parse(&rest, &simulate_spec())?;
+            let args = cli::parse(&rest, &specs::simulate())?;
             apply_log_level(&args)?;
             let seed = args.u64_or("seed", 42)?;
             let pods = args.usize_or("pods", 20)?;
@@ -690,14 +643,14 @@ fn run() -> Result<(), String> {
             Ok(())
         }
         "fig3" => {
-            let args = cli::parse(&rest, &common_spec())?;
+            let args = cli::parse(&rest, &specs::common())?;
             apply_log_level(&args)?;
             let f = fig3::run(args.u64_or("seed", 42)?, args.usize_or("pods", 20)?);
             print!("{}", f.print());
             Ok(())
         }
         "fig4" => {
-            let args = cli::parse(&rest, &common_spec())?;
+            let args = cli::parse(&rest, &specs::common())?;
             apply_log_level(&args)?;
             let f = fig4::run(
                 args.u64_or("seed", 42)?,
@@ -708,7 +661,7 @@ fn run() -> Result<(), String> {
             Ok(())
         }
         "fig5" => {
-            let args = cli::parse(&rest, &common_spec())?;
+            let args = cli::parse(&rest, &specs::common())?;
             apply_log_level(&args)?;
             let f = fig5::run(
                 args.u64_or("seed", 42)?,
@@ -719,7 +672,7 @@ fn run() -> Result<(), String> {
             Ok(())
         }
         "table1" => {
-            let args = cli::parse(&rest, &common_spec())?;
+            let args = cli::parse(&rest, &specs::common())?;
             apply_log_level(&args)?;
             let t = table1::run(
                 args.u64_or("seed", 42)?,
@@ -730,7 +683,7 @@ fn run() -> Result<(), String> {
             Ok(())
         }
         "export" => {
-            let mut spec = common_spec();
+            let mut spec = specs::common();
             spec.push(OptSpec {
                 name: "out",
                 help: "output directory",

@@ -100,6 +100,9 @@ pub struct Framework {
 }
 
 /// Per-node score detail for observability and the experiment reports.
+/// The winning node's `breakdown` travels with the bind — it is carried
+/// on [`crate::sim::DecisionDetail`] and exported, plugin by plugin, on
+/// every `lrsched serve` decision line (`docs/SERVE.md`).
 #[derive(Debug, Clone)]
 pub struct NodeScore {
     /// The scored node.

@@ -37,6 +37,13 @@ pub struct Decision {
     pub omega: f64,
     /// Bytes the node must download (Eq. 1) — the paper's headline metric.
     pub download_cost: Bytes,
+    /// The winning node's per-plugin `(plugin name, normalized score)`
+    /// breakdown from the framework score pass, in plugin registration
+    /// order — the observability surface `lrsched serve` emits per
+    /// decision. Empty for schedulers that bypass the framework scorers
+    /// (the RL pick) and for dense-backend wins whose node fell outside
+    /// the recorded feasible set.
+    pub breakdown: Vec<(&'static str, f64)>,
 }
 
 /// Running ω-usage statistics (regenerates Fig. 3f).
@@ -149,7 +156,8 @@ impl LrScheduler {
             None => {
                 // Default baseline: S = S_K8s.
                 let best = select_best(&k8s_scores).expect("nonempty feasible set");
-                self.decision_for(ctx, best.node, best.total, 0.0, best.total, 0.0)
+                let breakdown = best.breakdown.clone();
+                self.decision_for(ctx, best.node, best.total, 0.0, best.total, 0.0, breakdown)
             }
             Some(policy) if dense => self.schedule_dense(ctx, policy, &k8s_scores),
             Some(policy) => match pool {
@@ -182,6 +190,7 @@ impl LrScheduler {
         layer: f64,
         k8s: f64,
         omega: f64,
+        breakdown: Vec<(&'static str, f64)>,
     ) -> Decision {
         Decision {
             node,
@@ -190,6 +199,7 @@ impl LrScheduler {
             k8s_score: k8s,
             omega,
             download_cost: layer_score::download_cost(ctx, ctx.state.node(node)),
+            breakdown,
         }
     }
 
@@ -200,8 +210,10 @@ impl LrScheduler {
         policy: WeightPolicy,
         k8s_scores: &[NodeScore],
     ) -> Decision {
-        let mut best: Option<Decision> = None;
-        for ns in k8s_scores {
+        // (index, S, S_layer, ω) of the running first-max winner; the
+        // Decision (and its breakdown clone) is built once after the loop.
+        let mut best: Option<(usize, f64, f64, f64)> = None;
+        for (i, ns) in k8s_scores.iter().enumerate() {
             let node = ctx.state.node(ns.node);
             let local = layer_score::local_bytes(ctx, node);
             let s_layer = layer_score::layer_sharing_score(local, ctx.required_bytes);
@@ -209,13 +221,15 @@ impl LrScheduler {
             let s = omega * s_layer + ns.total;
             let better = match &best {
                 None => true,
-                Some(b) => s > b.final_score,
+                Some(b) => s > b.1,
             };
             if better {
-                best = Some(self.decision_for(ctx, ns.node, s, s_layer, ns.total, omega));
+                best = Some((i, s, s_layer, omega));
             }
         }
-        best.expect("nonempty feasible set")
+        let (i, s, s_layer, omega) = best.expect("nonempty feasible set");
+        let ns = &k8s_scores[i];
+        self.decision_for(ctx, ns.node, s, s_layer, ns.total, omega, ns.breakdown.clone())
     }
 
     /// [`LrScheduler::schedule_native`] with the per-node layer/weight math
@@ -238,18 +252,20 @@ impl LrScheduler {
             let omega = weight_for(policy, params, node, local);
             *out = (s_layer, omega);
         });
-        let mut best: Option<Decision> = None;
-        for (ns, &(s_layer, omega)) in k8s_scores.iter().zip(&lw) {
+        let mut best: Option<(usize, f64, f64, f64)> = None;
+        for (i, (ns, &(s_layer, omega))) in k8s_scores.iter().zip(&lw).enumerate() {
             let s = omega * s_layer + ns.total;
             let better = match &best {
                 None => true,
-                Some(b) => s > b.final_score,
+                Some(b) => s > b.1,
             };
             if better {
-                best = Some(self.decision_for(ctx, ns.node, s, s_layer, ns.total, omega));
+                best = Some((i, s, s_layer, omega));
             }
         }
-        best.expect("nonempty feasible set")
+        let (i, s, s_layer, omega) = best.expect("nonempty feasible set");
+        let ns = &k8s_scores[i];
+        self.decision_for(ctx, ns.node, s, s_layer, ns.total, omega, ns.breakdown.clone())
     }
 
     /// Dense path: fill the persistent arena and run the installed backend.
@@ -276,11 +292,11 @@ impl LrScheduler {
             out.final_score[out.best]
         );
         let node = NodeId(out.best as u32);
-        let k8s = k8s_scores
+        let (k8s, breakdown) = k8s_scores
             .iter()
             .find(|ns| ns.node == node)
-            .map(|ns| ns.total)
-            .unwrap_or(0.0);
+            .map(|ns| (ns.total, ns.breakdown.clone()))
+            .unwrap_or((0.0, Vec::new()));
         self.decision_for(
             ctx,
             node,
@@ -288,6 +304,7 @@ impl LrScheduler {
             out.layer_score[out.best] as f64,
             k8s,
             out.omega[out.best] as f64,
+            breakdown,
         )
     }
 }

@@ -1,0 +1,30 @@
+//! Line-level codec for the serve protocol: one [`InEvent`] per
+//! non-blank line, with 1-based line numbers threaded into every error
+//! (mirroring the trace importers' diagnostics). Blank lines and `#`
+//! comments are ignored, so fixture streams can be annotated. Policy —
+//! abort vs skip-and-count — is the session's job
+//! ([`crate::serve::Session`]); the codec only classifies.
+
+use super::protocol::{InEvent, ServeError};
+use crate::util::json;
+
+/// Decode one input line. Returns `Ok(None)` for blank lines and `#`
+/// comments, `Ok(Some(event))` for a valid protocol object, and
+/// [`ServeError::Malformed`] (carrying `lineno`) for anything else.
+pub fn decode_line(line: &str, lineno: usize) -> Result<Option<InEvent>, ServeError> {
+    let trimmed = line.trim();
+    if trimmed.is_empty() || trimmed.starts_with('#') {
+        return Ok(None);
+    }
+    let parsed = json::parse(trimmed)
+        .map_err(|e| ServeError::Malformed { line: lineno, reason: e.to_string() })?;
+    InEvent::from_json(&parsed)
+        .map(Some)
+        .map_err(|reason| ServeError::Malformed { line: lineno, reason })
+}
+
+/// Encode an [`InEvent`] as one protocol line (no trailing newline) —
+/// `decode_line(&encode_line(ev), n)` returns the same event.
+pub fn encode_line(ev: &InEvent) -> String {
+    ev.to_json().to_string()
+}

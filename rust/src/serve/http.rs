@@ -1,0 +1,159 @@
+//! A minimal localhost HTTP/1.1 front-end for the serve session
+//! (`lrsched serve --listen 127.0.0.1:7473`). Hand-rolled over
+//! `std::net::TcpListener` — the vendored dependency set has no HTTP
+//! stack — and deliberately tiny: sequential (one connection at a time;
+//! the engine is single-threaded state), `Connection: close` per
+//! response, two routes:
+//!
+//! - `GET /healthz` → `200 ok`
+//! - `POST /v1/events` — request body is NDJSON [`InEvent`] lines
+//!   (line numbers continue across requests); the response body is the
+//!   resulting NDJSON decision lines plus, in lenient mode, any
+//!   `{"type":"error",...}` diagnostics. A `shutdown` event drains the
+//!   session, appends the summary line to the response, and stops the
+//!   server. A strict-mode protocol error returns `400` with the error
+//!   and terminates the session, mirroring the stdin path's exit 2.
+//!
+//! [`InEvent`]: super::protocol::InEvent
+
+use super::protocol::{error_to_json, ServeError};
+use super::session::Session;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+/// Bind `addr` (e.g. `127.0.0.1:7473`) and serve the session until a
+/// `shutdown` event or a strict-mode protocol error. Returns the final
+/// summary line on graceful shutdown (already sent to the client too).
+pub fn run_http(addr: &str, session: &mut Session<'_>) -> Result<String, String> {
+    let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    let local = listener.local_addr().map_err(|e| e.to_string())?;
+    crate::log_info!("serve: listening on http://{local} (POST /v1/events, GET /healthz)");
+    let mut lineno = 0usize;
+    for conn in listener.incoming() {
+        let mut stream = conn.map_err(|e| format!("accept: {e}"))?;
+        let (method, path, body) = match read_request(&mut stream) {
+            Ok(req) => req,
+            Err(e) => {
+                // A malformed request poisons only its connection.
+                let _ = respond(&mut stream, 400, &format!("bad request: {e}\n"));
+                continue;
+            }
+        };
+        match (method.as_str(), path.as_str()) {
+            ("GET", "/healthz") => {
+                respond(&mut stream, 200, "ok\n")?;
+            }
+            ("POST", "/v1/events") => {
+                let mut out = Vec::new();
+                let mut diag = Vec::new();
+                let mut shutdown = false;
+                let mut fatal: Option<ServeError> = None;
+                for line in body.lines() {
+                    lineno += 1;
+                    match session.handle_line(line, lineno, &mut out, &mut diag) {
+                        Ok(false) => {}
+                        Ok(true) => {
+                            shutdown = true;
+                            break;
+                        }
+                        Err(e) => {
+                            fatal = Some(e);
+                            break;
+                        }
+                    }
+                }
+                if let Some(e) = fatal {
+                    out.append(&mut diag);
+                    out.push(error_to_json(&e).to_string());
+                    respond(&mut stream, 400, &ndjson(&out))?;
+                    return Err(e.to_string());
+                }
+                if shutdown {
+                    let mut tail = Vec::new();
+                    session.finish(&mut tail);
+                    let summary = tail.last().cloned().unwrap_or_default();
+                    out.append(&mut diag);
+                    out.append(&mut tail);
+                    respond(&mut stream, 200, &ndjson(&out))?;
+                    return Ok(summary);
+                }
+                out.append(&mut diag);
+                respond(&mut stream, 200, &ndjson(&out))?;
+            }
+            _ => {
+                respond(&mut stream, 404, "not found\n")?;
+            }
+        }
+    }
+    unreachable!("TcpListener::incoming never returns None")
+}
+
+/// Join output lines into an NDJSON body (trailing newline included).
+fn ndjson(lines: &[String]) -> String {
+    let mut s = String::with_capacity(lines.iter().map(|l| l.len() + 1).sum());
+    for l in lines {
+        s.push_str(l);
+        s.push('\n');
+    }
+    s
+}
+
+/// Read one HTTP/1.1 request: request line, headers, and a
+/// `Content-Length`-delimited body. Honors `Expect: 100-continue` so
+/// `curl --data-binary @stream.ndjson` works for large bodies.
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, String), String> {
+    let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| e.to_string())?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or("empty request line")?.to_string();
+    let path = parts.next().ok_or("request line missing path")?.to_string();
+    let mut content_length = 0usize;
+    let mut expect_continue = false;
+    loop {
+        let mut header = String::new();
+        let n = reader.read_line(&mut header).map_err(|e| e.to_string())?;
+        let header = header.trim_end();
+        if n == 0 || header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length =
+                    value.parse().map_err(|_| format!("bad Content-Length {value:?}"))?;
+            } else if name.eq_ignore_ascii_case("expect")
+                && value.eq_ignore_ascii_case("100-continue")
+            {
+                expect_continue = true;
+            }
+        }
+    }
+    if expect_continue && content_length > 0 {
+        stream
+            .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+            .map_err(|e| e.to_string())?;
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).map_err(|e| format!("reading body: {e}"))?;
+    String::from_utf8(body).map_err(|_| "body is not UTF-8".to_string()).map(|b| (method, path, b))
+}
+
+/// Write one response and close the connection.
+fn respond(stream: &mut TcpStream, code: u16, body: &str) -> Result<(), String> {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Unknown",
+    };
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/x-ndjson\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream
+        .write_all(head.as_bytes())
+        .and_then(|()| stream.write_all(body.as_bytes()))
+        .map_err(|e| e.to_string())
+}

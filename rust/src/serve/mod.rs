@@ -1,0 +1,42 @@
+//! `lrsched serve` — the simulator's scoring core as an online decision
+//! service.
+//!
+//! The paper's headline claim is *full process automation from task
+//! information acquisition to container deployment*: LRScheduler is a
+//! live scheduler, not a replay harness. This module closes that gap
+//! without forking the engine: a serve session feeds pod and node
+//! lifecycle events — NDJSON over stdin ([`Session`]) or a localhost
+//! HTTP endpoint ([`run_http`]) — into the *same* deterministic
+//! discrete-event engine every batch experiment uses, through the same
+//! [`crate::sim::ArrivalSource`] pipeline (a
+//! [`crate::sim::StreamSource`] instead of a trace or workload source).
+//! Each pod event runs the full filter → layer-score → dynamic-weight →
+//! bind pipeline and emits one NDJSON decision line: chosen node,
+//! per-plugin score breakdown, estimated pull bytes split WAN/P2P, and
+//! wall-clock decision latency in microseconds.
+//!
+//! Because serve and batch share one code path, equivalence is testable:
+//! [`run_shadow`] replays a trace through the session and holds the
+//! decision stream byte-identical to the `scale --trace` replay — the
+//! house differential style ([`crate::sim::shard`],
+//! [`crate::sim::cache`]) extended to the service boundary. See
+//! `docs/SERVE.md` for the operator's guide (protocol reference, flags,
+//! copy-pasteable sessions) and `docs/ARCHITECTURE.md`, "Serve mode",
+//! for the byte-identity argument.
+//!
+//! Module layout mirrors the pipeline: [`protocol`] (wire types),
+//! [`codec`] (line decode with strict/lenient [`crate::sim::ErrorMode`]
+//! handling), [`session`] (the live loop over an open engine stream),
+//! [`shadow`] (the differential), [`http`] (the listener front-end).
+
+pub mod codec;
+pub mod http;
+pub mod protocol;
+pub mod session;
+pub mod shadow;
+
+pub use codec::{decode_line, encode_line};
+pub use http::run_http;
+pub use protocol::{error_to_json, InEvent, ServeError};
+pub use session::{Session, SessionStats};
+pub use shadow::run_shadow;

@@ -1,0 +1,324 @@
+//! Wire types for the `lrsched serve` NDJSON protocol.
+//!
+//! One JSON object per line in both directions. Input lines are
+//! [`InEvent`]s — pod submissions and the node/registry lifecycle events
+//! that map onto the engine's churn event classes
+//! ([`crate::sim::EventPayload`]). Output lines are decision, summary,
+//! and error objects rendered by [`crate::exp::export::decision_to_json`]
+//! / [`crate::exp::export::serve_summary_to_json`] /
+//! [`error_to_json`]. The full field-by-field reference with types and
+//! units lives in `docs/SERVE.md`.
+//!
+//! Timestamps (`t`) are absolute virtual seconds since session start and
+//! must be finite and non-decreasing across lines — the same contract the
+//! arrival pipeline imposes on trace offsets
+//! ([`crate::sim::ArrivalSource`]): the engine schedules each event as it
+//! learns about it and cannot reorder the future.
+
+use crate::util::json::Json;
+
+/// One parsed input line of the serve protocol (see the module docs and
+/// `docs/SERVE.md` for the JSON shapes). Every variant carries its
+/// virtual timestamp `t`; `shutdown` may omit it to mean "now".
+#[derive(Debug, Clone, PartialEq)]
+pub enum InEvent {
+    /// `{"event":"pod", ...}` — submit a pod to the scheduler. Exactly
+    /// one decision (or a terminal non-bind accounted in the summary)
+    /// results per pod.
+    Pod {
+        /// Virtual submission time (seconds).
+        t: f64,
+        /// Optional metadata name; defaults to the session's `pod-<id>`.
+        name: Option<String>,
+        /// Image reference (`name[:tag]`); must exist in the registry
+        /// catalog the session was built with.
+        image: String,
+        /// CPU request in millicores (default 100).
+        cpu_milli: u64,
+        /// Memory request in MB (default 128).
+        mem_mb: f64,
+        /// Optional container lifetime (seconds); omitted means the pod
+        /// runs to the end of the session.
+        duration_secs: Option<f64>,
+    },
+    /// `{"event":"node-join","t":..}` — a node joins the fleet
+    /// ([`crate::sim::EventPayload::NodeJoin`]).
+    NodeJoin {
+        /// Virtual event time (seconds).
+        t: f64,
+    },
+    /// `{"event":"node-drain","t":..,"node":..}` — cordon + drain a node
+    /// ([`crate::sim::EventPayload::NodeDrain`]).
+    NodeDrain {
+        /// Virtual event time (seconds).
+        t: f64,
+        /// Id of the node to drain.
+        node: u32,
+    },
+    /// `{"event":"node-crash","t":..,"node":..}` — crash a node, losing
+    /// its pods ([`crate::sim::EventPayload::NodeCrash`]).
+    NodeCrash {
+        /// Virtual event time (seconds).
+        t: f64,
+        /// Id of the node to crash.
+        node: u32,
+    },
+    /// `{"event":"outage","t":..,"secs":..}` — registry unreachable for
+    /// `secs` ([`crate::sim::EventPayload::RegistryOutageStart`]).
+    Outage {
+        /// Virtual outage start (seconds).
+        t: f64,
+        /// Outage window length (seconds, > 0).
+        secs: f64,
+    },
+    /// `{"event":"shutdown"}` — graceful end of session: drain every
+    /// queued event, emit the summary line, exit. Equivalent to EOF on
+    /// stdin.
+    Shutdown {
+        /// Optional virtual shutdown time; `None` means "at the current
+        /// frontier".
+        t: Option<f64>,
+    },
+}
+
+impl InEvent {
+    /// The event's timestamp, when it carries one.
+    pub fn t(&self) -> Option<f64> {
+        match self {
+            InEvent::Pod { t, .. }
+            | InEvent::NodeJoin { t }
+            | InEvent::NodeDrain { t, .. }
+            | InEvent::NodeCrash { t, .. }
+            | InEvent::Outage { t, .. } => Some(*t),
+            InEvent::Shutdown { t } => *t,
+        }
+    }
+
+    /// Render back to the protocol's JSON object — the inverse of
+    /// [`InEvent::from_json`] (optional fields are omitted when `None`),
+    /// used by the round-trip golden tests and fixture generators.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            InEvent::Pod { t, name, image, cpu_milli, mem_mb, duration_secs } => {
+                o.set("event", Json::Str("pod".into()))
+                    .set("t", Json::Num(*t))
+                    .set("image", Json::Str(image.clone()))
+                    .set("cpu_milli", Json::Int(*cpu_milli as i64))
+                    .set("mem_mb", Json::Num(*mem_mb));
+                if let Some(n) = name {
+                    o.set("name", Json::Str(n.clone()));
+                }
+                if let Some(d) = duration_secs {
+                    o.set("duration_secs", Json::Num(*d));
+                }
+            }
+            InEvent::NodeJoin { t } => {
+                o.set("event", Json::Str("node-join".into())).set("t", Json::Num(*t));
+            }
+            InEvent::NodeDrain { t, node } => {
+                o.set("event", Json::Str("node-drain".into()))
+                    .set("t", Json::Num(*t))
+                    .set("node", Json::Int(*node as i64));
+            }
+            InEvent::NodeCrash { t, node } => {
+                o.set("event", Json::Str("node-crash".into()))
+                    .set("t", Json::Num(*t))
+                    .set("node", Json::Int(*node as i64));
+            }
+            InEvent::Outage { t, secs } => {
+                o.set("event", Json::Str("outage".into()))
+                    .set("t", Json::Num(*t))
+                    .set("secs", Json::Num(*secs));
+            }
+            InEvent::Shutdown { t } => {
+                o.set("event", Json::Str("shutdown".into()));
+                if let Some(t) = t {
+                    o.set("t", Json::Num(*t));
+                }
+            }
+        }
+        o
+    }
+
+    /// Decode one protocol object. Unknown `event` kinds, missing or
+    /// ill-typed required fields, non-finite numbers, and unknown keys
+    /// (typo protection) are all errors; the returned reason is what the
+    /// codec wraps with the line number.
+    pub fn from_json(j: &Json) -> Result<InEvent, String> {
+        let obj = j.as_obj().ok_or("expected a JSON object")?;
+        let kind = j
+            .get("event")
+            .and_then(Json::as_str)
+            .ok_or("missing or non-string \"event\" field")?;
+        let allowed: &[&str] = match kind {
+            "pod" => &["event", "t", "name", "image", "cpu_milli", "mem_mb", "duration_secs"],
+            "node-join" => &["event", "t"],
+            "node-drain" | "node-crash" => &["event", "t", "node"],
+            "outage" => &["event", "t", "secs"],
+            "shutdown" => &["event", "t"],
+            other => return Err(format!("unknown event kind {other:?}")),
+        };
+        for key in obj.keys() {
+            if !allowed.contains(&key.as_str()) {
+                return Err(format!("unknown field {key:?} for event {kind:?}"));
+            }
+        }
+        let t = match j.get("t") {
+            None => None,
+            Some(v) => {
+                let t = v.as_f64().ok_or("\"t\" must be a number")?;
+                if !t.is_finite() || t < 0.0 {
+                    return Err(format!("\"t\" must be finite and >= 0, got {t}"));
+                }
+                Some(t)
+            }
+        };
+        let need_t = || t.ok_or_else(|| format!("event {kind:?} requires \"t\""));
+        match kind {
+            "pod" => {
+                let image = j
+                    .get("image")
+                    .and_then(Json::as_str)
+                    .ok_or("pod event requires a string \"image\"")?;
+                if image.is_empty() {
+                    return Err("\"image\" must be non-empty".into());
+                }
+                let cpu_milli = match j.get("cpu_milli") {
+                    None => 100,
+                    Some(v) => {
+                        let n = v.as_i64().ok_or("\"cpu_milli\" must be an integer")?;
+                        u64::try_from(n).map_err(|_| "\"cpu_milli\" must be >= 0".to_string())?
+                    }
+                };
+                let mem_mb = match j.get("mem_mb") {
+                    None => 128.0,
+                    Some(v) => {
+                        let m = v.as_f64().ok_or("\"mem_mb\" must be a number")?;
+                        if !m.is_finite() || m < 0.0 {
+                            return Err(format!("\"mem_mb\" must be finite and >= 0, got {m}"));
+                        }
+                        m
+                    }
+                };
+                let duration_secs = match j.get("duration_secs") {
+                    None => None,
+                    Some(v) => {
+                        let d = v.as_f64().ok_or("\"duration_secs\" must be a number")?;
+                        if !d.is_finite() || d <= 0.0 {
+                            return Err(format!(
+                                "\"duration_secs\" must be finite and > 0, got {d}"
+                            ));
+                        }
+                        Some(d)
+                    }
+                };
+                let name = match j.get("name") {
+                    None => None,
+                    Some(v) => Some(
+                        v.as_str().ok_or("\"name\" must be a string")?.to_string(),
+                    ),
+                };
+                Ok(InEvent::Pod {
+                    t: need_t()?,
+                    name,
+                    image: image.to_string(),
+                    cpu_milli,
+                    mem_mb,
+                    duration_secs,
+                })
+            }
+            "node-join" => Ok(InEvent::NodeJoin { t: need_t()? }),
+            "node-drain" | "node-crash" => {
+                let node = j
+                    .get("node")
+                    .and_then(Json::as_i64)
+                    .ok_or_else(|| format!("event {kind:?} requires an integer \"node\""))?;
+                let node =
+                    u32::try_from(node).map_err(|_| "\"node\" must be a u32".to_string())?;
+                let t = need_t()?;
+                Ok(if kind == "node-drain" {
+                    InEvent::NodeDrain { t, node }
+                } else {
+                    InEvent::NodeCrash { t, node }
+                })
+            }
+            "outage" => {
+                let secs = j
+                    .get("secs")
+                    .and_then(Json::as_f64)
+                    .ok_or("outage event requires a numeric \"secs\"")?;
+                if !secs.is_finite() || secs <= 0.0 {
+                    return Err(format!("\"secs\" must be finite and > 0, got {secs}"));
+                }
+                Ok(InEvent::Outage { t: need_t()?, secs })
+            }
+            "shutdown" => Ok(InEvent::Shutdown { t }),
+            _ => unreachable!("kind validated against the allow-list above"),
+        }
+    }
+}
+
+/// A rejected protocol line. Mirrors the trace importers'
+/// [`crate::sim::TraceError`] split: under
+/// [`crate::sim::ErrorMode::Strict`] the first error aborts the session
+/// with its 1-based line number; under lenient mode the line is skipped,
+/// counted in the summary's `skipped_lines`, and reported on the
+/// diagnostic channel as [`error_to_json`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// The line was not a valid protocol object.
+    Malformed {
+        /// 1-based line number within the session's input stream.
+        line: usize,
+        /// What was wrong with it.
+        reason: String,
+    },
+    /// The line's timestamp went backwards. A live session cannot
+    /// reorder the future, so this is never repairable — lenient mode
+    /// skips the line, strict mode aborts.
+    OutOfOrder {
+        /// 1-based line number within the session's input stream.
+        line: usize,
+        /// The offending timestamp.
+        t: f64,
+        /// The session's current time frontier (last accepted `t`).
+        last: f64,
+    },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Malformed { line, reason } => {
+                write!(f, "line {line}: malformed event: {reason}")
+            }
+            ServeError::OutOfOrder { line, t, last } => {
+                write!(f, "line {line}: out-of-order timestamp t={t} < last accepted t={last}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Render a [`ServeError`] as the protocol's `{"type":"error",...}`
+/// diagnostic object (lenient sessions emit one per skipped line).
+pub fn error_to_json(e: &ServeError) -> Json {
+    let mut o = Json::obj();
+    o.set("type", Json::Str("error".into()));
+    match e {
+        ServeError::Malformed { line, reason } => {
+            o.set("kind", Json::Str("malformed".into()))
+                .set("line", Json::Int(*line as i64))
+                .set("reason", Json::Str(reason.clone()));
+        }
+        ServeError::OutOfOrder { line, t, last } => {
+            o.set("kind", Json::Str("out-of-order".into()))
+                .set("line", Json::Int(*line as i64))
+                .set("t", Json::Num(*t))
+                .set("last", Json::Num(*last));
+        }
+    }
+    o
+}

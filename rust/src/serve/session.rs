@@ -1,0 +1,261 @@
+//! The serve session: one live scheduling conversation between a
+//! protocol stream and the engine.
+//!
+//! A [`Session`] wires a [`StreamSource`] into an open
+//! [`Simulation`] stream (see [`Simulation::open_stream`]) and then, per
+//! input line: validates it, advances the engine to the event's
+//! timestamp with [`Simulation::step_until`], injects the event (pods
+//! through the arrival pipeline, node/registry lifecycle through
+//! [`Simulation::inject_event`]), steps again to the same frontier, and
+//! drains any [`crate::sim::DecisionDetail`]s the scheduling cycle
+//! produced into NDJSON decision lines. Because arrivals are the last
+//! event class at any timestamp and the protocol enforces non-decreasing
+//! `t`, the popped event sequence — and therefore every decision and the
+//! final report — is byte-identical to a batch replay of the same
+//! arrivals (`docs/ARCHITECTURE.md`, "Serve mode"; enforced end-to-end
+//! by [`crate::serve::run_shadow`]).
+//!
+//! Wall-clock time is injected: the session never reads a clock itself
+//! (the determinism lint's R2 bans ambient time outside `main.rs`), it
+//! calls the `FnMut() -> u64` microsecond counter its caller supplies.
+//! The CLI passes an `Instant`-based counter; shadow runs and tests pass
+//! `|| 0`, pinning `latency_us` to 0 so streams stay byte-comparable.
+
+use super::codec;
+use super::protocol::{error_to_json, InEvent, ServeError};
+use crate::cluster::{NodeId, Pod, PodBuilder, Resources};
+use crate::exp::export;
+use crate::registry::ImageRef;
+use crate::sim::{ErrorMode, EventPayload, SimReport, Simulation, StreamHandle, StreamSource};
+use crate::util::units::{Bytes, MilliCpu};
+
+/// Counters a [`Session`] accumulates over its lifetime (reported in the
+/// summary line and by the shadow differential).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SessionStats {
+    /// Protocol events accepted (pods + lifecycle + shutdown).
+    pub events: usize,
+    /// Pods submitted through the arrival pipeline.
+    pub pods: usize,
+    /// Lines skipped in lenient mode (malformed or out-of-order).
+    pub skipped: usize,
+    /// Decision lines emitted.
+    pub decisions: usize,
+}
+
+/// A live serve session over a mutably borrowed [`Simulation`] (see the
+/// module docs). Construct with [`Session::new`] (which opens the
+/// engine stream), feed it lines with [`Session::handle_line`] or pods
+/// directly with [`Session::submit_pod`], and end it exactly once with
+/// [`Session::finish`]. The simulation should be freshly built with a
+/// `shards = 1` config — incremental stepping is the sequential event
+/// loop cut at the arrival boundary.
+pub struct Session<'a> {
+    sim: &'a mut Simulation,
+    handle: StreamHandle,
+    builder: PodBuilder,
+    t0: f64,
+    last_t: f64,
+    mode: ErrorMode,
+    clock_us: Box<dyn FnMut() -> u64 + 'a>,
+    /// Running session counters.
+    pub stats: SessionStats,
+}
+
+impl<'a> Session<'a> {
+    /// Open a session: switch on per-bind decision capture, create the
+    /// stream channel, and open the engine stream. `mode` governs bad
+    /// input lines (strict abort vs lenient skip-and-count, mirroring
+    /// the trace importers); `clock_us` is the wall-clock microsecond
+    /// counter used only for the emitted `latency_us` field.
+    pub fn new(
+        sim: &'a mut Simulation,
+        mode: ErrorMode,
+        clock_us: Box<dyn FnMut() -> u64 + 'a>,
+    ) -> Session<'a> {
+        sim.collect_decisions(true);
+        let (source, handle) = StreamSource::channel();
+        let t0 = sim.clock.now();
+        sim.open_stream(Box::new(source));
+        Session {
+            sim,
+            handle,
+            builder: PodBuilder::new(),
+            t0,
+            last_t: t0,
+            mode,
+            clock_us,
+            stats: SessionStats::default(),
+        }
+    }
+
+    /// Process one input line: decode, validate (monotone `t`, known
+    /// node ids, image present in the registry catalog), apply, and
+    /// append any resulting decision lines to `out`. Lenient-mode
+    /// rejections append a `{"type":"error",...}` object to `diag` (kept
+    /// separate so stdout can stay a pure decision stream) and return
+    /// `Ok(false)`; strict mode returns the error. `Ok(true)` means a
+    /// `shutdown` event was accepted — call [`Session::finish`].
+    pub fn handle_line(
+        &mut self,
+        line: &str,
+        lineno: usize,
+        out: &mut Vec<String>,
+        diag: &mut Vec<String>,
+    ) -> Result<bool, ServeError> {
+        let ev = match codec::decode_line(line, lineno) {
+            Ok(None) => return Ok(false),
+            Ok(Some(ev)) => ev,
+            Err(e) => return self.reject(e, diag),
+        };
+        // Semantic checks the stateless codec cannot make.
+        if let Some(t) = ev.t() {
+            if t < self.last_t {
+                let e = ServeError::OutOfOrder { line: lineno, t, last: self.last_t };
+                return self.reject(e, diag);
+            }
+        }
+        match &ev {
+            InEvent::NodeDrain { node, .. } | InEvent::NodeCrash { node, .. } => {
+                let fleet = self.sim.state.node_count();
+                if (*node as usize) >= fleet {
+                    let reason = format!("unknown node id {node} (fleet has {fleet} nodes)");
+                    return self.reject(ServeError::Malformed { line: lineno, reason }, diag);
+                }
+            }
+            InEvent::Pod { image, .. } => {
+                if self.sim.registry.manifest(&ImageRef::parse(image)).is_err() {
+                    let reason = format!("image {image:?} not in the registry catalog");
+                    return self.reject(ServeError::Malformed { line: lineno, reason }, diag);
+                }
+            }
+            _ => {}
+        }
+        self.stats.events += 1;
+        Ok(self.apply(ev, out))
+    }
+
+    /// Apply one already-validated event (the shared tail of
+    /// [`Session::handle_line`]; callers that construct [`InEvent`]s
+    /// programmatically can use it directly). Returns true for
+    /// `shutdown`.
+    pub fn apply(&mut self, ev: InEvent, out: &mut Vec<String>) -> bool {
+        match ev {
+            InEvent::Pod { t, name, image, cpu_milli, mem_mb, duration_secs } => {
+                let requests = Resources::new(MilliCpu(cpu_milli), Bytes::from_mb(mem_mb));
+                let mut pod = self.builder.build(&image, requests);
+                if let Some(d) = duration_secs {
+                    pod = pod.with_duration(d);
+                }
+                if let Some(n) = name {
+                    pod.name = n;
+                }
+                self.submit_pod(t, pod, out);
+                false
+            }
+            InEvent::NodeJoin { t } => {
+                self.lifecycle(t, EventPayload::NodeJoin, out);
+                false
+            }
+            InEvent::NodeDrain { t, node } => {
+                self.lifecycle(t, EventPayload::NodeDrain { node: NodeId(node) }, out);
+                false
+            }
+            InEvent::NodeCrash { t, node } => {
+                self.lifecycle(t, EventPayload::NodeCrash { node: NodeId(node) }, out);
+                false
+            }
+            InEvent::Outage { t, secs } => {
+                self.lifecycle(t, EventPayload::RegistryOutageStart { until: t + secs }, out);
+                false
+            }
+            InEvent::Shutdown { t } => {
+                if let Some(t) = t {
+                    let start = (self.clock_us)();
+                    self.sim.step_until(t);
+                    let us = (self.clock_us)().saturating_sub(start);
+                    self.drain_decisions(us, out);
+                    self.last_t = t;
+                }
+                true
+            }
+        }
+    }
+
+    /// Submit one pod at absolute virtual time `t` — the serve half of
+    /// the arrival pipeline, also driven directly by the shadow replay.
+    /// Steps the engine to `t`, pushes the arrival (offset `t - t0`
+    /// under the [`crate::sim::ArrivalSource`] contract), pumps the
+    /// stream, and steps again so the arrival — the last event class at
+    /// `t` — pops exactly where a batch replay would pop it. Decision
+    /// lines for every bind the steps produced (this pod's, and any
+    /// parked pod released by the same events) are appended to `out`
+    /// with the measured step latency.
+    pub fn submit_pod(&mut self, t: f64, pod: Pod, out: &mut Vec<String>) {
+        let t = if t.is_finite() { t.max(self.last_t) } else { self.last_t };
+        let start = (self.clock_us)();
+        self.sim.step_until(t);
+        self.handle.push(t - self.t0, pod);
+        self.sim.pump_stream();
+        self.sim.step_until(t);
+        let us = (self.clock_us)().saturating_sub(start);
+        self.drain_decisions(us, out);
+        self.last_t = t;
+        self.stats.pods += 1;
+    }
+
+    /// End the session: close the engine stream (draining every queued
+    /// event to quiescence — the same tail a batch run executes), append
+    /// the remaining decision lines and the summary line to `out`, and
+    /// return the full [`SimReport`]. Call exactly once, after EOF or an
+    /// accepted `shutdown` event.
+    pub fn finish(&mut self, out: &mut Vec<String>) -> SimReport {
+        let start = (self.clock_us)();
+        let report = self.sim.close_stream();
+        let us = (self.clock_us)().saturating_sub(start);
+        self.drain_decisions(us, out);
+        let summary = export::serve_summary_to_json(
+            &report,
+            self.stats.decisions,
+            self.stats.skipped,
+            self.sim.clock.now(),
+        );
+        out.push(summary.to_string());
+        report
+    }
+
+    /// Advance to `t`, inject a lifecycle event, and advance again —
+    /// node churn and outages share the arrival path's step discipline.
+    /// Crashes resubmit lost pods, so these steps can bind pods and
+    /// emit decisions too.
+    fn lifecycle(&mut self, t: f64, payload: EventPayload, out: &mut Vec<String>) {
+        let start = (self.clock_us)();
+        self.sim.step_until(t);
+        self.sim.inject_event(t, payload);
+        self.sim.step_until(t);
+        let us = (self.clock_us)().saturating_sub(start);
+        self.drain_decisions(us, out);
+        self.last_t = t;
+    }
+
+    /// Route a bad line by mode: strict aborts with the error, lenient
+    /// counts it and renders a diagnostic object.
+    fn reject(&mut self, e: ServeError, diag: &mut Vec<String>) -> Result<bool, ServeError> {
+        match self.mode {
+            ErrorMode::Strict => Err(e),
+            ErrorMode::Lenient => {
+                self.stats.skipped += 1;
+                diag.push(error_to_json(&e).to_string());
+                Ok(false)
+            }
+        }
+    }
+
+    /// Render and append every decision captured since the last drain.
+    fn drain_decisions(&mut self, latency_us: u64, out: &mut Vec<String>) {
+        for d in self.sim.take_decisions() {
+            out.push(export::decision_to_json(&d, latency_us).to_string());
+            self.stats.decisions += 1;
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Shadow mode: replay a trace through the serve path and hold its
+//! decision stream byte-identical to the batch `scale --trace` replay —
+//! the house differential-test style extended to the service boundary.
+//!
+//! Two simulations are built from the same trace file and the same
+//! config. The **batch** side runs [`Simulation::run_source`] over the
+//! trace's [`crate::sim::TraceSource`] with decision capture on — this
+//! is exactly what `lrsched scale --trace` executes. The **serve** side
+//! opens the trace a second time and feeds the same `(offset, pod)`
+//! pairs one at a time through [`Session::submit_pod`] — the live
+//! session path, minus only the NDJSON input codec (which the protocol
+//! golden tests and the stdin fixture cover). Every decision line, and
+//! the full report fingerprint ([`crate::sim::SimReport::render`]), must
+//! match byte-for-byte; the first divergence is reported with its index
+//! and both lines. Shadow pins `latency_us` to 0 on both sides so the
+//! streams are comparable.
+
+use super::session::Session;
+use crate::exp::{common, export};
+use crate::sim::{ArrivalSource, ErrorMode, SimConfig, Simulation, TraceOptions, TraceReplay};
+
+/// Run the shadow differential over the trace at `path` (see the module
+/// docs). `nodes`/`disk_gb` size the fleet like `scale --nodes
+/// --disk-gb`; `cfg` must be the same config the batch comparison run
+/// would use (the `serve` CLI builds it with `scale`'s defaults).
+/// Returns the serve-side stream — every decision line plus the summary
+/// line, ready to print — or an error describing the trace failure or
+/// the first divergence.
+pub fn run_shadow(
+    path: &std::path::Path,
+    opts: &TraceOptions,
+    nodes: usize,
+    disk_gb: f64,
+    cfg: &SimConfig,
+) -> Result<Vec<String>, String> {
+    // --- batch reference: the scale --trace replay ---------------------
+    let replay = TraceReplay::open(path, opts).map_err(|e| e.to_string())?;
+    let expected = replay.stats.events;
+    let registry = replay.synthesize_registry();
+    let mut batch_sim =
+        Simulation::new(common::scale_nodes_with_disk(nodes, disk_gb), registry, cfg.clone());
+    batch_sim.collect_decisions(true);
+    let source = replay.into_source();
+    let batch_slot = source.error_slot();
+    let batch_report = batch_sim.run_source(Box::new(source));
+    if let Some(e) = batch_slot.lock().ok().and_then(|mut s| s.take()) {
+        return Err(format!("batch replay failed: {e}"));
+    }
+    let batch_lines: Vec<String> = batch_sim
+        .take_decisions()
+        .iter()
+        .map(|d| export::decision_to_json(d, 0).to_string())
+        .collect();
+
+    // --- serve side: the same arrivals through the session path --------
+    let replay2 = TraceReplay::open(path, opts).map_err(|e| e.to_string())?;
+    let registry2 = replay2.synthesize_registry();
+    let mut serve_sim =
+        Simulation::new(common::scale_nodes_with_disk(nodes, disk_gb), registry2, cfg.clone());
+    let mut trace_src = replay2.into_source();
+    let serve_slot = trace_src.error_slot();
+    let mut lines = Vec::new();
+    let mut session = Session::new(&mut serve_sim, ErrorMode::Strict, Box::new(|| 0_u64));
+    while let Some((offset, pod)) = trace_src.next_arrival() {
+        session.submit_pod(offset, pod, &mut lines);
+    }
+    let serve_report = session.finish(&mut lines);
+    // Decisions drained inside finish (binds in the post-stream drain
+    // tail) count too; everything before the trailing summary line.
+    let decisions = session.stats.decisions;
+    if let Some(e) = serve_slot.lock().ok().and_then(|mut s| s.take()) {
+        return Err(format!("serve replay failed: {e}"));
+    }
+    if serve_report.submitted != expected {
+        return Err(format!(
+            "serve replay ended early: submitted {} of {} expected pods",
+            serve_report.submitted, expected
+        ));
+    }
+
+    // --- the differential ----------------------------------------------
+    let serve_decisions = &lines[..decisions];
+    if batch_lines.len() != serve_decisions.len() {
+        return Err(format!(
+            "shadow divergence: batch bound {} pods, serve bound {}",
+            batch_lines.len(),
+            serve_decisions.len()
+        ));
+    }
+    for (i, (b, s)) in batch_lines.iter().zip(serve_decisions).enumerate() {
+        if b != s {
+            return Err(format!(
+                "shadow divergence at decision {i}:\n  batch: {b}\n  serve: {s}"
+            ));
+        }
+    }
+    let (br, sr) = (batch_report.render(), serve_report.render());
+    if br != sr {
+        let diff = br
+            .lines()
+            .zip(sr.lines())
+            .position(|(a, b)| a != b)
+            .map(|i| format!(" (first differing line {})", i + 1))
+            .unwrap_or_default();
+        return Err(format!("shadow divergence: report fingerprints differ{diff}"));
+    }
+    Ok(lines)
+}

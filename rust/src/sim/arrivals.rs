@@ -19,6 +19,10 @@
 //!   explicit `Vec<(offset, Pod)>`; it is what
 //!   [`crate::sim::Simulation::run_arrivals`] uses, and the reference
 //!   the differential tests hold the streaming path byte-identical to.
+//! - [`StreamSource`] — the live half of `lrsched serve`: a shared
+//!   queue a [`StreamHandle`] pushes protocol-delivered pods into while
+//!   the engine pulls from the other end, so an online session drives
+//!   the *same* arrival pipeline as a batch replay.
 //!
 //! **Contract:** offsets are seconds relative to replay start, must be
 //! finite, and must be non-decreasing across successive pulls — the
@@ -96,6 +100,53 @@ impl ArrivalSource for WorkloadSource {
         let i = self.next;
         self.next += 1;
         Some((i as f64 * self.dt, self.gen.next_pod()))
+    }
+}
+
+/// The engine end of a live serve session: an [`ArrivalSource`] fed
+/// incrementally through its paired [`StreamHandle`]. Construction hands
+/// back both halves; the source goes into
+/// [`crate::sim::Simulation::open_stream`] and the handle stays with the
+/// session loop, which pushes one pod per protocol event and then pumps
+/// the engine. Returning `None` here means "no arrival *yet*" — unlike
+/// the batch sources, exhaustion is signalled by the session closing the
+/// stream, not by the source.
+pub struct StreamSource {
+    queue: std::rc::Rc<std::cell::RefCell<std::collections::VecDeque<(f64, Pod)>>>,
+}
+
+/// The feeding end of a [`StreamSource`] (see there). Offsets follow the
+/// [`ArrivalSource`] contract: seconds from session start, finite,
+/// non-decreasing — the protocol codec enforces monotone timestamps
+/// before anything reaches this handle.
+pub struct StreamHandle {
+    queue: std::rc::Rc<std::cell::RefCell<std::collections::VecDeque<(f64, Pod)>>>,
+}
+
+impl StreamSource {
+    /// Create a connected `(source, handle)` pair.
+    pub fn channel() -> (StreamSource, StreamHandle) {
+        let queue = std::rc::Rc::new(std::cell::RefCell::new(std::collections::VecDeque::new()));
+        (StreamSource { queue: queue.clone() }, StreamHandle { queue })
+    }
+}
+
+impl StreamHandle {
+    /// Queue one arrival for the engine to pull (clamping a negative
+    /// offset to zero, like [`VecSource`]).
+    pub fn push(&self, offset: f64, pod: Pod) {
+        self.queue.borrow_mut().push_back((offset.max(0.0), pod));
+    }
+
+    /// Arrivals pushed but not yet pulled by the engine.
+    pub fn pending(&self) -> usize {
+        self.queue.borrow().len()
+    }
+}
+
+impl ArrivalSource for StreamSource {
+    fn next_arrival(&mut self) -> Option<(f64, Pod)> {
+        self.queue.borrow_mut().pop_front()
     }
 }
 

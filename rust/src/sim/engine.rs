@@ -371,6 +371,46 @@ impl SimReport {
     }
 }
 
+/// Everything `lrsched serve` reports about one binding decision —
+/// captured inside the scheduling cycle when
+/// [`Simulation::collect_decisions`] is on, and drained with
+/// [`Simulation::take_decisions`]. A superset of the corresponding
+/// [`PodRecord`]: it adds the winning node's per-plugin score breakdown
+/// and the pod/node identities the protocol needs. Collection is off by
+/// default so batch replays (and the CI memory gate) pay nothing.
+#[derive(Debug, Clone)]
+pub struct DecisionDetail {
+    /// The bound pod.
+    pub pod: PodId,
+    /// Its metadata name (the protocol's correlation handle).
+    pub pod_name: String,
+    /// Image key (`name:tag`).
+    pub image: String,
+    /// Winning node id.
+    pub node: NodeId,
+    /// Winning node name.
+    pub node_name: String,
+    /// Final S^{k,n}(t) of the winner.
+    pub final_score: f64,
+    /// Its S_layer (Eq. 3).
+    pub layer_score: f64,
+    /// Its S_K8s.
+    pub k8s_score: f64,
+    /// The ω used.
+    pub omega: f64,
+    /// Per-plugin `(name, normalized score)` pairs behind `k8s_score`, in
+    /// plugin registration order (empty for the RL scheduler).
+    pub breakdown: Vec<(&'static str, f64)>,
+    /// Bytes pulled from the registry over the WAN for this placement.
+    pub wan_bytes: Bytes,
+    /// Bytes fetched from peer edge nodes over the LAN.
+    pub p2p_bytes: Bytes,
+    /// Estimated seconds until the image is ready on the node.
+    pub est_secs: f64,
+    /// Virtual decision time (seconds).
+    pub at: f64,
+}
+
 /// The scheduler driving a simulation: the paper's Algorithm-1 family or
 /// the §VII learning-based extension.
 enum SchedImpl {
@@ -486,6 +526,21 @@ pub struct Simulation {
     /// next pod is pulled when the previous one resolves instead of when
     /// its arrival event pops.
     chain_arrivals: bool,
+    /// A serve session is live ([`Simulation::open_stream`]): the stream
+    /// may still produce arrivals, so the watcher treats the session
+    /// itself as pending work and [`Simulation::step_until`] must not
+    /// drain past the frontier. Always false in batch runs.
+    session_open: bool,
+    /// A future `Arrival` event is sitting in the queue. Guards
+    /// [`Simulation::pump_stream`]: the one-future-arrival invariant of
+    /// the arrival pipeline must hold even when the serve session pumps
+    /// after every pushed pod rather than once per pop.
+    arrival_pending: bool,
+    /// Capture a [`DecisionDetail`] per bind (serve mode only; batch
+    /// replays leave this off so memory stays flat).
+    collect_decisions: bool,
+    /// Captured decisions awaiting [`Simulation::take_decisions`].
+    decision_log: Vec<DecisionDetail>,
     /// Is a WatcherTick event currently scheduled?
     watcher_armed: bool,
     /// Terminal state per submitted pod (the accounting source of truth;
@@ -587,6 +642,10 @@ impl Simulation {
             arrival_source: None,
             arrivals_t0: 0.0,
             chain_arrivals: false,
+            session_open: false,
+            arrival_pending: false,
+            collect_decisions: false,
+            decision_log: Vec::new(),
             watcher_armed: false,
             outcomes: BTreeMap::new(),
             epochs: HashMap::new(),
@@ -665,8 +724,12 @@ impl Simulation {
     /// pull resolutions coordinator events).
     fn run_events_seq(&mut self) {
         while let Some(ev) = self.queue.pop() {
-            if ev.payload.is_watcher() && !self.queue.has_pending_work() {
+            if ev.payload.is_watcher() && !self.queue.has_pending_work() && !self.session_open
+            {
                 // Nothing left that a poll could affect: let the sim drain.
+                // (An open serve session counts as pending work — the
+                // stream can still produce arrivals, exactly like the
+                // future arrival a batch run would hold in the queue.)
                 self.watcher_armed = false;
                 continue;
             }
@@ -685,12 +748,16 @@ impl Simulation {
                     self.watcher_armed = false;
                     self.watcher.poll(t, &self.registry, &mut self.cache);
                     let next = self.watcher.next_poll_at();
-                    if self.queue.has_pending_work() && next.is_finite() && next > t {
+                    if (self.queue.has_pending_work() || self.session_open)
+                        && next.is_finite()
+                        && next > t
+                    {
                         self.queue.push(next, EventPayload::WatcherTick);
                         self.watcher_armed = true;
                     }
                 }
                 EventPayload::Arrival { pod } => {
+                    self.arrival_pending = false;
                     let pid = self.state.submit_pod(pod);
                     self.submitted += 1;
                     self.events.record(t, pid, EventKind::Submitted);
@@ -1141,6 +1208,7 @@ impl Simulation {
                 self.arrivals_t0 + offset.max(0.0)
             };
             self.queue.push(at.max(now), EventPayload::Arrival { pod });
+            self.arrival_pending = true;
         }
     }
 
@@ -1189,6 +1257,7 @@ impl Simulation {
                     k8s_score: 0.0,
                     omega: 0.0,
                     download_cost: crate::sched::layer_score::download_cost(&ctx, n),
+                    breakdown: Vec::new(),
                 }
             }),
         };
@@ -1344,6 +1413,24 @@ impl Simulation {
         if let SchedImpl::Rl(s) = &mut self.scheduler {
             // Online reward: the paper's two objectives as one scalar.
             s.learn(wan_bytes.as_mb(), std_after);
+        }
+        if self.collect_decisions {
+            self.decision_log.push(DecisionDetail {
+                pod: pid,
+                pod_name: pod.name.clone(),
+                image: pod.image.key(),
+                node: decision.node,
+                node_name: self.state.node(decision.node).name.clone(),
+                final_score: decision.final_score,
+                layer_score: decision.layer_score,
+                k8s_score: decision.k8s_score,
+                omega: decision.omega,
+                breakdown: decision.breakdown.clone(),
+                wan_bytes,
+                p2p_bytes,
+                est_secs: download_secs,
+                at: now,
+            });
         }
         self.records.push(PodRecord {
             pod: pid,
@@ -1644,6 +1731,89 @@ impl Simulation {
         let report = self.drain_and_report();
         self.arrival_source = None;
         report
+    }
+
+    // --- serve sessions ---------------------------------------------------
+
+    /// Open a live serve session over `source` (normally a
+    /// [`crate::sim::arrivals::StreamSource`]): arm the watcher, anchor
+    /// arrival offsets at the current clock, and mark the session open so
+    /// the watcher keeps polling while the stream may still produce
+    /// arrivals. The caller then alternates
+    /// [`Simulation::pump_stream`] / [`Simulation::step_until`] as events
+    /// arrive and finishes with [`Simulation::close_stream`]. Exactly the
+    /// [`Simulation::run_source`] loop, cut at the arrival boundary — the
+    /// popped event sequence (and therefore the report, records, and
+    /// event log) is byte-identical to handing the same arrivals to
+    /// `run_source` up front, because arrivals are the last event class
+    /// at any timestamp and stream offsets are non-decreasing.
+    pub fn open_stream(&mut self, source: Box<dyn ArrivalSource>) {
+        let t0 = self.clock.now();
+        self.arm_watcher(t0);
+        self.arrivals_t0 = t0;
+        self.arrival_source = Some(source);
+        self.session_open = true;
+    }
+
+    /// Pull the next arrival from the session source unless one is
+    /// already queued — the serve-session pump. Preserves the arrival
+    /// pipeline's one-future-arrival invariant even though the session
+    /// pumps after every pushed pod rather than once per arrival pop.
+    pub fn pump_stream(&mut self) {
+        if !self.arrival_pending {
+            let now = self.clock.now();
+            self.pump_arrival(now);
+        }
+    }
+
+    /// Incremental stepping: pop and dispatch every queued event due at
+    /// or before virtual time `t`, without draining the horizon. The
+    /// clock advances only to event times (never to `t` itself), so a
+    /// later-pushed arrival at exactly `t` still fires at its own
+    /// timestamp — the serve session calls this before injecting each
+    /// stream event to bring the engine to that event's frontier.
+    pub fn step_until(&mut self, t: f64) {
+        loop {
+            let due = match self.queue.peek() {
+                Some(head) => head.at <= t,
+                None => false,
+            };
+            if !due {
+                return;
+            }
+            let ev = self.queue.pop().expect("peeked event exists");
+            if ev.payload.is_watcher() && !self.queue.has_pending_work() && !self.session_open
+            {
+                self.watcher_armed = false;
+                continue;
+            }
+            self.clock.advance_to(ev.at);
+            let now = self.clock.now();
+            self.step_event(now, ev.payload);
+        }
+    }
+
+    /// End a serve session: mark the stream closed (the watcher may now
+    /// disarm when real work drains), run every remaining event to
+    /// quiescence — the same tail a batch run executes after its last
+    /// arrival — take the final snapshot, and build the report.
+    pub fn close_stream(&mut self) -> SimReport {
+        self.session_open = false;
+        let report = self.drain_and_report();
+        self.arrival_source = None;
+        report
+    }
+
+    /// Toggle per-bind [`DecisionDetail`] capture (serve mode). Off by
+    /// default: batch replays keep constant memory.
+    pub fn collect_decisions(&mut self, on: bool) {
+        self.collect_decisions = on;
+    }
+
+    /// Drain the decisions captured since the last call (empty unless
+    /// [`Simulation::collect_decisions`] is on).
+    pub fn take_decisions(&mut self) -> Vec<DecisionDetail> {
+        std::mem::take(&mut self.decision_log)
     }
 
     /// Run the event loop to quiescence, take the final snapshot, and

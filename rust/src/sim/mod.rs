@@ -22,12 +22,12 @@ pub mod shard;
 pub mod trace;
 pub mod workload;
 
-pub use arrivals::{ArrivalSource, VecSource, WorkloadSource};
+pub use arrivals::{ArrivalSource, StreamHandle, StreamSource, VecSource, WorkloadSource};
 pub use bandwidth::LinkModel;
 pub use cache::{CachePolicy, CachePolicyChoice};
 pub use clock::Clock;
 pub use download::PullManager;
-pub use engine::{SchedulerChoice, SimConfig, SimReport, Simulation};
+pub use engine::{DecisionDetail, SchedulerChoice, SimConfig, SimReport, Simulation};
 pub use events::{EventPayload, EventQueue};
 pub use metrics::{ClusterSnapshot, PodRecord};
 pub use p2p::{plan_sources, SourcePlan, Swarm, SwarmIndex};

@@ -1,0 +1,97 @@
+//! The docs drift gate: the operator-facing books must keep up with the
+//! CLI. Every flag the `scale`, `serve`, `gen-trace`, and `lint`
+//! subcommands accept has to appear (as `--<name>`) in `docs/SCALE.md`
+//! or `docs/SERVE.md`, and every relative markdown link anywhere under
+//! `docs/` has to resolve to a real file — so a renamed flag or a moved
+//! document fails `cargo test` instead of rotting silently. The specs
+//! live in [`lrsched::cli::specs`], the single source both `main.rs` and
+//! this gate read.
+
+use lrsched::cli::specs;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    // cargo test runs with cwd = rust/; the docs live beside it.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+fn read_doc(name: &str) -> String {
+    let path = repo_root().join("docs").join(name);
+    fs::read_to_string(&path).unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()))
+}
+
+/// Extract every inline markdown link target — the `path` in `](path)` —
+/// from `text`.
+fn link_targets(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(i) = rest.find("](") {
+        rest = &rest[i + 2..];
+        if let Some(j) = rest.find(')') {
+            out.push(rest[..j].trim().to_string());
+            rest = &rest[j + 1..];
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+#[test]
+fn repo_docs_are_complete() {
+    // --- 1. every CLI flag is documented --------------------------------
+    let books = [read_doc("SCALE.md"), read_doc("SERVE.md")].join("\n");
+    let mut missing = Vec::new();
+    for (cmd, spec) in [
+        ("scale", specs::scale()),
+        ("serve", specs::serve()),
+        ("gen-trace", specs::gen_trace()),
+        ("lint", specs::lint()),
+    ] {
+        for opt in spec {
+            let flag = format!("--{}", opt.name);
+            if !books.contains(&flag) {
+                missing.push(format!("{cmd} {flag}"));
+            }
+        }
+    }
+    assert!(
+        missing.is_empty(),
+        "CLI flags missing from docs/SCALE.md and docs/SERVE.md (document them \
+         or the operator's books drift): {missing:?}"
+    );
+
+    // --- 2. every relative doc link resolves ----------------------------
+    let docs_dir = repo_root().join("docs");
+    let mut broken = Vec::new();
+    for entry in fs::read_dir(&docs_dir).expect("docs/ exists") {
+        let path = entry.expect("readable dir entry").path();
+        if path.extension().and_then(|e| e.to_str()) != Some("md") {
+            continue;
+        }
+        let text = fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()));
+        for target in link_targets(&text) {
+            if target.starts_with("http://")
+                || target.starts_with("https://")
+                || target.starts_with("mailto:")
+                || target.starts_with('#')
+                || target.is_empty()
+            {
+                continue;
+            }
+            // Drop any fragment; resolve relative to the linking file.
+            let file_part = target.split('#').next().unwrap_or(&target);
+            let resolved = path.parent().unwrap_or(Path::new(".")).join(file_part);
+            if !resolved.exists() {
+                broken.push(format!(
+                    "{} -> {target} (resolved {})",
+                    path.file_name().and_then(|n| n.to_str()).unwrap_or("?"),
+                    resolved.display()
+                ));
+            }
+        }
+    }
+    assert!(broken.is_empty(), "broken relative links under docs/: {broken:?}");
+}

@@ -1,0 +1,330 @@
+//! Serve-protocol conformance tests: NDJSON round-trips for every input
+//! event variant, strict-vs-lenient error handling with line numbers,
+//! out-of-order rejection, decision/summary line shapes, and the
+//! in-process shadow differential holding the serve path byte-identical
+//! to the batch `scale --trace` replay — the PR 9 acceptance criteria.
+
+use lrsched::exp::common;
+use lrsched::registry::Registry;
+use lrsched::serve::{decode_line, encode_line, run_shadow, InEvent, ServeError, Session};
+use lrsched::sim::{ErrorMode, SimConfig, Simulation, TraceOptions};
+use lrsched::util::json;
+use std::path::PathBuf;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+/// The config every serve test uses — `scale --trace`'s defaults, which
+/// `lrsched serve` hardcodes to keep shadow mode byte-comparable.
+fn serve_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.inter_arrival_secs = Some(0.3);
+    cfg.gc_enabled = true;
+    cfg.retry_limit = 10;
+    cfg.retry_backoff_secs = 5.0;
+    cfg.snapshot_every = 1000;
+    cfg
+}
+
+fn session_sim(nodes: usize) -> Simulation {
+    Simulation::new(common::scale_nodes(nodes), Registry::with_corpus(), serve_cfg())
+}
+
+// ---------------------------------------------------------------------
+// Codec round-trips
+// ---------------------------------------------------------------------
+
+fn every_variant() -> Vec<InEvent> {
+    vec![
+        InEvent::Pod {
+            t: 0.0,
+            name: None,
+            image: "nginx:1.25".into(),
+            cpu_milli: 100,
+            mem_mb: 128.0,
+            duration_secs: None,
+        },
+        InEvent::Pod {
+            t: 1.5,
+            name: Some("web-0".into()),
+            image: "redis:7.2".into(),
+            cpu_milli: 500,
+            mem_mb: 512.0,
+            duration_secs: Some(30.0),
+        },
+        InEvent::NodeJoin { t: 2.0 },
+        InEvent::NodeDrain { t: 3.0, node: 1 },
+        InEvent::NodeCrash { t: 4.0, node: 2 },
+        InEvent::Outage { t: 5.0, secs: 10.0 },
+        InEvent::Shutdown { t: None },
+        InEvent::Shutdown { t: Some(60.0) },
+    ]
+}
+
+#[test]
+fn every_variant_round_trips_through_the_codec() {
+    for ev in every_variant() {
+        let line = encode_line(&ev);
+        let back = decode_line(&line, 1)
+            .unwrap_or_else(|e| panic!("decode({line:?}) failed: {e}"))
+            .expect("non-blank line decodes to an event");
+        assert_eq!(back, ev, "round-trip mismatch for {line}");
+        // Encoding is canonical: a second trip is byte-stable.
+        assert_eq!(encode_line(&back), line);
+    }
+}
+
+#[test]
+fn blank_lines_and_comments_are_skipped() {
+    for line in ["", "   ", "\t", "# a comment", "  # indented comment"] {
+        assert_eq!(decode_line(line, 7), Ok(None), "line {line:?} should be skipped");
+    }
+}
+
+#[test]
+fn defaults_are_applied_to_minimal_pod_lines() {
+    let ev = decode_line(r#"{"event":"pod","t":0,"image":"nginx:1.25"}"#, 1)
+        .unwrap()
+        .unwrap();
+    match ev {
+        InEvent::Pod { cpu_milli, mem_mb, name, duration_secs, .. } => {
+            assert_eq!(cpu_milli, 100);
+            assert_eq!(mem_mb, 128.0);
+            assert_eq!(name, None);
+            assert_eq!(duration_secs, None);
+        }
+        other => panic!("expected a pod event, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_lines_carry_their_line_number() {
+    let cases: &[&str] = &[
+        "not json at all",
+        "{\"event\":\"pod\",\"t\":0}",                      // missing image
+        "{\"event\":\"warp\",\"t\":0}",                     // unknown kind
+        "{\"event\":\"pod\",\"t\":-1,\"image\":\"a\"}",     // negative t
+        "{\"event\":\"pod\",\"t\":0,\"image\":\"\"}",       // empty image
+        "{\"event\":\"pod\",\"t\":0,\"image\":\"a\",\"cpus\":2}", // unknown key
+        "{\"event\":\"outage\",\"t\":0,\"secs\":0}",        // non-positive window
+        "{\"event\":\"node-drain\",\"t\":0}",               // missing node
+        "{\"event\":\"node-drain\",\"t\":0,\"node\":-3}",   // negative node
+        "[1,2,3]",                                          // not an object
+    ];
+    for (i, line) in cases.iter().enumerate() {
+        let lineno = i + 10;
+        match decode_line(line, lineno) {
+            Err(ServeError::Malformed { line: l, .. }) => {
+                assert_eq!(l, lineno, "wrong line number for {line}")
+            }
+            other => panic!("expected Malformed for {line}, got {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Session semantics: strict vs lenient, ordering, validation
+// ---------------------------------------------------------------------
+
+#[test]
+fn strict_session_aborts_on_first_bad_line_with_its_number() {
+    let mut sim = session_sim(4);
+    let mut session = Session::new(&mut sim, ErrorMode::Strict, Box::new(|| 0_u64));
+    let (mut out, mut diag) = (Vec::new(), Vec::new());
+    session
+        .handle_line(r#"{"event":"pod","t":0,"image":"nginx:1.25"}"#, 1, &mut out, &mut diag)
+        .expect("good line accepted");
+    let err = session
+        .handle_line("garbage", 2, &mut out, &mut diag)
+        .expect_err("strict mode rejects");
+    match err {
+        ServeError::Malformed { line, .. } => assert_eq!(line, 2),
+        other => panic!("expected Malformed, got {other:?}"),
+    }
+    assert!(diag.is_empty(), "strict mode emits no diagnostics");
+}
+
+#[test]
+fn lenient_session_skips_counts_and_diagnoses_bad_lines() {
+    let mut sim = session_sim(4);
+    let mut session = Session::new(&mut sim, ErrorMode::Lenient, Box::new(|| 0_u64));
+    let (mut out, mut diag) = (Vec::new(), Vec::new());
+    let lines = [
+        r#"{"event":"pod","t":0,"image":"nginx:1.25"}"#,
+        "garbage",
+        r#"{"event":"pod","t":1,"image":"no-such-image:0.0"}"#,
+        r#"{"event":"node-crash","t":1,"node":999}"#,
+        r#"{"event":"pod","t":2,"image":"redis:7.2"}"#,
+    ];
+    for (i, line) in lines.iter().enumerate() {
+        let shutdown = session
+            .handle_line(line, i + 1, &mut out, &mut diag)
+            .expect("lenient mode never errors");
+        assert!(!shutdown);
+    }
+    assert_eq!(session.stats.skipped, 3);
+    assert_eq!(session.stats.pods, 2);
+    assert_eq!(diag.len(), 3, "one diagnostic object per skipped line");
+    for d in &diag {
+        let j = json::parse(d).expect("diagnostics are valid JSON");
+        assert_eq!(j.get("type").and_then(|v| v.as_str()), Some("error"));
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("malformed"));
+    }
+    let report = session.finish(&mut out);
+    assert_eq!(report.submitted, 2);
+    assert!(report.accounting_balanced());
+}
+
+#[test]
+fn out_of_order_timestamps_are_rejected_in_both_modes() {
+    // Strict: abort with line number, t, and the frontier.
+    let mut sim = session_sim(4);
+    let mut session = Session::new(&mut sim, ErrorMode::Strict, Box::new(|| 0_u64));
+    let (mut out, mut diag) = (Vec::new(), Vec::new());
+    session
+        .handle_line(r#"{"event":"pod","t":5,"image":"nginx:1.25"}"#, 1, &mut out, &mut diag)
+        .unwrap();
+    let err = session
+        .handle_line(r#"{"event":"pod","t":4,"image":"nginx:1.25"}"#, 2, &mut out, &mut diag)
+        .expect_err("time went backwards");
+    match err {
+        ServeError::OutOfOrder { line, t, last } => {
+            assert_eq!(line, 2);
+            assert_eq!(t, 4.0);
+            assert_eq!(last, 5.0);
+        }
+        other => panic!("expected OutOfOrder, got {other:?}"),
+    }
+
+    // Lenient: skip, count, diagnose — later in-order lines still land.
+    let mut sim = session_sim(4);
+    let mut session = Session::new(&mut sim, ErrorMode::Lenient, Box::new(|| 0_u64));
+    let (mut out, mut diag) = (Vec::new(), Vec::new());
+    session
+        .handle_line(r#"{"event":"pod","t":5,"image":"nginx:1.25"}"#, 1, &mut out, &mut diag)
+        .unwrap();
+    session
+        .handle_line(r#"{"event":"pod","t":4,"image":"nginx:1.25"}"#, 2, &mut out, &mut diag)
+        .unwrap();
+    session
+        .handle_line(r#"{"event":"pod","t":6,"image":"nginx:1.25"}"#, 3, &mut out, &mut diag)
+        .unwrap();
+    assert_eq!(session.stats.skipped, 1);
+    assert_eq!(session.stats.pods, 2);
+    let j = json::parse(&diag[0]).unwrap();
+    assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("out-of-order"));
+    assert_eq!(j.get("line").and_then(|v| v.as_i64()), Some(2));
+}
+
+// ---------------------------------------------------------------------
+// Output line shapes
+// ---------------------------------------------------------------------
+
+#[test]
+fn decision_and_summary_lines_have_the_documented_shape() {
+    let mut sim = session_sim(4);
+    let mut session = Session::new(&mut sim, ErrorMode::Strict, Box::new(|| 0_u64));
+    let (mut out, mut diag) = (Vec::new(), Vec::new());
+    session
+        .handle_line(
+            r#"{"event":"pod","t":0,"name":"web-0","image":"nginx:1.25","cpu_milli":500,"mem_mb":512}"#,
+            1,
+            &mut out,
+            &mut diag,
+        )
+        .unwrap();
+    assert_eq!(out.len(), 1, "one decision per pod");
+    let d = json::parse(&out[0]).expect("decision line is valid JSON");
+    assert_eq!(d.get("type").and_then(|v| v.as_str()), Some("decision"));
+    assert_eq!(d.get("pod_name").and_then(|v| v.as_str()), Some("web-0"));
+    assert_eq!(d.get("image").and_then(|v| v.as_str()), Some("nginx:1.25"));
+    assert_eq!(d.get("latency_us").and_then(|v| v.as_i64()), Some(0));
+    for key in [
+        "t", "pod", "node", "node_id", "final_score", "layer_score", "k8s_score", "omega",
+        "wan_bytes", "p2p_bytes", "est_secs",
+    ] {
+        assert!(d.get(key).is_some(), "decision line missing {key:?}: {}", out[0]);
+    }
+    let breakdown = d.get("breakdown").and_then(|v| v.as_arr()).expect("breakdown array");
+    assert!(!breakdown.is_empty(), "per-plugin breakdown is populated");
+    for entry in breakdown {
+        assert!(entry.get("plugin").and_then(|v| v.as_str()).is_some());
+        assert!(entry.get("score").and_then(|v| v.as_f64()).is_some());
+    }
+    // Canonical rendering: parse → re-encode is byte-stable.
+    assert_eq!(d.to_string(), out[0]);
+
+    let report = session.finish(&mut out);
+    assert_eq!(report.submitted, 1);
+    let s = json::parse(out.last().unwrap()).expect("summary line is valid JSON");
+    assert_eq!(s.get("type").and_then(|v| v.as_str()), Some("summary"));
+    assert_eq!(s.get("submitted").and_then(|v| v.as_i64()), Some(1));
+    assert_eq!(s.get("decisions").and_then(|v| v.as_i64()), Some(1));
+    assert_eq!(s.get("skipped_lines").and_then(|v| v.as_i64()), Some(0));
+    for key in ["started", "failed_pulls", "unschedulable", "lost_to_crash", "wan_bytes", "p2p_bytes", "cache_hit_rate", "virtual_secs"]
+    {
+        assert!(s.get(key).is_some(), "summary line missing {key:?}");
+    }
+}
+
+#[test]
+fn shutdown_event_ends_the_session_like_eof() {
+    let mut sim = session_sim(4);
+    let mut session = Session::new(&mut sim, ErrorMode::Strict, Box::new(|| 0_u64));
+    let (mut out, mut diag) = (Vec::new(), Vec::new());
+    session
+        .handle_line(r#"{"event":"pod","t":0,"image":"nginx:1.25","duration_secs":5}"#, 1, &mut out, &mut diag)
+        .unwrap();
+    let shutdown = session
+        .handle_line(r#"{"event":"shutdown"}"#, 2, &mut out, &mut diag)
+        .unwrap();
+    assert!(shutdown, "shutdown event signals end of session");
+    let report = session.finish(&mut out);
+    assert_eq!(report.submitted, 1);
+    assert!(report.accounting_balanced());
+    assert!(out.last().unwrap().contains("\"type\":\"summary\""));
+}
+
+#[test]
+fn lifecycle_events_drive_the_engine() {
+    let mut sim = session_sim(4);
+    let mut session = Session::new(&mut sim, ErrorMode::Strict, Box::new(|| 0_u64));
+    let (mut out, mut diag) = (Vec::new(), Vec::new());
+    let lines = [
+        r#"{"event":"pod","t":0,"image":"nginx:1.25","duration_secs":600}"#,
+        r#"{"event":"node-join","t":10}"#,
+        r#"{"event":"pod","t":20,"image":"redis:7.2","duration_secs":600}"#,
+        r#"{"event":"node-crash","t":30,"node":0}"#,
+        r#"{"event":"outage","t":40,"secs":5}"#,
+        r#"{"event":"pod","t":50,"image":"nginx:1.25","duration_secs":600}"#,
+    ];
+    for (i, line) in lines.iter().enumerate() {
+        session.handle_line(line, i + 1, &mut out, &mut diag).unwrap();
+    }
+    let report = session.finish(&mut out);
+    // Crash resubmission may rebind pods, so only the identity is exact.
+    assert_eq!(report.submitted, 3);
+    assert!(report.accounting_balanced());
+    assert!(session.stats.decisions >= 3, "each pod got at least one decision");
+}
+
+// ---------------------------------------------------------------------
+// The shadow differential (also run, via the CLI, in CI)
+// ---------------------------------------------------------------------
+
+#[test]
+fn shadow_holds_serve_byte_identical_to_batch_replay() {
+    let opts = TraceOptions::default();
+    let lines = run_shadow(&fixture("alibaba_mini.csv"), &opts, 8, 64.0, &serve_cfg())
+        .expect("shadow differential passes on the bundled fixture");
+    assert!(lines.len() > 1, "decision stream plus summary");
+    for line in &lines[..lines.len() - 1] {
+        assert!(line.contains("\"type\":\"decision\""), "unexpected line {line}");
+    }
+    assert!(lines.last().unwrap().contains("\"type\":\"summary\""));
+    // Determinism: a second shadow run reproduces the stream exactly.
+    let again = run_shadow(&fixture("alibaba_mini.csv"), &opts, 8, 64.0, &serve_cfg())
+        .expect("second shadow run passes");
+    assert_eq!(lines, again);
+}
