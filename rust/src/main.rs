@@ -159,7 +159,7 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
             let s = replay.stats.clone();
             let note = format!(
                 "trace: {path} format={} events={} apps={} span={:.1}s speedup={speedup:.0}x \
-                 skipped={} duplicates={} filtered={} reorder_depth={}{}{}{}",
+                 skipped={} duplicates={} filtered={} reorder_depth={} ingest={}{}{}{}",
                 format.label(),
                 s.events,
                 s.apps,
@@ -168,6 +168,7 @@ fn run_scale(rest: &[String]) -> Result<(), String> {
                 s.duplicates,
                 s.filtered,
                 s.reorder_depth,
+                s.ingest_path.label(),
                 if s.resorted { " (reordered)" } else { "" },
                 if s.full_resort { " (full-sort fallback)" } else { "" },
                 if s.limit_hit {

@@ -15,11 +15,13 @@
 //! which broke retry-order determinism once wake-ups released batches.)
 
 use crate::cluster::PodId;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 /// What could cure a parked pod's unschedulable reason — kube-scheduler's
 /// `QueueingHint` reduced to the two classes this simulator distinguishes.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+/// `Ord` because the live-cure index keys a `BTreeMap` by cure class
+/// (sorted keys: nothing hash-ordered can reach engine control flow).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
 pub enum ParkCure {
     /// Freed capacity can cure it (resources, disk, container slots, or a
     /// node joining): released by capacity wake-ups *and* the timer.
@@ -44,6 +46,11 @@ pub struct SchedulingQueue {
     active: VecDeque<PodId>,
     /// Parked pods in FIFO park order.
     backoff: Vec<Parked>,
+    /// Live-cure index: how many parked pods each cure class could
+    /// release. Maintained by every park/release path so the sharded
+    /// engine's cure-aware window collection reads it in O(log classes)
+    /// instead of scanning the parking lot per window.
+    cures: BTreeMap<ParkCure, usize>,
     /// Back-off applied by [`SchedulingQueue::park`].
     pub backoff_secs: f64,
 }
@@ -51,7 +58,12 @@ pub struct SchedulingQueue {
 impl SchedulingQueue {
     /// An empty queue with the 5-second default back-off.
     pub fn new() -> SchedulingQueue {
-        SchedulingQueue { active: VecDeque::new(), backoff: Vec::new(), backoff_secs: 5.0 }
+        SchedulingQueue {
+            active: VecDeque::new(),
+            backoff: Vec::new(),
+            cures: BTreeMap::new(),
+            backoff_secs: 5.0,
+        }
     }
 
     /// Enqueue a pod for scheduling.
@@ -75,6 +87,7 @@ impl SchedulingQueue {
     pub fn park_with_cure(&mut self, pod: PodId, now: f64, cure: ParkCure) -> f64 {
         let release_at = now + self.backoff_secs;
         self.backoff.push(Parked { pod, release_at, cure });
+        *self.cures.entry(cure).or_insert(0) += 1;
         release_at
     }
 
@@ -83,10 +96,13 @@ impl SchedulingQueue {
     fn release_where(&mut self, pred: impl Fn(&Parked) -> bool) -> Vec<PodId> {
         let mut released = Vec::new();
         let active = &mut self.active;
+        let cures = &mut self.cures;
         self.backoff.retain(|p| {
             if pred(p) {
                 active.push_back(p.pod);
                 released.push(p.pod);
+                let c = cures.get_mut(&p.cure).expect("parked pod counted in cure index");
+                *c -= 1;
                 false
             } else {
                 true
@@ -131,6 +147,21 @@ impl SchedulingQueue {
     /// Pods parked in back-off.
     pub fn parked_len(&self) -> usize {
         self.backoff.len()
+    }
+
+    /// Parked pods a given cure class could release, from the live-cure
+    /// index (O(log classes); no scan of the parking lot).
+    pub fn parked_with(&self, cure: ParkCure) -> usize {
+        self.cures.get(&cure).copied().unwrap_or(0)
+    }
+
+    /// Parked pods a capacity wake-up would release — exactly the number
+    /// [`SchedulingQueue::wake_capacity`] would return pods for. The
+    /// sharded engine's cure-aware window collection reads this once per
+    /// window: zero means no node-local event in the window can wake
+    /// anything, so the whole window is safe to run in parallel.
+    pub fn capacity_parked(&self) -> usize {
+        self.parked_with(ParkCure::Capacity)
     }
 }
 
@@ -201,6 +232,58 @@ mod tests {
         assert_eq!(q.parked_len(), 1, "timer-parked pod still waits");
         assert_eq!(q.release_due(6.0), 1);
         assert_eq!(q.pop(), Some(PodId(2)));
+    }
+
+    #[test]
+    fn cure_index_tracks_every_park_and_release_path() {
+        let mut q = SchedulingQueue::new();
+        assert_eq!(q.capacity_parked(), 0);
+        q.park_with_cure(PodId(1), 0.0, ParkCure::Capacity);
+        q.park_with_cure(PodId(2), 0.0, ParkCure::Timer);
+        q.park_with_cure(PodId(3), 0.0, ParkCure::Capacity);
+        assert_eq!(q.capacity_parked(), 2);
+        assert_eq!(q.parked_with(ParkCure::Timer), 1);
+        // Wake drains the whole Capacity class from the index.
+        assert_eq!(q.wake_capacity().len(), 2);
+        assert_eq!(q.capacity_parked(), 0);
+        assert_eq!(q.parked_with(ParkCure::Timer), 1);
+        // The timer path decrements its class too.
+        assert_eq!(q.release_due(5.0), 1);
+        assert_eq!(q.parked_with(ParkCure::Timer), 0);
+        // Re-parking after a release re-counts.
+        q.park_with_cure(PodId(1), 10.0, ParkCure::Capacity);
+        assert_eq!(q.capacity_parked(), 1);
+        assert_eq!(q.release_due(15.0), 1);
+        assert_eq!(q.capacity_parked(), 0);
+    }
+
+    #[test]
+    fn cure_index_matches_a_parking_lot_scan() {
+        // Property-style cross-check: after an arbitrary park/release
+        // interleaving, the O(1) index equals what a scan would count
+        // (here: zero remaining per class once everything released).
+        let mut q = SchedulingQueue::new();
+        let mut expect_cap = 0usize;
+        for i in 0..50u64 {
+            let cure = if i % 3 == 0 { ParkCure::Timer } else { ParkCure::Capacity };
+            q.park_with_cure(PodId(i), i as f64, cure);
+            if cure == ParkCure::Capacity {
+                expect_cap += 1;
+            }
+            if i % 7 == 6 {
+                expect_cap -= q.wake_capacity().len();
+            }
+            assert_eq!(q.capacity_parked(), expect_cap, "index drifted at step {i}");
+            assert_eq!(
+                q.capacity_parked() + q.parked_with(ParkCure::Timer),
+                q.parked_len(),
+                "classes must partition the parking lot"
+            );
+        }
+        q.release_due(f64::MAX);
+        assert_eq!(q.capacity_parked(), 0);
+        assert_eq!(q.parked_with(ParkCure::Timer), 0);
+        assert_eq!(q.parked_len(), 0);
     }
 
     #[test]

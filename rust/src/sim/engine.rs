@@ -148,6 +148,16 @@ pub struct SimConfig {
     /// byte-identical report and event log (`docs/ARCHITECTURE.md`,
     /// "Sharded event lanes").
     pub shards: usize,
+    /// Cure-aware parallel windows (the default): while pods sit parked,
+    /// keep draining node-local events that cannot wake anything —
+    /// consulting the scheduling queue's live-cure index — and cut the
+    /// window at the first genuinely wake-relevant event, whose wake-up
+    /// fires at the merge barrier in pop order. `false` restores the
+    /// pre-cure conservative guard (any parked pod forces sequential
+    /// stretches), kept for the `engine_parked` bench's before/after
+    /// comparison and the conservative-vs-cure-aware differential test.
+    /// Both settings are byte-identical to `shards = 1` by construction.
+    pub cure_aware_windows: bool,
     /// Kubelet image-GC eviction/prefetch policy ([`crate::sim::cache`]).
     /// The default `PressureSweep` reproduces the pre-policy engine
     /// byte-for-byte (it never reads the per-layer use metadata).
@@ -180,6 +190,7 @@ impl Default for SimConfig {
             churn: None,
             wake_on_capacity: true,
             shards: 1,
+            cure_aware_windows: true,
             cache_policy: CachePolicyChoice::PressureSweep,
             cache_decay_secs: 300.0,
             cache_prefetch_bytes: Bytes::from_mb(256.0),
@@ -450,6 +461,13 @@ struct Window {
     /// Events consumed from the global queue — ≥ `n_slots`, because no-op
     /// pops (stale events) and outage re-queues consume without routing.
     consumed: usize,
+    /// The final slot is a wake-relevant event (a termination, or a GC
+    /// check that may evict) collected under live capacity-curable parks:
+    /// after the merge applies its effects, the coordinator fires the
+    /// wake-up the sequential handler would have fired at the same pop
+    /// position — if the slot actually freed capacity (`LaneEffects::
+    /// freed_capacity`).
+    wake_candidate: bool,
 }
 
 impl Window {
@@ -459,6 +477,7 @@ impl Window {
             spec: Vec::new(),
             n_slots: 0,
             consumed: 0,
+            wake_candidate: false,
         }
     }
 
@@ -468,6 +487,24 @@ impl Window {
         self.spec.push(spec);
         self.lanes[lane].push(LaneItem { slot, task });
     }
+}
+
+/// Engine-loop instrumentation for the windowed (sharded) mode — read by
+/// the `engine_parked` bench and the scale harness via
+/// [`Simulation::window_stats`]. Deliberately **not** part of
+/// [`SimReport`]: window shapes depend on `shards` and
+/// `SimConfig::cure_aware_windows`, and the report must stay
+/// byte-identical across both.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WindowStats {
+    /// Parallel windows opened (≥1 routed slot each).
+    pub windows: u64,
+    /// Node-local events drained through parallel windows.
+    pub windowed_events: u64,
+    /// Windows cut at a wake-relevant event under live capacity parks.
+    pub wake_stops: u64,
+    /// Sim-time with at least one pod parked (both engines account it).
+    pub parked_busy_secs: f64,
 }
 
 /// Monotonic suffix so every `Simulation` gets its own metadata-cache path
@@ -601,6 +638,17 @@ pub struct Simulation {
     pub nodes_drained: usize,
     /// Nodes crashed mid-run.
     pub nodes_crashed: usize,
+    /// Parallel windows opened by the sharded loop (≥1 routed slot).
+    windows_opened: u64,
+    /// Node-local events drained through parallel windows.
+    windowed_events: u64,
+    /// Windows cut at a wake-relevant event under live capacity parks
+    /// (the cure-aware stop; zero when nothing capacity-curable parks).
+    window_wake_stops: u64,
+    /// Sim-time during which at least one pod sat parked — the parked
+    /// occupancy the `engine_parked` bench asserts on. Instrumentation
+    /// only: never reaches the report or the event log.
+    parked_busy_secs: f64,
     cfg: SimConfig,
 }
 
@@ -668,6 +716,10 @@ impl Simulation {
             nodes_joined: 0,
             nodes_drained: 0,
             nodes_crashed: 0,
+            windows_opened: 0,
+            windowed_events: 0,
+            window_wake_stops: 0,
+            parked_busy_secs: 0.0,
             cfg,
         }
     }
@@ -693,7 +745,32 @@ impl Simulation {
         self.links.peak_peer_uploads()
     }
 
+    /// Windowed-loop instrumentation (window counts, cure-aware wake
+    /// stops, parked sim-time occupancy). All zeros in a sequential run
+    /// except `parked_busy_secs`, which both engines account.
+    pub fn window_stats(&self) -> WindowStats {
+        WindowStats {
+            windows: self.windows_opened,
+            windowed_events: self.windowed_events,
+            wake_stops: self.window_wake_stops,
+            parked_busy_secs: self.parked_busy_secs,
+        }
+    }
+
     // --- event loop -------------------------------------------------------
+
+    /// Advance the virtual clock to `at`, charging the elapsed interval to
+    /// the parked-occupancy accumulator when any pod sits parked — the
+    /// measurement behind the `engine_parked` bench's ≥80 % parked-time
+    /// workload contract. Pure instrumentation: coordinator-only, never
+    /// observable in the report or event log.
+    fn advance_clock(&mut self, at: f64) {
+        let now = self.clock.now();
+        if at > now && self.sched_queue.parked_len() > 0 {
+            self.parked_busy_secs += at - now;
+        }
+        self.clock.advance_to(at);
+    }
 
     /// Schedule the next watcher poll if none is pending.
     fn arm_watcher(&mut self, now: f64) {
@@ -733,7 +810,7 @@ impl Simulation {
                 self.watcher_armed = false;
                 continue;
             }
-            self.clock.advance_to(ev.at);
+            self.advance_clock(ev.at);
             let t = self.clock.now();
             self.step_event(t, ev.payload);
         }
@@ -875,10 +952,20 @@ impl Simulation {
     fn run_events_windowed(&mut self) {
         let n_lanes = self.cfg.shards.max(1);
         loop {
-            // A window is only safe while nothing is parked or queued for
-            // scheduling: then terminations/evictions cannot wake anything,
-            // so node-local events on different nodes are independent.
-            if self.sched_queue.is_empty() {
+            // Cure-aware windows (the default) open whenever no pod is
+            // *actively* queued for scheduling: parked pods are fine,
+            // because `collect_window` consults the live-cure index and
+            // cuts the window at the first event that could wake one
+            // (firing the wake-up at the merge barrier, in pop order).
+            // The conservative mode keeps the pre-cure guard: a window
+            // only while nothing is parked either, so terminations and
+            // evictions can never wake anything mid-window.
+            let window_ok = if self.cfg.cure_aware_windows {
+                self.sched_queue.active_len() == 0
+            } else {
+                self.sched_queue.is_empty()
+            };
+            if window_ok {
                 let w = self.collect_window(n_lanes);
                 let consumed = w.consumed;
                 if w.n_slots > 0 {
@@ -895,7 +982,7 @@ impl Simulation {
                         self.watcher_armed = false;
                         continue;
                     }
-                    self.clock.advance_to(ev.at);
+                    self.advance_clock(ev.at);
                     let t = self.clock.now();
                     self.step_event(t, ev.payload);
                 }
@@ -913,12 +1000,43 @@ impl Simulation {
     /// the container started); collection stops before popping an
     /// unconfirmed speculative event, and the merge step cancels it if the
     /// pull turned out to wedge.
+    ///
+    /// **Cure-aware stops.** When capacity-curable pods sit parked
+    /// (`SchedulingQueue::capacity_parked`, constant during collection —
+    /// parks are only created and consumed on the coordinator), an event
+    /// that could wake one must not run mid-window: the sequential engine
+    /// fires `wake_parked` + scheduling cycles right at its pop position.
+    /// Such an event becomes the window's **final** slot instead
+    /// (`Window::wake_candidate`), and the merge barrier fires its wake-up
+    /// after applying every effect — same state, same clock, same pop
+    /// position as the sequential engine. Wake relevance per class
+    /// ([`EventPayload::is_wake_candidate`]):
+    /// - pull completions never wake (finish-side evictions are disk
+    ///   bookkeeping, not wake sources) — always safe mid-window;
+    /// - valid terminations always release capacity — always final-slot;
+    /// - a per-node GC check wakes only if it evicts, which the
+    ///   coordinator can *predict* from its own node state while the
+    ///   node's disk is untouched this window: under the high-pressure
+    ///   threshold it cannot evict and is safe mid-window; over it (or
+    ///   with the node's disk already touched by an earlier slot) it is
+    ///   final-slot, and the barrier consults the lane-reported
+    ///   `freed_capacity` flag for the actual wake decision.
     fn collect_window(&mut self, n_lanes: usize) -> Window {
         /// Bounds per-window memory (routed work + buffered effects).
         const WINDOW_CAP: usize = 8192;
         let n_nodes = self.state.node_count();
         let mut w = Window::new(n_lanes);
         let mut speculative: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        // Could any node-local event wake a parked pod this window? Parks
+        // only change on the coordinator, so one read is sound for the
+        // whole collection. (In conservative mode the guard already
+        // ensured nothing is parked, making this false.)
+        let wake_possible =
+            self.cfg.wake_on_capacity && self.sched_queue.capacity_parked() > 0;
+        // Nodes whose disk state an earlier slot may have changed —
+        // membership-only (never iterated), so hash order cannot escape.
+        let mut disk_touched: std::collections::HashSet<NodeId> =
+            std::collections::HashSet::new();
         loop {
             if w.n_slots >= WINDOW_CAP {
                 break;
@@ -932,7 +1050,7 @@ impl Simulation {
                 }
             }
             let ev = self.queue.pop().expect("peeked head exists");
-            self.clock.advance_to(ev.at);
+            self.advance_clock(ev.at);
             let t = ev.at;
             w.consumed += 1;
             match ev.payload {
@@ -962,6 +1080,13 @@ impl Simulation {
                         spec = Some(seq);
                     }
                     let lane = lane_of(p.node.0 as usize, n_nodes, n_lanes);
+                    if wake_possible {
+                        // The install (and a possible finish-side GC)
+                        // changes this node's disk: later GC checks on it
+                        // can no longer be predicted from coordinator
+                        // state.
+                        disk_touched.insert(p.node);
+                    }
                     w.route(lane, LaneTask::Pull { p }, spec);
                 }
                 EventPayload::PodTermination { pod, epoch } => {
@@ -978,14 +1103,47 @@ impl Simulation {
                     let requests = self.state.pod(pod).expect("bound pod exists").requests;
                     let lane = lane_of(node.0 as usize, n_nodes, n_lanes);
                     w.route(lane, LaneTask::Term { pod, node, requests }, None);
+                    if wake_possible {
+                        // A valid termination always releases capacity, so
+                        // the sequential engine would wake parked pods at
+                        // exactly this pop position: close the window here
+                        // and let the merge barrier fire the wake-up.
+                        w.wake_candidate = true;
+                        self.window_wake_stops += 1;
+                        break;
+                    }
                 }
                 EventPayload::GcSweepNode { node } => {
+                    // Can this check evict (and so wake)? Predicted from
+                    // coordinator state while the node's disk is untouched
+                    // this window: under `gc_high_pct` the lane's sweep
+                    // no-ops, so it is safe mid-window. Over it — or with
+                    // the prediction stale — close the window on it and
+                    // let the barrier read the lane-reported outcome.
+                    let may_evict = wake_possible
+                        && self.cfg.gc_enabled
+                        && {
+                            let n = self.state.node(node);
+                            n.is_up()
+                                && (disk_touched.contains(&node) || {
+                                    let (disk, used) =
+                                        (n.disk.0 as f64, n.disk_used.0 as f64);
+                                    disk > 0.0 && used / disk > self.cfg.gc_high_pct
+                                })
+                        };
                     let lane = lane_of(node.0 as usize, n_nodes, n_lanes);
                     w.route(lane, LaneTask::Sweep { t, node }, None);
+                    if may_evict {
+                        w.wake_candidate = true;
+                        self.window_wake_stops += 1;
+                        break;
+                    }
                 }
                 other => unreachable!("non-lane event {other:?} collected into a window"),
             }
         }
+        self.windows_opened += u64::from(w.n_slots > 0);
+        self.windowed_events += w.n_slots as u64;
         w
     }
 
@@ -993,9 +1151,17 @@ impl Simulation {
     /// the buffered effects back in global pop order: event-log records
     /// append in the order the sequential engine would have written them,
     /// outcome/memo updates apply per slot, and a wedged pull cancels its
-    /// speculative termination.
+    /// speculative termination. A window closed on a wake-relevant final
+    /// slot ([`Window::wake_candidate`]) fires its wake-up last — after
+    /// every effect (and the pull bookkeeping GC) has been applied, the
+    /// cluster state and clock are exactly what the sequential engine's
+    /// handler saw at that pop position, so the barrier wake's scheduling
+    /// cycles are byte-identical by the same merge-order argument.
     fn process_window(&mut self, w: Window) {
         let n_lanes = w.lanes.len();
+        let wake_candidate = w.wake_candidate;
+        let final_slot = w.n_slots.wrapping_sub(1);
+        let mut final_freed = false;
         let gc = GcParams {
             enabled: self.cfg.gc_enabled,
             high: self.cfg.gc_high_pct,
@@ -1034,6 +1200,9 @@ impl Simulation {
                 Some(e) => e,
                 None => continue, // slot routed but produced no effects
             };
+            if wake_candidate && slot == final_slot {
+                final_freed = eff.freed_capacity;
+            }
             // A lane that installed or evicted layers changed its node's
             // inventory; the coordinator owns the swarm index, so the
             // dirty mark happens here, at the merge barrier — before any
@@ -1065,6 +1234,15 @@ impl Simulation {
             }
         }
         self.pulls.gc(self.clock.now());
+        // The barrier wake: the final slot was wake-relevant and actually
+        // freed capacity (a valid termination always does; a GC check only
+        // when it evicted). State, clock, and pop position now match the
+        // sequential engine at the instant its handler called
+        // `wake_parked`, so the released pods' scheduling cycles — and
+        // everything they push — are identical.
+        if wake_candidate && final_freed && self.wake_parked() > 0 {
+            self.drain_sched_queue();
+        }
     }
 
     // --- cluster volatility -----------------------------------------------
@@ -1787,7 +1965,7 @@ impl Simulation {
                 self.watcher_armed = false;
                 continue;
             }
-            self.clock.advance_to(ev.at);
+            self.advance_clock(ev.at);
             let now = self.clock.now();
             self.step_event(now, ev.payload);
         }
@@ -1947,6 +2125,70 @@ mod tests {
         sim.state.check_invariants().unwrap();
         // Clock advanced by the total download time.
         assert!(sim.clock.now() > 0.0);
+    }
+
+    #[test]
+    fn cure_relevant_event_closes_the_window_at_its_slot() {
+        // The cure-aware collection contract, pinned at the unit level:
+        // with a capacity-curable pod parked, safe node-local events keep
+        // extending the window, and the first wake-relevant event (here a
+        // valid termination) becomes the final slot — later node-local
+        // events stay queued for the next window.
+        let reg = Registry::with_corpus();
+        let mut gen = WorkloadGen::new(&reg, WorkloadConfig::default());
+        let mut pod = gen.next_pod();
+        pod.duration_secs = None; // keep the binding alive after deploy
+        let pid = pod.id;
+        let cfg = SimConfig { shards: 2, inter_arrival_secs: Some(1.0), ..Default::default() };
+        let mut sim = Simulation::new(nodes(4), reg, cfg);
+        assert!(sim.deploy(pod));
+        let node = sim.state.binding(pid).expect("deployed pod stays bound");
+
+        // Park a capacity-curable pod: wake_possible is now true, so the
+        // window must stop at the first event that could wake it.
+        sim.sched_queue.park_with_cure(PodId(9_999), sim.clock.now(), ParkCure::Capacity);
+        assert_eq!(sim.sched_queue.capacity_parked(), 1);
+
+        let t = sim.clock.now();
+        // GC is disabled, so per-node GC checks cannot evict — safe
+        // mid-window. The termination is the first wake-relevant event.
+        sim.queue.push(t + 1.0, EventPayload::GcSweepNode { node });
+        sim.queue.push(t + 2.0, EventPayload::GcSweepNode { node });
+        sim.queue.push(t + 3.0, EventPayload::PodTermination { pod: pid, epoch: 0 });
+        sim.queue.push(t + 4.0, EventPayload::GcSweepNode { node });
+
+        let w = sim.collect_window(2);
+        assert_eq!(w.n_slots, 3, "two safe sweeps + the closing termination");
+        assert!(w.wake_candidate, "the final slot must carry the barrier wake");
+        assert_eq!(sim.window_stats().wake_stops, 1);
+        let head = sim.queue.peek().expect("trailing sweep still queued");
+        assert_eq!(head.at, t + 4.0, "events after the wake stop wait for the next window");
+    }
+
+    #[test]
+    fn pull_completions_extend_windows_while_pods_are_parked() {
+        // A parked pod must no longer disable windowing: pull completions
+        // can never wake anything, so they are collected even with a
+        // capacity-curable pod parked.
+        let reg = Registry::with_corpus();
+        let mut gen = WorkloadGen::new(&reg, WorkloadConfig::default());
+        let mut pod = gen.next_pod();
+        pod.duration_secs = None;
+        let cfg = SimConfig { shards: 2, inter_arrival_secs: Some(1.0), ..Default::default() };
+        let mut sim = Simulation::new(nodes(4), reg, cfg);
+        assert!(sim.deploy(pod));
+        sim.sched_queue.park_with_cure(PodId(9_999), sim.clock.now(), ParkCure::Capacity);
+        let before = sim.window_stats();
+        // Deploy another pod: its pull completion must drain through a
+        // parallel window despite the parked pod.
+        let mut second = gen.next_pod();
+        second.duration_secs = None;
+        assert!(sim.deploy(second));
+        let after = sim.window_stats();
+        assert!(
+            after.windowed_events > before.windowed_events,
+            "pull completion must ride a window, not a sequential stretch"
+        );
     }
 
     #[test]

@@ -131,6 +131,21 @@ impl EventPayload {
                 | EventPayload::GcSweepNode { .. }
         )
     }
+
+    /// Among the node-local classes, could this event free capacity and
+    /// thereby wake a parked pod? A termination always releases its pod's
+    /// requests, and a per-node GC check wakes if it actually evicts; a
+    /// pull completion never wakes — the sequential handler treats a
+    /// finish-side eviction as disk bookkeeping, not a wake-up source.
+    /// Cure-aware window collection uses this to decide which events may
+    /// have to close a parallel window when capacity-curable pods are
+    /// parked (see `docs/ARCHITECTURE.md`, "Sharded event lanes").
+    pub fn is_wake_candidate(&self) -> bool {
+        matches!(
+            self,
+            EventPayload::PodTermination { .. } | EventPayload::GcSweepNode { .. }
+        )
+    }
 }
 
 /// A scheduled event. Ord is (at, class, seq); timestamps are finite by
@@ -348,6 +363,26 @@ mod tests {
             EventPayload::BackoffRelease,
         ] {
             assert!(!p.is_node_local(), "{p:?} must be coordinator-only");
+        }
+    }
+
+    #[test]
+    fn wake_candidates_are_the_terminate_and_sweep_classes() {
+        // The cure-aware window contract: of the three node-local
+        // classes, only terminations and per-node GC checks can wake a
+        // parked pod in the sequential engine. Pull completions must stay
+        // non-candidates — they may evict on the finish side, but the
+        // sequential handler never calls `wake_parked` for them.
+        assert!(EventPayload::PodTermination { pod: PodId(1), epoch: 0 }.is_wake_candidate());
+        assert!(EventPayload::GcSweepNode { node: NodeId(0) }.is_wake_candidate());
+        assert!(!EventPayload::PullComplete { pod: PodId(1) }.is_wake_candidate());
+        // Every wake candidate is node-local (coordinator classes wake
+        // inline and never enter a window in the first place).
+        for p in [
+            EventPayload::PodTermination { pod: PodId(1), epoch: 0 },
+            EventPayload::GcSweepNode { node: NodeId(0) },
+        ] {
+            assert!(p.is_node_local(), "{p:?} must be a lane class");
         }
     }
 

@@ -33,8 +33,8 @@ pub use metrics::{ClusterSnapshot, PodRecord};
 pub use p2p::{plan_sources, SourcePlan, Swarm, SwarmIndex};
 pub use shard::LanePool;
 pub use trace::{
-    ErrorMode, Trace, TraceError, TraceErrorSlot, TraceEvent, TraceFormat, TraceOptions,
-    TraceReplay, TraceSource, TraceStats,
+    ErrorMode, IngestPath, Trace, TraceError, TraceErrorSlot, TraceEvent, TraceFormat,
+    TraceOptions, TraceReplay, TraceSource, TraceStats,
 };
 pub use workload::{
     ChurnAction, ChurnConfig, ChurnEvent, ChurnModel, Popularity, WorkloadConfig, WorkloadGen,

@@ -383,6 +383,15 @@ pub(crate) struct LaneEffects {
     /// Did the container start? `false` retracts the speculatively
     /// scheduled termination event.
     pub started: bool,
+    /// Did this task free node capacity in a way the sequential engine
+    /// treats as a capacity wake-up source? `true` for every termination
+    /// (the release always frees the pod's requests) and for a GC sweep
+    /// that actually evicted; always `false` for pull completions (a
+    /// finish-side eviction wakes nothing in the sequential engine
+    /// either). The coordinator reads the window's *final* slot's flag to
+    /// decide whether to fire the barrier wake-up — earlier slots cannot
+    /// be wake-relevant by window construction.
+    pub freed_capacity: bool,
 }
 
 /// One event lane: a contiguous slice of the node table plus the window's
@@ -436,6 +445,7 @@ impl<'a> Shard<'a> {
                 outcome: None,
                 remember: None,
                 started: true,
+                freed_capacity: false,
             };
             match item.task {
                 LaneTask::Pull { p } => {
@@ -499,6 +509,7 @@ impl<'a> Shard<'a> {
                     // Binding removal already happened on the coordinator;
                     // this is the node half of `ClusterState::unbind`.
                     nodes[node.0 as usize - base].release(pod, requests);
+                    eff.freed_capacity = true;
                 }
                 LaneTask::Sweep { t, node } => {
                     let nidx = node.0 as usize - base;
@@ -512,6 +523,7 @@ impl<'a> Shard<'a> {
                                 n, pods, interner, &view, target, gc.policy, gc.decay, t,
                             );
                             if freed > Bytes::ZERO {
+                                eff.freed_capacity = true;
                                 eff.log.push((
                                     t,
                                     NODE_SCOPE,
@@ -663,6 +675,49 @@ mod tests {
     }
 
     #[test]
+    fn termination_effects_always_report_freed_capacity() {
+        use crate::cluster::Node;
+        use crate::registry::LayerInterner;
+        use crate::util::units::Bandwidth;
+
+        let mut node = Node::new(
+            NodeId(0),
+            "n0",
+            Resources::cores_gb(4.0, 4.0),
+            Bytes::from_gb(10.0),
+            Bandwidth::from_mbps(10.0),
+        );
+        let requests = Resources::cores_gb(1.0, 1.0);
+        node.assign(PodId(7), requests);
+        let mut nodes = vec![node];
+        let pods = BTreeMap::new();
+        let interner = LayerInterner::new();
+        let images = ImageLayerStore::new();
+        let gc = GcParams {
+            enabled: false,
+            high: 0.85,
+            low: 0.70,
+            policy: CachePolicyChoice::PressureSweep,
+            decay: 300.0,
+        };
+        let mut shard = Shard::new(
+            0,
+            &mut nodes,
+            vec![LaneItem {
+                slot: 0,
+                task: LaneTask::Term { pod: PodId(7), node: NodeId(0), requests },
+            }],
+        );
+        shard.process(&pods, &interner, &images, gc);
+        assert_eq!(shard.effects.len(), 1);
+        // The coordinator only routes a termination whose binding removal
+        // succeeded, so the lane's release is unconditional — and so is
+        // the wake-relevance flag the barrier wake-up reads.
+        assert!(shard.effects[0].freed_capacity);
+        assert_eq!(shard.nodes[0].used, Resources::ZERO);
+    }
+
+    #[test]
     fn shard_processes_pull_and_sweep_like_the_engine() {
         use crate::cluster::{ClusterState, Node, PodBuilder};
         use crate::registry::hub;
@@ -727,8 +782,13 @@ mod tests {
         assert_eq!(pull_eff.log.len(), 2, "PullFinished then Started");
         assert!(matches!(pull_eff.log[0].2, EventKind::PullFinished { .. }));
         assert!(matches!(pull_eff.log[1].2, EventKind::Started { .. }));
-        // Below the pressure threshold: the sweep evicts nothing.
+        // A pull completion is never a wake-up source, even though it
+        // changed the node's disk state.
+        assert!(!pull_eff.freed_capacity);
+        // Below the pressure threshold: the sweep evicts nothing, so it
+        // frees no capacity either.
         assert!(shard.effects[1].log.is_empty());
+        assert!(!shard.effects[1].freed_capacity);
         assert!(shard.nodes[0].has_image(&redis.image_ref()));
         assert_eq!(shard.nodes[0].disk_used, redis.total_size);
     }

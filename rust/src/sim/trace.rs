@@ -22,14 +22,28 @@
 //!    pull-based [`TraceSource`] (an
 //!    [`crate::sim::arrivals::ArrivalSource`]): each accepted row becomes
 //!    a normalized [`TraceEvent`] and then a [`Pod`], emitted one at a
-//!    time as the engine's clock reaches it. In lenient mode a
-//!    **bounded reorder buffer** (a min-heap of at most
-//!    [`TraceOptions::reorder_cap`] + 1 events, keyed by `(time, row
-//!    order)`) repairs out-of-order timestamps exactly like the old
-//!    whole-trace stable re-sort did — byte-identically, because the
-//!    scan pass proves the trace's disorder fits the buffer, and falls
-//!    back to a buffered full sort ([`TraceStats::full_resort`]) when it
-//!    does not.
+//!    time as the engine's clock reaches it. The scan pass picks the
+//!    replay strategy ([`TraceStats::ingest_path`]): a **single-pass
+//!    direct stream** when no repair is needed (strict mode, or a
+//!    measured [`TraceStats::reorder_depth`] of 0 — time-sorted traces
+//!    skip the heap entirely), otherwise a **bounded reorder buffer**
+//!    (a min-heap of at most [`TraceOptions::reorder_cap`] + 1 events,
+//!    keyed by `(time, row order)`) that repairs out-of-order timestamps
+//!    exactly like the old whole-trace stable re-sort did —
+//!    byte-identically, because the scan pass proves the trace's
+//!    disorder fits the buffer — falling back to a buffered full sort
+//!    ([`TraceStats::full_resort`]) when it does not.
+//!
+//! **When can the scan pass itself be cut short?** The replay pass
+//! always needs the scan's `t=0` normalization anchor and app set, so a
+//! pass over the file cannot be skipped outright — but its costly part,
+//! the keys-only reorder-buffer simulation, only runs in lenient mode.
+//! Files produced by `lrsched gen-trace` are emitted with strictly
+//! increasing timestamps and unique task ids, so they can (and should)
+//! be ingested in [`ErrorMode::Strict`]: the scan degenerates to pure
+//! parse + min/max bookkeeping, and the replay pass takes
+//! [`IngestPath::Direct`] — the same single-pass route a lenient scan
+//! would select after measuring `reorder_depth == 0`.
 //!
 //! Three concrete dialects are supported: Alibaba cluster-trace
 //! `batch_task` CSV ([`TraceFormat::Alibaba`]), Azure packing-trace CSV
@@ -326,6 +340,45 @@ pub struct TraceStats {
     pub span_secs: f64,
     /// Distinct app keys (= synthesized images).
     pub apps: usize,
+    /// Which replay-pass strategy the scan pass selected — see
+    /// [`IngestPath`]. Time-sorted traces (everything `gen-trace`
+    /// produces) take [`IngestPath::Direct`] and never touch the reorder
+    /// heap.
+    pub ingest_path: IngestPath,
+}
+
+/// The replay-pass strategy the scan pass selects, recorded in
+/// [`TraceStats::ingest_path`] so callers can see which pipeline their
+/// trace actually exercised.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IngestPath {
+    /// Single-pass direct streaming: no reorder buffer at all. Chosen in
+    /// strict mode (the scan pass rejected any disorder) and in lenient
+    /// mode when the scan measured [`TraceStats::reorder_depth`] == 0.
+    /// Byte-identical to the buffered paths on such input: the reorder
+    /// heap is keyed `(time, row order)`, so on a time-sorted stream
+    /// every push is immediately the heap minimum and pops in input
+    /// order — the heap is a per-event `O(log cap)` no-op the direct
+    /// path simply skips.
+    Direct,
+    /// Lenient-mode bounded reorder buffer: disorder exists but fits
+    /// [`TraceOptions::reorder_cap`].
+    #[default]
+    BoundedReorder,
+    /// Whole-stream buffered stable sort — the disorder exceeded the
+    /// buffer ([`TraceStats::full_resort`]).
+    FullResort,
+}
+
+impl IngestPath {
+    /// CLI/report-facing name of the path.
+    pub fn label(&self) -> &'static str {
+        match self {
+            IngestPath::Direct => "direct",
+            IngestPath::BoundedReorder => "bounded-reorder",
+            IngestPath::FullResort => "full-resort",
+        }
+    }
 }
 
 /// A parsed trace, fully materialized: the buffered compatibility layer
@@ -821,6 +874,16 @@ fn scan<B: BufRead>(reader: B, opts: &TraceOptions) -> Result<ScanSummary, Trace
     stats.resorted = inversion;
     stats.reorder_depth = depth as usize;
     stats.full_resort = full_resort;
+    stats.ingest_path = if full_resort {
+        IngestPath::FullResort
+    } else if opts.mode == ErrorMode::Strict || depth == 0 {
+        // Strict already proved the stream ordered; a measured depth of 0
+        // proves the heap would emit input order anyway. Either way the
+        // replay pass can stream single-pass, heap-free.
+        IngestPath::Direct
+    } else {
+        IngestPath::BoundedReorder
+    };
     stats.apps = apps.len();
     stats.span_secs = (max_t - min_t) / opts.speedup;
     Ok(ScanSummary { stats, t0: min_t, apps })
@@ -855,12 +918,15 @@ fn pod_for_event(builder: &mut PodBuilder, ev: &TraceEvent) -> Pod {
 }
 
 /// Pass 2: the pull-based streaming replay —
-/// [`crate::sim::arrivals::ArrivalSource`] over a trace reader. Lenient
-/// mode repairs out-of-order timestamps through a bounded min-heap
-/// ([`TraceOptions::reorder_cap`]); strict mode streams directly (the
-/// scan pass proved the trace ordered). When the scan pass flagged
-/// [`TraceStats::full_resort`], the source buffers and stable-sorts the
-/// whole stream instead — identical output, documented memory cost.
+/// [`crate::sim::arrivals::ArrivalSource`] over a trace reader, running
+/// whichever strategy the scan pass selected ([`IngestPath`]): direct
+/// single-pass streaming when the input needs no repair (strict mode, or
+/// a measured [`TraceStats::reorder_depth`] of 0 — pre-sorted traces
+/// never pay for the heap), the bounded reorder min-heap
+/// ([`TraceOptions::reorder_cap`]) when disorder fits it, and the
+/// buffered whole-stream stable sort when it does not
+/// ([`TraceStats::full_resort`]) — identical output on all three,
+/// documented memory cost on the last.
 ///
 /// I/O or parse errors encountered mid-replay (e.g. the file changed
 /// between the passes, or late gzip corruption) end the stream; check
@@ -869,14 +935,14 @@ fn pod_for_event(builder: &mut PodBuilder, ev: &TraceEvent) -> Pod {
 /// by value.
 pub struct TraceSource<B: BufRead> {
     reader: EventReader<B>,
-    mode: ErrorMode,
+    /// Replay strategy the scan pass selected (see [`IngestPath`]).
+    path: IngestPath,
     t0: f64,
     speedup: f64,
     cap: usize,
     heap: BinaryHeap<Reverse<HeapEvent>>,
     seq: u64,
     input_done: bool,
-    full_resort: bool,
     /// Whole-trace fallback: sorted events not yet emitted.
     sorted: Option<std::vec::IntoIter<TraceEvent>>,
     builder: PodBuilder,
@@ -898,14 +964,13 @@ impl<B: BufRead> TraceSource<B> {
     fn new(reader: B, opts: &TraceOptions, summary: &ScanSummary) -> TraceSource<B> {
         TraceSource {
             reader: EventReader::new(reader, opts),
-            mode: opts.mode,
+            path: summary.stats.ingest_path,
             t0: summary.t0,
             speedup: opts.speedup,
             cap: opts.reorder_cap.max(1),
             heap: BinaryHeap::new(),
             seq: 0,
             input_done: false,
-            full_resort: summary.stats.full_resort,
             sorted: None,
             builder: PodBuilder::new(),
             failed: Arc::new(Mutex::new(None)),
@@ -915,40 +980,44 @@ impl<B: BufRead> TraceSource<B> {
     /// Next normalized event in replay order, or `None` at end of trace.
     pub fn next_event(&mut self) -> Result<Option<TraceEvent>, TraceError> {
         let (t0, speedup) = (self.t0, self.speedup);
-        if self.full_resort {
-            if self.sorted.is_none() {
-                let mut all = Vec::new();
-                while let Some(ev) = self.reader.next_event()? {
-                    all.push(ev);
-                }
-                // Stable: equal timestamps keep the trace's row order.
-                all.sort_by(|a, b| {
-                    a.submit_at.partial_cmp(&b.submit_at).expect("finite timestamps")
-                });
-                self.sorted = Some(all.into_iter());
-            }
-            let next = self.sorted.as_mut().expect("fallback built").next();
-            return Ok(next.map(|ev| normalize_event(ev, t0, speedup)));
-        }
-        if self.mode == ErrorMode::Strict {
-            // The scan pass rejected any disorder: stream straight through.
-            let next = self.reader.next_event()?;
-            return Ok(next.map(|ev| normalize_event(ev, t0, speedup)));
-        }
-        loop {
-            if !self.input_done && self.heap.len() <= self.cap {
-                match self.reader.next_event()? {
-                    None => self.input_done = true,
-                    Some(ev) => {
-                        let key = TimeKey { t: ev.submit_at, seq: self.seq };
-                        self.seq += 1;
-                        self.heap.push(Reverse(HeapEvent { key, ev }));
+        match self.path {
+            IngestPath::FullResort => {
+                if self.sorted.is_none() {
+                    let mut all = Vec::new();
+                    while let Some(ev) = self.reader.next_event()? {
+                        all.push(ev);
                     }
+                    // Stable: equal timestamps keep the trace's row order.
+                    all.sort_by(|a, b| {
+                        a.submit_at.partial_cmp(&b.submit_at).expect("finite timestamps")
+                    });
+                    self.sorted = Some(all.into_iter());
                 }
-                continue;
+                let next = self.sorted.as_mut().expect("fallback built").next();
+                Ok(next.map(|ev| normalize_event(ev, t0, speedup)))
             }
-            let next = self.heap.pop();
-            return Ok(next.map(|Reverse(h)| normalize_event(h.ev, t0, speedup)));
+            IngestPath::Direct => {
+                // Single-pass: strict proved the stream ordered, or the
+                // scan measured zero disorder — the heap would pop every
+                // event straight back out in input order, so skip it.
+                let next = self.reader.next_event()?;
+                Ok(next.map(|ev| normalize_event(ev, t0, speedup)))
+            }
+            IngestPath::BoundedReorder => loop {
+                if !self.input_done && self.heap.len() <= self.cap {
+                    match self.reader.next_event()? {
+                        None => self.input_done = true,
+                        Some(ev) => {
+                            let key = TimeKey { t: ev.submit_at, seq: self.seq };
+                            self.seq += 1;
+                            self.heap.push(Reverse(HeapEvent { key, ev }));
+                        }
+                    }
+                    continue;
+                }
+                let next = self.heap.pop();
+                return Ok(next.map(|Reverse(h)| normalize_event(h.ev, t0, speedup)));
+            },
         }
     }
 
@@ -1304,6 +1373,39 @@ task_m1,1,j_2,A,Terminated,110,,100,0.2
     }
 
     #[test]
+    fn direct_path_matches_the_reorder_heap_on_sorted_input() {
+        // The single-pass fast path's correctness argument, executed: on
+        // input the scan measured as sorted, streaming past the heap must
+        // emit exactly what the heap would have (it pops every push
+        // immediately, in input order). Force the heap on a second source
+        // over the same bytes and compare event-for-event.
+        let opts = TraceOptions::default();
+        let summary = scan(Cursor::new(ALIBABA_OK.as_bytes()), &opts).unwrap();
+        assert_eq!(summary.stats.ingest_path, IngestPath::Direct);
+        let mut forced = scan(Cursor::new(ALIBABA_OK.as_bytes()), &opts).unwrap();
+        forced.stats.ingest_path = IngestPath::BoundedReorder;
+
+        let mut direct = TraceSource::new(Cursor::new(ALIBABA_OK.as_bytes()), &opts, &summary);
+        let mut heaped = TraceSource::new(Cursor::new(ALIBABA_OK.as_bytes()), &opts, &forced);
+        loop {
+            let a = direct.next_event().unwrap();
+            let b = heaped.next_event().unwrap();
+            assert_eq!(a, b, "heap-free fast path diverged from the reorder heap");
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn strict_mode_on_sorted_input_selects_the_direct_path() {
+        let opts = TraceOptions { mode: ErrorMode::Strict, ..Default::default() };
+        let t = parse_str(ALIBABA_OK, &opts).unwrap();
+        assert_eq!(t.stats.ingest_path, IngestPath::Direct);
+        assert_eq!(t.events.len(), 4);
+    }
+
+    #[test]
     fn alibaba_happy_path() {
         let t = parse_str(ALIBABA_OK, &TraceOptions::default()).unwrap();
         // Row 1 expands into 2 instances.
@@ -1314,6 +1416,11 @@ task_m1,1,j_2,A,Terminated,110,,100,0.2
         assert_eq!(t.stats.apps, 2, "task_m1 recurs across jobs");
         assert_eq!(t.stats.reorder_depth, 0, "fixture is time-sorted");
         assert!(!t.stats.full_resort);
+        assert_eq!(
+            t.stats.ingest_path,
+            IngestPath::Direct,
+            "zero measured disorder must select the heap-free single pass"
+        );
         assert!(!t.stats.limit_hit);
         // Normalized to t=0.
         assert_eq!(t.events[0].submit_at, 0.0);

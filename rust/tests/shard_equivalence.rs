@@ -6,6 +6,12 @@
 //! (`completed + failed_pulls + unschedulable + lost_to_crash ==
 //! submitted`) — the PR 4 acceptance criteria, in-process.
 //!
+//! The parked-heavy cases extend the property to the cure-aware-window
+//! regime: disk-starved overloads keep the scheduling queue non-empty,
+//! so windows must cut at wake-relevant events, and shards {1, 2, 4} —
+//! with and without `cure_aware_windows` — must agree byte-for-byte,
+//! including the wake-up and retry counters.
+//!
 //! The CLI-level twin of this suite is the CI `determinism` job, which
 //! diffs `scale --shards {1,4} --report-out/--events-out` files.
 
@@ -121,6 +127,147 @@ fn sharded_runs_are_stable_across_repeats() {
         prop_assert!(a == b, "sharded run not reproducible at shards={shards}");
         Ok(())
     });
+}
+
+/// A parked-heavy run: disk-starved nodes + fast arrivals so the
+/// scheduling queue stays non-empty and windows must cut at
+/// wake-relevant events (the cure-aware-windows regime). Returns the
+/// fingerprint plus the wake/retry counters and the parked sim-time
+/// occupancy so the caller can assert the case is non-vacuous.
+fn run_parked_scenario(
+    sc: &Scenario,
+    shards: usize,
+    cure_aware: bool,
+) -> (String, u64, u64, u64, f64) {
+    let registry = Registry::with_corpus();
+    let wl = WorkloadConfig {
+        seed: sc.seed,
+        duration_range: Some((5.0, 40.0)),
+        ..Default::default()
+    };
+    let trace = WorkloadGen::new(&registry, wl).trace(sc.n_pods);
+    let mut cfg = SimConfig::default();
+    cfg.inter_arrival_secs = Some(sc.arrival);
+    cfg.gc_enabled = sc.gc;
+    cfg.wake_on_capacity = sc.wake;
+    cfg.retry_limit = sc.retry_limit;
+    cfg.snapshot_every = 10;
+    cfg.shards = shards;
+    cfg.cure_aware_windows = cure_aware;
+    cfg.churn = sc.churn.clone();
+    // 2 GB disks on a small fleet: pods overload both capacity and disk,
+    // so parks (and their cures — terminations, evicting sweeps) are the
+    // norm rather than the exception.
+    let mut sim =
+        Simulation::new(common::scale_nodes_with_disk(sc.n_nodes, 2.0), registry, cfg);
+    let report = sim.run_trace(trace);
+    sim.state.check_invariants().expect("cluster invariants");
+    assert!(report.accounting_balanced(), "parked run dropped events");
+    let occupancy = sim.window_stats().parked_busy_secs / sim.clock.now().max(1e-9);
+    (fingerprint(&report, &sim), sim.events_queued(), report.wakeups, report.retries, occupancy)
+}
+
+fn parked_scenario(rng: &mut Pcg) -> Scenario {
+    let mut sc = random_scenario(rng);
+    // Force the overload: few nodes, arrivals far faster than the 5–40 s
+    // pod durations drain them.
+    sc.n_pods = rng.range(50, 120);
+    sc.n_nodes = rng.range(2, 5);
+    sc.arrival = rng.f64_range(0.05, 0.15);
+    sc.gc = true;
+    sc.wake = true;
+    sc
+}
+
+#[test]
+fn parked_heavy_runs_match_sequential_across_shard_counts() {
+    // The tentpole differential: with pods parked for most of sim-time,
+    // shards {1, 2, 4} must stay byte-identical — fingerprints AND the
+    // wake-up/retry accounting — and so must the pre-PR conservative
+    // guard (`cure_aware_windows = false`).
+    let cases = PropConfig::default();
+    let cases = PropConfig { cases: cases.cases.clamp(4, 16), ..cases };
+    check(cases, |rng, _| {
+        let sc = parked_scenario(rng);
+        let (seq, ev_seq, wake_seq, retry_seq, occ) = run_parked_scenario(&sc, 1, true);
+        prop_assert!(
+            occ > 0.0,
+            "parked-heavy scenario never parked a pod (pods={}, nodes={}) — vacuous case",
+            sc.n_pods,
+            sc.n_nodes
+        );
+        for shards in [2usize, 4] {
+            let (par, ev_par, wake_par, retry_par, _) = run_parked_scenario(&sc, shards, true);
+            prop_assert_eq!(ev_seq, ev_par);
+            prop_assert!(
+                wake_seq == wake_par,
+                "wake-up accounting diverged at shards={shards}: {wake_seq} vs {wake_par}"
+            );
+            prop_assert!(
+                retry_seq == retry_par,
+                "retry accounting diverged at shards={shards}: {retry_seq} vs {retry_par}"
+            );
+            prop_assert!(
+                seq == par,
+                "parked shards={shards} diverged from sequential (pods={}, nodes={}, churn={})\n\
+                 first differing line: {:?}",
+                sc.n_pods,
+                sc.n_nodes,
+                sc.churn.is_some(),
+                seq.lines().zip(par.lines()).find(|(a, b)| a != b),
+            );
+        }
+        // Cure-aware windows vs the conservative guard: purely a window-
+        // shape change, never an observable one.
+        let (cons, ev_cons, wake_cons, retry_cons, _) = run_parked_scenario(&sc, 4, false);
+        prop_assert_eq!(ev_seq, ev_cons);
+        prop_assert_eq!(wake_seq, wake_cons);
+        prop_assert_eq!(retry_seq, retry_cons);
+        prop_assert!(seq == cons, "conservative-guard run diverged from sequential");
+        Ok(())
+    });
+}
+
+#[test]
+fn parked_soak_keeps_the_queue_busy_and_the_lanes_identical() {
+    // One pinned overload soak (no randomness): the queue must sit
+    // non-empty for ≥80% of sim-time — the regime the `engine_parked`
+    // bench measures — and shards {1, 4} must agree byte-for-byte, with
+    // and without cure-aware windows.
+    let sc = Scenario {
+        seed: 77,
+        n_pods: 400,
+        n_nodes: 3,
+        arrival: 0.08,
+        gc: true,
+        wake: true,
+        retry_limit: 10,
+        churn: Some(ChurnConfig {
+            seed: 9,
+            horizon_secs: 32.0,
+            joins: 1,
+            drains: 1,
+            crash_fraction: 0.1,
+            outages: 1,
+            outage_secs: 10.0,
+            ..Default::default()
+        }),
+    };
+    let (seq, ev_seq, wake_seq, retry_seq, occ) = run_parked_scenario(&sc, 1, true);
+    assert!(
+        occ >= 0.8,
+        "soak parked the queue only {:.0}% of sim-time; the overload is miscalibrated",
+        occ * 100.0
+    );
+    assert!(wake_seq > 0, "an 80%-parked overload must wake pods on capacity");
+    let (par, ev_par, wake_par, retry_par, _) = run_parked_scenario(&sc, 4, true);
+    let (cons, ev_cons, wake_cons, retry_cons, _) = run_parked_scenario(&sc, 4, false);
+    assert_eq!(ev_seq, ev_par);
+    assert_eq!(ev_seq, ev_cons);
+    assert_eq!((wake_seq, retry_seq), (wake_par, retry_par));
+    assert_eq!((wake_seq, retry_seq), (wake_cons, retry_cons));
+    assert!(seq == par, "parked soak diverged at shards=4");
+    assert!(seq == cons, "parked soak diverged under the conservative guard");
 }
 
 #[test]

@@ -10,7 +10,8 @@
 
 use lrsched::exp::common;
 use lrsched::sim::{
-    trace, ChurnConfig, ErrorMode, SimConfig, Simulation, TraceFormat, TraceOptions, TraceReplay,
+    trace, ChurnConfig, ErrorMode, IngestPath, SimConfig, Simulation, TraceFormat, TraceOptions,
+    TraceReplay,
 };
 use std::path::{Path, PathBuf};
 
@@ -158,6 +159,11 @@ fn bounded_reorder_buffer_replays_identically() {
     assert!(replay.stats.resorted);
     assert!(!replay.stats.full_resort, "displacement 3 must fit a cap of 8");
     assert_eq!(replay.stats.reorder_depth, 3, "reversed quadruples displace by 3");
+    assert_eq!(
+        replay.stats.ingest_path,
+        IngestPath::BoundedReorder,
+        "measured disorder within the cap must select the bounded heap"
+    );
     drop(replay);
     assert_eq!(streaming_fingerprint(&path, &bounded, 1, None), reference);
 
@@ -167,6 +173,7 @@ fn bounded_reorder_buffer_replays_identically() {
     let tiny = TraceOptions { reorder_cap: 1, ..Default::default() };
     let replay = TraceReplay::open(&path, &tiny).expect("parses");
     assert!(replay.stats.full_resort, "cap 1 cannot hold displacement 3");
+    assert_eq!(replay.stats.ingest_path, IngestPath::FullResort);
     drop(replay);
     assert_eq!(streaming_fingerprint(&path, &tiny, 1, None), reference);
 
